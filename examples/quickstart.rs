@@ -1,0 +1,35 @@
+//! Quickstart: simulate one application under ReCXL-proactive on the
+//! paper's default 16-CN / 16-MN cluster and print the headline numbers.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use recxl::prelude::*;
+use recxl::proto::MsgClass;
+use recxl::sim::time::fmt_ps;
+
+fn main() {
+    let cfg = SimConfig {
+        ops_per_thread: 20_000,
+        ..SimConfig::default()
+    };
+    let app = by_name("bodytrack").unwrap();
+
+    println!("ReCXL quickstart: {} under {}", app.name, cfg.protocol.name());
+    let stats = run_app(cfg.clone(), &app);
+    println!("  exec time            : {}", fmt_ps(stats.exec_time_ps));
+    println!("  ops executed         : {}", stats.total_ops());
+    println!("  remote stores        : {}", stats.total_remote_stores());
+    println!("  REPL transactions    : {}", stats.repl.repls_sent);
+    println!(
+        "  CXL bandwidth        : {:.1} GB/s access + {:.1} GB/s replication",
+        stats.class_gbps(MsgClass::CxlAccess),
+        stats.class_gbps(MsgClass::Replication),
+    );
+
+    // how much does fault tolerance cost? (the paper's headline question)
+    let slow = slowdown_vs_wb(&cfg, &app, Protocol::ReCxlProactive);
+    println!("  slowdown vs plain WB : {slow:.2}x (paper: ~1.30x average)");
+    assert!(slow < 2.0, "proactive should stay well under 2x");
+}

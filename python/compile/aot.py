@@ -1,0 +1,72 @@
+"""AOT bridge: lower the Layer-2 entry points to HLO *text* artifacts.
+
+HLO text — not ``lowered.compile()`` / ``.serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which
+the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The HLO text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (run by
+``make artifacts``; a no-op when artifacts are newer than their inputs,
+courtesy of the Makefile).  Also writes ``manifest.txt`` with the shape
+contract the Rust runtime asserts at load time.
+"""
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "trace_gen": model.lower_trace_block,
+    "latest_version": model.lower_latest_versions,
+}
+
+MANIFEST = """\
+# recxl artifact manifest (asserted by rust/src/runtime/mod.rs)
+n_ops={n_ops}
+num_params={num_params}
+n_log={n_log}
+q={q}
+trace_gen=trace_gen.hlo.txt
+latest_version=latest_version.hlo.txt
+"""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+    mpath = os.path.join(args.out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write(
+            MANIFEST.format(
+                n_ops=model.N_OPS,
+                num_params=model.NUM_PARAMS,
+                n_log=model.N_LOG,
+                q=model.Q,
+            )
+        )
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Layer-1 Pallas kernel: bulk latest-version log query (recovery hot-spot).
+
+ReCXL recovery (Algorithm 2, section V-D) scans a replica's DRAM log and, for
+every line address the directory controller requested via
+``FetchLatestVers``, returns the most recent logged update.  The scan is a
+masked arg-max over (queries x log entries) — a natural tiled reduction.
+
+For each query address q and log of N entries, the kernel computes::
+
+    key(q)  = max over i of { ts[i] * N_LOG + i  if addr[i] == q and valid[i] }
+    val(q)  = log value at the maximizing entry
+    (key = -1 if no entry matches)
+
+``ts * N_LOG + i`` makes keys unique (ties broken toward the later log
+index), so accumulation across tiles is a plain max-merge.  Logical
+timestamps must satisfy ts < 2^31 / N_LOG; the Logging Unit's 7-bit design
+(Fig. 5) is far below that, and the Rust caller re-bases timestamps per
+query batch.
+
+Geometry: all Q=256 queries stay resident in VMEM; the log streams through
+in NB=512-entry tiles (grid = N_LOG / NB).  The (Q, NB) compare tile is
+256x512 int32 = 512 KB of VPU work per step — comfortably inside VMEM
+(DESIGN.md section 7).  ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+N_LOG = 4096  # log entries per exported call (caller pads / batches)
+NB = 512      # log entries per grid step
+Q = 256       # query addresses per exported call
+
+
+def _kernel(qa_ref, la_ref, ts_ref, valid_ref, val_ref, key_out, val_out):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        key_out[...] = jnp.full((Q,), -1, jnp.int32)
+        val_out[...] = jnp.zeros((Q,), jnp.int32)
+
+    qa = qa_ref[...]          # (Q,)
+    la = la_ref[...]          # (NB,)
+    ts = ts_ref[...]          # (NB,)
+    valid = valid_ref[...]    # (NB,)
+    lval = val_ref[...]       # (NB,)
+
+    idx = j * NB + lax.iota(jnp.int32, NB)
+    mask = (qa[:, None] == la[None, :]) & (valid[None, :] != 0)
+    key = jnp.where(mask, ts[None, :] * N_LOG + idx[None, :], -1)  # (Q, NB)
+    tile_key = jnp.max(key, axis=1)                                # (Q,)
+    ai = jnp.argmax(key, axis=1)                                   # (Q,)
+    tile_val = jnp.take(lval, ai)
+
+    cur = key_out[...]
+    better = tile_key > cur
+    key_out[...] = jnp.where(better, tile_key, cur)
+    val_out[...] = jnp.where(better, tile_val, val_out[...])
+
+
+def latest_versions(q_addr, log_addr, log_ts, log_valid, log_val):
+    """q_addr: int32[Q]; log_*: int32[N_LOG].
+
+    Returns (key, val): int32[Q] each.  key = ts * N_LOG + log_index of the
+    latest valid matching entry, or -1; val = its logged word value.
+    """
+    out = jax.ShapeDtypeStruct((Q,), jnp.int32)
+    full_q = pl.BlockSpec((Q,), lambda j: (0,))
+    tile = pl.BlockSpec((NB,), lambda j: (j,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(N_LOG // NB,),
+        in_specs=[full_q, tile, tile, tile, tile],
+        out_specs=[full_q, full_q],
+        out_shape=[out, out],
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls
+    )(q_addr, log_addr, log_ts, log_valid, log_val)

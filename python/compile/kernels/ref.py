@@ -1,0 +1,33 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite asserts the kernels against
+(exact integer equality), and the specification the bit-identical Rust
+fallback (rust/src/workloads/tracegen.rs, rust/src/recovery/logquery.rs)
+implements.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import latest_version as lv
+from . import trace_gen as tg
+
+
+def trace_block_ref(seed, base, params):
+    """Reference for kernels.trace_gen.trace_block (same signature)."""
+    g = base[0].astype(jnp.uint32) + lax.iota(jnp.uint32, tg.N_OPS)
+    op, addr, extra = tg.gen_fields(g, seed[0].astype(jnp.uint32), params)
+    to_i32 = lambda x: lax.bitcast_convert_type(x, jnp.int32)
+    return to_i32(op), to_i32(addr), to_i32(extra)
+
+
+def latest_versions_ref(q_addr, log_addr, log_ts, log_valid, log_val):
+    """Reference for kernels.latest_version.latest_versions."""
+    n = log_addr.shape[0]
+    idx = lax.iota(jnp.int32, n)
+    mask = (q_addr[:, None] == log_addr[None, :]) & (log_valid[None, :] != 0)
+    key = jnp.where(mask, log_ts[None, :] * lv.N_LOG + idx[None, :], -1)
+    best = jnp.max(key, axis=1)
+    ai = jnp.argmax(key, axis=1)
+    val = jnp.where(best >= 0, jnp.take(log_val, ai), 0)
+    return best, val

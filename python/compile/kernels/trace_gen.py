@@ -1,0 +1,165 @@
+"""Layer-1 Pallas kernel: synthetic workload-trace synthesis.
+
+The paper (ReCXL, CS.DC 2026) drives its SST simulation with Pin traces of
+PARSEC / SPLASH-2 / YCSB.  Pin traces are unavailable here, so the
+reproduction synthesizes statistically equivalent per-thread access streams
+(see DESIGN.md section 2).  Producing those streams is the compute hot-spot
+of trace-driven simulation, so it is implemented as a Pallas kernel:
+a counter-based PRNG (splitmix32-style mixing, pure uint32 ops) maps a block
+of global op indices plus an app-profile parameter vector to
+``(op_code, addr, extra)`` triples.
+
+Counter-based generation means every op is a pure function of
+``(seed, thread, global_index)`` — random access into the trace, no carried
+state, an embarrassingly parallel grid.  The Rust coordinator executes the
+AOT-lowered HLO of this kernel through PJRT on its simulation path
+(``rust/src/runtime``), with a bit-identical Rust fallback
+(``rust/src/workloads/tracegen.rs``) cross-checked in integration tests.
+
+Parameter vector layout (int32[16]) — kept in sync with
+``rust/src/workloads/profiles.rs``::
+
+    0  thread_id
+    1  p_load     cumulative op threshold, 16-bit fixed point
+    2  p_store    cumulative (p_load + store fraction)
+    3  p_lock     cumulative (p_store + lock fraction)
+    4  (reserved for barrier; barriers are inserted deterministically by
+       the Rust workload layer so that all threads agree on arrival counts)
+    5  p_remote   16-bit: probability a load/store targets shared CXL memory
+    6  shared_lines_log2   shared footprint, in 64 B lines (power of two)
+    7  private_lines_log2  per-thread private footprint (<= 18)
+    8  p_seq      16-bit: probability a store belongs to a sequential run
+    9  run_len_log2        length of sequential runs, in ops
+    10 p_hot      16-bit: probability a random access hits the hot subset
+    11 hot_lines_log2      hot-subset size, in lines
+    12 cs_len     critical-section length carried in lock ops' ``extra``
+    13..15 reserved
+
+Op codes: 0 = compute, 1 = load, 2 = store, 3 = lock-acquire
+(``extra = lock_id << 8 | cs_len``; the core model releases the lock after
+``cs_len`` ops).  Addresses: bit 31 set = remote (shared CXL) —
+``1<<31 | line<<6 | word<<2``; clear = CN-local —
+``thread<<24 | line<<6 | word<<2``.
+
+TPU notes (DESIGN.md section 7): integer hash + select trees are VPU work; the
+block is 512 ops (one (4,128) tile's worth); ``interpret=True`` is required
+for CPU-PJRT execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Block/grid geometry. N_OPS ops per exported call, BLOCK ops per grid step.
+N_OPS = 4096
+BLOCK = 512
+NUM_PARAMS = 16
+
+_U = jnp.uint32
+
+
+def mix32(x):
+    """splitmix32-style finalizer over uint32 (wrapping arithmetic).
+
+    Must stay bit-identical to ``mix32`` in rust/src/workloads/tracegen.rs.
+    """
+    x = x + _U(0x9E3779B9)
+    x = x ^ (x >> _U(16))
+    x = x * _U(0x21F0AAAD)
+    x = x ^ (x >> _U(15))
+    x = x * _U(0x735A2D97)
+    x = x ^ (x >> _U(15))
+    return x
+
+
+def gen_fields(g, seed, params):
+    """Pure-uint32 field derivation for global op indices ``g`` (uint32[...]).
+
+    Shared between the Pallas kernel body and the jnp reference oracle so a
+    mismatch can only come from the Pallas plumbing, not the math.
+    Returns (op, addr, extra) as uint32 arrays.
+    """
+    p = params.astype(jnp.uint32)
+    t = p[0]
+    h0 = mix32(seed + g * _U(0x85EBCA6B) + t * _U(0xC2B2AE35))
+    r0 = mix32(h0 ^ _U(0x68E31DA4))
+    r1 = mix32(h0 ^ _U(0xB5297A4D))
+    r2 = mix32(h0 ^ _U(0x1B56C4E9))
+    r3 = mix32(h0 ^ _U(0x7FEB352D))
+
+    # --- op selection (16-bit cumulative thresholds) ---
+    u_op = r0 >> _U(16)
+    is_load = u_op < p[1]
+    is_store = (~is_load) & (u_op < p[2])
+    is_lock = (~is_load) & (~is_store) & (u_op < p[3])
+    op = jnp.where(
+        is_load, _U(1), jnp.where(is_store, _U(2), jnp.where(is_lock, _U(3), _U(0)))
+    )
+
+    # --- address derivation (meaningful for loads/stores; harmless otherwise)
+    remote = (r1 & _U(0xFFFF)) < p[5]
+    shared_mask = (_U(1) << p[6]) - _U(1)
+    hot_mask = (_U(1) << p[11]) - _U(1)
+    priv_mask = (_U(1) << p[7]) - _U(1)
+
+    # Sequential-run structure: ops in the same run of 2^run_len_log2
+    # consecutive indices share a line and walk its words — the coalescing
+    # structure the SB sees (ReCXL section IV-D.5).
+    seq = ((r1 >> _U(16)) & _U(0xFFFF)) < p[8]
+    g_run = g >> p[9].astype(jnp.uint32)
+    line_seq = mix32(g_run * _U(0x9E3779B1) + t * _U(0x632BE59B)) & shared_mask
+    hot = (r2 >> _U(16)) < p[10]
+    line_rand = jnp.where(hot, r2 & hot_mask, r2 & shared_mask)
+    line_sh = jnp.where(seq, line_seq, line_rand)
+    word = jnp.where(seq, g & _U(15), r3 & _U(15))
+    raddr = _U(0x80000000) | (line_sh << _U(6)) | (word << _U(2))
+
+    line_lo = r2 & priv_mask
+    laddr = (t << _U(24)) | (line_lo << _U(6)) | (word << _U(2))
+    addr = jnp.where(remote, raddr, laddr)
+    addr = jnp.where(op == _U(0), _U(0), addr)
+    addr = jnp.where(op == _U(3), _U(0), addr)
+
+    # --- extra: lock id + critical-section length for lock ops ---
+    lock_id = r3 & _U(63)
+    extra = jnp.where(op == _U(3), (lock_id << _U(8)) | p[12], _U(0))
+    return op, addr, extra
+
+
+def _kernel(seed_ref, base_ref, params_ref, op_ref, addr_ref, extra_ref):
+    j = pl.program_id(0)
+    seed = seed_ref[0].astype(jnp.uint32)
+    base = base_ref[0].astype(jnp.uint32)
+    params = params_ref[...]
+    g = base + j.astype(jnp.uint32) * _U(BLOCK) + lax.iota(jnp.uint32, BLOCK)
+    op, addr, extra = gen_fields(g, seed, params)
+    op_ref[...] = lax.bitcast_convert_type(op, jnp.int32)
+    addr_ref[...] = lax.bitcast_convert_type(addr, jnp.int32)
+    extra_ref[...] = lax.bitcast_convert_type(extra, jnp.int32)
+
+
+def trace_block(seed, base, params):
+    """Generate ``N_OPS`` trace ops for one thread.
+
+    seed: int32[1]; base: int32[1] (global op index of the block's first
+    op); params: int32[16].  Returns (op, addr, extra): int32[N_OPS] each
+    (addr/extra carry uint32 bit patterns).
+    """
+    out = jax.ShapeDtypeStruct((N_OPS,), jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        grid=(N_OPS // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((NUM_PARAMS,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda j: (j,)),
+            pl.BlockSpec((BLOCK,), lambda j: (j,)),
+            pl.BlockSpec((BLOCK,), lambda j: (j,)),
+        ],
+        out_shape=[out, out, out],
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls
+    )(seed, base, params)

@@ -1,0 +1,53 @@
+"""Layer-2 JAX model: the exported compute-graph entry points.
+
+ReCXL is a systems paper — its "model" is not a neural network but the two
+compute hot-spots of the reproduction's simulation pipeline, composed from
+the Layer-1 Pallas kernels:
+
+* ``trace_block``   — per-thread synthetic workload-trace synthesis
+  (feeds the trace-driven core models; called on the Rust simulation path
+  through PJRT every time a core drains its trace buffer);
+* ``latest_versions`` — bulk ``FetchLatestVers`` log query used by the
+  recovery path (Algorithm 2) for large query batches.
+
+Both are jitted and AOT-lowered once by ``aot.py``; Python never runs at
+simulation time.
+"""
+
+import jax
+
+from .kernels import latest_version as lv
+from .kernels import trace_gen as tg
+
+# Re-exported geometry (the Rust runtime asserts these against the
+# artifact manifest).
+N_OPS = tg.N_OPS
+NUM_PARAMS = tg.NUM_PARAMS
+N_LOG = lv.N_LOG
+Q = lv.Q
+
+
+def trace_block(seed, base, params):
+    """(int32[1], int32[1], int32[16]) -> (int32[N_OPS],) * 3."""
+    return tg.trace_block(seed, base, params)
+
+
+def latest_versions(q_addr, log_addr, log_ts, log_valid, log_val):
+    """(int32[Q], int32[N_LOG] * 4) -> (int32[Q], int32[Q])."""
+    return lv.latest_versions(q_addr, log_addr, log_ts, log_valid, log_val)
+
+
+def lower_trace_block():
+    import jax.numpy as jnp
+
+    s1 = jax.ShapeDtypeStruct((1,), jnp.int32)
+    sp = jax.ShapeDtypeStruct((NUM_PARAMS,), jnp.int32)
+    return jax.jit(trace_block).lower(s1, s1, sp)
+
+
+def lower_latest_versions():
+    import jax.numpy as jnp
+
+    sq = jax.ShapeDtypeStruct((Q,), jnp.int32)
+    sn = jax.ShapeDtypeStruct((N_LOG,), jnp.int32)
+    return jax.jit(latest_versions).lower(sq, sn, sn, sn, sn)

@@ -1,0 +1,92 @@
+"""Kernel-vs-reference tests for the latest_version Pallas kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import latest_version as lv
+from compile.kernels import ref
+
+
+def pad(xs, n, fill=0):
+    out = np.full(n, fill, dtype=np.int32)
+    out[: len(xs)] = xs
+    return jnp.asarray(out)
+
+
+def run_both(q, la, ts, valid, val):
+    args = (
+        pad(q, lv.Q, fill=-1),
+        pad(la, lv.N_LOG, fill=-1),
+        pad(ts, lv.N_LOG),
+        pad(valid, lv.N_LOG),
+        pad(val, lv.N_LOG),
+    )
+    got = lv.latest_versions(*args)
+    want = ref.latest_versions_ref(*args)
+    return [np.asarray(x) for x in got], [np.asarray(x) for x in want]
+
+
+def test_simple_latest_wins():
+    # two updates to addr 100: ts 1 then ts 5 -> value 222
+    got, want = run_both([100], [100, 100], [1, 5], [1, 1], [111, 222])
+    assert got[0][0] == 5 * lv.N_LOG + 1
+    assert got[1][0] == 222
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+def test_no_match_returns_minus_one():
+    got, _ = run_both([77], [100], [1], [1], [9])
+    assert got[0][0] == -1
+
+
+def test_invalid_entries_ignored():
+    got, _ = run_both([100], [100, 100], [1, 5], [1, 0], [111, 222])
+    assert got[0][0] == 1 * lv.N_LOG + 0
+    assert got[1][0] == 111
+
+
+def test_tie_broken_toward_later_log_index():
+    # same ts logged twice (two replicas' copies): later index wins
+    got, _ = run_both([100], [100, 100], [3, 3], [1, 1], [5, 6])
+    assert got[1][0] == 6
+
+
+def test_matches_across_tile_boundary():
+    # place the winning entry in the last grid tile
+    n = lv.N_LOG
+    la = np.full(n, -1, dtype=np.int32)
+    ts = np.zeros(n, dtype=np.int32)
+    valid = np.ones(n, dtype=np.int32)
+    val = np.zeros(n, dtype=np.int32)
+    la[10] = 42
+    ts[10] = 7
+    val[10] = 1000
+    la[n - 1] = 42
+    ts[n - 1] = 9
+    val[n - 1] = 2000
+    got = lv.latest_versions(
+        pad([42], lv.Q, fill=-1), jnp.asarray(la), jnp.asarray(ts),
+        jnp.asarray(valid), jnp.asarray(val),
+    )
+    assert np.asarray(got[0])[0] == 9 * lv.N_LOG + (n - 1)
+    assert np.asarray(got[1])[0] == 2000
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_kernel_matches_ref_hypothesis(data):
+    n_entries = data.draw(st.integers(min_value=0, max_value=lv.N_LOG))
+    n_q = data.draw(st.integers(min_value=1, max_value=lv.Q))
+    addr_space = data.draw(st.integers(min_value=1, max_value=50))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    la = rng.integers(0, addr_space, n_entries).astype(np.int32)
+    ts = rng.integers(0, 1 << 15, n_entries).astype(np.int32)
+    valid = rng.integers(0, 2, n_entries).astype(np.int32)
+    val = rng.integers(-(2**31), 2**31 - 1, n_entries, dtype=np.int64).astype(np.int32)
+    q = rng.integers(0, addr_space + 5, n_q).astype(np.int32)
+    got, want = run_both(list(q), list(la), list(ts), list(valid), list(val))
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])

@@ -1,0 +1,167 @@
+"""Kernel-vs-reference tests for the trace_gen Pallas kernel.
+
+The kernel is integer-exact: every assertion is bitwise equality against the
+pure-jnp oracle, plus structural invariants on the generated stream.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels import trace_gen as tg
+
+
+def make_params(
+    thread_id=0,
+    p_load=0.30,
+    p_store=0.20,
+    p_lock=0.001,
+    p_remote=0.5,
+    shared_log2=16,
+    priv_log2=12,
+    p_seq=0.6,
+    run_log2=3,
+    p_hot=0.2,
+    hot_log2=8,
+    cs_len=8,
+):
+    f16 = lambda p: int(round(p * 65536))
+    v = [0] * tg.NUM_PARAMS
+    v[0] = thread_id
+    v[1] = f16(p_load)
+    v[2] = f16(p_load + p_store)
+    v[3] = f16(p_load + p_store + p_lock)
+    v[5] = f16(p_remote)
+    v[6] = shared_log2
+    v[7] = priv_log2
+    v[8] = f16(p_seq)
+    v[9] = run_log2
+    v[10] = f16(p_hot)
+    v[11] = hot_log2
+    v[12] = cs_len
+    return jnp.array(v, dtype=jnp.int32)
+
+
+def run_both(seed, base, params):
+    s = jnp.array([seed], dtype=jnp.int32)
+    b = jnp.array([base], dtype=jnp.int32)
+    got = tg.trace_block(s, b, params)
+    want = ref.trace_block_ref(s, b, params)
+    return [np.asarray(x) for x in got], [np.asarray(x) for x in want]
+
+
+def test_kernel_matches_ref_exactly():
+    got, want = run_both(42, 0, make_params())
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_kernel_matches_ref_nonzero_base():
+    got, want = run_both(7, 3 * tg.N_OPS, make_params(thread_id=17))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_deterministic():
+    a, _ = run_both(123, 0, make_params())
+    b, _ = run_both(123, 0, make_params())
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_blocks_are_counter_based():
+    """Block [base, base+N) must equal the matching slice of a wider stream:
+    ops are pure functions of the global index (random access, no state)."""
+    p = make_params(thread_id=3)
+    a, _ = run_both(9, 0, p)
+    b, _ = run_both(9, tg.BLOCK, p)  # overlaps a by N_OPS - BLOCK
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x[tg.BLOCK :], y[: tg.N_OPS - tg.BLOCK])
+
+
+def test_op_distribution_tracks_thresholds():
+    got, _ = run_both(1, 0, make_params(p_load=0.4, p_store=0.3))
+    op = np.asarray(got[0])
+    n = op.size
+    assert abs((op == 1).mean() - 0.4) < 0.03
+    assert abs((op == 2).mean() - 0.3) < 0.03
+    assert (op == 3).mean() < 0.01
+
+
+def test_address_structure():
+    got, _ = run_both(5, 0, make_params(shared_log2=10, priv_log2=8, thread_id=21))
+    op, addr = got[0], got[1].astype(np.uint32)
+    mem = (op == 1) | (op == 2)
+    a = addr[mem]
+    assert np.all(addr[~mem] == 0)
+    assert np.all(a % 4 == 0), "word aligned"
+    remote = (a >> 31) == 1
+    # remote lines within the 2^10-line shared footprint
+    rl = (a[remote] >> 6) & ((1 << 25) - 1)
+    assert np.all(rl < (1 << 10))
+    # local addresses carry the thread id and stay within 2^8 lines
+    la = a[~remote]
+    assert np.all((la >> 24) == 21)
+    assert np.all(((la >> 6) & ((1 << 18) - 1)) < (1 << 8))
+
+
+def test_seq_runs_share_lines():
+    """With p_seq=1 and run_len 2^3, store addresses inside an aligned run of
+    8 global indices target a single line (the SB-coalescing structure)."""
+    p = make_params(
+        p_load=0.0, p_store=1.0, p_lock=0.0, p_remote=1.0, p_seq=1.0, run_log2=3
+    )
+    got, _ = run_both(11, 0, p)
+    addr = got[1].astype(np.uint32)
+    lines = addr >> 6
+    runs = lines.reshape(-1, 8)
+    assert np.all(runs == runs[:, :1])
+
+
+def test_lock_extra_encoding():
+    p = make_params(p_load=0.0, p_store=0.0, p_lock=1.0, cs_len=13)
+    got, _ = run_both(2, 0, p)
+    op, extra = got[0], got[2].astype(np.uint32)
+    assert np.all(op == 3)
+    assert np.all((extra & 0xFF) == 13)
+    assert np.all((extra >> 8) < 64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    base=st.integers(min_value=0, max_value=2**18).map(lambda x: x * tg.N_OPS),
+    thread=st.integers(min_value=0, max_value=63),
+    p_load=st.integers(min_value=0, max_value=60000),
+    p_store_inc=st.integers(min_value=0, max_value=5000),
+    shared_log2=st.integers(min_value=4, max_value=24),
+    priv_log2=st.integers(min_value=4, max_value=18),
+    run_log2=st.integers(min_value=0, max_value=6),
+    p_seq=st.integers(min_value=0, max_value=65535),
+    p_hot=st.integers(min_value=0, max_value=65535),
+    hot_log2=st.integers(min_value=2, max_value=12),
+)
+def test_kernel_matches_ref_hypothesis(
+    seed, base, thread, p_load, p_store_inc, shared_log2, priv_log2,
+    run_log2, p_seq, p_hot, hot_log2,
+):
+    v = [0] * tg.NUM_PARAMS
+    v[0] = thread
+    v[1] = p_load
+    v[2] = min(65535, p_load + p_store_inc)
+    v[3] = min(65535, v[2] + 50)
+    v[5] = 30000
+    v[6] = shared_log2
+    v[7] = priv_log2
+    v[8] = p_seq
+    v[9] = run_log2
+    v[10] = p_hot
+    v[11] = hot_log2
+    v[12] = 5
+    params = jnp.array(v, dtype=jnp.int32)
+    got, want = run_both(seed, base, params)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)

@@ -1,0 +1,123 @@
+//! Ablations of ReCXL design choices beyond the paper's figures
+//! (DESIGN.md calls these out; the paper leaves them as design
+//! parameters):
+//!
+//! * store-buffer depth — proactive's advantage comes from overlapping
+//!   the REPL cycles of queued stores (Fig. 8), so it should grow with
+//!   SB depth while WB barely moves;
+//! * failure-detection delay — recovery latency is detection-dominated
+//!   for small logs;
+//! * fabric reorder jitter — the logical-timestamp machinery
+//!   (section IV-C) must make replication *correct* under reordering at
+//!   negligible cost.
+
+use recxl::benchkit::timed;
+use recxl::cluster::run_app;
+use recxl::prelude::*;
+use recxl::report::FigureTable;
+use recxl::sim::time::{ns, us};
+
+fn ops() -> u64 {
+    std::env::var("RECXL_BENCH_OPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8_000)
+}
+
+fn main() {
+    let app = by_name("ycsb").unwrap();
+    let base = SimConfig {
+        ops_per_thread: ops(),
+        ..SimConfig::default()
+    };
+
+    // --- SB depth ---
+    let (t1, _secs1) = timed(|| {
+        let mut t = FigureTable::new(
+            "Ablation A: store-buffer depth (ycsb, exec time normalized to 72-entry WB)",
+            vec!["18".into(), "36".into(), "72".into(), "144".into()],
+            false,
+        );
+        let wb72 = run_app(
+            SimConfig { protocol: Protocol::WriteBack, ..base.clone() },
+            &app,
+        )
+        .exec_time_ps as f64;
+        for p in [Protocol::WriteBack, Protocol::ReCxlProactive, Protocol::ReCxlParallel] {
+            let row: Vec<f64> = [18usize, 36, 72, 144]
+                .iter()
+                .map(|&sb| {
+                    run_app(
+                        SimConfig {
+                            protocol: p,
+                            store_buffer_entries: sb,
+                            ..base.clone()
+                        },
+                        &app,
+                    )
+                    .exec_time_ps as f64
+                        / wb72
+                })
+                .collect();
+            t.push(p.name(), row);
+        }
+        t
+    });
+    println!("{}", t1.render());
+
+    // --- detection delay ---
+    let (t2, _secs2) = timed(|| {
+        let mut t = FigureTable::new(
+            "Ablation B: failure-detection delay vs recovery window (ycsb, crash mid-run)",
+            vec!["1us".into(), "10us".into(), "50us".into()],
+            false,
+        );
+        let row: Vec<f64> = [1u64, 10, 50]
+            .iter()
+            .map(|&d| {
+                let s = run_app(
+                    SimConfig {
+                        protocol: Protocol::ReCxlProactive,
+                        detect_delay_ps: us(d),
+                        crash: Some(CrashSpec { cn: 0, at: us(40) }),
+                        ..base.clone()
+                    },
+                    &app,
+                );
+                assert!(s.recovery.consistent, "consistency must hold at any delay");
+                (s.recovery.completed_at - us(40)) as f64 / 1e6 // us from crash
+            })
+            .collect();
+        t.push("crash->recovered (us)", row);
+        t
+    });
+    println!("{}", t2.render());
+
+    // --- fabric reorder jitter ---
+    let (t3, _secs3) = timed(|| {
+        let mut t = FigureTable::new(
+            "Ablation C: fabric reorder jitter on replication traffic (ycsb)",
+            vec!["0ns".into(), "40ns".into(), "200ns".into(), "1000ns".into()],
+            false,
+        );
+        let row: Vec<f64> = [0u64, 40, 200, 1000]
+            .iter()
+            .map(|&j| {
+                let s = run_app(
+                    SimConfig {
+                        protocol: Protocol::ReCxlProactive,
+                        repl_jitter_ps: ns(j),
+                        ..base.clone()
+                    },
+                    &app,
+                );
+                s.exec_time_ps as f64
+            })
+            .collect();
+        let base0 = row[0];
+        t.push("exec (norm to 0ns)", row.iter().map(|v| v / base0).collect());
+        t
+    });
+    println!("{}", t3.render());
+    println!("[bench] ablations at {} ops/thread", ops());
+}

@@ -1,0 +1,22 @@
+//! `cargo bench` target regenerating the paper's Fig. 17 (replication-factor sensitivity).
+//!
+//! Not a microbenchmark: each sample is a full cluster simulation sweep;
+//! the output is the figure-shaped table EXPERIMENTS.md compares against
+//! the paper (criterion is unavailable offline — see `recxl::benchkit`).
+
+use recxl::benchkit::timed;
+use recxl::figures::{self, FigOpts};
+
+fn main() {
+    let opts = FigOpts { ops: bench_ops(), parallel: true };
+    let (table, secs) = timed(|| figures::fig17(opts));
+    println!("{}", table.render());
+    println!("[bench] regenerated in {secs:.1} s at {} ops/thread", opts.ops);
+}
+
+fn bench_ops() -> u64 {
+    std::env::var("RECXL_BENCH_OPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8000)
+}

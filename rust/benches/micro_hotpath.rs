@@ -1,0 +1,85 @@
+//! Microbenchmarks of the simulator's hot paths (the §Perf targets in
+//! EXPERIMENTS.md): event queue, cache lookup, trace generation, Logging
+//! Unit ingest, fabric routing, log compression, and whole-cluster
+//! simulation throughput.
+
+use recxl::benchkit::{bench, header};
+use recxl::cache::{CnCaches, Mesi};
+use recxl::cluster::run_app;
+use recxl::config::SimConfig;
+use recxl::mem::Addr;
+use recxl::prelude::*;
+use recxl::proto::ReqId;
+use recxl::recxl::logunit::{LoggingUnit, PendingRepl};
+use recxl::sim::EventQueue;
+use recxl::workloads::tracegen;
+
+fn main() {
+    header();
+
+    bench("event_queue push+pop 10k", 3, 20, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.push_at(i * 7 % 9973, i);
+        }
+        while q.pop().is_some() {}
+    });
+
+    let cfg = SimConfig::default();
+    bench("cache lookup+fill 10k lines", 3, 20, || {
+        let mut c = CnCaches::new(&cfg);
+        for i in 0..10_000u32 {
+            let l = Addr(0x8000_0000 | ((i % 4096) << 6)).line();
+            if c.lookup(0, l) == recxl::cache::LookupResult::Miss {
+                c.fill(0, l, Mesi::Exclusive, [0; 16]);
+            }
+        }
+    });
+
+    let params = recxl::workloads::profiles::ycsb().to_params(0);
+    bench("trace_gen 4096-op block (rust)", 3, 50, || {
+        std::hint::black_box(tracegen::gen_block(42, 0, &params));
+    });
+
+    bench("logging unit 1k REPL+VAL", 3, 20, || {
+        let mut lu = LoggingUnit::new(1, 16, 341, 1 << 20);
+        let req = ReqId { cn: 0, core: 0 };
+        for i in 0..1_000u64 {
+            let line = Addr(0x8000_0000 | (((i % 64) as u32) << 6)).line();
+            lu.repl(
+                0,
+                PendingRepl { req, line, mask: 0b11, words: [i as u32; 16], repl_seq: i + 1 },
+            );
+            lu.val(0, req, line, i + 1, i + 1);
+        }
+    });
+
+    bench("log dump gzip-9 (8k entries)", 2, 10, || {
+        let mut lu = LoggingUnit::new(1, 16, 341, 1 << 20);
+        let req = ReqId { cn: 0, core: 0 };
+        for i in 0..8_192u64 {
+            let line = Addr(0x8000_0000 | (((i % 512) as u32) << 6)).line();
+            lu.repl(0, PendingRepl { req, line, mask: 1, words: [i as u32; 16], repl_seq: i + 1 });
+            lu.val(0, req, line, i + 1, i + 1);
+        }
+        std::hint::black_box(lu.dump(16, 16, 3, 9));
+    });
+
+    // end-to-end simulator throughput: the §Perf headline metric
+    let mut events_per_sec = 0.0;
+    let s = bench("full sim: ycsb proactive 2k ops/thread", 1, 3, || {
+        let stats = run_app(
+            SimConfig {
+                ops_per_thread: 2_000,
+                ..SimConfig::default()
+            },
+            &by_name("ycsb").unwrap(),
+        );
+        events_per_sec = stats.events_per_sec();
+    });
+    println!(
+        "sim throughput: {:.2} M events/s (sample mean {:.2} ms)",
+        events_per_sec / 1e6,
+        s.mean_s * 1e3
+    );
+}

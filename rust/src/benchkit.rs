@@ -1,0 +1,118 @@
+//! Minimal criterion-style bench harness (criterion is not in the offline
+//! crate set).  Provides warmup + sampled timing with mean/median/stddev,
+//! and a `figure` helper for the paper-reproduction benches, which are
+//! end-to-end simulations reported as figure tables rather than
+//! microsecond loops.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Summary {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<40} {:>10} {:>10} {:>10} {:>10}  ({} samples)",
+            self.name,
+            fmt_s(self.mean_s),
+            fmt_s(self.median_s),
+            fmt_s(self.min_s),
+            fmt_s(self.max_s),
+            self.samples,
+        )
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Print the standard header for `bench` output.
+pub fn header() {
+    println!(
+        "{:<40} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "median", "min", "max"
+    );
+}
+
+/// Time `f` with `warmup` throwaway runs and `samples` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    let s = Summary {
+        name: name.to_string(),
+        samples,
+        mean_s: mean,
+        median_s: times[times.len() / 2],
+        stddev_s: var.sqrt(),
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+    };
+    println!("{}", s.render());
+    s
+}
+
+/// Wall-time one closure once, returning (result, seconds) — used by the
+/// figure benches, where each "iteration" is a multi-second simulation.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.samples, 5);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert!(s.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, t) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn formatting_scales() {
+        assert!(fmt_s(2e-9).contains("ns"));
+        assert!(fmt_s(2e-5).contains("us"));
+        assert!(fmt_s(2e-2).contains("ms"));
+        assert!(fmt_s(2.0).contains(" s") || fmt_s(2.0).ends_with('s'));
+    }
+}

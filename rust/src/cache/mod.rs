@@ -1,0 +1,359 @@
+//! Set-associative cache models and the per-CN cache hierarchy.
+//!
+//! Each CN has private per-core L1/L2 and a shared L3 (Table II).  The tag
+//! arrays model *placement* (hit/miss + evictions); inter-CN coherence
+//! state (MESI at CN granularity, as tracked by the MN-side remote
+//! directory) and dirty-word values live in the per-CN [`CnLineState`] map,
+//! since that is the state a CN failure destroys and ReCXL must be able to
+//! reconstruct.
+
+mod setassoc;
+
+pub use setassoc::SetAssocCache;
+
+use rustc_hash::FxHashMap;
+
+use crate::config::SimConfig;
+use crate::mem::{Line, WORDS_PER_LINE};
+use crate::sim::time::{cycles, Ps};
+
+/// MESI coherence state of a line within one CN (CN granularity —
+/// the remote directory tracks sharers per CN, not per core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mesi {
+    Modified,
+    Exclusive,
+    Shared,
+}
+
+/// Per-CN state of a cached line.
+#[derive(Debug, Clone)]
+pub struct CnLineState {
+    pub mesi: Mesi,
+    /// Words dirtied since the line was last written back.
+    pub dirty_mask: u16,
+    /// Current word values (only tracked for remote lines — these are what
+    /// recovery must reconstruct when the CN dies).
+    pub words: [u32; WORDS_PER_LINE as usize],
+}
+
+impl CnLineState {
+    fn new(mesi: Mesi, words: [u32; WORDS_PER_LINE as usize]) -> Self {
+        CnLineState {
+            mesi,
+            dirty_mask: 0,
+            words,
+        }
+    }
+}
+
+/// Which level a lookup hit (for latency) or miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LookupResult {
+    L1,
+    L2,
+    L3,
+    Miss,
+}
+
+/// A line evicted from the hierarchy that was dirty and remote — must be
+/// written back to its home MN.
+#[derive(Debug, Clone)]
+pub struct Writeback {
+    pub line: Line,
+    pub mask: u16,
+    pub words: [u32; WORDS_PER_LINE as usize],
+}
+
+/// The cache hierarchy of one CN: per-core L1/L2, shared L3, plus the
+/// CN-granularity coherence/value state.
+pub struct CnCaches {
+    l1: Vec<SetAssocCache>,
+    l2: Vec<SetAssocCache>,
+    l3: SetAssocCache,
+    l1_lat: Ps,
+    l2_lat: Ps,
+    l3_lat: Ps,
+    /// Coherence + value state per resident remote line; local lines are
+    /// tracked in the tag arrays only (no coherence needed).
+    pub lines: FxHashMap<Line, CnLineState>,
+}
+
+impl CnCaches {
+    pub fn new(cfg: &SimConfig) -> Self {
+        CnCaches {
+            l1: (0..cfg.cores_per_cn)
+                .map(|_| SetAssocCache::new(cfg.l1.sets(), cfg.l1.assoc))
+                .collect(),
+            l2: (0..cfg.cores_per_cn)
+                .map(|_| SetAssocCache::new(cfg.l2.sets(), cfg.l2.assoc))
+                .collect(),
+            l3: SetAssocCache::new(cfg.l3.sets(), cfg.l3.assoc),
+            l1_lat: cycles(cfg.l1.latency_cycles),
+            l2_lat: cycles(cfg.l2.latency_cycles),
+            l3_lat: cycles(cfg.l3.latency_cycles),
+            lines: FxHashMap::default(),
+        }
+    }
+
+    /// Look up `line` for `core`, updating LRU. Returns where it hit.
+    pub fn lookup(&mut self, core: usize, line: Line) -> LookupResult {
+        if self.l1[core].touch(line.0) {
+            LookupResult::L1
+        } else if self.l2[core].touch(line.0) {
+            // refill L1 (may displace)
+            self.install_l1(core, line);
+            LookupResult::L2
+        } else if self.l3.touch(line.0) {
+            self.install_l1(core, line);
+            self.l2[core].insert(line.0);
+            LookupResult::L3
+        } else {
+            LookupResult::Miss
+        }
+    }
+
+    /// Latency for a given lookup result level.
+    pub fn latency(&self, r: LookupResult) -> Ps {
+        match r {
+            LookupResult::L1 => self.l1_lat,
+            LookupResult::L2 => self.l2_lat,
+            LookupResult::L3 => self.l3_lat,
+            LookupResult::Miss => self.l3_lat, // traversal cost before memory
+        }
+    }
+
+    fn install_l1(&mut self, core: usize, line: Line) {
+        self.l1[core].insert(line.0);
+    }
+
+    /// Install `line` in all levels for `core` (inclusive fill from
+    /// memory/directory).  Returns a writeback if a dirty remote line got
+    /// displaced from L3 (the point of no return in an inclusive
+    /// hierarchy).
+    pub fn fill(
+        &mut self,
+        core: usize,
+        line: Line,
+        mesi: Mesi,
+        words: [u32; WORDS_PER_LINE as usize],
+    ) -> Option<Writeback> {
+        self.l1[core].insert(line.0);
+        self.l2[core].insert(line.0);
+        let victim = self.l3.insert(line.0);
+        self.lines.insert(line, CnLineState::new(mesi, words));
+        victim.and_then(|v| self.evict_line(Line(v)))
+    }
+
+    /// Remove a line from the whole hierarchy (inclusive invalidation),
+    /// returning its dirty data if it was a modified remote line.
+    pub fn evict_line(&mut self, line: Line) -> Option<Writeback> {
+        for c in &mut self.l1 {
+            c.remove(line.0);
+        }
+        for c in &mut self.l2 {
+            c.remove(line.0);
+        }
+        self.l3.remove(line.0);
+        let st = self.lines.remove(&line)?;
+        if st.mesi == Mesi::Modified && line.is_remote() && st.dirty_mask != 0 {
+            Some(Writeback {
+                line,
+                mask: st.dirty_mask,
+                words: st.words,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Downgrade to Shared (directory asked on another CN's read).
+    /// Returns dirty data to forward home if the line was Modified.
+    pub fn downgrade(&mut self, line: Line) -> Option<Writeback> {
+        let st = self.lines.get_mut(&line)?;
+        let wb = if st.mesi == Mesi::Modified && st.dirty_mask != 0 {
+            Some(Writeback {
+                line,
+                mask: st.dirty_mask,
+                words: st.words,
+            })
+        } else {
+            None
+        };
+        st.mesi = Mesi::Shared;
+        st.dirty_mask = 0;
+        wb
+    }
+
+    /// Apply a committed store of `mask`/`values` to a resident line.
+    /// Panics if the line is not owned — the protocol must have acquired
+    /// ownership first.
+    pub fn write_words(&mut self, line: Line, mask: u16, values: &[u32; 16]) {
+        let st = self
+            .lines
+            .get_mut(&line)
+            .expect("store commit to non-resident line");
+        debug_assert!(
+            matches!(st.mesi, Mesi::Modified | Mesi::Exclusive),
+            "store commit without ownership"
+        );
+        st.mesi = Mesi::Modified;
+        st.dirty_mask |= mask;
+        for w in 0..16 {
+            if mask & (1 << w) != 0 {
+                st.words[w] = values[w];
+            }
+        }
+    }
+
+    /// State of a resident line (None = not cached in this CN).
+    pub fn state(&self, line: Line) -> Option<&CnLineState> {
+        self.lines.get(&line)
+    }
+
+    /// Whether this CN currently owns the line (M or E).
+    pub fn owns(&self, line: Line) -> bool {
+        matches!(
+            self.lines.get(&line).map(|s| s.mesi),
+            Some(Mesi::Modified) | Some(Mesi::Exclusive)
+        )
+    }
+
+    /// Count of resident remote lines by state — Fig. 15's
+    /// (Exclusive, Dirty) census of a crashed CN's caches.
+    pub fn census(&self) -> LineCensus {
+        let mut c = LineCensus::default();
+        for (l, st) in &self.lines {
+            if !l.is_remote() {
+                continue;
+            }
+            match st.mesi {
+                Mesi::Modified => c.dirty += 1,
+                Mesi::Exclusive => c.exclusive += 1,
+                Mesi::Shared => c.shared += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Remote-line census of one CN's caches (Fig. 15).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LineCensus {
+    pub dirty: u64,
+    pub exclusive: u64,
+    pub shared: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    fn rline(i: u32) -> Line {
+        Addr(0x8000_0000 | (i << 6)).line()
+    }
+
+    #[test]
+    fn miss_then_hit_ladder() {
+        let mut c = CnCaches::new(&cfg());
+        let l = rline(5);
+        assert_eq!(c.lookup(0, l), LookupResult::Miss);
+        assert!(c.fill(0, l, Mesi::Exclusive, [0; 16]).is_none());
+        assert_eq!(c.lookup(0, l), LookupResult::L1);
+        // other core of the same CN hits in L3 and refills its own L1/L2
+        assert_eq!(c.lookup(1, l), LookupResult::L3);
+        assert_eq!(c.lookup(1, l), LookupResult::L1);
+    }
+
+    #[test]
+    fn store_requires_ownership_and_dirties() {
+        let mut c = CnCaches::new(&cfg());
+        let l = rline(9);
+        c.fill(0, l, Mesi::Exclusive, [7; 16]);
+        let mut vals = [0u32; 16];
+        vals[3] = 0xDEAD;
+        c.write_words(l, 1 << 3, &vals);
+        let st = c.state(l).unwrap();
+        assert_eq!(st.mesi, Mesi::Modified);
+        assert_eq!(st.dirty_mask, 1 << 3);
+        assert_eq!(st.words[3], 0xDEAD);
+        assert_eq!(st.words[2], 7);
+    }
+
+    #[test]
+    fn eviction_returns_dirty_writeback() {
+        let mut c = CnCaches::new(&cfg());
+        let l = rline(1);
+        c.fill(0, l, Mesi::Exclusive, [1; 16]);
+        c.write_words(l, 0xFFFF, &[2; 16]);
+        let wb = c.evict_line(l).expect("dirty line must write back");
+        assert_eq!(wb.mask, 0xFFFF);
+        assert_eq!(wb.words[0], 2);
+        assert!(c.state(l).is_none());
+        // clean eviction yields nothing
+        c.fill(0, l, Mesi::Shared, [1; 16]);
+        assert!(c.evict_line(l).is_none());
+    }
+
+    #[test]
+    fn downgrade_flushes_and_shares() {
+        let mut c = CnCaches::new(&cfg());
+        let l = rline(2);
+        c.fill(0, l, Mesi::Exclusive, [0; 16]);
+        c.write_words(l, 1, &[9; 16]);
+        let wb = c.downgrade(l).unwrap();
+        assert_eq!(wb.words[0], 9);
+        assert_eq!(c.state(l).unwrap().mesi, Mesi::Shared);
+        assert!(!c.owns(l));
+        // downgrading a clean Shared line is a no-op
+        assert!(c.downgrade(l).is_none());
+    }
+
+    #[test]
+    fn census_counts_remote_only() {
+        let mut c = CnCaches::new(&cfg());
+        c.fill(0, rline(1), Mesi::Exclusive, [0; 16]);
+        c.fill(0, rline(2), Mesi::Exclusive, [0; 16]);
+        c.write_words(rline(2), 1, &[1; 16]);
+        c.fill(0, rline(3), Mesi::Shared, [0; 16]);
+        // a local line must not show up
+        c.fill(0, Addr(0x0100_0040).line(), Mesi::Exclusive, [0; 16]);
+        let census = c.census();
+        assert_eq!(
+            (census.exclusive, census.dirty, census.shared),
+            (1, 1, 1)
+        );
+    }
+
+    #[test]
+    fn l3_capacity_eviction_cascades() {
+        // tiny hierarchy: force L3 conflict evictions
+        let mut cfgv = cfg();
+        cfgv.l3 = crate::config::CacheGeom {
+            size_bytes: 64 * 64, // 64 lines
+            assoc: 4,
+            latency_cycles: 36,
+        };
+        let mut c = CnCaches::new(&cfgv);
+        // fill one L3 set (same set index) beyond capacity
+        let sets = cfgv.l3.sets();
+        let mut dirty_wbs = 0;
+        for i in 0..6u32 {
+            let l = rline(i * sets);
+            c.fill(0, l, Mesi::Exclusive, [0; 16]);
+            c.write_words(l, 1, &[i; 16]);
+            // re-fill may evict an older dirty line
+        }
+        for i in 0..6u32 {
+            if c.state(rline(i * sets)).is_none() {
+                dirty_wbs += 1;
+            }
+        }
+        assert!(dirty_wbs >= 2, "4-way set must have displaced lines");
+    }
+}

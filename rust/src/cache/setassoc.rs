@@ -1,0 +1,165 @@
+//! A set-associative tag array with LRU replacement.
+//!
+//! Models placement only — coherence state and data live at the CN level
+//! (`cache::CnLineState`).  Sets are small fixed-capacity vectors ordered
+//! MRU-first, so `touch`/`insert` are O(assoc) with no per-line clock.
+
+/// Set-associative tag array, LRU, indexed by line address.
+#[derive(Debug, Clone)]
+pub struct SetAssocCache {
+    sets: Vec<Vec<u32>>,
+    set_mask: u32,
+    assoc: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl SetAssocCache {
+    /// `n_sets` must be a power of two (cache geometries in Table II are).
+    pub fn new(n_sets: u32, assoc: u32) -> Self {
+        assert!(n_sets.is_power_of_two(), "sets must be a power of two");
+        assert!(assoc >= 1);
+        SetAssocCache {
+            sets: vec![Vec::with_capacity(assoc as usize); n_sets as usize],
+            set_mask: n_sets - 1,
+            assoc: assoc as usize,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line: u32) -> usize {
+        (line & self.set_mask) as usize
+    }
+
+    /// Probe + LRU-update. True on hit.
+    pub fn touch(&mut self, line: u32) -> bool {
+        let s = self.set_of(line);
+        let set = &mut self.sets[s];
+        if let Some(pos) = set.iter().position(|&t| t == line) {
+            // move to MRU (front)
+            let t = set.remove(pos);
+            set.insert(0, t);
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Probe without LRU update or stats.
+    pub fn contains(&self, line: u32) -> bool {
+        self.sets[self.set_of(line)].iter().any(|&t| t == line)
+    }
+
+    /// Insert `line` as MRU; returns the evicted victim line, if any.
+    /// Inserting a resident line just refreshes LRU.
+    pub fn insert(&mut self, line: u32) -> Option<u32> {
+        let s = self.set_of(line);
+        let assoc = self.assoc;
+        let set = &mut self.sets[s];
+        if let Some(pos) = set.iter().position(|&t| t == line) {
+            let t = set.remove(pos);
+            set.insert(0, t);
+            return None;
+        }
+        let victim = if set.len() == assoc { set.pop() } else { None };
+        set.insert(0, line);
+        victim
+    }
+
+    /// Remove `line` if resident (invalidation). True if it was present.
+    pub fn remove(&mut self, line: u32) -> bool {
+        let s = self.set_of(line);
+        let set = &mut self.sets[s];
+        if let Some(pos) = set.iter().position(|&t| t == line) {
+            set.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Number of resident lines.
+    pub fn occupancy(&self) -> usize {
+        self.sets.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = SetAssocCache::new(4, 2);
+        assert!(!c.touch(12));
+        c.insert(12);
+        assert!(c.touch(12));
+        assert!(c.contains(12));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = SetAssocCache::new(1, 2);
+        c.insert(1);
+        c.insert(2);
+        c.touch(1); // 1 becomes MRU, 2 is LRU
+        assert_eq!(c.insert(3), Some(2));
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = SetAssocCache::new(1, 2);
+        c.insert(1);
+        c.insert(2);
+        assert_eq!(c.insert(1), None); // refresh
+        assert_eq!(c.insert(3), Some(2));
+    }
+
+    #[test]
+    fn sets_are_independent() {
+        let mut c = SetAssocCache::new(2, 1);
+        c.insert(0); // set 0
+        c.insert(1); // set 1
+        assert!(c.contains(0));
+        assert!(c.contains(1));
+        assert_eq!(c.insert(2), Some(0)); // set 0 again
+        assert!(c.contains(1));
+    }
+
+    #[test]
+    fn remove_and_occupancy() {
+        let mut c = SetAssocCache::new(4, 4);
+        for i in 0..8 {
+            c.insert(i);
+        }
+        assert_eq!(c.occupancy(), 8);
+        assert!(c.remove(3));
+        assert!(!c.remove(3));
+        assert_eq!(c.occupancy(), 7);
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut c = SetAssocCache::new(4, 2);
+        c.insert(0);
+        c.touch(0);
+        c.touch(0);
+        c.touch(99);
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,244 @@
+//! The SB-head commit engine: what must complete before the head store
+//! drains, per configuration (section VI; Fig. 6 timelines).
+//!
+//! * **WB** — ownership (usually satisfied by the exclusive prefetch).
+//! * **WT** — a full round trip to the home MN including sharers'
+//!   invalidation and the 500 ns persist; strictly one store at a time
+//!   (TSO), which is why WT fills the SB and stalls the core (Fig. 2).
+//! * **ReCXL-baseline** — ownership first, *then* the replication
+//!   transaction (REPLs -> REPL_ACKs), then VALs + commit (Fig. 6a).
+//! * **ReCXL-parallel** — replication starts at the SB head concurrently
+//!   with (usually already prefetched) coherence (Fig. 6b).
+//! * **ReCXL-proactive** — REPLs were already issued at retire
+//!   (`exec::deposit_store`); the head only waits for the outstanding
+//!   acks + ownership (Fig. 6c), or issues the REPLs now if coalescing
+//!   delayed them to the head (section IV-D.5 — the Fig. 11 counter).
+
+use super::{Cluster, Ev};
+use crate::config::Protocol;
+use crate::cpu::Block;
+use crate::mem::Line;
+use crate::proto::{Message, MsgKind, NodeId, ReqId};
+use crate::recxl::replicas;
+use crate::sim::time::Ps;
+
+impl Cluster {
+    /// Drive the head of `id`'s SB as far as it will go at the current
+    /// time.  Re-invoked by every event that could unblock it (data
+    /// grants, REPL_ACKs, WT acks).
+    pub(crate) fn commit_check(&mut self, id: usize) {
+        let now = self.q.now();
+        let cn = self.cores[id].cn;
+        if self.dead[cn] {
+            return;
+        }
+        loop {
+            let Some(head) = self.cores[id].sb.head() else { break };
+            let line = head.line;
+            let remote = head.remote;
+
+            if !remote {
+                // CN-local store: commit at cache speed, no coherence
+                let e = self.cores[id].sb.pop_head().unwrap();
+                self.oracle.on_commit(e.line, e.mask, &e.words, cn, 0);
+                self.stats.repl.store_commits += 1;
+                self.cores[id].stats.l1_hits += 1;
+                continue;
+            }
+
+            match self.cfg.protocol {
+                Protocol::WriteBack => {
+                    if !self.try_own_and_apply(id, line, now) {
+                        break;
+                    }
+                }
+                Protocol::WriteThrough => {
+                    let head = self.cores[id].sb.head_mut().unwrap();
+                    if head.wt_acked {
+                        let e = self.cores[id].sb.pop_head().unwrap();
+                        self.oracle.on_commit(e.line, e.mask, &e.words, cn, 0);
+                        self.stats.repl.store_commits += 1;
+                        continue;
+                    }
+                    if !head.committing {
+                        head.committing = true;
+                        let (mask, words) = (head.mask, head.words);
+                        let local = self.cores[id].local;
+                        let mn = line.home_mn(self.cfg.n_mns);
+                        self.send(
+                            now,
+                            Message {
+                                src: NodeId::Cn(cn),
+                                dst: NodeId::Mn(mn),
+                                kind: MsgKind::WtStore {
+                                    line,
+                                    req: ReqId { cn, core: local },
+                                    mask,
+                                    words,
+                                },
+                            },
+                        );
+                    }
+                    break; // wait for WtAck
+                }
+                Protocol::ReCxlBaseline => {
+                    // coherence strictly first (Fig. 6a)
+                    if !self.caches[cn].owns(line) {
+                        self.ensure_ownership(id, line, now);
+                        break;
+                    }
+                    if !self.replication_step(id, now) {
+                        break;
+                    }
+                }
+                Protocol::ReCxlParallel | Protocol::ReCxlProactive => {
+                    // replication may start/finish while coherence is
+                    // still in flight (Figs. 6b/6c)
+                    if !self.caches[cn].owns(line) {
+                        self.ensure_ownership(id, line, now);
+                    }
+                    let advanced = self.replication_step(id, now);
+                    if !advanced {
+                        break;
+                    }
+                }
+            }
+        }
+        self.wake_sb_stall(id);
+        // fence completion: the SB drained and a sync op is waiting
+        if self.cores[id].block == Block::Fence && self.cores[id].sb.is_empty() {
+            let now = self.q.now();
+            let core = &mut self.cores[id];
+            core.stats.sb_full_stall_ps += now.saturating_sub(core.clock);
+            core.clock = core.clock.max(now);
+            core.block = Block::None;
+            self.q.push_at(core.clock, Ev::Run(id));
+        }
+        if self.cores[id].block == Block::Done {
+            self.check_finished(id);
+        }
+        let cn = self.cores[id].cn;
+        if self.cns[cn].quiescing {
+            self.try_quiesce(cn);
+        }
+    }
+
+    /// WB commit: apply if owner, else (re)request ownership.  True if the
+    /// head was popped.
+    fn try_own_and_apply(&mut self, id: usize, line: Line, now: Ps) -> bool {
+        let cn = self.cores[id].cn;
+        if self.caches[cn].owns(line) {
+            let e = self.cores[id].sb.pop_head().unwrap();
+            self.caches[cn].write_words(line, e.mask, &e.words);
+            self.oracle.on_commit(line, e.mask, &e.words, cn, 0);
+            self.stats.repl.store_commits += 1;
+            // NOTE: commits never advance the core's front-end clock —
+            // stores are asynchronous after retirement; the core only
+            // feels the SB via full-stalls (TSO).
+            true
+        } else {
+            self.ensure_ownership(id, line, now);
+            false
+        }
+    }
+
+    /// Make sure an ownership request is in flight for the head's line.
+    fn ensure_ownership(&mut self, id: usize, line: Line, now: Ps) {
+        let (cn, local) = (self.cores[id].cn, self.cores[id].local);
+        if !self.caches[cn].owns(line) {
+            self.issue_rdx(cn, local, line, now, false);
+        }
+    }
+
+    /// Advance the head's Replication transaction (ReCXL variants).
+    /// Returns true if the head committed and was popped.
+    fn replication_step(&mut self, id: usize, now: Ps) -> bool {
+        let cn = self.cores[id].cn;
+        let head = self.cores[id].sb.head().unwrap();
+        let line = head.line;
+        if !head.repl_sent {
+            // baseline/parallel always send at the head; proactive lands
+            // here only when coalescing delayed the send to the head
+            self.send_repls(id, 0, now, true);
+        }
+        let head = self.cores[id].sb.head_mut().unwrap();
+        head.committing = true;
+        if head.acks_mask != 0 || !self.caches[cn].owns(line) {
+            return false; // still waiting (acks and/or coherence)
+        }
+        // commit: send VALs, apply to cache, pop (Fig. 3 steps 5-6)
+        let e = self.cores[id].sb.pop_head().unwrap();
+        let reps = replicas(line, cn, self.cfg.n_cns, self.cfg.n_r);
+        let local = self.cores[id].local;
+        for r in reps {
+            if self.dead[r] {
+                continue;
+            }
+            self.cns[cn].val_ts[r] += 1;
+            let ts = self.cns[cn].val_ts[r];
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Cn(cn),
+                    dst: NodeId::Cn(r),
+                    kind: MsgKind::Val {
+                        req: ReqId { cn, core: local },
+                        line,
+                        repl_seq: e.repl_seq,
+                        ts,
+                    },
+                },
+            );
+            self.stats.repl.vals_sent += 1;
+        }
+        self.caches[cn].write_words(line, e.mask, &e.words);
+        self.oracle.on_commit(line, e.mask, &e.words, cn, e.repl_seq);
+        self.stats.repl.store_commits += 1;
+        true
+    }
+
+    /// Send the REPL messages for SB entry `idx` of core `id` (Fig. 3
+    /// step 2 / Fig. 4a).  `at_head` feeds the Fig. 11 counter.
+    pub(crate) fn send_repls(&mut self, id: usize, idx: usize, at: Ps, at_head: bool) {
+        let cn = self.cores[id].cn;
+        let local = self.cores[id].local;
+        self.cns[cn].repl_seq += 1;
+        let seq = self.cns[cn].repl_seq;
+        let (line, mask, words) = {
+            let e = self.cores[id].sb.entry_mut(idx);
+            debug_assert!(!e.repl_sent && e.remote);
+            e.repl_sent = true;
+            e.repl_seq = seq;
+            (e.line, e.mask, e.words)
+        };
+        let reps: Vec<usize> = replicas(line, cn, self.cfg.n_cns, self.cfg.n_r)
+            .into_iter()
+            .filter(|&r| !self.dead[r])
+            .collect();
+        let mut acks = 0u32;
+        for &r in &reps {
+            acks |= 1 << r;
+        }
+        self.cores[id].sb.entry_mut(idx).acks_mask = acks;
+        self.stats.repl.repls_sent += 1;
+        if at_head {
+            self.stats.repl.repls_at_head += 1;
+        }
+        for r in reps {
+            self.send(
+                at,
+                Message {
+                    src: NodeId::Cn(cn),
+                    dst: NodeId::Cn(r),
+                    kind: MsgKind::Repl {
+                        req: ReqId { cn, core: local },
+                        line,
+                        mask,
+                        words,
+                        repl_seq: seq,
+                    },
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! Trace consumption: each `Ev::Run(core)` processes ops until the core
+//! blocks or its batching quantum expires.
+//!
+//! Batching: non-memory ops and cache hits advance the core-local clock in
+//! a tight loop without touching the event queue; the quantum (256 ops)
+//! bounds how far a core may run ahead of global time, keeping causality
+//! skew under ~100 ns — below the fabric RTT (DESIGN.md "Timing model").
+
+use super::{Cluster, Ev};
+use crate::cache::{LookupResult, Mesi};
+use crate::cpu::{Block, Deposit};
+use crate::mem::Addr;
+use crate::proto::{Message, MsgKind, NodeId, ReqId};
+use crate::sim::time::PS_PER_CPU_CYCLE;
+use crate::workloads::TraceOp;
+
+/// Ops per scheduling quantum.
+const QUANTUM: usize = 256;
+
+impl Cluster {
+    pub(crate) fn run_core(&mut self, id: usize) {
+        let now = self.q.now();
+        {
+            let core = &self.cores[id];
+            if self.dead[core.cn] || core.block != Block::None {
+                return;
+            }
+            if self.cns[core.cn].quiescing || self.cns[core.cn].paused {
+                self.cores[id].block = Block::Paused;
+                self.try_quiesce(self.cores[id].cn);
+                return;
+            }
+        }
+        self.cores[id].clock = self.cores[id].clock.max(now);
+
+        // a store stalled on a full SB retries first
+        if let Some((line, remote, word, value)) = self.cores[id].pending_store.take() {
+            if !self.deposit_store(id, line, remote, word, value) {
+                return; // still full; Commit events will resume us
+            }
+        }
+        // a sync op stashed behind a fence executes first
+        if let Some(op) = self.cores[id].after_fence.take() {
+            if !self.do_sync_op(id, op) {
+                return;
+            }
+        }
+
+        for _ in 0..QUANTUM {
+            // critical-section bookkeeping: count down and release
+            if self.cores[id].cs_remaining > 0 {
+                self.cores[id].cs_remaining -= 1;
+                if self.cores[id].cs_remaining == 0 {
+                    if let Some(l) = self.cores[id].held_lock.take() {
+                        let at = self.cores[id].clock;
+                        if let Some(next) = self.locks.release(l, id) {
+                            let ow = self.cfg.one_way_ps();
+                            self.q.push_at(
+                                at.max(now) + ow,
+                                Ev::GrantLock { core: next, lock: l },
+                            );
+                        }
+                    }
+                }
+            }
+            let op_opt = {
+                // split borrow: trace source is disjoint from cores
+                let Cluster { cores, trace_src, .. } = self;
+                cores[id].trace.next_op(trace_src.as_mut())
+            };
+            let Some(op) = op_opt else {
+                self.cores[id].block = Block::Done;
+                self.check_finished(id);
+                return;
+            };
+            if op != TraceOp::Barrier {
+                // barriers are workload-layer insertions, not trace ops
+                self.cores[id].stats.ops += 1;
+            }
+            match op {
+                TraceOp::Compute => {
+                    self.cores[id].clock += PS_PER_CPU_CYCLE;
+                }
+                TraceOp::Load { addr } => {
+                    if !self.do_load(id, Addr(addr)) {
+                        return; // blocked on a remote miss
+                    }
+                }
+                TraceOp::Store { addr } => {
+                    let a = Addr(addr);
+                    let value = self.cores[id].next_store_value();
+                    if !self.deposit_store(id, a.line(), a.is_remote(), a.word(), value) {
+                        return; // SB full
+                    }
+                    self.cores[id].clock += PS_PER_CPU_CYCLE;
+                }
+                op @ (TraceOp::Lock { .. } | TraceOp::Barrier) => {
+                    if !self.do_sync_op(id, op) {
+                        return;
+                    }
+                }
+            }
+        }
+        // quantum expired: yield and reschedule at the core's clock
+        let at = self.cores[id].clock;
+        self.q.push_at(at.max(now), Ev::Run(id));
+    }
+
+    /// Execute a lock acquire or barrier.  Both are fencing operations:
+    /// under TSO an atomic RMW (lock) orders against earlier stores, so
+    /// the SB must drain first — this is precisely why a slow replication
+    /// transaction hurts lock-dense applications even when the SB never
+    /// fills (section VII-A's raytrace/fluidanimate discussion).
+    /// Returns false if the core blocked.
+    fn do_sync_op(&mut self, id: usize, op: TraceOp) -> bool {
+        let now = self.q.now();
+        if !self.cores[id].sb.is_empty() {
+            self.cores[id].after_fence = Some(op);
+            self.cores[id].block = Block::Fence;
+            self.q
+                .push_at(self.cores[id].clock.max(now), Ev::Commit(id));
+            return false;
+        }
+        match op {
+            TraceOp::Lock { lock, cs_len } => {
+                let clock = self.cores[id].clock;
+                if self.cores[id].held_lock.is_some() {
+                    // nested acquire in the synthetic stream: treat as
+                    // compute (real traces don't nest the same lock)
+                    self.cores[id].clock += PS_PER_CPU_CYCLE;
+                    return true;
+                }
+                if self.locks.acquire(lock, id) {
+                    let core = &mut self.cores[id];
+                    core.held_lock = Some(lock);
+                    core.cs_remaining = cs_len.max(1) as u64;
+                    core.clock = clock + self.cfg.net_rtt_ps; // lock RTT
+                    true
+                } else {
+                    let core = &mut self.cores[id];
+                    core.pending_cs = cs_len.max(1) as u64;
+                    core.block = Block::Lock(lock);
+                    false
+                }
+            }
+            TraceOp::Barrier => {
+                let clock = self.cores[id].clock;
+                self.cores[id].block = Block::Barrier;
+                if let Some(waiters) = self.barrier.arrive(id) {
+                    let at = clock.max(now) + self.cfg.net_rtt_ps;
+                    for w in waiters {
+                        self.q.push_at(at, Ev::BarrierGo(w));
+                    }
+                }
+                false
+            }
+            _ => unreachable!("do_sync_op on non-sync op"),
+        }
+    }
+
+    /// Execute a load.  The cores are out-of-order (Table II), so load
+    /// misses are *asynchronous*: the core issues the miss, keeps going,
+    /// and only stalls when its MLP window (MSHRs) is full.  Hits retire
+    /// pipelined at one per cycle.  Returns false if the core blocked.
+    fn do_load(&mut self, id: usize, addr: Addr) -> bool {
+        let (cn, local) = (self.cores[id].cn, self.cores[id].local);
+        self.cores[id].stats.loads += 1;
+        let line = addr.line();
+
+        // MLP window full: stall until a miss returns
+        if self.cores[id].outstanding_loads >= self.cfg.mlp {
+            // the load has not executed: rewind so it replays on resume
+            self.cores[id].stats.loads -= 1;
+            self.cores[id].stats.ops -= 1;
+            self.cores[id].trace.rewind_one();
+            self.cores[id].block = Block::Mlp;
+            return false;
+        }
+
+        // TSO store-to-load forwarding from the SB
+        if self.cores[id].sb.forward(line, addr.word()).is_some() {
+            self.cores[id].clock += PS_PER_CPU_CYCLE;
+            return true;
+        }
+
+        let res = self.caches[cn].lookup(local, line);
+        self.cores[id].clock += PS_PER_CPU_CYCLE; // issue slot
+        match res {
+            LookupResult::L1 => {
+                self.cores[id].stats.l1_hits += 1;
+                true
+            }
+            LookupResult::L2 => {
+                self.cores[id].stats.l2_hits += 1;
+                true
+            }
+            LookupResult::L3 => {
+                self.cores[id].stats.l3_hits += 1;
+                true
+            }
+            LookupResult::Miss if !addr.is_remote() => {
+                // CN-local DRAM miss: completes after DRAM latency, no
+                // fabric involvement
+                self.cores[id].stats.local_mem += 1;
+                self.cores[id].outstanding_loads += 1;
+                let done =
+                    self.cores[id].clock + self.caches[cn].latency(res) + self.cfg.local_dram_ps;
+                let wb = self.caches[cn].fill(local, line, Mesi::Exclusive, [0; 16]);
+                self.writeback(cn, wb);
+                self.q.push_at(done.max(self.q.now()), Ev::LoadDone(id));
+                true
+            }
+            LookupResult::Miss => {
+                // remote miss: RdS to the home directory, completes on Data
+                self.cores[id].stats.remote_loads += 1;
+                self.cores[id].stats.remote_misses += 1;
+                self.cores[id].outstanding_loads += 1;
+                let clock = self.cores[id].clock + self.caches[cn].latency(res);
+                let fresh = {
+                    let st = &mut self.cns[cn];
+                    let waiters = st.mshr.entry(line).or_default();
+                    waiters.push(local);
+                    waiters.len() == 1 && !st.rdx_inflight.contains(&line)
+                };
+                if fresh {
+                    let mn = line.home_mn(self.cfg.n_mns);
+                    self.send(
+                        clock,
+                        Message {
+                            src: NodeId::Cn(cn),
+                            dst: NodeId::Mn(mn),
+                            kind: MsgKind::RdS {
+                                line,
+                                req: ReqId { cn, core: local },
+                            },
+                        },
+                    );
+                }
+                true
+            }
+        }
+    }
+
+    /// `count` outstanding load misses of core `id` completed: free the
+    /// MLP slots and resume the core if it was MLP-stalled.
+    pub(crate) fn load_done(&mut self, id: usize, count: usize) {
+        let now = self.q.now();
+        let core = &mut self.cores[id];
+        core.outstanding_loads = core.outstanding_loads.saturating_sub(count);
+        if core.block == Block::Mlp && core.outstanding_loads < self.cfg.mlp {
+            core.block = Block::None;
+            core.stats.mlp_stall_ps += now.saturating_sub(core.clock);
+            core.clock = core.clock.max(now);
+            self.q.push_at(core.clock, Ev::Run(id));
+        }
+        let cn = self.cores[id].cn;
+        if self.cns[cn].quiescing {
+            self.try_quiesce(cn);
+        }
+    }
+
+    /// Deposit a store into the SB (with protocol hooks); returns false if
+    /// the SB is full and the core blocked.
+    pub(crate) fn deposit_store(
+        &mut self,
+        id: usize,
+        line: crate::mem::Line,
+        remote: bool,
+        word: u8,
+        value: u32,
+    ) -> bool {
+        let (cn, _local) = (self.cores[id].cn, self.cores[id].local);
+        let clock = self.cores[id].clock;
+        self.cores[id].stats.stores += 1;
+        if remote {
+            self.cores[id].stats.remote_stores += 1;
+        }
+        let dep = self.cores[id].sb.deposit(line, remote, word, value, clock);
+        match dep {
+            Deposit::Full => {
+                self.cores[id].stats.stores -= 1; // will retry
+                if remote {
+                    self.cores[id].stats.remote_stores -= 1;
+                }
+                self.cores[id].pending_store = Some((line, remote, word, value));
+                self.cores[id].block = Block::SbSlot;
+                // stall time is accrued in wake_sb_stall; ensure the head
+                // is being worked on
+                self.q.push_at(clock.max(self.q.now()), Ev::Commit(id));
+                return false;
+            }
+            Deposit::Coalesced => {
+                self.stats.repl.stores_coalesced += 1;
+            }
+            Deposit::NewEntry => {}
+        }
+        // exclusive prefetch: request ownership as soon as the store
+        // retires into the SB (Fig. 7 step 1)
+        if remote
+            && self.cfg.protocol != crate::config::Protocol::WriteThrough
+            && !self.caches[cn].owns(line)
+        {
+            self.issue_rdx(cn, self.cores[id].local, line, clock, true);
+        }
+        // ReCXL-proactive: send REPLs for entries sealed by this deposit
+        if self.cfg.protocol == crate::config::Protocol::ReCxlProactive {
+            for idx in self.cores[id].sb.proactive_repl_candidates() {
+                self.send_repls(id, idx, clock, false);
+            }
+        }
+        // make sure the drain engine is running
+        self.q.push_at(clock.max(self.q.now()), Ev::Commit(id));
+        true
+    }
+
+    /// Issue an RdX (ownership request / exclusive prefetch) if none is in
+    /// flight for this line from this CN.
+    pub(crate) fn issue_rdx(
+        &mut self,
+        cn: usize,
+        local: usize,
+        line: crate::mem::Line,
+        at: crate::sim::time::Ps,
+        prefetch: bool,
+    ) {
+        if self.cns[cn].rdx_inflight.contains(&line) {
+            return;
+        }
+        self.cns[cn].rdx_inflight.insert(line);
+        crate::cluster::trace_line(line, || format!("cn{cn} issue_rdx prefetch={prefetch}"));
+        let mn = line.home_mn(self.cfg.n_mns);
+        self.send(
+            at,
+            Message {
+                src: NodeId::Cn(cn),
+                dst: NodeId::Mn(mn),
+                kind: MsgKind::RdX {
+                    line,
+                    req: ReqId { cn, core: local },
+                    prefetch,
+                },
+            },
+        );
+    }
+
+    /// Send a dirty-eviction writeback home, if the fill displaced one.
+    pub(crate) fn writeback(&mut self, cn: usize, wb: Option<crate::cache::Writeback>) {
+        if let Some(wb) = wb {
+            if wb.line.is_remote() {
+                let mn = wb.line.home_mn(self.cfg.n_mns);
+                let at = self.q.now();
+                self.send(
+                    at,
+                    Message {
+                        src: NodeId::Cn(cn),
+                        dst: NodeId::Mn(mn),
+                        kind: MsgKind::WbData {
+                            line: wb.line,
+                            from: cn,
+                            mask: wb.mask,
+                            words: wb.words,
+                        },
+                    },
+                );
+            }
+        }
+    }
+
+    /// Wake a core that was stalled for an SB slot (called by the commit
+    /// engine after popping the head).
+    pub(crate) fn wake_sb_stall(&mut self, id: usize) {
+        if self.cores[id].block == Block::SbSlot && !self.cores[id].sb.is_full() {
+            let now = self.q.now();
+            let stalled = now.saturating_sub(self.cores[id].clock);
+            self.cores[id].stats.sb_full_stall_ps += stalled;
+            self.cores[id].clock = self.cores[id].clock.max(now);
+            self.cores[id].block = Block::None;
+            self.q.push_at(self.cores[id].clock, Ev::Run(id));
+        }
+    }
+}

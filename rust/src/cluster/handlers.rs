@@ -1,0 +1,273 @@
+//! Message delivery: CN-side (data grants, invalidations, replication,
+//! recovery) and MN-side (directory requests, writebacks, log dumps).
+
+use super::{Cluster, Ev};
+use crate::cache::Mesi;
+use crate::mem::Line;
+use crate::proto::{LineWords, Message, MsgKind, NodeId, ReqId};
+use crate::recxl::logunit::PendingRepl;
+use crate::sim::time::Ps;
+
+impl Cluster {
+    pub(crate) fn deliver(&mut self, msg: Message) {
+        match msg.dst {
+            NodeId::Cn(cn) => {
+                if self.dead[cn] {
+                    return; // crashed after the message left the switch
+                }
+                self.deliver_cn(cn, msg)
+            }
+            NodeId::Mn(mn) => self.deliver_mn(mn, msg),
+        }
+    }
+
+    // ------------------------------------------------- CN side ----------
+
+    fn deliver_cn(&mut self, cn: usize, msg: Message) {
+        let now = self.q.now();
+        match msg.kind {
+            MsgKind::Data { line, req, exclusive, words } => {
+                self.on_data(cn, line, req, exclusive, words);
+            }
+            MsgKind::Inv { line } => {
+                let dirty = self
+                    .caches[cn]
+                    .evict_line(line)
+                    .map(|wb| (wb.mask, wb.words));
+                let mn = line.home_mn(self.cfg.n_mns);
+                self.send(
+                    now,
+                    Message {
+                        src: NodeId::Cn(cn),
+                        dst: NodeId::Mn(mn),
+                        kind: MsgKind::InvAck { line, from: cn, dirty },
+                    },
+                );
+                self.ownership_lost(cn, line);
+            }
+            MsgKind::Downgrade { line } => {
+                let dirty = self.caches[cn].downgrade(line).map(|wb| (wb.mask, wb.words));
+                let mn = line.home_mn(self.cfg.n_mns);
+                self.send(
+                    now,
+                    Message {
+                        src: NodeId::Cn(cn),
+                        dst: NodeId::Mn(mn),
+                        kind: MsgKind::DowngradeAck { line, from: cn, dirty },
+                    },
+                );
+                self.ownership_lost(cn, line);
+            }
+            MsgKind::WtAck { line: _, req } => {
+                let id = self.core_id(req.cn, req.core);
+                if let Some(h) = self.cores[id].sb.head_mut() {
+                    h.wt_acked = true;
+                }
+                self.commit_check(id);
+            }
+            MsgKind::Repl { req, line, mask, words, repl_seq } => {
+                let ack_at = self.logunits[cn].repl(
+                    now,
+                    PendingRepl { req, line, mask, words, repl_seq },
+                );
+                self.send(
+                    ack_at,
+                    Message {
+                        src: NodeId::Cn(cn),
+                        dst: NodeId::Cn(req.cn),
+                        kind: MsgKind::ReplAck { req, line, repl_seq, from: cn },
+                    },
+                );
+            }
+            MsgKind::ReplAck { req, repl_seq, from, .. } => {
+                let id = self.core_id(req.cn, req.core);
+                if self.cores[id].sb.ack(repl_seq, from) {
+                    self.commit_check(id);
+                }
+            }
+            MsgKind::Val { req, line, repl_seq, ts } => {
+                self.logunits[cn].val(now, req, line, repl_seq, ts);
+                let bytes = self.logunits[cn].dram_bytes();
+                self.stats.repl.max_dram_log_bytes[cn] =
+                    self.stats.repl.max_dram_log_bytes[cn].max(bytes);
+            }
+            MsgKind::DumpSyncAck { .. } => {}
+            // ---- recovery traffic (section V, Table I) ----
+            MsgKind::ViralNotify { failed } => self.on_viral_notify(cn, failed),
+            MsgKind::Msi { failed } => self.on_msi(cn, failed),
+            MsgKind::Interrupt => self.on_interrupt(cn),
+            MsgKind::InterruptResp { from } => self.on_interrupt_resp(cn, from),
+            MsgKind::FetchLatestVers { from_mn, lines } => {
+                self.on_fetch_latest_vers(cn, from_mn, lines)
+            }
+            MsgKind::InitRecovResp { from_mn } => self.on_init_recov_resp(cn, from_mn),
+            MsgKind::RecovEnd => self.on_recov_end(cn),
+            MsgKind::RecovEndResp { from } => self.on_recov_end_resp(cn, from),
+            other => unreachable!("CN {cn} got {other:?}"),
+        }
+    }
+
+    /// Directory data grant: fill the cache, free the waiters' MLP slots,
+    /// mark coherence done for pending stores.
+    fn on_data(&mut self, cn: usize, line: Line, req: ReqId, exclusive: bool, words: LineWords) {
+        crate::cluster::trace_line(line, || format!("cn{cn} on_data excl={exclusive} req={req:?}"));
+        let mesi = if exclusive { Mesi::Exclusive } else { Mesi::Shared };
+        let wb = self.caches[cn].fill(req.core, line, mesi, words);
+        self.writeback(cn, wb);
+
+        if exclusive {
+            self.cns[cn].rdx_inflight.remove(&line);
+            for local in 0..self.cfg.cores_per_cn {
+                let id = self.core_id(cn, local);
+                self.cores[id].sb.coherence_done(line);
+            }
+        }
+        // complete every outstanding load miss on this line
+        if let Some(waiters) = self.cns[cn].mshr.remove(&line) {
+            let mut per_core = vec![0usize; self.cfg.cores_per_cn];
+            for local in waiters {
+                per_core[local] += 1;
+            }
+            for (local, n) in per_core.into_iter().enumerate() {
+                if n > 0 {
+                    let id = self.core_id(cn, local);
+                    self.load_done(id, n);
+                }
+            }
+        }
+        if exclusive {
+            for local in 0..self.cfg.cores_per_cn {
+                let id = self.core_id(cn, local);
+                self.commit_check(id);
+            }
+        }
+        if self.cns[cn].quiescing {
+            self.try_quiesce(cn);
+        }
+    }
+
+    /// Ownership of `line` left this CN: pending stores must re-acquire,
+    /// and their commit engines must be re-kicked (a store already parked
+    /// at the SB head would otherwise wait forever — the classic lost
+    /// wakeup).
+    fn ownership_lost(&mut self, cn: usize, line: Line) {
+        for local in 0..self.cfg.cores_per_cn {
+            let id = self.core_id(cn, local);
+            self.cores[id].sb.coherence_undone(line);
+            let head_on_line = self.cores[id]
+                .sb
+                .head()
+                .map(|h| h.line == line)
+                .unwrap_or(false);
+            if head_on_line {
+                self.commit_check(id);
+            }
+        }
+    }
+
+    // ------------------------------------------------- MN side ----------
+
+    fn deliver_mn(&mut self, mn: usize, msg: Message) {
+        let now = self.q.now();
+        let out = match msg.kind {
+            MsgKind::RdS { line, req } => {
+                crate::cluster::trace_line(line, || format!("mn{mn} on_rds req={req:?}"));
+                self.dirs[mn].on_rds(line, req)
+            }
+            MsgKind::RdX { line, req, .. } => {
+                crate::cluster::trace_line(line, || format!("mn{mn} on_rdx req={req:?}"));
+                self.dirs[mn].on_rdx(line, req, false)
+            }
+            MsgKind::WtStore { line, req, mask, words } => {
+                self.dirs[mn].on_wt_store(line, req, mask, words)
+            }
+            MsgKind::WbData { line, from, mask, words } => {
+                self.dirs[mn].on_wb(line, from, mask, words)
+            }
+            MsgKind::InvAck { line, from, dirty } => self.dirs[mn].on_inv_ack(line, from, dirty),
+            MsgKind::DowngradeAck { line, from, dirty } => {
+                self.dirs[mn].on_downgrade_ack(line, from, dirty)
+            }
+            MsgKind::DumpChunk { from, entries, .. } => {
+                self.dirs[mn].mn_log.extend(entries);
+                self.send(
+                    now,
+                    Message {
+                        src: NodeId::Mn(mn),
+                        dst: NodeId::Cn(from),
+                        kind: MsgKind::DumpSyncAck { to: from },
+                    },
+                );
+                vec![]
+            }
+            MsgKind::InitRecov { failed } => {
+                self.on_init_recov(mn, failed);
+                vec![]
+            }
+            MsgKind::FetchLatestVersResp { from, results } => {
+                self.on_fetch_resp(mn, from, results);
+                vec![]
+            }
+            MsgKind::ViralNotify { failed } => {
+                // directory controllers learn of the death (new requests on
+                // dead-owned lines are deferred until repair) and complete
+                // transactions already stuck on the dead CN
+                self.dirs[mn].mark_dead(failed);
+                self.dirs[mn].recovery_unblock(failed)
+            }
+            other => unreachable!("MN {mn} got {other:?}"),
+        };
+        for (delay, m) in out {
+            self.send(now + delay, m);
+        }
+    }
+
+    // ------------------------------------------------- log dumping ------
+
+    /// Periodic Logging-Unit dump (section IV-E).
+    pub(crate) fn dump_tick(&mut self, cn: usize) {
+        let now = self.q.now();
+        if self.dead[cn] {
+            return;
+        }
+        if self.cns[cn].paused || self.cns[cn].quiescing {
+            // Logging Units pause during recovery; retry after a while
+            self.q.push_at(now + self.cfg.dump_period_ps, Ev::DumpTick(cn));
+            return;
+        }
+        self.stats.repl.max_dram_log_bytes[cn] =
+            self.stats.repl.max_dram_log_bytes[cn].max(self.logunits[cn].dram_bytes());
+        let res = self.logunits[cn].dump(
+            self.cfg.n_cns,
+            self.cfg.n_mns,
+            self.cfg.n_r,
+            self.cfg.gzip_level,
+        );
+        self.stats.repl.dump_in_bytes += res.in_bytes;
+        self.stats.repl.dump_out_bytes += res.out_bytes;
+        self.stats.repl.dumps += 1;
+        // ship each MN's share; compressed bytes split pro rata
+        let total: usize = res.per_mn.iter().map(|v| v.len()).sum();
+        if total > 0 {
+            for (mn, entries) in res.per_mn.into_iter().enumerate() {
+                if entries.is_empty() {
+                    continue;
+                }
+                let bytes =
+                    ((res.out_bytes as u128 * entries.len() as u128) / total as u128) as u32;
+                self.send(
+                    now,
+                    Message {
+                        src: NodeId::Cn(cn),
+                        dst: NodeId::Mn(mn),
+                        kind: MsgKind::DumpChunk { from: cn, bytes, entries },
+                    },
+                );
+            }
+        }
+        self.q.push_at(now + self.cfg.dump_period_ps, Ev::DumpTick(cn));
+    }
+
+    #[allow(dead_code)]
+    fn unused(_: Ps) {}
+}

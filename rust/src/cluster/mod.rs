@@ -1,0 +1,437 @@
+//! The cluster: wires cores, caches, directories, Logging Units and the
+//! fabric together and runs the deterministic event loop.
+//!
+//! This is the Layer-3 coordinator's heart.  Submodules:
+//! * [`exec`] — trace consumption per core (loads, stores, sync);
+//! * [`commit`] — the SB-head commit engine implementing the five
+//!   protocol configurations (section VI) and the ReCXL replication
+//!   transaction (Fig. 6);
+//! * [`handlers`] — message delivery (CN and MN sides) and log dumping;
+//! * [`recovery_impl`] — crash injection, detection, and the Table-I
+//!   recovery protocol;
+//! * [`oracle`] — the consistency oracle every recovery run is checked
+//!   against.
+
+mod commit;
+mod exec;
+mod handlers;
+mod oracle;
+mod recovery_impl;
+
+pub use oracle::Oracle;
+pub use recovery_impl::RecoveryCtrl;
+
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::time::Instant;
+
+use crate::cache::CnCaches;
+use crate::coherence::Directory;
+use crate::config::{CnId, CoreId, Protocol, SimConfig};
+use crate::cpu::sync::{Barrier, LockTable};
+use crate::cpu::{Block, Core};
+use crate::fabric::{Delivery, Fabric};
+use crate::mem::Line;
+use crate::proto::Message;
+use crate::recxl::logunit::LoggingUnit;
+use crate::sim::time::Ps;
+use crate::sim::EventQueue;
+use crate::stats::RunStats;
+use crate::workloads::{AppProfile, RustTraceSource, ThreadTrace, TraceSource};
+
+/// Event payloads of the cluster simulation.
+#[derive(Debug)]
+pub enum Ev {
+    /// Consume trace ops on a core.
+    Run(CoreId),
+    /// Message arrival at its destination.  Boxed: `Message` carries a
+    /// 64 B line payload, and a fat `Ev` makes every binary-heap sift a
+    /// memmove (this was the top §Perf hotspot — see EXPERIMENTS.md).
+    Deliver(Box<Message>),
+    /// Re-attempt SB-head commit on a core.
+    Commit(CoreId),
+    /// A CN-local load miss completed (MLP slot freed).
+    LoadDone(CoreId),
+    /// Lock grant after a release.
+    GrantLock { core: CoreId, lock: u8 },
+    /// Barrier release broadcast.
+    BarrierGo(CoreId),
+    /// Periodic Logging-Unit dump (section IV-E).
+    DumpTick(CnId),
+    /// Failure injection (fail-stop).
+    Crash(CnId),
+    /// Switch detects the failed CN (Viral_Status set, MSI fired).
+    Detect(CnId),
+    /// Quiesce deadline during recovery (see recovery_impl).
+    QuiesceTimeout(CnId),
+}
+
+/// Per-CN shared state (CXL port side).
+pub struct CnState {
+    /// Load misses in flight: line -> waiting local cores.
+    pub mshr: FxHashMap<Line, Vec<usize>>,
+    /// Exclusive (RdX) requests in flight.
+    pub rdx_inflight: FxHashSet<Line>,
+    /// Next replication sequence number (per-CN monotone; REPL carries it).
+    pub repl_seq: u64,
+    /// Per-destination logical-timestamp counters for VALs (section IV-C).
+    pub val_ts: Vec<u64>,
+    /// Recovery: CN is quiescing (Interrupt received, draining).
+    pub quiescing: bool,
+    /// Recovery: CN is paused (InterruptResp sent).
+    pub paused: bool,
+}
+
+/// The whole simulated cluster.
+pub struct Cluster {
+    pub cfg: SimConfig,
+    pub q: EventQueue<Ev>,
+    pub fabric: Fabric,
+    pub cores: Vec<Core>,
+    pub caches: Vec<CnCaches>,
+    pub cns: Vec<CnState>,
+    pub dirs: Vec<Directory>,
+    pub logunits: Vec<LoggingUnit>,
+    pub locks: LockTable,
+    pub barrier: Barrier,
+    pub dead: Vec<bool>,
+    pub oracle: Oracle,
+    pub recovery: Option<RecoveryCtrl>,
+    pub stats: RunStats,
+    trace_src: Box<dyn TraceSource>,
+    /// Cores that have fully finished (trace + SB).
+    finished: usize,
+    finished_flag: Vec<bool>,
+    /// Stall watchdog bookkeeping.
+    last_progress_at: Ps,
+    /// Which cores had already finished *before* the crash (detection
+    /// must purge only genuinely-running dead cores from sync state).
+    prefinished_at_crash: Vec<bool>,
+}
+
+impl Cluster {
+    pub fn new(cfg: SimConfig, app: &AppProfile) -> Self {
+        Self::with_source(cfg, app, Box::new(RustTraceSource))
+    }
+
+    pub fn with_source(cfg: SimConfig, app: &AppProfile, trace_src: Box<dyn TraceSource>) -> Self {
+        cfg.validate().expect("invalid config");
+        let n_threads = cfg.n_threads();
+        let mut cores = Vec::with_capacity(n_threads);
+        for t in 0..n_threads {
+            let cn = t / cfg.cores_per_cn;
+            let local = t % cfg.cores_per_cn;
+            let trace = ThreadTrace::new(cfg.seed as u32, app, t, cfg.ops_per_thread);
+            cores.push(Core::new(
+                cn,
+                local,
+                t,
+                trace,
+                cfg.store_buffer_entries,
+                cfg.coalescing,
+            ));
+        }
+        let caches = (0..cfg.n_cns).map(|_| CnCaches::new(&cfg)).collect();
+        let cns = (0..cfg.n_cns)
+            .map(|_| CnState {
+                mshr: FxHashMap::default(),
+                rdx_inflight: FxHashSet::default(),
+                repl_seq: 0,
+                val_ts: vec![0; cfg.n_cns],
+                quiescing: false,
+                paused: false,
+            })
+            .collect();
+        let dirs = (0..cfg.n_mns)
+            .map(|m| Directory::new(m, cfg.mn_dram_ps, cfg.mn_pmem_ps))
+            .collect();
+        let logunits = (0..cfg.n_cns)
+            .map(|c| {
+                LoggingUnit::new(
+                    c,
+                    cfg.n_cns,
+                    cfg.sram_log_entries(),
+                    cfg.dram_log_entries(),
+                )
+            })
+            .collect();
+        let mut stats = RunStats::default();
+        stats.cores = vec![Default::default(); n_threads];
+        stats.repl.max_dram_log_bytes = vec![0; cfg.n_cns];
+        Cluster {
+            fabric: Fabric::new(&cfg),
+            q: EventQueue::new(),
+            cores,
+            caches,
+            cns,
+            dirs,
+            logunits,
+            locks: LockTable::default(),
+            barrier: Barrier::new(n_threads),
+            dead: vec![false; cfg.n_cns],
+            oracle: Oracle::default(),
+            recovery: None,
+            stats,
+            trace_src,
+            finished: 0,
+            finished_flag: vec![false; n_threads],
+            last_progress_at: 0,
+            prefinished_at_crash: vec![false; n_threads],
+            cfg,
+        }
+    }
+
+    /// Print the state of every unfinished core (stall debugging).
+    fn dump_stall_diagnostic(&self) {
+        eprintln!("--- stall diagnostic at {} ---", self.q.now());
+        if let Some(r) = &self.recovery {
+            eprintln!(
+                "recovery: failed={} cm={} complete={} pending_cns={:?} pending_mns={:?} pending_end={:?} repairs={:?}",
+                r.failed,
+                r.cm_cn,
+                r.complete,
+                r.pending_cns,
+                r.pending_mns,
+                r.pending_end,
+                r.repairs
+                    .iter()
+                    .map(|(mn, rep)| (*mn, rep.expected.len(), rep.responses.len()))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        for (i, c) in self.cores.iter().enumerate() {
+            if !self.finished_flag[i] {
+                let head = c.sb.head().map(|h| {
+                    (
+                        h.repl_sent,
+                        h.acks_mask,
+                        h.coherence_done,
+                        h.committing,
+                        h.wt_acked,
+                    )
+                });
+                eprintln!(
+                    "core {i} (cn {}): block={:?} sb={} out_loads={} cs={} lock={:?} head={head:?} consumed={}",
+                    c.cn,
+                    c.block,
+                    c.sb.len(),
+                    c.outstanding_loads,
+                    c.cs_remaining,
+                    c.held_lock,
+                    c.trace.consumed(),
+                );
+                if let Some(h) = c.sb.head() {
+                    let line = h.line;
+                    let cn = c.cn;
+                    eprintln!(
+                        "  head line {:x}: rdx_inflight={} mshr={:?} owns={} dir={:?}",
+                        line.0,
+                        self.cns[cn].rdx_inflight.contains(&line),
+                        self.cns[cn].mshr.get(&line),
+                        self.caches[cn].owns(line),
+                        self.dirs[line.home_mn(self.cfg.n_mns)].dir_state(line),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Route a message through the fabric at time `at`, scheduling its
+    /// delivery.  Messages to dead CNs evaporate (the switch never
+    /// responds on behalf of a failed CN — section V-A).
+    pub fn send(&mut self, at: Ps, msg: Message) {
+        let at = at.max(self.q.now());
+        match self.fabric.send(at, &msg, &mut self.stats.traffic) {
+            Delivery::At(t) => self.q.push_at(t, Ev::Deliver(Box::new(msg))),
+            Delivery::Dropped => {}
+        }
+    }
+
+    pub fn core_id(&self, cn: CnId, local: usize) -> CoreId {
+        cn * self.cfg.cores_per_cn + local
+    }
+
+    pub fn live_cns(&self) -> impl Iterator<Item = CnId> + '_ {
+        (0..self.cfg.n_cns).filter(|&c| !self.dead[c])
+    }
+
+    /// Mark a core finished if it just completed (trace consumed, SB
+    /// drained); removes it from the barrier population.
+    pub fn check_finished(&mut self, id: CoreId) {
+        if self.finished_flag[id] {
+            return;
+        }
+        let now = self.q.now();
+        let core = &mut self.cores[id];
+        if core.block == Block::Done && core.sb.is_empty() {
+            self.finished_flag[id] = true;
+            self.finished += 1;
+            core.stats.finished_at = core.clock.max(now);
+            if let Some(l) = core.held_lock.take() {
+                if let Some(next) = self.locks.release(l, id) {
+                    let ow = self.cfg.one_way_ps();
+                    self.q
+                        .push_at(now + ow, Ev::GrantLock { core: next, lock: l });
+                }
+            }
+            if let Some(waiters) = self.barrier.remove_participant(id) {
+                let ow = self.cfg.one_way_ps();
+                for w in waiters {
+                    self.q.push_at(now + ow, Ev::BarrierGo(w));
+                }
+            }
+        }
+    }
+
+    /// Build initial events and run to completion.  Returns the stats.
+    pub fn run(mut self) -> RunStats {
+        let wall = Instant::now();
+        for id in 0..self.cores.len() {
+            self.q.push_at(0, Ev::Run(id));
+        }
+        if self.cfg.protocol.is_recxl() {
+            for cn in 0..self.cfg.n_cns {
+                self.q.push_at(self.cfg.dump_period_ps, Ev::DumpTick(cn));
+            }
+        }
+        if let Some(c) = self.cfg.crash {
+            self.q.push_at(c.at, Ev::Crash(c.cn));
+        }
+        let mut last_progress = (0usize, 0u64);
+        while let Some((_, ev)) = self.q.pop() {
+            self.dispatch(ev);
+            if self.finished >= self.cores.len() && self.recovery_is_settled() {
+                break;
+            }
+            // stall watchdog: if nothing but housekeeping events fire for
+            // a long stretch of simulated time, the protocol livelocked —
+            // dump the blocked cores and abort loudly instead of spinning.
+            let commits = self.stats.repl.store_commits + self.stats.traffic.messages.len() as u64;
+            if self.finished != last_progress.0 || commits != last_progress.1 {
+                last_progress = (self.finished, commits);
+                self.last_progress_at = self.q.now();
+            } else if self.q.now().saturating_sub(self.last_progress_at) > crate::sim::time::ms(50)
+            {
+                self.dump_stall_diagnostic();
+                panic!(
+                    "simulation stalled: no progress for 50 ms of simulated time \
+                     (finished {}/{})",
+                    self.finished,
+                    self.cores.len()
+                );
+            }
+        }
+        self.finalize(wall)
+    }
+
+    fn recovery_is_settled(&self) -> bool {
+        match (&self.cfg.crash, &self.recovery) {
+            (None, _) => true,
+            (Some(_), Some(r)) => r.is_complete(),
+            // crash scheduled but not yet fired/detected
+            (Some(c), None) => self.q.now() < c.at,
+        }
+    }
+
+    fn dispatch(&mut self, ev: Ev) {
+        match ev {
+            Ev::Run(id) => self.run_core(id),
+            Ev::Deliver(msg) => self.deliver(*msg),
+            Ev::Commit(id) => self.commit_check(id),
+            Ev::LoadDone(id) => self.load_done(id, 1),
+            Ev::GrantLock { core, lock } => self.grant_lock(core, lock),
+            Ev::BarrierGo(id) => self.barrier_go(id),
+            Ev::DumpTick(cn) => self.dump_tick(cn),
+            Ev::Crash(cn) => self.crash(cn),
+            Ev::Detect(cn) => self.detect(cn),
+            Ev::QuiesceTimeout(cn) => self.quiesce_timeout(cn),
+        }
+    }
+
+    fn finalize(mut self, wall: Instant) -> RunStats {
+        let exec = self
+            .cores
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.dead[self.cores[*i].cn])
+            .map(|(_, c)| c.stats.finished_at.max(c.clock))
+            .max()
+            .unwrap_or(self.q.now());
+        self.stats.exec_time_ps = exec.max(self.q.now());
+        for (i, c) in self.cores.iter().enumerate() {
+            self.stats.cores[i] = c.stats.clone();
+        }
+        for (cn, lu) in self.logunits.iter().enumerate() {
+            self.stats.repl.max_dram_log_bytes[cn] = lu.max_dram_bytes;
+            self.stats.repl.sram_backpressure += lu.backpressure_events;
+        }
+        self.stats.host_wall_s = wall.elapsed().as_secs_f64();
+        self.stats.events = self.q.events_processed();
+        self.stats
+    }
+
+    // --- small handlers shared across submodules ---
+
+    pub(crate) fn grant_lock(&mut self, id: CoreId, lock: u8) {
+        let core = &mut self.cores[id];
+        if !matches!(core.block, Block::Lock(l) if l == lock) {
+            return; // stale grant (e.g. purged during recovery)
+        }
+        let now = self.q.now();
+        core.stats.lock_wait_ps += now.saturating_sub(core.clock);
+        core.clock = core.clock.max(now);
+        core.block = Block::None;
+        core.held_lock = Some(lock);
+        core.cs_remaining = core.pending_cs;
+        self.q.push_at(core.clock, Ev::Run(id));
+    }
+
+    pub(crate) fn barrier_go(&mut self, id: CoreId) {
+        let core = &mut self.cores[id];
+        if core.block != Block::Barrier {
+            return;
+        }
+        let now = self.q.now();
+        core.stats.barrier_wait_ps += now.saturating_sub(core.clock);
+        core.clock = core.clock.max(now);
+        core.block = Block::None;
+        self.q.push_at(core.clock, Ev::Run(id));
+    }
+}
+
+/// Debug helper: when RECXL_TRACE_LINE=<hex line> is set, print protocol
+/// activity on that line.
+pub fn trace_line(line: crate::mem::Line, msg: impl FnOnce() -> String) {
+    static TARGET: once_cell::sync::Lazy<Option<u32>> = once_cell::sync::Lazy::new(|| {
+        std::env::var("RECXL_TRACE_LINE")
+            .ok()
+            .and_then(|v| u32::from_str_radix(v.trim_start_matches("0x"), 16).ok())
+    });
+    if *TARGET == Some(line.0) {
+        eprintln!("[trace {:x}] {}", line.0, msg());
+    }
+}
+
+/// Convenience: run one configuration of one app.
+pub fn run_app(cfg: SimConfig, app: &AppProfile) -> RunStats {
+    Cluster::new(cfg, app).run()
+}
+
+/// Normalized execution time of `proto` vs plain write-back for `app`
+/// (the y-axis of Figs. 2, 10, 16-18).
+pub fn slowdown_vs_wb(cfg: &SimConfig, app: &AppProfile, proto: Protocol) -> f64 {
+    let wb = run_app(
+        SimConfig {
+            protocol: Protocol::WriteBack,
+            ..cfg.clone()
+        },
+        app,
+    );
+    let p = run_app(
+        SimConfig {
+            protocol: proto,
+            ..cfg.clone()
+        },
+        app,
+    );
+    p.exec_time_ps as f64 / wb.exec_time_ps as f64
+}

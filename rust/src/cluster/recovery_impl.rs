@@ -1,0 +1,505 @@
+//! Failure injection, detection, and the distributed recovery protocol
+//! (section V, Table I, Fig. 9).
+//!
+//! Timeline:
+//! 1. `Ev::Crash(cn)` — fail-stop: the CN's cores halt, its caches and
+//!    Logging Unit are lost (the structures stay around for the
+//!    simulator's ground-truth census, Fig. 15).
+//! 2. `Ev::Detect(cn)` — the switch sets the CN's Viral_Status bit,
+//!    broadcasts `ViralNotify` (live CNs discount dead replicas; MN
+//!    directory controllers complete transactions stuck on the dead CN),
+//!    and fires the MSI electing the Configuration Manager (CM).
+//! 3. CM broadcasts `Interrupt`; each CN drains outstanding work,
+//!    pauses, answers `InterruptResp`.
+//! 4. CM sends `InitRecov` to every MN; each directory controller runs
+//!    Algorithm 1: census, `FetchLatestVers` to the replica windows,
+//!    version selection, memory + directory repair, `InitRecovResp`.
+//! 5. CM broadcasts `RecovEnd`; CNs resume and answer `RecovEndResp`.
+//!
+//! Every recovery run is checked against the consistency oracle.
+
+use std::collections::{HashMap, HashSet};
+
+use super::{Cluster, Ev};
+use crate::cache::Mesi;
+use crate::config::{CnId, MnId};
+use crate::cpu::Block;
+use crate::mem::Line;
+use crate::proto::{Message, MsgKind, NodeId};
+use crate::recovery::{select_version, VersionList};
+use crate::recxl::replica_window;
+use crate::sim::time::lu_cycles;
+
+/// Per-MN repair bookkeeping while log responses are outstanding.
+pub struct MnRepair {
+    pub owned: Vec<Line>,
+    pub expected: HashSet<CnId>,
+    pub responses: HashMap<CnId, HashMap<Line, VersionList>>,
+}
+
+/// The Configuration Manager's state machine.
+pub struct RecoveryCtrl {
+    pub failed: CnId,
+    pub cm_cn: CnId,
+    pub pending_cns: HashSet<CnId>,
+    pub pending_mns: HashSet<MnId>,
+    pub pending_end: HashSet<CnId>,
+    pub repairs: HashMap<MnId, MnRepair>,
+    pub complete: bool,
+}
+
+impl RecoveryCtrl {
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+}
+
+impl Cluster {
+    // ----------------------------------------------- crash + detection --
+
+    pub(crate) fn crash(&mut self, cn: CnId) {
+        if self.dead[cn] {
+            return;
+        }
+        self.dead[cn] = true;
+        // Fig. 15 ground truth: what was in the caches at the instant of
+        // the crash.
+        self.stats.recovery.cache_census = self.caches[cn].census();
+        for local in 0..self.cfg.cores_per_cn {
+            let id = self.core_id(cn, local);
+            self.cores[id].block = Block::Dead;
+            // dead cores leave the run population (fail-stop); remember
+            // who was genuinely running so detection purges them from
+            // barriers/locks
+            self.prefinished_at_crash[id] = self.finished_flag[id];
+            if !self.finished_flag[id] {
+                self.finished_flag[id] = true;
+                self.finished += 1;
+            }
+        }
+        let at = self.q.now() + self.cfg.detect_delay_ps;
+        self.q.push_at(at, Ev::Detect(cn));
+    }
+
+    pub(crate) fn detect(&mut self, failed: CnId) {
+        let now = self.q.now();
+        self.fabric.set_viral(failed);
+        self.stats.recovery.detection_at = now;
+        // purge dead cores from sync structures so live threads make
+        // forward progress (section V-B)
+        let cores_per = self.cfg.cores_per_cn;
+        let dead_core = move |c: usize| c / cores_per == failed;
+        let ow = self.cfg.one_way_ps();
+        for (l, next) in self.locks.purge_cores(&dead_core) {
+            self.q.push_at(now + ow, Ev::GrantLock { core: next, lock: l });
+        }
+        for local in 0..cores_per {
+            let id = self.core_id(failed, local);
+            // cores that finished before the crash already left the
+            // barrier population (check_finished)
+            if !self.prefinished_at_crash[id] {
+                if let Some(waiters) = self.barrier.remove_participant(id) {
+                    for w in waiters {
+                        self.q.push_at(now + ow, Ev::BarrierGo(w));
+                    }
+                }
+            }
+        }
+        // ViralNotify to live CNs + all MNs
+        let live: Vec<CnId> = self.live_cns().collect();
+        for cn in &live {
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Cn(failed), // switch-originated; port of failed
+                    dst: NodeId::Cn(*cn),
+                    kind: MsgKind::ViralNotify { failed },
+                },
+            );
+        }
+        for mn in 0..self.cfg.n_mns {
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Cn(failed),
+                    dst: NodeId::Mn(mn),
+                    kind: MsgKind::ViralNotify { failed },
+                },
+            );
+        }
+        // MSI to the Configuration Manager: first live CN, core 0
+        let cm = live.first().copied().expect("no live CN to recover on");
+        self.send(
+            now,
+            Message {
+                src: NodeId::Cn(failed),
+                dst: NodeId::Cn(cm),
+                kind: MsgKind::Msi { failed },
+            },
+        );
+    }
+
+    pub(crate) fn on_viral_notify(&mut self, cn: CnId, failed: CnId) {
+        for local in 0..self.cfg.cores_per_cn {
+            let id = self.core_id(cn, local);
+            if self.cores[id].sb.discount_dead_replica(failed) > 0 {
+                self.commit_check(id);
+            }
+        }
+    }
+
+    // ----------------------------------------------- CM + interrupts ----
+
+    pub(crate) fn on_msi(&mut self, cn: CnId, failed: CnId) {
+        if self.recovery.is_some() {
+            return;
+        }
+        self.stats.recovery.count("Msi");
+        let now = self.q.now();
+        let live: HashSet<CnId> = self.live_cns().collect();
+        for &c in &live {
+            self.stats.recovery.count("Interrupt");
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Cn(cn),
+                    dst: NodeId::Cn(c),
+                    kind: MsgKind::Interrupt,
+                },
+            );
+        }
+        self.recovery = Some(RecoveryCtrl {
+            failed,
+            cm_cn: cn,
+            pending_cns: live,
+            pending_mns: HashSet::new(),
+            pending_end: HashSet::new(),
+            repairs: HashMap::new(),
+            complete: false,
+        });
+    }
+
+    pub(crate) fn on_interrupt(&mut self, cn: CnId) {
+        self.cns[cn].quiescing = true;
+        for local in 0..self.cfg.cores_per_cn {
+            let id = self.core_id(cn, local);
+            if self.cores[id].block == Block::None {
+                self.cores[id].block = Block::Paused;
+            }
+        }
+        // outstanding requests stuck on dead-owner lines are deferred at
+        // the directory until repair — which waits for this CN's
+        // InterruptResp.  The timeout breaks the cycle: whatever is still
+        // outstanding then is exactly the deferred set.
+        self.q
+            .push_in(crate::sim::time::us(25), Ev::QuiesceTimeout(cn));
+        self.try_quiesce(cn);
+    }
+
+    /// Quiesce deadline reached: answer the Interrupt with whatever is
+    /// still deferred at the directories.
+    pub(crate) fn quiesce_timeout(&mut self, cn: CnId) {
+        if !self.cns[cn].quiescing || self.dead[cn] {
+            return;
+        }
+        self.finish_quiesce(cn);
+    }
+
+    /// A CN is quiesced when no core waits on a load and all SBs are
+    /// drained ("complete all outstanding requests ... and pause").
+    pub(crate) fn try_quiesce(&mut self, cn: CnId) {
+        if !self.cns[cn].quiescing || self.dead[cn] {
+            return;
+        }
+        let drained = (0..self.cfg.cores_per_cn).all(|local| {
+            let c = &self.cores[self.core_id(cn, local)];
+            c.outstanding_loads == 0 && c.sb.is_empty()
+        });
+        if !drained {
+            return;
+        }
+        self.finish_quiesce(cn);
+    }
+
+    fn finish_quiesce(&mut self, cn: CnId) {
+        self.cns[cn].quiescing = false;
+        self.cns[cn].paused = true;
+        for local in 0..self.cfg.cores_per_cn {
+            let id = self.core_id(cn, local);
+            if self.cores[id].block == Block::None {
+                self.cores[id].block = Block::Paused;
+            }
+        }
+        let Some(ctrl) = &self.recovery else { return };
+        let cm = ctrl.cm_cn;
+        let now = self.q.now();
+        self.stats.recovery.count("InterruptResp");
+        self.send(
+            now,
+            Message {
+                src: NodeId::Cn(cn),
+                dst: NodeId::Cn(cm),
+                kind: MsgKind::InterruptResp { from: cn },
+            },
+        );
+    }
+
+    pub(crate) fn on_interrupt_resp(&mut self, _cm_cn: CnId, from: CnId) {
+        let now = self.q.now();
+        let (all_in, cm_cn) = {
+            let Some(ctrl) = self.recovery.as_mut() else { return };
+            ctrl.pending_cns.remove(&from);
+            (ctrl.pending_cns.is_empty(), ctrl.cm_cn)
+        };
+        if !all_in {
+            return;
+        }
+        // phase 2: directory-level recovery on every MN
+        let mut pending = HashSet::new();
+        let failed = self.recovery.as_ref().unwrap().failed;
+        for mn in 0..self.cfg.n_mns {
+            pending.insert(mn);
+            self.stats.recovery.count("InitRecov");
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Cn(cm_cn),
+                    dst: NodeId::Mn(mn),
+                    kind: MsgKind::InitRecov { failed },
+                },
+            );
+        }
+        self.recovery.as_mut().unwrap().pending_mns = pending;
+    }
+
+    // ----------------------------------------------- directory repair ---
+
+    pub(crate) fn on_init_recov(&mut self, mn: MnId, failed: CnId) {
+        let now = self.q.now();
+        // complete transactions stuck on the dead CN, then census
+        let out = self.dirs[mn].recovery_unblock(failed);
+        for (d, m) in out {
+            self.send(now + d, m);
+        }
+        let (owned, shared) = self.dirs[mn].recovery_census(failed);
+        self.stats.recovery.shared_lines += shared;
+        self.stats.recovery.owned_lines += owned.len() as u64;
+        for l in &owned {
+            match self.caches[failed].state(*l).map(|s| s.mesi) {
+                Some(Mesi::Modified) => self.stats.recovery.dirty_lines += 1,
+                _ => self.stats.recovery.exclusive_lines += 1,
+            }
+        }
+        if owned.is_empty() {
+            self.finish_mn_repair(mn);
+            return;
+        }
+        // group owned lines by the replica-window CNs that may hold them
+        let mut per_cn: HashMap<CnId, Vec<Line>> = HashMap::new();
+        for &l in &owned {
+            for c in replica_window(l, self.cfg.n_cns, self.cfg.n_r) {
+                if c != failed && !self.dead[c] {
+                    per_cn.entry(c).or_default().push(l);
+                }
+            }
+        }
+        let expected: HashSet<CnId> = per_cn.keys().copied().collect();
+        let Some(ctrl) = self.recovery.as_mut() else { return };
+        ctrl.repairs.insert(
+            mn,
+            MnRepair {
+                owned,
+                expected,
+                responses: HashMap::new(),
+            },
+        );
+        for (cn, lines) in per_cn {
+            self.stats.recovery.count("FetchLatestVers");
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Mn(mn),
+                    dst: NodeId::Cn(cn),
+                    kind: MsgKind::FetchLatestVers { from_mn: mn, lines },
+                },
+            );
+        }
+    }
+
+    /// A replica CN's Logging Unit runs Algorithm 2.
+    pub(crate) fn on_fetch_latest_vers(&mut self, cn: CnId, from_mn: MnId, lines: Vec<Line>) {
+        let now = self.q.now();
+        let results = self.logunits[cn].fetch_latest_vers(&lines);
+        // software handler cost: proportional to a log traversal
+        let cost = lu_cycles(16 + self.logunits[cn].dram_len() as u64 / 8);
+        self.stats.recovery.count("FetchLatestVersResp");
+        self.send(
+            now + cost,
+            Message {
+                src: NodeId::Cn(cn),
+                dst: NodeId::Mn(from_mn),
+                kind: MsgKind::FetchLatestVersResp { from: cn, results },
+            },
+        );
+    }
+
+    pub(crate) fn on_fetch_resp(&mut self, mn: MnId, from: CnId, results: Vec<VersionList>) {
+        let done = {
+            let Some(ctrl) = self.recovery.as_mut() else { return };
+            let Some(rep) = ctrl.repairs.get_mut(&mn) else { return };
+            let map: HashMap<Line, VersionList> =
+                results.into_iter().map(|v| (v.line, v)).collect();
+            rep.responses.insert(from, map);
+            rep.responses.len() >= rep.expected.len()
+        };
+        if done {
+            self.repair_mn(mn);
+            self.finish_mn_repair(mn);
+        }
+    }
+
+    /// Algorithm 1's core: select + apply the latest version per owned
+    /// line, then verify against the oracle.
+    fn repair_mn(&mut self, mn: MnId) {
+        let Some(ctrl) = self.recovery.as_ref() else { return };
+        let failed = ctrl.failed;
+        let Some(rep) = ctrl.repairs.get(&mn) else { return };
+        let owned = rep.owned.clone();
+        // borrow-friendly copies of the response lists per line
+        let mut per_line: HashMap<Line, Vec<VersionList>> = HashMap::new();
+        for lists in rep.responses.values() {
+            for (l, v) in lists {
+                per_line.entry(*l).or_default().push(v.clone());
+            }
+        }
+        for line in owned {
+            let lists: Vec<&VersionList> = per_line
+                .get(&line)
+                .map(|v| v.iter().collect())
+                .unwrap_or_default();
+            let fallback = self.dirs[mn].mn_log_latest(line);
+            match select_version(line, failed, &lists, &fallback) {
+                Some(rl) => {
+                    let out = self.dirs[mn].recovery_apply(line, rl.mask, &rl.words);
+                    let now = self.q.now();
+                    for (d, m) in out {
+                        self.send(now + d, m);
+                    }
+                    if rl.used_mn_log {
+                        self.stats.recovery.recovered_from_mn_logs += 1;
+                    } else {
+                        self.stats.recovery.recovered_from_logs += 1;
+                    }
+                    // consistency oracle: nothing committed may be lost
+                    let mem = self.dirs[mn].mem_words(line);
+                    for w in 0..16u8 {
+                        let ok = self.oracle.verify_word(
+                            line,
+                            w,
+                            mem[w as usize],
+                            rl.provenance[w as usize],
+                        );
+                        if !ok {
+                            self.stats.recovery.inconsistencies += 1;
+                        }
+                    }
+                }
+                None => {
+                    // Exclusive-clean in the dead CN: memory already holds
+                    // the latest data; just release ownership.
+                    let out = self.dirs[mn].recovery_release(line, failed);
+                    let now = self.q.now();
+                    for (d, m) in out {
+                        self.send(now + d, m);
+                    }
+                    let mem = self.dirs[mn].mem_words(line);
+                    for w in 0..16u8 {
+                        if !self.oracle.verify_word(line, w, mem[w as usize], None) {
+                            self.stats.recovery.inconsistencies += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish_mn_repair(&mut self, mn: MnId) {
+        let now = self.q.now();
+        let Some(ctrl) = self.recovery.as_ref() else { return };
+        let cm = ctrl.cm_cn;
+        self.stats.recovery.count("InitRecovResp");
+        self.send(
+            now,
+            Message {
+                src: NodeId::Mn(mn),
+                dst: NodeId::Cn(cm),
+                kind: MsgKind::InitRecovResp { from_mn: mn },
+            },
+        );
+    }
+
+    pub(crate) fn on_init_recov_resp(&mut self, _cm_cn: CnId, from_mn: MnId) {
+        let now = self.q.now();
+        let (all_in, cm_cn) = {
+            let Some(ctrl) = self.recovery.as_mut() else { return };
+            ctrl.pending_mns.remove(&from_mn);
+            (ctrl.pending_mns.is_empty(), ctrl.cm_cn)
+        };
+        if !all_in {
+            return;
+        }
+        let live: HashSet<CnId> = self.live_cns().collect();
+        for &c in &live {
+            self.stats.recovery.count("RecovEnd");
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Cn(cm_cn),
+                    dst: NodeId::Cn(c),
+                    kind: MsgKind::RecovEnd,
+                },
+            );
+        }
+        self.recovery.as_mut().unwrap().pending_end = live;
+    }
+
+    // ----------------------------------------------- resume -------------
+
+    pub(crate) fn on_recov_end(&mut self, cn: CnId) {
+        let now = self.q.now();
+        self.cns[cn].paused = false;
+        self.cns[cn].quiescing = false;
+        for local in 0..self.cfg.cores_per_cn {
+            let id = self.core_id(cn, local);
+            if self.cores[id].block == Block::Paused {
+                self.cores[id].block = Block::None;
+                self.cores[id].clock = self.cores[id].clock.max(now);
+                self.q.push_at(self.cores[id].clock, Ev::Run(id));
+            }
+            self.commit_check(id);
+        }
+        let Some(ctrl) = &self.recovery else { return };
+        let cm = ctrl.cm_cn;
+        self.stats.recovery.count("RecovEndResp");
+        self.send(
+            now,
+            Message {
+                src: NodeId::Cn(cn),
+                dst: NodeId::Cn(cm),
+                kind: MsgKind::RecovEndResp { from: cn },
+            },
+        );
+    }
+
+    pub(crate) fn on_recov_end_resp(&mut self, _cm_cn: CnId, from: CnId) {
+        let now = self.q.now();
+        let Some(ctrl) = self.recovery.as_mut() else { return };
+        ctrl.pending_end.remove(&from);
+        if ctrl.pending_end.is_empty() {
+            ctrl.complete = true;
+            self.stats.recovery.happened = true;
+            self.stats.recovery.completed_at = now;
+            self.stats.recovery.consistent = self.stats.recovery.inconsistencies == 0;
+        }
+    }
+}

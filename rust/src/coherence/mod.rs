@@ -1,0 +1,715 @@
+//! MN-side remote directory: the second-level directory that keeps lines
+//! of CXL memory coherent across CNs (section II-A).
+//!
+//! MESI with CN-granularity sharer tracking.  Conflicting transactions on
+//! a line are serialized with a per-line busy state + FIFO pending queue
+//! (the CXL fabric may reorder messages, so the directory is the
+//! serialization point).  The write-through configuration's MN-side
+//! behaviour (invalidate sharers, persist, ack) also lives here, as does
+//! the MN-resident dumped log and the directory-side recovery hooks
+//! (Algorithm 1's census + repair).
+
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
+
+use crate::config::{CnId, MnId};
+use crate::mem::Line;
+use crate::proto::{LineWords, Message, MsgKind, NodeId, ReqId};
+use crate::recxl::logunit::LogRecord;
+use crate::sim::time::Ps;
+
+/// A directory transaction in flight.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Txn {
+    /// Read-shared waiting for the owner's downgrade.
+    RdS { req: ReqId },
+    /// The line's owner failed: requests are deferred until Algorithm 1
+    /// repairs the line (the switch never responds on behalf of a dead CN,
+    /// and serving stale memory before repair would corrupt the reader).
+    AwaitRecovery,
+    /// Read-exclusive waiting for invalidation acks.
+    RdX { req: ReqId, waiting: u32, prefetch: bool },
+    /// Write-through store waiting for invalidation acks.
+    Wt { req: ReqId, waiting: u32, mask: u16, words: LineWords },
+}
+
+/// A queued (conflicting) request.
+#[derive(Debug, Clone)]
+enum Queued {
+    RdS(ReqId),
+    RdX(ReqId, bool),
+    Wt(ReqId, u16, LineWords),
+}
+
+#[derive(Debug, Default, Clone)]
+struct DirEntry {
+    owner: Option<CnId>,
+    sharers: u32,
+    busy: Option<Txn>,
+    pending: VecDeque<Queued>,
+}
+
+/// Messages to emit, each after a relative delay (the caller routes them
+/// through the fabric).
+pub type DirOut = Vec<(Ps, Message)>;
+
+/// One MN's directory controller + memory + resident dumped log.
+pub struct Directory {
+    pub mn: MnId,
+    entries: FxHashMap<Line, DirEntry>,
+    memory: FxHashMap<Line, LineWords>,
+    /// Dumped log records, in arrival order (recovery's fallback search).
+    pub mn_log: Vec<LogRecord>,
+    /// CNs whose Viral_Status is set (requests involving them are deferred
+    /// or have their invalidations skipped — their caches are gone).
+    dead_mask: u32,
+    dram_ps: Ps,
+    pmem_ps: Ps,
+    /// Transactions processed (stats / saturation checks).
+    pub transactions: u64,
+}
+
+impl Directory {
+    pub fn new(mn: MnId, dram_ps: Ps, pmem_ps: Ps) -> Self {
+        Directory {
+            mn,
+            entries: FxHashMap::default(),
+            memory: FxHashMap::default(),
+            mn_log: Vec::new(),
+            dead_mask: 0,
+            dram_ps,
+            pmem_ps,
+            transactions: 0,
+        }
+    }
+
+    fn me(&self) -> NodeId {
+        NodeId::Mn(self.mn)
+    }
+
+    pub fn mem_words(&self, line: Line) -> LineWords {
+        self.memory.get(&line).copied().unwrap_or([0; 16])
+    }
+
+    pub fn write_mem(&mut self, line: Line, mask: u16, words: &LineWords) {
+        let m = self.memory.entry(line).or_insert([0; 16]);
+        for w in 0..16 {
+            if mask & (1 << w) != 0 {
+                m[w] = words[w];
+            }
+        }
+    }
+
+    /// Directory view of a line (owner, sharer bitmap).
+    pub fn dir_state(&self, line: Line) -> (Option<CnId>, u32) {
+        self.entries
+            .get(&line)
+            .map(|e| (e.owner, e.sharers))
+            .unwrap_or((None, 0))
+    }
+
+    // ---------------- request entry points ----------------
+
+    /// ViralNotify: this CN's caches are gone.
+    pub fn mark_dead(&mut self, cn: CnId) {
+        self.dead_mask |= 1 << cn;
+    }
+
+    pub fn on_rds(&mut self, line: Line, req: ReqId) -> DirOut {
+        self.transactions += 1;
+        let dead = self.dead_mask;
+        let e = self.entries.entry(line).or_default();
+        if e.busy.is_some() {
+            e.pending.push_back(Queued::RdS(req));
+            return vec![];
+        }
+        if let Some(o) = e.owner {
+            if dead & (1 << o) != 0 {
+                // dead owner: defer until Algorithm 1 repairs the line
+                e.busy = Some(Txn::AwaitRecovery);
+                e.pending.push_back(Queued::RdS(req));
+                return vec![];
+            }
+        }
+        match e.owner {
+            Some(o) if o != req.cn => {
+                e.busy = Some(Txn::RdS { req });
+                vec![(
+                    0,
+                    Message {
+                        src: NodeId::Mn(self.mn),
+                        dst: NodeId::Cn(o),
+                        kind: MsgKind::Downgrade { line },
+                    },
+                )]
+            }
+            _ => {
+                // owner is requester (shouldn't normally happen) or no
+                // owner: grant shared (exclusive if sole reader).
+                let exclusive = e.owner.is_none() && e.sharers == 0;
+                if exclusive {
+                    e.owner = Some(req.cn);
+                } else {
+                    e.sharers |= 1 << req.cn;
+                }
+                let words = self.mem_words(line);
+                vec![(
+                    self.dram_ps,
+                    Message {
+                        src: self.me(),
+                        dst: NodeId::Cn(req.cn),
+                        kind: MsgKind::Data { line, req, exclusive, words },
+                    },
+                )]
+            }
+        }
+    }
+
+    pub fn on_rdx(&mut self, line: Line, req: ReqId, prefetch: bool) -> DirOut {
+        self.transactions += 1;
+        let me = self.me();
+        let dead = self.dead_mask;
+        let e = self.entries.entry(line).or_default();
+        if e.busy.is_some() {
+            e.pending.push_back(Queued::RdX(req, prefetch));
+            return vec![];
+        }
+        if let Some(o) = e.owner {
+            if o != req.cn && dead & (1 << o) != 0 {
+                e.busy = Some(Txn::AwaitRecovery);
+                e.pending.push_back(Queued::RdX(req, prefetch));
+                return vec![];
+            }
+        }
+        if e.owner == Some(req.cn) {
+            // already owner (prefetch raced with an earlier grant)
+            let words = self.mem_words(line);
+            return vec![(
+                self.dram_ps,
+                Message {
+                    src: me,
+                    dst: NodeId::Cn(req.cn),
+                    kind: MsgKind::Data { line, req, exclusive: true, words },
+                },
+            )];
+        }
+        let mut targets = e.sharers & !(1 << req.cn) & !dead;
+        if let Some(o) = e.owner {
+            targets |= 1 << o;
+        }
+        if targets == 0 {
+            e.owner = Some(req.cn);
+            e.sharers = 0;
+            let words = self.mem_words(line);
+            return vec![(
+                self.dram_ps,
+                Message {
+                    src: me,
+                    dst: NodeId::Cn(req.cn),
+                    kind: MsgKind::Data { line, req, exclusive: true, words },
+                },
+            )];
+        }
+        e.busy = Some(Txn::RdX { req, waiting: targets, prefetch });
+        bitmask_cns(targets)
+            .map(|c| {
+                (
+                    0,
+                    Message {
+                        src: me,
+                        dst: NodeId::Cn(c),
+                        kind: MsgKind::Inv { line },
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Write-through remote store (WT config): invalidate every other
+    /// cacher, persist, then ack.
+    pub fn on_wt_store(&mut self, line: Line, req: ReqId, mask: u16, words: LineWords) -> DirOut {
+        self.transactions += 1;
+        let me = self.me();
+        let dead = self.dead_mask;
+        let e = self.entries.entry(line).or_default();
+        if e.busy.is_some() {
+            e.pending.push_back(Queued::Wt(req, mask, words));
+            return vec![];
+        }
+        if let Some(o) = e.owner {
+            if o != req.cn && dead & (1 << o) != 0 {
+                e.busy = Some(Txn::AwaitRecovery);
+                e.pending.push_back(Queued::Wt(req, mask, words));
+                return vec![];
+            }
+        }
+        let mut targets = (e.sharers & !(1 << req.cn)) & !dead;
+        if let Some(o) = e.owner {
+            if o != req.cn {
+                targets |= 1 << o;
+            }
+        }
+        if targets == 0 {
+            self.write_mem(line, mask, &words);
+            return vec![(
+                self.pmem_ps,
+                Message {
+                    src: me,
+                    dst: NodeId::Cn(req.cn),
+                    kind: MsgKind::WtAck { line, req },
+                },
+            )];
+        }
+        e.busy = Some(Txn::Wt { req, waiting: targets, mask, words });
+        bitmask_cns(targets)
+            .map(|c| {
+                (
+                    0,
+                    Message {
+                        src: me,
+                        dst: NodeId::Cn(c),
+                        kind: MsgKind::Inv { line },
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Owner eviction writeback.
+    pub fn on_wb(&mut self, line: Line, from: CnId, mask: u16, words: LineWords) -> DirOut {
+        self.write_mem(line, mask, &words);
+        let e = self.entries.entry(line).or_default();
+        if e.owner == Some(from) {
+            e.owner = None;
+        }
+        vec![]
+    }
+
+    /// Invalidation ack (may carry dirty data from a former owner).
+    pub fn on_inv_ack(&mut self, line: Line, from: CnId, dirty: Option<(u16, LineWords)>) -> DirOut {
+        if let Some((mask, words)) = dirty {
+            self.write_mem(line, mask, &words);
+        }
+        let Some(e) = self.entries.get_mut(&line) else { return vec![] };
+        e.sharers &= !(1 << from);
+        if e.owner == Some(from) {
+            e.owner = None;
+        }
+        match &mut e.busy {
+            Some(Txn::RdX { waiting, .. }) | Some(Txn::Wt { waiting, .. }) => {
+                *waiting &= !(1 << from);
+            }
+            _ => return vec![],
+        }
+        self.try_complete(line)
+    }
+
+    /// Downgrade ack from the owner (RdS path).
+    pub fn on_downgrade_ack(&mut self, line: Line, from: CnId, dirty: Option<(u16, LineWords)>) -> DirOut {
+        if let Some((mask, words)) = dirty {
+            self.write_mem(line, mask, &words);
+        }
+        let Some(e) = self.entries.get_mut(&line) else { return vec![] };
+        if e.owner == Some(from) {
+            e.owner = None;
+            e.sharers |= 1 << from; // former owner keeps a shared copy
+        }
+        self.try_complete(line)
+    }
+
+    /// Complete the busy transaction on `line` if its acks are all in.
+    fn try_complete(&mut self, line: Line) -> DirOut {
+        let me = self.me();
+        let dram = self.dram_ps;
+        let pmem = self.pmem_ps;
+        let words_now = self.mem_words(line);
+        let Some(e) = self.entries.get_mut(&line) else { return vec![] };
+        let mut out: DirOut = vec![];
+        match e.busy.clone() {
+            Some(Txn::RdS { req }) => {
+                e.sharers |= 1 << req.cn;
+                e.busy = None;
+                out.push((
+                    dram,
+                    Message {
+                        src: me,
+                        dst: NodeId::Cn(req.cn),
+                        kind: MsgKind::Data { line, req, exclusive: false, words: words_now },
+                    },
+                ));
+            }
+            Some(Txn::RdX { req, waiting, .. }) if waiting == 0 => {
+                e.owner = Some(req.cn);
+                e.sharers = 0;
+                e.busy = None;
+                out.push((
+                    dram,
+                    Message {
+                        src: me,
+                        dst: NodeId::Cn(req.cn),
+                        kind: MsgKind::Data { line, req, exclusive: true, words: words_now },
+                    },
+                ));
+            }
+            Some(Txn::Wt { req, waiting, mask, words }) if waiting == 0 => {
+                e.busy = None;
+                // persist after invalidations (entry borrow ends here)
+                let _ = e;
+                self.write_mem(line, mask, &words);
+                out.push((
+                    pmem,
+                    Message {
+                        src: me,
+                        dst: NodeId::Cn(req.cn),
+                        kind: MsgKind::WtAck { line, req },
+                    },
+                ));
+            }
+            _ => return vec![],
+        }
+        // start the next queued request, if any
+        out.extend(self.pop_pending(line));
+        out
+    }
+
+    /// Start queued requests until one goes busy (or the queue drains).
+    /// Requests that complete immediately (no invalidations needed) must
+    /// not strand the ones queued behind them.
+    fn pop_pending(&mut self, line: Line) -> DirOut {
+        let mut out = Vec::new();
+        loop {
+            let Some(e) = self.entries.get_mut(&line) else { break };
+            if e.busy.is_some() {
+                break;
+            }
+            let Some(q) = e.pending.pop_front() else { break };
+            out.extend(match q {
+                Queued::RdS(req) => self.on_rds(line, req),
+                Queued::RdX(req, p) => self.on_rdx(line, req, p),
+                Queued::Wt(req, mask, words) => self.on_wt_store(line, req, mask, words),
+            });
+        }
+        out
+    }
+
+    // ---------------- recovery hooks (section V-C) ----------------
+
+    /// Algorithm 1 census: all lines homed here where `failed` is owner or
+    /// sharer.  Removes `failed` as a sharer immediately; owner entries
+    /// are returned for the log-query phase.
+    pub fn recovery_census(&mut self, failed: CnId) -> (Vec<Line>, u64) {
+        let mut owned = Vec::new();
+        let mut shared = 0;
+        for (l, e) in self.entries.iter_mut() {
+            if e.sharers & (1 << failed) != 0 {
+                e.sharers &= !(1 << failed);
+                shared += 1;
+            }
+            if e.owner == Some(failed) {
+                owned.push(*l);
+            }
+        }
+        owned.sort_unstable_by_key(|l| l.0);
+        (owned, shared)
+    }
+
+    /// Apply a recovered value and mark the line unowned/unshared
+    /// (Algorithm 1's final step).  Requests deferred on the dead owner
+    /// restart now, so the output must be routed.
+    pub fn recovery_apply(&mut self, line: Line, mask: u16, words: &LineWords) -> DirOut {
+        self.write_mem(line, mask, words);
+        if let Some(e) = self.entries.get_mut(&line) {
+            e.owner = None;
+            e.sharers = 0;
+            e.busy = None;
+        }
+        self.pop_pending(line)
+    }
+
+    /// Clear ownership of a line that turned out Exclusive-clean in the
+    /// failed CN (memory already current).
+    pub fn recovery_release(&mut self, line: Line, failed: CnId) -> DirOut {
+        if let Some(e) = self.entries.get_mut(&line) {
+            if e.owner == Some(failed) {
+                e.owner = None;
+            }
+            if e.busy == Some(Txn::AwaitRecovery) {
+                e.busy = None;
+            }
+        }
+        self.pop_pending(line)
+    }
+
+    /// Unblock transactions stuck waiting on acks from the failed CN.
+    ///
+    /// Two cases, with very different semantics:
+    /// * the failed CN was a *sharer* being invalidated — its copy is
+    ///   trivially gone; complete the transaction;
+    /// * the failed CN was the *owner* — its response would have carried
+    ///   dirty data that is now only in the replica logs, so completing
+    ///   the transaction with stale memory would lose committed updates.
+    ///   Instead the original request is re-queued and the line parks in
+    ///   `AwaitRecovery` until Algorithm 1 repairs it.
+    pub fn recovery_unblock(&mut self, failed: CnId) -> DirOut {
+        let mut out = vec![];
+        let lines: Vec<Line> = self.entries.keys().copied().collect();
+        for l in lines {
+            let Some(e) = self.entries.get_mut(&l) else { continue };
+            let owner_dead = e.owner == Some(failed);
+            match e.busy.clone() {
+                Some(Txn::RdS { req }) if owner_dead => {
+                    e.busy = Some(Txn::AwaitRecovery);
+                    e.pending.push_front(Queued::RdS(req));
+                }
+                Some(Txn::RdX { req, waiting, prefetch }) if waiting & (1 << failed) != 0 => {
+                    if owner_dead {
+                        e.busy = Some(Txn::AwaitRecovery);
+                        e.pending.push_front(Queued::RdX(req, prefetch));
+                    } else {
+                        out.extend(self.on_inv_ack(l, failed, None));
+                    }
+                }
+                Some(Txn::Wt { req, waiting, mask, words }) if waiting & (1 << failed) != 0 => {
+                    if owner_dead {
+                        e.busy = Some(Txn::AwaitRecovery);
+                        e.pending.push_front(Queued::Wt(req, mask, words));
+                    } else {
+                        out.extend(self.on_inv_ack(l, failed, None));
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// MN-log entries for `line`, latest-first (recovery's fallback when no
+    /// replica log has a word, Algorithm 1).  Dumps append in log order, so
+    /// reverse scan = latest first.
+    pub fn mn_log_latest(&self, line: Line) -> Vec<LogRecord> {
+        self.mn_log
+            .iter()
+            .rev()
+            .filter(|r| r.line == line)
+            .copied()
+            .collect()
+    }
+}
+
+fn bitmask_cns(mask: u32) -> impl Iterator<Item = CnId> {
+    (0..32).filter(move |c| mask & (1 << c) != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+
+    fn line(i: u32) -> Line {
+        Addr(0x8000_0000 | (i << 6)).line()
+    }
+
+    fn req(cn: usize) -> ReqId {
+        ReqId { cn, core: 0 }
+    }
+
+    fn dir() -> Directory {
+        Directory::new(0, 45_000, 500_000)
+    }
+
+    fn kinds(out: &DirOut) -> Vec<&MsgKind> {
+        out.iter().map(|(_, m)| &m.kind).collect()
+    }
+
+    #[test]
+    fn first_reader_gets_exclusive() {
+        let mut d = dir();
+        let out = d.on_rds(line(1), req(0));
+        assert!(matches!(
+            kinds(&out)[0],
+            MsgKind::Data { exclusive: true, .. }
+        ));
+        assert_eq!(d.dir_state(line(1)), (Some(0), 0));
+    }
+
+    #[test]
+    fn second_reader_downgrades_owner() {
+        let mut d = dir();
+        d.on_rds(line(1), req(0));
+        let out = d.on_rds(line(1), req(1));
+        assert!(matches!(kinds(&out)[0], MsgKind::Downgrade { .. }));
+        // owner responds with dirty data
+        let mut words = [0u32; 16];
+        words[2] = 42;
+        let out = d.on_downgrade_ack(line(1), 0, Some((1 << 2, words)));
+        assert!(matches!(
+            kinds(&out)[0],
+            MsgKind::Data { exclusive: false, .. }
+        ));
+        let (owner, sharers) = d.dir_state(line(1));
+        assert_eq!(owner, None);
+        assert_eq!(sharers, 0b11);
+        assert_eq!(d.mem_words(line(1))[2], 42);
+    }
+
+    #[test]
+    fn rdx_invalidates_all_sharers_then_grants() {
+        let mut d = dir();
+        d.on_rds(line(1), req(0));
+        d.on_downgrade_ack(line(1), 0, None); // completes reader 1's txn? no-op
+        d.on_rds(line(1), req(1));
+        d.on_downgrade_ack(line(1), 0, None);
+        // now 0 and 1 share; CN 2 wants exclusive
+        let out = d.on_rdx(line(1), req(2), false);
+        let invs = kinds(&out)
+            .iter()
+            .filter(|k| matches!(k, MsgKind::Inv { .. }))
+            .count();
+        assert_eq!(invs, 2);
+        assert!(d.on_inv_ack(line(1), 0, None).is_empty());
+        let out = d.on_inv_ack(line(1), 1, None);
+        assert!(matches!(
+            kinds(&out)[0],
+            MsgKind::Data { exclusive: true, .. }
+        ));
+        assert_eq!(d.dir_state(line(1)), (Some(2), 0));
+    }
+
+    #[test]
+    fn conflicting_requests_queue_fifo() {
+        let mut d = dir();
+        d.on_rds(line(1), req(0)); // 0 owns E
+        let out = d.on_rdx(line(1), req(1), false); // invalidates 0
+        assert_eq!(out.len(), 1);
+        // while busy, CN 2's RdX queues
+        assert!(d.on_rdx(line(1), req(2), false).is_empty());
+        // 0 acks: grant to 1 AND the queued txn for 2 starts (inv to 1)
+        let out = d.on_inv_ack(line(1), 0, None);
+        assert!(out.iter().any(|(_, m)| matches!(
+            m.kind,
+            MsgKind::Data { req: ReqId { cn: 1, .. }, .. }
+        )));
+        assert!(out
+            .iter()
+            .any(|(_, m)| matches!(m.kind, MsgKind::Inv { .. }) && m.dst == NodeId::Cn(1)));
+    }
+
+    #[test]
+    fn wt_store_persists_with_pmem_latency() {
+        let mut d = dir();
+        let mut w = [0u32; 16];
+        w[0] = 7;
+        let out = d.on_wt_store(line(3), req(0), 1, w);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 500_000, "PMem persist latency");
+        assert!(matches!(out[0].1.kind, MsgKind::WtAck { .. }));
+        assert_eq!(d.mem_words(line(3))[0], 7);
+    }
+
+    #[test]
+    fn wt_store_invalidates_sharers_first() {
+        let mut d = dir();
+        d.on_rds(line(3), req(1)); // CN1 E-owner
+        let out = d.on_wt_store(line(3), req(0), 1, [9; 16]);
+        assert!(matches!(kinds(&out)[0], MsgKind::Inv { .. }));
+        let out = d.on_inv_ack(line(3), 1, None);
+        assert!(matches!(out[0].1.kind, MsgKind::WtAck { .. }));
+        assert_eq!(d.mem_words(line(3))[0], 9);
+    }
+
+    #[test]
+    fn writeback_clears_owner_and_updates_memory() {
+        let mut d = dir();
+        d.on_rds(line(1), req(0));
+        d.on_wb(line(1), 0, 1, [5; 16]);
+        assert_eq!(d.dir_state(line(1)), (None, 0));
+        assert_eq!(d.mem_words(line(1))[0], 5);
+    }
+
+    #[test]
+    fn recovery_census_and_repair() {
+        let mut d = dir();
+        d.on_rds(line(1), req(3)); // 3 owns line 1
+        d.on_rds(line(2), req(0));
+        d.on_rds(line(2), req(3)); // 3 shares line 2 (after downgrade)
+        d.on_downgrade_ack(line(2), 0, None);
+        let (owned, shared) = d.recovery_census(3);
+        assert_eq!(owned, vec![line(1)]);
+        assert_eq!(shared, 1);
+        assert_eq!(d.dir_state(line(2)).1 & (1 << 3), 0);
+        d.recovery_apply(line(1), 1, &[77; 16]);
+        assert_eq!(d.mem_words(line(1))[0], 77);
+        assert_eq!(d.dir_state(line(1)), (None, 0));
+    }
+
+    #[test]
+    fn recovery_defers_requests_on_dead_owner_until_repair() {
+        let mut d = dir();
+        d.on_rds(line(1), req(3)); // 3 owns (E)
+        let _ = d.on_rdx(line(1), req(0), false); // inv to 3 (dead, no ack)
+        // unblock must NOT grant from stale memory — 3's dirty data lives
+        // only in the replica logs; the request parks until repair
+        let out = d.recovery_unblock(3);
+        assert!(out.is_empty());
+        // Algorithm 1 repairs the line; the deferred RdX restarts and wins
+        let out = d.recovery_apply(line(1), 1, &[777; 16]);
+        assert!(out.iter().any(|(_, m)| matches!(
+            m.kind,
+            MsgKind::Data { exclusive: true, req: ReqId { cn: 0, .. }, .. }
+        )));
+        assert_eq!(d.dir_state(line(1)).0, Some(0));
+        assert_eq!(d.mem_words(line(1))[0], 777);
+    }
+
+    #[test]
+    fn dead_sharer_invalidation_completes_immediately() {
+        let mut d = dir();
+        // 3 and 1 share the line (via downgrades)
+        d.on_rds(line(2), req(3));
+        d.on_rds(line(2), req(1));
+        d.on_downgrade_ack(line(2), 3, None);
+        // CN 0 wants exclusive: invs to 3 (dead) and 1
+        let _ = d.on_rdx(line(2), req(0), false);
+        let out = d.recovery_unblock(3); // dead CN was a mere sharer
+        assert!(out.is_empty(), "still waiting on live sharer 1");
+        let out = d.on_inv_ack(line(2), 1, None);
+        assert!(out.iter().any(|(_, m)| matches!(
+            m.kind,
+            MsgKind::Data { exclusive: true, req: ReqId { cn: 0, .. }, .. }
+        )));
+    }
+
+    #[test]
+    fn new_requests_on_dead_owned_lines_defer() {
+        let mut d = dir();
+        d.on_rds(line(5), req(3)); // 3 owns E
+        d.mark_dead(3);
+        assert!(d.on_rds(line(5), req(1)).is_empty(), "deferred");
+        assert!(d.on_rdx(line(5), req(2), false).is_empty(), "deferred");
+        // repair releases both queued requests in FIFO order
+        let out = d.recovery_apply(line(5), 1, &[9; 16]);
+        assert!(out.iter().any(|(_, m)| m.dst == NodeId::Cn(1)));
+    }
+
+    #[test]
+    fn mn_log_latest_is_reverse_log_order() {
+        let mut d = dir();
+        let mk = |seq: u64, word: u8, value: u32| LogRecord {
+            req: req(3),
+            line: line(9),
+            word,
+            value,
+            ts: seq,
+            repl_seq: seq,
+            valid: true,
+        };
+        d.mn_log.push(mk(1, 0, 10));
+        d.mn_log.push(mk(5, 0, 50));
+        d.mn_log.push(mk(3, 1, 30));
+        let latest = d.mn_log_latest(line(9));
+        assert_eq!(latest.len(), 3);
+        assert_eq!(latest[0].value, 30, "last appended comes first");
+        assert_eq!(latest[1].value, 50);
+        assert!(d.mn_log_latest(line(8)).is_empty());
+    }
+}

@@ -1,0 +1,331 @@
+//! Configuration system: Table II architecture parameters, the five
+//! evaluated protocol configurations, and CLI-style `key=value` overrides.
+
+pub mod parse;
+
+pub use parse::{apply_file, apply_override};
+
+use crate::sim::time::{self, Ps};
+
+/// Compute-node index (0..n_cns).
+pub type CnId = usize;
+/// Memory-node index (0..n_mns).
+pub type MnId = usize;
+/// Cluster-wide core index (cn * cores_per_cn + local core).
+pub type CoreId = usize;
+
+/// The five remote-store handling configurations of section VI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Protocol {
+    /// Plain write-back: fast, zero resilience (lower bound).
+    WriteBack,
+    /// Write-through + persist to the MN on every remote store.
+    WriteThrough,
+    /// ReCXL: replication starts after the coherence transaction completes.
+    ReCxlBaseline,
+    /// ReCXL: replication overlaps the coherence transaction (both start at
+    /// the SB head).
+    ReCxlParallel,
+    /// ReCXL: replication starts when the store retires into the SB.
+    ReCxlProactive,
+}
+
+impl Protocol {
+    pub const ALL: [Protocol; 5] = [
+        Protocol::WriteBack,
+        Protocol::WriteThrough,
+        Protocol::ReCxlBaseline,
+        Protocol::ReCxlParallel,
+        Protocol::ReCxlProactive,
+    ];
+
+    pub fn is_recxl(self) -> bool {
+        matches!(
+            self,
+            Protocol::ReCxlBaseline | Protocol::ReCxlParallel | Protocol::ReCxlProactive
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Protocol::WriteBack => "WB",
+            Protocol::WriteThrough => "WT",
+            Protocol::ReCxlBaseline => "ReCXL-baseline",
+            Protocol::ReCxlParallel => "ReCXL-parallel",
+            Protocol::ReCxlProactive => "ReCXL-proactive",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Protocol> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "wb" | "writeback" | "write-back" => Protocol::WriteBack,
+            "wt" | "writethrough" | "write-through" => Protocol::WriteThrough,
+            "baseline" | "recxl-baseline" => Protocol::ReCxlBaseline,
+            "parallel" | "recxl-parallel" => Protocol::ReCxlParallel,
+            "proactive" | "recxl-proactive" | "recxl" => Protocol::ReCxlProactive,
+            _ => return None,
+        })
+    }
+}
+
+/// Crash injection: fail `cn` at `at` ps (Fig. 15 uses CN 0 @ 12.5 ms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashSpec {
+    pub cn: CnId,
+    pub at: Ps,
+}
+
+/// One cache level's geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheGeom {
+    pub size_bytes: u32,
+    pub assoc: u32,
+    pub latency_cycles: u64,
+}
+
+impl CacheGeom {
+    pub fn lines(&self) -> u32 {
+        self.size_bytes / crate::mem::LINE_BYTES
+    }
+    pub fn sets(&self) -> u32 {
+        self.lines() / self.assoc
+    }
+}
+
+/// The full architecture + run configuration (Table II defaults).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    // --- topology ---
+    pub n_cns: usize,
+    pub n_mns: usize,
+    pub cores_per_cn: usize,
+
+    // --- protocol under test ---
+    pub protocol: Protocol,
+    /// Replication factor N_r (number of replica Logging Units per update).
+    pub n_r: usize,
+    /// Store coalescing in the SB (Fig. 12 ablates this for proactive).
+    pub coalescing: bool,
+
+    // --- core ---
+    pub store_buffer_entries: usize,
+    pub load_queue_entries: usize,
+    /// Memory-level parallelism: outstanding load misses an OoO core
+    /// sustains before stalling (MSHR-bound; the Table-II cores are
+    /// out-of-order, so load misses overlap).
+    pub mlp: usize,
+
+    // --- caches (per CN) ---
+    pub l1: CacheGeom,
+    pub l2: CacheGeom,
+    pub l3: CacheGeom,
+
+    // --- memory ---
+    pub local_dram_ps: Ps,
+    pub mn_dram_ps: Ps,
+    pub mn_pmem_ps: Ps,
+
+    // --- CXL fabric ---
+    pub link_bw_gbps: u64,
+    /// End-to-end network round-trip (Table II: 200 ns).
+    pub net_rtt_ps: Ps,
+    /// Deterministic per-message reorder jitter applied to replication
+    /// traffic (exercises the logical-timestamp machinery; 0 disables).
+    pub repl_jitter_ps: Ps,
+
+    // --- Logging Unit ---
+    pub sram_log_bytes: usize,
+    pub dram_log_bytes: usize,
+    pub dump_period_ps: Ps,
+    /// gzip level for log dumping (paper: 9).
+    pub gzip_level: u32,
+
+    // --- workload ---
+    pub ops_per_thread: u64,
+    /// Deterministic barrier insertion period, in ops (0 = no barriers).
+    pub barrier_period: u64,
+    pub seed: u64,
+
+    // --- failure injection ---
+    pub crash: Option<CrashSpec>,
+    /// Switch CN-failure detection delay (Viral_Status set after this).
+    pub detect_delay_ps: Ps,
+
+    // --- trace source ---
+    /// Use the PJRT-compiled trace_gen artifact when available.
+    pub use_pjrt: bool,
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_cns: 16,
+            n_mns: 16,
+            cores_per_cn: 4,
+            protocol: Protocol::ReCxlProactive,
+            n_r: 3,
+            coalescing: true,
+            store_buffer_entries: 72,
+            load_queue_entries: 128,
+            mlp: 16,
+            l1: CacheGeom {
+                size_bytes: 48 * 1024,
+                assoc: 12,
+                latency_cycles: 5,
+            },
+            l2: CacheGeom {
+                size_bytes: 512 * 1024,
+                assoc: 8,
+                latency_cycles: 13,
+            },
+            l3: CacheGeom {
+                size_bytes: 8 * 1024 * 1024,
+                assoc: 16,
+                latency_cycles: 36,
+            },
+            local_dram_ps: time::ns(45),
+            mn_dram_ps: time::ns(45),
+            mn_pmem_ps: time::ns(500),
+            link_bw_gbps: 160,
+            net_rtt_ps: time::ns(200),
+            repl_jitter_ps: time::ns(40),
+            sram_log_bytes: 4 * 1024,
+            dram_log_bytes: 18 * 1024 * 1024,
+            dump_period_ps: time::us(2500),
+            gzip_level: 9,
+            ops_per_thread: 100_000,
+            barrier_period: 20_000,
+            seed: 0xCE_C5_1,
+            crash: None,
+            detect_delay_ps: time::us(10),
+            use_pjrt: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn n_threads(&self) -> usize {
+        self.n_cns * self.cores_per_cn
+    }
+
+    /// One-way fabric latency (half the RTT, covering port + switch hops).
+    pub fn one_way_ps(&self) -> Ps {
+        self.net_rtt_ps / 2
+    }
+
+    /// Serialization delay for `bytes` on one link, in ps.
+    pub fn ser_ps(&self, bytes: u32) -> Ps {
+        // GB/s = bytes/ns; ps = bytes * 1000 / (GB/s)
+        (bytes as u64 * 1_000).div_ceil(self.link_bw_gbps)
+    }
+
+    /// SRAM Log Buffer capacity in entries (12 B per Fig. 5 entry).
+    pub fn sram_log_entries(&self) -> usize {
+        self.sram_log_bytes / crate::recxl::logunit::LOG_ENTRY_BYTES
+    }
+
+    /// DRAM log capacity in entries.
+    pub fn dram_log_entries(&self) -> usize {
+        self.dram_log_bytes / crate::recxl::logunit::LOG_ENTRY_BYTES
+    }
+
+    /// Validate invariants the simulator relies on.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_cns < 2 {
+            return Err("need at least 2 CNs".into());
+        }
+        if self.n_mns == 0 {
+            return Err("need at least 1 MN".into());
+        }
+        if self.protocol.is_recxl() && self.n_r + 1 > self.n_cns {
+            return Err(format!(
+                "replication factor {} needs at least {} CNs",
+                self.n_r,
+                self.n_r + 1
+            ));
+        }
+        if self.link_bw_gbps == 0 {
+            return Err("link bandwidth must be nonzero".into());
+        }
+        if let Some(c) = self.crash {
+            if c.cn >= self.n_cns {
+                return Err(format!("crash cn {} out of range", c.cn));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let c = SimConfig::default();
+        assert_eq!(c.n_cns, 16);
+        assert_eq!(c.n_mns, 16);
+        assert_eq!(c.cores_per_cn, 4);
+        assert_eq!(c.n_r, 3);
+        assert_eq!(c.store_buffer_entries, 72);
+        assert_eq!(c.load_queue_entries, 128);
+        assert_eq!(c.l1.size_bytes, 48 * 1024);
+        assert_eq!(c.l1.assoc, 12);
+        assert_eq!(c.l1.latency_cycles, 5);
+        assert_eq!(c.l2.size_bytes, 512 * 1024);
+        assert_eq!(c.l3.size_bytes, 8 * 1024 * 1024);
+        assert_eq!(c.local_dram_ps, time::ns(45));
+        assert_eq!(c.mn_pmem_ps, time::ns(500));
+        assert_eq!(c.link_bw_gbps, 160);
+        assert_eq!(c.net_rtt_ps, time::ns(200));
+        assert_eq!(c.sram_log_bytes, 4 * 1024);
+        assert_eq!(c.dram_log_bytes, 18 * 1024 * 1024);
+        assert_eq!(c.dump_period_ps, time::ms(2) + time::us(500));
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn max_lines_cached_per_cn_matches_paper() {
+        // Fig. 15's reference: "the maximum total number of different lines
+        // in the caches of a CN is 163K".
+        let c = SimConfig::default();
+        let per_core = c.l1.lines() + c.l2.lines();
+        let total = per_core * c.cores_per_cn as u32 + c.l3.lines();
+        assert_eq!(total, 166_912); // ≈163K as the paper rounds it
+    }
+
+    #[test]
+    fn serialization_delay() {
+        let c = SimConfig::default();
+        // 64 B at 160 GB/s = 0.4 ns = 400 ps
+        assert_eq!(c.ser_ps(64), 400);
+        let slow = SimConfig {
+            link_bw_gbps: 20,
+            ..c
+        };
+        assert_eq!(slow.ser_ps(64), 3_200);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = SimConfig {
+            n_cns: 3,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err()); // n_r=3 needs 4 CNs
+        c.n_r = 2;
+        assert!(c.validate().is_ok());
+        c.crash = Some(CrashSpec { cn: 99, at: 0 });
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn protocol_names_roundtrip() {
+        for p in Protocol::ALL {
+            assert_eq!(Protocol::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Protocol::from_name("nonsense"), None);
+    }
+}

@@ -1,0 +1,135 @@
+//! `key=value` override parsing for the CLI and config files.
+//!
+//! The offline crate set has no serde/toml/clap, so the launcher accepts a
+//! flat `key=value` dialect (one pair per `--set` flag or per line of a
+//! `--config` file; `#` comments allowed).  Keys mirror the `SimConfig`
+//! fields used by the paper's sweeps.
+
+use super::{CrashSpec, Protocol, SimConfig};
+use crate::sim::time;
+
+/// Apply a single `key=value` override to `cfg`.
+pub fn apply_override(cfg: &mut SimConfig, key: &str, value: &str) -> Result<(), String> {
+    let bad = |what: &str| format!("invalid {what}: {key}={value}");
+    macro_rules! num {
+        () => {
+            value.parse().map_err(|_| bad("number"))?
+        };
+    }
+    match key {
+        "n_cns" => cfg.n_cns = num!(),
+        "n_mns" => cfg.n_mns = num!(),
+        "cores_per_cn" => cfg.cores_per_cn = num!(),
+        "protocol" => {
+            cfg.protocol = Protocol::from_name(value).ok_or_else(|| bad("protocol"))?
+        }
+        "n_r" => cfg.n_r = num!(),
+        "coalescing" => cfg.coalescing = parse_bool(value).ok_or_else(|| bad("bool"))?,
+        "store_buffer_entries" | "sb" => cfg.store_buffer_entries = num!(),
+        "mlp" => cfg.mlp = num!(),
+        "link_bw_gbps" => cfg.link_bw_gbps = num!(),
+        "net_rtt_ns" => cfg.net_rtt_ps = time::ns(num!()),
+        "repl_jitter_ns" => cfg.repl_jitter_ps = time::ns(num!()),
+        "sram_log_bytes" => cfg.sram_log_bytes = num!(),
+        "dram_log_bytes" => cfg.dram_log_bytes = num!(),
+        "dump_period_us" => cfg.dump_period_ps = time::us(num!()),
+        "gzip_level" => cfg.gzip_level = num!(),
+        "ops_per_thread" | "ops" => cfg.ops_per_thread = num!(),
+        "barrier_period" => cfg.barrier_period = num!(),
+        "seed" => cfg.seed = num!(),
+        "crash_cn" => {
+            let cn = num!();
+            cfg.crash = Some(match cfg.crash {
+                Some(c) => CrashSpec { cn, at: c.at },
+                None => CrashSpec {
+                    cn,
+                    at: time::ms(12) + time::us(500),
+                },
+            });
+        }
+        "crash_at_us" => {
+            let at = time::us(num!());
+            cfg.crash = Some(match cfg.crash {
+                Some(c) => CrashSpec { cn: c.cn, at },
+                None => CrashSpec { cn: 0, at },
+            });
+        }
+        "use_pjrt" => cfg.use_pjrt = parse_bool(value).ok_or_else(|| bad("bool"))?,
+        "artifacts_dir" => cfg.artifacts_dir = value.to_string(),
+        "detect_delay_us" => cfg.detect_delay_ps = time::us(num!()),
+        _ => return Err(format!("unknown config key: {key}")),
+    }
+    Ok(())
+}
+
+/// Parse a whole config file body (one `key=value` per line).
+pub fn apply_file(cfg: &mut SimConfig, body: &str) -> Result<(), String> {
+    for (lineno, line) in body.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+        apply_override(cfg, k.trim(), v.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+    }
+    Ok(())
+}
+
+fn parse_bool(v: &str) -> Option<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" | "on" => Some(true),
+        "0" | "false" | "no" | "off" => Some(false),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = SimConfig::default();
+        apply_override(&mut c, "n_cns", "8").unwrap();
+        apply_override(&mut c, "protocol", "wt").unwrap();
+        apply_override(&mut c, "link_bw_gbps", "20").unwrap();
+        apply_override(&mut c, "coalescing", "off").unwrap();
+        assert_eq!(c.n_cns, 8);
+        assert_eq!(c.protocol, Protocol::WriteThrough);
+        assert_eq!(c.link_bw_gbps, 20);
+        assert!(!c.coalescing);
+    }
+
+    #[test]
+    fn crash_spec_composes() {
+        let mut c = SimConfig::default();
+        apply_override(&mut c, "crash_cn", "0").unwrap();
+        // default crash time is the paper's 12.5 ms
+        assert_eq!(c.crash.unwrap().at, time::us(12_500));
+        apply_override(&mut c, "crash_at_us", "100").unwrap();
+        assert_eq!(c.crash.unwrap(), CrashSpec { cn: 0, at: time::us(100) });
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SimConfig::default();
+        assert!(apply_override(&mut c, "warp_factor", "9").is_err());
+        assert!(apply_override(&mut c, "n_cns", "pony").is_err());
+    }
+
+    #[test]
+    fn file_parsing_with_comments() {
+        let mut c = SimConfig::default();
+        apply_file(
+            &mut c,
+            "# sweep point\nn_cns = 4\nprotocol = proactive # headline\n\nseed=7\n",
+        )
+        .unwrap();
+        assert_eq!(c.n_cns, 4);
+        assert_eq!(c.seed, 7);
+        assert!(apply_file(&mut c, "garbage line").is_err());
+    }
+}

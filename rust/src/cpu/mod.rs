@@ -1,0 +1,173 @@
+//! Core model: a trace-driven out-of-order core front end with TSO
+//! semantics (section IV-D.1, Fig. 7).
+//!
+//! Non-memory ops retire at one per cycle; loads block on misses; stores
+//! retire into the [`sb::StoreBuffer`] and the core only stalls when the
+//! SB is full (the WT pathology of Fig. 2).  The commit rules at the SB
+//! head — what must complete before the head store drains — are the whole
+//! difference between WB/WT/ReCXL-{baseline,parallel,proactive} and live
+//! in the cluster's commit engine (`cluster::commit`).
+
+pub mod sb;
+pub mod sync;
+
+pub use sb::{Deposit, SbEntry, StoreBuffer};
+
+use crate::mem::Line;
+use crate::sim::time::Ps;
+use crate::stats::CoreStats;
+use crate::workloads::ThreadTrace;
+
+/// Why a core is not currently consuming its trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Block {
+    /// Runnable (an event is scheduled or will be).
+    None,
+    /// Waiting for a load miss response on this line.
+    Load(Line),
+    /// Load queue saturated: all MLP slots hold outstanding misses.
+    Mlp,
+    /// Waiting for an SB slot (SB full at deposit time).
+    SbSlot,
+    /// Draining the SB before a fencing op (lock acquire / barrier are
+    /// atomic-RMW-like and order against earlier stores under TSO).
+    Fence,
+    /// Waiting for a lock grant.
+    Lock(u8),
+    /// Waiting at a barrier.
+    Barrier,
+    /// Paused by the recovery protocol's Interrupt.
+    Paused,
+    /// Trace fully consumed.
+    Done,
+    /// The CN failed (fail-stop).
+    Dead,
+}
+
+/// One simulated core.
+pub struct Core {
+    pub cn: usize,
+    pub local: usize,
+    pub thread: usize,
+    /// Core-local clock; may run ahead of the global event clock within a
+    /// batching quantum (DESIGN.md section "Timing model").
+    pub clock: Ps,
+    pub block: Block,
+    pub trace: ThreadTrace,
+    pub sb: StoreBuffer,
+    /// Ops remaining inside the current critical section (0 = none).
+    pub cs_remaining: u64,
+    /// Critical-section length to install when a pending lock is granted.
+    pub pending_cs: u64,
+    pub held_lock: Option<u8>,
+    /// Store that could not deposit because the SB was full (re-deposited
+    /// when the head drains).
+    pub pending_store: Option<(Line, bool, u8, u32)>,
+    /// Sync op stashed while the SB drains (fence semantics).
+    pub after_fence: Option<crate::workloads::TraceOp>,
+    /// Lines with an exclusive prefetch / demand-RdX in flight.
+    pub pending_rdx: Vec<Line>,
+    /// Pending load line (for response matching).
+    pub pending_load: Option<Line>,
+    /// Outstanding load misses (MLP accounting).
+    pub outstanding_loads: usize,
+    pub stats: CoreStats,
+    /// Monotone per-core counter used to derive store values (the logged
+    /// payloads recovery must reproduce).
+    pub store_counter: u64,
+}
+
+impl Core {
+    pub fn new(cn: usize, local: usize, thread: usize, trace: ThreadTrace, sb_cap: usize, coalescing: bool) -> Self {
+        Core {
+            cn,
+            local,
+            thread,
+            clock: 0,
+            block: Block::None,
+            trace,
+            sb: StoreBuffer::new(sb_cap, coalescing),
+            cs_remaining: 0,
+            pending_cs: 0,
+            held_lock: None,
+            pending_store: None,
+            after_fence: None,
+            pending_rdx: Vec::new(),
+            pending_load: None,
+            outstanding_loads: 0,
+            stats: CoreStats::default(),
+            store_counter: 0,
+        }
+    }
+
+    pub fn is_runnable(&self) -> bool {
+        self.block == Block::None
+    }
+
+    /// Finished = trace consumed AND all stores drained.
+    pub fn finished(&self) -> bool {
+        self.block == Block::Done && self.sb.is_empty()
+    }
+
+    /// Deterministic value for this core's next store (low entropy on
+    /// purpose: real store streams compress well — section IV-E measures
+    /// gzip at ~5.8x — so the logged payloads must not be white noise).
+    pub fn next_store_value(&mut self) -> u32 {
+        self.store_counter += 1;
+        ((self.thread as u32) << 24) | (self.store_counter as u32 & 0x00FF_FFFF)
+    }
+
+    pub fn note_rdx_inflight(&mut self, line: Line) -> bool {
+        if self.pending_rdx.contains(&line) {
+            false
+        } else {
+            self.pending_rdx.push(line);
+            true
+        }
+    }
+
+    pub fn rdx_arrived(&mut self, line: Line) {
+        self.pending_rdx.retain(|&l| l != line);
+        self.sb.coherence_done(line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{profiles, ThreadTrace};
+
+    fn core() -> Core {
+        let t = ThreadTrace::new(1, &profiles::bodytrack(), 0, 10);
+        Core::new(0, 0, 0, t, 72, true)
+    }
+
+    #[test]
+    fn store_values_are_low_entropy_and_distinct() {
+        let mut c = core();
+        let a = c.next_store_value();
+        let b = c.next_store_value();
+        assert_ne!(a, b);
+        assert_eq!(a >> 24, 0);
+        assert_eq!(b - a, 1);
+    }
+
+    #[test]
+    fn rdx_inflight_dedup() {
+        let mut c = core();
+        let l = crate::mem::Addr(0x8000_0040).line();
+        assert!(c.note_rdx_inflight(l));
+        assert!(!c.note_rdx_inflight(l), "no duplicate prefetch");
+        c.rdx_arrived(l);
+        assert!(c.note_rdx_inflight(l));
+    }
+
+    #[test]
+    fn finished_requires_drained_sb() {
+        let mut c = core();
+        c.block = Block::Done;
+        assert!(c.finished());
+        c.sb.deposit(crate::mem::Addr(0x8000_0040).line(), true, 0, 1, 0);
+        assert!(!c.finished());
+    }
+}

@@ -1,0 +1,376 @@
+//! The store buffer (SB): TSO in-order drain, store coalescing, and the
+//! per-entry replication state that distinguishes the three ReCXL
+//! variants (section IV-D, Figs. 6-8).
+//!
+//! Stores retire from the ROB/SQ into the SB (72 entries, Table II) and
+//! commit strictly in order from the head.  Consecutive stores to
+//! different words of the same line, not interleaved by a store to
+//! another line, coalesce into one entry (one memory transaction, one
+//! REPL).  ReCXL-proactive's coalescing rule (section IV-D.5): an entry
+//! never REPLs on deposit; its REPLs go out when the next non-coalescable
+//! store arrives, or at the SB head at the latest — tracked here so
+//! Fig. 11 (fraction of REPLs sent at head) falls out of the entry state.
+
+use std::collections::VecDeque;
+
+use crate::mem::Line;
+use crate::proto::LineWords;
+use crate::sim::time::Ps;
+
+/// One (possibly coalesced) store awaiting commit.
+#[derive(Debug, Clone)]
+pub struct SbEntry {
+    pub line: Line,
+    pub remote: bool,
+    pub mask: u16,
+    pub words: LineWords,
+    pub deposited_at: Ps,
+    /// Per-CN replication sequence, assigned when REPLs are sent.
+    pub repl_seq: u64,
+    pub repl_sent: bool,
+    /// Bitmask of replica CNs whose REPL_ACK is still outstanding.
+    pub acks_mask: u32,
+    /// Coherence transaction (ownership) completed.
+    pub coherence_done: bool,
+    /// WT: MN ack received.
+    pub wt_acked: bool,
+    /// Stores merged into this entry beyond the first.
+    pub coalesced: u32,
+    /// Commit procedure for this entry has started (head, in flight).
+    pub committing: bool,
+}
+
+impl SbEntry {
+    fn new(line: Line, remote: bool, word: u8, value: u32, now: Ps) -> Self {
+        let mut words = [0u32; 16];
+        words[word as usize] = value;
+        SbEntry {
+            line,
+            remote,
+            mask: 1 << word,
+            words,
+            deposited_at: now,
+            repl_seq: 0,
+            repl_sent: false,
+            acks_mask: 0,
+            coherence_done: false,
+            wt_acked: false,
+            coalesced: 0,
+            committing: false,
+        }
+    }
+}
+
+/// Outcome of depositing a store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deposit {
+    /// Merged into the tail entry (no slot consumed).
+    Coalesced,
+    /// New entry allocated.
+    NewEntry,
+    /// SB full — the core must stall until the head drains.
+    Full,
+}
+
+/// The per-core store buffer.
+#[derive(Debug)]
+pub struct StoreBuffer {
+    entries: VecDeque<SbEntry>,
+    cap: usize,
+    coalescing: bool,
+}
+
+impl StoreBuffer {
+    pub fn new(cap: usize, coalescing: bool) -> Self {
+        StoreBuffer {
+            entries: VecDeque::with_capacity(cap),
+            cap,
+            coalescing,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.cap
+    }
+
+    pub fn head(&self) -> Option<&SbEntry> {
+        self.entries.front()
+    }
+
+    pub fn head_mut(&mut self) -> Option<&mut SbEntry> {
+        self.entries.front_mut()
+    }
+
+    pub fn pop_head(&mut self) -> Option<SbEntry> {
+        self.entries.pop_front()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut SbEntry> {
+        self.entries.iter_mut()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SbEntry> {
+        self.entries.iter()
+    }
+
+    /// TSO store-to-load forwarding probe: youngest value for `(line,
+    /// word)` still in the buffer.
+    pub fn forward(&self, line: Line, word: u8) -> Option<u32> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|e| e.line == line && e.mask & (1 << word) != 0)
+            .map(|e| e.words[word as usize])
+    }
+
+    /// Deposit a retiring store.  Coalesces into the tail when permitted:
+    /// same line, tail not yet committing, and (for proactive) tail's
+    /// REPLs not yet sent.
+    pub fn deposit(&mut self, line: Line, remote: bool, word: u8, value: u32, now: Ps) -> Deposit {
+        if self.coalescing {
+            if let Some(tail) = self.entries.back_mut() {
+                if tail.line == line && !tail.committing && !tail.repl_sent {
+                    tail.mask |= 1 << word;
+                    tail.words[word as usize] = value;
+                    tail.coalesced += 1;
+                    return Deposit::Coalesced;
+                }
+            }
+        }
+        if self.is_full() {
+            return Deposit::Full;
+        }
+        self.entries.push_back(SbEntry::new(line, remote, word, value, now));
+        Deposit::NewEntry
+    }
+
+    /// ReCXL-proactive: entries whose REPLs should be issued now because a
+    /// newer, non-coalescable entry exists behind them (section IV-D.5).
+    /// Returns indices of remote entries to replicate (all but the tail).
+    pub fn proactive_repl_candidates(&self) -> Vec<usize> {
+        if self.entries.is_empty() {
+            return vec![];
+        }
+        let last = self.entries.len() - 1;
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(i, e)| {
+                e.remote
+                    && !e.repl_sent
+                    && (!self.coalescing || *i < last)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn entry_mut(&mut self, i: usize) -> &mut SbEntry {
+        &mut self.entries[i]
+    }
+
+    /// Record a REPL_ACK from replica `from` for the entry carrying
+    /// `repl_seq`.
+    pub fn ack(&mut self, repl_seq: u64, from: usize) -> bool {
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.repl_sent && e.repl_seq == repl_seq && e.acks_mask & (1 << from) != 0)
+        {
+            e.acks_mask &= !(1 << from);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A replica CN died: its acks will never come (the requester learns
+    /// via ViralNotify, section V-A / DESIGN.md "Failures").
+    pub fn discount_dead_replica(&mut self, dead: usize) -> u32 {
+        let mut affected = 0;
+        for e in self.entries.iter_mut() {
+            if e.repl_sent && e.acks_mask & (1 << dead) != 0 {
+                e.acks_mask &= !(1 << dead);
+                affected += 1;
+            }
+        }
+        affected
+    }
+
+    /// Mark coherence complete for all entries on `line` (exclusive
+    /// prefetch or demand grant arrived).
+    pub fn coherence_done(&mut self, line: Line) {
+        for e in self.entries.iter_mut() {
+            if e.line == line {
+                e.coherence_done = true;
+            }
+        }
+    }
+
+    /// Ownership of `line` was lost (invalidation/downgrade): pending
+    /// stores must re-acquire before committing.
+    pub fn coherence_undone(&mut self, line: Line) {
+        for e in self.entries.iter_mut() {
+            if e.line == line {
+                e.coherence_done = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+
+    fn rl(i: u32) -> Line {
+        Addr(0x8000_0000 | (i << 6)).line()
+    }
+
+    fn sb(cap: usize, coalescing: bool) -> StoreBuffer {
+        StoreBuffer::new(cap, coalescing)
+    }
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let mut b = sb(2, false);
+        assert_eq!(b.deposit(rl(1), true, 0, 1, 0), Deposit::NewEntry);
+        assert_eq!(b.deposit(rl(2), true, 0, 2, 0), Deposit::NewEntry);
+        assert_eq!(b.deposit(rl(3), true, 0, 3, 0), Deposit::Full);
+        assert!(b.is_full());
+        assert_eq!(b.pop_head().unwrap().line, rl(1));
+        assert_eq!(b.deposit(rl(3), true, 0, 3, 0), Deposit::NewEntry);
+    }
+
+    #[test]
+    fn coalesces_same_line_different_words() {
+        let mut b = sb(8, true);
+        b.deposit(rl(1), true, 0, 10, 0);
+        assert_eq!(b.deposit(rl(1), true, 4, 20, 1), Deposit::Coalesced);
+        assert_eq!(b.len(), 1);
+        let h = b.head().unwrap();
+        assert_eq!(h.mask, 0b1_0001);
+        assert_eq!(h.words[4], 20);
+        assert_eq!(h.coalesced, 1);
+    }
+
+    #[test]
+    fn no_coalescing_across_interleaved_line() {
+        // ST B, ST B+4, ST C, ST B+8: the last B store cannot merge
+        let mut b = sb(8, true);
+        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(1), true, 1, 2, 0);
+        b.deposit(rl(2), true, 0, 3, 0);
+        assert_eq!(b.deposit(rl(1), true, 2, 4, 0), Deposit::NewEntry);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn coalescing_disabled_never_merges() {
+        let mut b = sb(8, false);
+        b.deposit(rl(1), true, 0, 1, 0);
+        assert_eq!(b.deposit(rl(1), true, 1, 2, 0), Deposit::NewEntry);
+    }
+
+    #[test]
+    fn no_merge_after_repl_sent() {
+        // proactive coalescing rule: once REPLs left, the entry is sealed
+        let mut b = sb(8, true);
+        b.deposit(rl(1), true, 0, 1, 0);
+        b.head_mut().unwrap().repl_sent = true;
+        assert_eq!(b.deposit(rl(1), true, 1, 2, 0), Deposit::NewEntry);
+    }
+
+    #[test]
+    fn no_merge_into_committing_head() {
+        let mut b = sb(8, true);
+        b.deposit(rl(1), true, 0, 1, 0);
+        b.head_mut().unwrap().committing = true;
+        assert_eq!(b.deposit(rl(1), true, 1, 2, 0), Deposit::NewEntry);
+    }
+
+    #[test]
+    fn forwarding_returns_youngest() {
+        let mut b = sb(8, false);
+        b.deposit(rl(1), true, 3, 10, 0);
+        b.deposit(rl(2), true, 3, 20, 0);
+        b.deposit(rl(1), true, 3, 30, 0);
+        assert_eq!(b.forward(rl(1), 3), Some(30));
+        assert_eq!(b.forward(rl(1), 4), None);
+        assert_eq!(b.forward(rl(9), 3), None);
+    }
+
+    #[test]
+    fn proactive_candidates_exclude_open_tail_when_coalescing() {
+        let mut b = sb(8, true);
+        b.deposit(rl(1), true, 0, 1, 0);
+        // tail may still coalesce: nothing to send yet
+        assert!(b.proactive_repl_candidates().is_empty());
+        b.deposit(rl(2), true, 0, 2, 0);
+        // entry 0 is now sealed by a non-coalescable successor
+        assert_eq!(b.proactive_repl_candidates(), vec![0]);
+        b.entry_mut(0).repl_sent = true;
+        assert!(b.proactive_repl_candidates().is_empty());
+    }
+
+    #[test]
+    fn proactive_candidates_without_coalescing_include_tail() {
+        let mut b = sb(8, false);
+        b.deposit(rl(1), true, 0, 1, 0);
+        assert_eq!(b.proactive_repl_candidates(), vec![0]);
+    }
+
+    #[test]
+    fn local_stores_never_replicate() {
+        let mut b = sb(8, false);
+        b.deposit(Addr(0x0100_0040).line(), false, 0, 1, 0);
+        assert!(b.proactive_repl_candidates().is_empty());
+    }
+
+    #[test]
+    fn ack_matching_by_seq_and_replica() {
+        let mut b = sb(8, false);
+        b.deposit(rl(1), true, 0, 1, 0);
+        let e = b.entry_mut(0);
+        e.repl_sent = true;
+        e.repl_seq = 42;
+        e.acks_mask = 0b1110;
+        assert!(b.ack(42, 1));
+        assert!(!b.ack(42, 1), "duplicate ack ignored");
+        assert!(!b.ack(99, 2), "unknown seq ignored");
+        assert_eq!(b.head().unwrap().acks_mask, 0b1100);
+    }
+
+    #[test]
+    fn dead_replica_discounted_from_all_pending_entries() {
+        let mut b = sb(8, false);
+        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(2), true, 0, 2, 0);
+        for i in 0..2 {
+            let e = b.entry_mut(i);
+            e.repl_sent = true;
+            e.repl_seq = i as u64 + 1;
+            e.acks_mask = 0b101;
+        }
+        assert_eq!(b.discount_dead_replica(2), 2);
+        assert_eq!(b.head().unwrap().acks_mask, 0b001);
+    }
+
+    #[test]
+    fn coherence_done_applies_to_all_entries_of_line() {
+        let mut b = sb(8, false);
+        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(2), true, 0, 2, 0);
+        b.deposit(rl(1), true, 1, 3, 0);
+        b.coherence_done(rl(1));
+        let flags: Vec<bool> = b.iter().map(|e| e.coherence_done).collect();
+        assert_eq!(flags, vec![true, false, true]);
+    }
+}

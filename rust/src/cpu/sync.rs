@@ -1,0 +1,197 @@
+//! Synchronization substrate: cluster-wide locks and barriers.
+//!
+//! The paper's traces carry lock acquire/release and barrier events, and
+//! the simulator guarantees "only one thread inside a given critical
+//! section at a time" and "threads spin on a barrier until all arrive"
+//! (section VI).  Locks are FIFO-granted (fair, deterministic); barriers
+//! track a generation counter so they are reusable.  Recovery must purge
+//! dead cores from both (section V-B: the application makes forward
+//! progress on the remaining nodes).
+
+use std::collections::{HashMap, VecDeque};
+
+/// Cluster-wide lock table: FIFO queue per lock id.
+#[derive(Debug, Default)]
+pub struct LockTable {
+    locks: HashMap<u8, LockState>,
+    pub acquires: u64,
+    pub contended: u64,
+}
+
+#[derive(Debug, Default)]
+struct LockState {
+    holder: Option<usize>,
+    queue: VecDeque<usize>,
+}
+
+impl LockTable {
+    /// Try to acquire `lock` for `core`; true if granted immediately,
+    /// false if queued.
+    pub fn acquire(&mut self, lock: u8, core: usize) -> bool {
+        self.acquires += 1;
+        let s = self.locks.entry(lock).or_default();
+        if s.holder.is_none() {
+            s.holder = Some(core);
+            true
+        } else {
+            debug_assert!(s.holder != Some(core), "re-entrant acquire");
+            self.contended += 1;
+            s.queue.push_back(core);
+            false
+        }
+    }
+
+    /// Release `lock`; returns the next core granted, if any.
+    pub fn release(&mut self, lock: u8, core: usize) -> Option<usize> {
+        let s = self.locks.get_mut(&lock)?;
+        debug_assert_eq!(s.holder, Some(core), "release by non-holder");
+        s.holder = s.queue.pop_front();
+        s.holder
+    }
+
+    pub fn holder(&self, lock: u8) -> Option<usize> {
+        self.locks.get(&lock).and_then(|s| s.holder)
+    }
+
+    /// Remove dead cores everywhere; returns (lock, next_holder) grants
+    /// caused by dead holders releasing.
+    pub fn purge_cores(&mut self, dead: &dyn Fn(usize) -> bool) -> Vec<(u8, usize)> {
+        let mut grants = Vec::new();
+        for (&id, s) in self.locks.iter_mut() {
+            s.queue.retain(|&c| !dead(c));
+            if let Some(h) = s.holder {
+                if dead(h) {
+                    s.holder = s.queue.pop_front();
+                    if let Some(n) = s.holder {
+                        grants.push((id, n));
+                    }
+                }
+            }
+        }
+        grants
+    }
+}
+
+/// A reusable global barrier over a dynamic set of participants.
+#[derive(Debug)]
+pub struct Barrier {
+    expected: usize,
+    arrived: Vec<usize>,
+    pub generation: u64,
+}
+
+impl Barrier {
+    pub fn new(expected: usize) -> Self {
+        Barrier {
+            expected,
+            arrived: Vec::new(),
+            generation: 0,
+        }
+    }
+
+    /// Core arrives; returns `Some(waiters)` (everyone to wake, including
+    /// the arriver) when this arrival completes the barrier.
+    pub fn arrive(&mut self, core: usize) -> Option<Vec<usize>> {
+        debug_assert!(!self.arrived.contains(&core), "double arrival");
+        self.arrived.push(core);
+        if self.arrived.len() >= self.expected {
+            self.generation += 1;
+            Some(std::mem::take(&mut self.arrived))
+        } else {
+            None
+        }
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.arrived.len()
+    }
+
+    /// A participant died: shrink the expectation.  Returns the waiters if
+    /// the barrier now completes (the dead core will never arrive).
+    pub fn remove_participant(&mut self, core: usize) -> Option<Vec<usize>> {
+        self.expected = self.expected.saturating_sub(1);
+        self.arrived.retain(|&c| c != core);
+        if !self.arrived.is_empty() && self.arrived.len() >= self.expected {
+            self.generation += 1;
+            Some(std::mem::take(&mut self.arrived))
+        } else {
+            None
+        }
+    }
+
+    pub fn expected(&self) -> usize {
+        self.expected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_fifo_grant_order() {
+        let mut t = LockTable::default();
+        assert!(t.acquire(1, 10));
+        assert!(!t.acquire(1, 11));
+        assert!(!t.acquire(1, 12));
+        assert_eq!(t.contended, 2);
+        assert_eq!(t.release(1, 10), Some(11));
+        assert_eq!(t.release(1, 11), Some(12));
+        assert_eq!(t.release(1, 12), None);
+        assert!(t.acquire(1, 13));
+    }
+
+    #[test]
+    fn locks_are_independent() {
+        let mut t = LockTable::default();
+        assert!(t.acquire(1, 10));
+        assert!(t.acquire(2, 11));
+        assert_eq!(t.holder(1), Some(10));
+        assert_eq!(t.holder(2), Some(11));
+    }
+
+    #[test]
+    fn purge_dead_holder_grants_next() {
+        let mut t = LockTable::default();
+        t.acquire(5, 1);
+        t.acquire(5, 2);
+        t.acquire(5, 3);
+        let grants = t.purge_cores(&|c| c == 1 || c == 2);
+        assert_eq!(grants, vec![(5, 3)]);
+        assert_eq!(t.holder(5), Some(3));
+    }
+
+    #[test]
+    fn barrier_completes_on_last_arrival() {
+        let mut b = Barrier::new(3);
+        assert!(b.arrive(0).is_none());
+        assert!(b.arrive(1).is_none());
+        let w = b.arrive(2).unwrap();
+        assert_eq!(w.len(), 3);
+        assert_eq!(b.generation, 1);
+        // reusable
+        assert!(b.arrive(0).is_none());
+        assert_eq!(b.waiting(), 1);
+    }
+
+    #[test]
+    fn dead_participant_unblocks_barrier() {
+        let mut b = Barrier::new(3);
+        b.arrive(0);
+        b.arrive(1);
+        // core 2 dies before arriving
+        let w = b.remove_participant(2).unwrap();
+        assert_eq!(w, vec![0, 1]);
+        assert_eq!(b.expected(), 2);
+    }
+
+    #[test]
+    fn dead_arrived_participant_is_dropped() {
+        let mut b = Barrier::new(3);
+        b.arrive(0);
+        let none = b.remove_participant(0);
+        assert!(none.is_none());
+        assert_eq!(b.waiting(), 0);
+        assert_eq!(b.expected(), 2);
+    }
+}

@@ -1,0 +1,245 @@
+//! The CXL fabric: one switch connecting all CNs and MNs (section VI).
+//!
+//! Timing model: store-and-forward through the switch with per-port,
+//! per-direction FIFO links.  A message leaving node `src` at time `t`
+//! serializes onto `src`'s uplink (busy-until accounting, so back-to-back
+//! messages queue), crosses the switch (half the configured RTT covers
+//! port + switch traversal each way), then serializes onto `dst`'s
+//! downlink.  Replication messages additionally receive a deterministic
+//! reorder jitter — the CXL fabric is allowed to reorder messages
+//! (section II-A), and ReCXL's logical timestamps must cope (section IV-C).
+//!
+//! The switch also owns the failure-detection state ReCXL adds: one
+//! `Viral_Status` bit per connected CN (section V-A).  Once a CN's bit is
+//! set the switch drops traffic to it and never responds on its behalf —
+//! ReCXL's goal is correct execution, not just isolation.
+
+use crate::config::{CnId, SimConfig};
+use crate::proto::{Message, NodeId};
+use crate::sim::rng::mix32;
+use crate::sim::time::Ps;
+use crate::stats::TrafficStats;
+
+/// Per-direction link occupancy.
+#[derive(Debug, Default, Clone)]
+struct Link {
+    busy_until: Ps,
+    bytes: u64,
+}
+
+/// The switch + links of the cluster.
+pub struct Fabric {
+    up: Vec<Link>,   // node -> switch, indexed by port
+    down: Vec<Link>, // switch -> node
+    n_cns: usize,
+    one_way: Ps,
+    bw_gbps: u64,
+    jitter: Ps,
+    jitter_salt: u32,
+    viral: Vec<bool>,
+    /// Messages dropped because the destination CN is marked viral.
+    pub dropped_to_dead: u64,
+}
+
+/// Outcome of a send: when it arrives, or dropped (dead destination).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    At(Ps),
+    Dropped,
+}
+
+impl Fabric {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let ports = cfg.n_cns + cfg.n_mns;
+        Fabric {
+            up: vec![Link::default(); ports],
+            down: vec![Link::default(); ports],
+            n_cns: cfg.n_cns,
+            one_way: cfg.one_way_ps(),
+            bw_gbps: cfg.link_bw_gbps,
+            jitter: cfg.repl_jitter_ps,
+            jitter_salt: cfg.seed as u32,
+            viral: vec![false; cfg.n_cns],
+            dropped_to_dead: 0,
+        }
+    }
+
+    fn port(&self, n: NodeId) -> usize {
+        match n {
+            NodeId::Cn(c) => c,
+            NodeId::Mn(m) => self.n_cns + m,
+        }
+    }
+
+    fn ser(&self, bytes: u32) -> Ps {
+        (bytes as u64 * 1_000).div_ceil(self.bw_gbps)
+    }
+
+    /// Set the Viral_Status bit for a CN (switch detected it unresponsive).
+    pub fn set_viral(&mut self, cn: CnId) {
+        self.viral[cn] = true;
+    }
+
+    pub fn is_viral(&self, cn: CnId) -> bool {
+        self.viral[cn]
+    }
+
+    /// Route `msg` at time `now`; returns its delivery time at `dst` and
+    /// records traffic, or `Dropped` if the destination is a dead CN.
+    pub fn send(&mut self, now: Ps, msg: &Message, traffic: &mut TrafficStats) -> Delivery {
+        if let NodeId::Cn(c) = msg.dst {
+            if self.viral[c] {
+                self.dropped_to_dead += 1;
+                return Delivery::Dropped;
+            }
+        }
+        let bytes = msg.kind.wire_bytes();
+        let s = self.ser(bytes);
+        let src_port = self.port(msg.src);
+        let dst_port = self.port(msg.dst);
+
+        let up = &mut self.up[src_port];
+        let up_done = up.busy_until.max(now) + s;
+        up.busy_until = up_done;
+        up.bytes += bytes as u64;
+
+        let at_switch = up_done + self.one_way;
+
+        let down = &mut self.down[dst_port];
+        let down_done = down.busy_until.max(at_switch) + s;
+        down.busy_until = down_done;
+        down.bytes += bytes as u64;
+
+        let mut arrive = down_done + self.one_way;
+        if self.jitter > 0 && msg.kind.reorderable() {
+            // Deterministic per-message jitter: hash of (salt, src, dst,
+            // payload size, time) — reproducible across runs.
+            let h = mix32(
+                self.jitter_salt
+                    ^ ((src_port as u32) << 8)
+                    ^ ((dst_port as u32) << 16)
+                    ^ bytes
+                    ^ now as u32,
+            );
+            arrive += (h as u64) % self.jitter;
+        }
+        traffic.record(now, msg.kind.class(), bytes);
+        Delivery::At(arrive)
+    }
+
+    /// Total bytes that crossed any CN port (Fig. 14 numerator).
+    pub fn cn_port_bytes(&self) -> u64 {
+        (0..self.n_cns).map(|p| self.up[p].bytes + self.down[p].bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+    use crate::proto::{MsgKind, ReqId};
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            repl_jitter_ps: 0,
+            ..SimConfig::default()
+        }
+    }
+
+    fn rds(srcn: usize, dst: usize) -> Message {
+        Message {
+            src: NodeId::Cn(srcn),
+            dst: NodeId::Mn(dst),
+            kind: MsgKind::RdS {
+                line: Addr(0x8000_0040).line(),
+                req: ReqId { cn: srcn, core: 0 },
+            },
+        }
+    }
+
+    #[test]
+    fn latency_is_serialization_plus_two_hops() {
+        let c = cfg();
+        let mut f = Fabric::new(&c);
+        let mut t = TrafficStats::default();
+        let m = rds(0, 0);
+        // 16 B @160 GB/s = 100 ps per hop; 2 hops + 2 * one_way(100 ns)
+        match f.send(0, &m, &mut t) {
+            Delivery::At(at) => assert_eq!(at, 100 + 100_000 + 100 + 100_000),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn back_to_back_messages_queue_on_the_uplink() {
+        let c = cfg();
+        let mut f = Fabric::new(&c);
+        let mut t = TrafficStats::default();
+        let m = rds(0, 0);
+        let Delivery::At(a1) = f.send(0, &m, &mut t) else { panic!() };
+        let Delivery::At(a2) = f.send(0, &m, &mut t) else { panic!() };
+        assert_eq!(a2, a1 + 100); // second waits for first's serialization
+    }
+
+    #[test]
+    fn distinct_ports_do_not_contend() {
+        let c = cfg();
+        let mut f = Fabric::new(&c);
+        let mut t = TrafficStats::default();
+        let Delivery::At(a1) = f.send(0, &rds(0, 0), &mut t) else { panic!() };
+        let Delivery::At(a2) = f.send(0, &rds(1, 1), &mut t) else { panic!() };
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn lower_bandwidth_stretches_serialization() {
+        let mut cv = cfg();
+        cv.link_bw_gbps = 20;
+        let mut f = Fabric::new(&cv);
+        let mut t = TrafficStats::default();
+        let Delivery::At(at) = f.send(0, &rds(0, 0), &mut t) else { panic!() };
+        assert_eq!(at, 800 + 100_000 + 800 + 100_000);
+    }
+
+    #[test]
+    fn viral_cn_drops_traffic_but_mn_still_reachable() {
+        let c = cfg();
+        let mut f = Fabric::new(&c);
+        let mut t = TrafficStats::default();
+        f.set_viral(3);
+        assert!(f.is_viral(3));
+        let to_dead = Message {
+            src: NodeId::Cn(0),
+            dst: NodeId::Cn(3),
+            kind: MsgKind::Interrupt,
+        };
+        assert_eq!(f.send(0, &to_dead, &mut t), Delivery::Dropped);
+        assert_eq!(f.dropped_to_dead, 1);
+        assert!(matches!(f.send(0, &rds(0, 0), &mut t), Delivery::At(_)));
+    }
+
+    #[test]
+    fn jitter_only_affects_replication_traffic() {
+        let mut cv = cfg();
+        cv.repl_jitter_ps = 50_000;
+        let mut f = Fabric::new(&cv);
+        let mut t = TrafficStats::default();
+        let repl = Message {
+            src: NodeId::Cn(0),
+            dst: NodeId::Cn(1),
+            kind: MsgKind::Repl {
+                req: ReqId { cn: 0, core: 0 },
+                line: Addr(0x8000_0040).line(),
+                mask: 1,
+                words: [0; 16],
+                repl_seq: 1,
+            },
+        };
+        let base = 125 + 100_000 + 125 + 100_000;
+        let Delivery::At(a) = f.send(0, &repl, &mut t) else { panic!() };
+        assert!(a >= base && a < base + 50_000);
+        let Delivery::At(b) = f.send(0, &rds(0, 0), &mut t) else { panic!() };
+        // non-reorderable: exact, no jitter (accounts for queued uplink)
+        assert_eq!(b, 125 + 100 + 100_000 + 100 + 100_000);
+    }
+}

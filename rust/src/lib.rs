@@ -1,0 +1,54 @@
+//! # ReCXL — CXL resilience to CPU failures, reproduced
+//!
+//! A production-shaped reproduction of *Towards CXL Resilience to CPU
+//! Failures* (CS.DC 2026): a deterministic discrete-event simulator of a
+//! CXL 3.0+ distributed-shared-memory cluster (16 CNs x 4 OoO cores +
+//! 16 MNs behind one switch, Table II), with the paper's contribution —
+//! the ReCXL replication protocol, hardware Logging Units, and the
+//! software-driven recovery scheme — implemented as first-class features,
+//! plus the write-back/write-through baselines it is evaluated against.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **Layer 1/2 (build time)** — Pallas kernels + JAX entry points in
+//!   `python/compile/`, AOT-lowered to HLO text artifacts;
+//! * **Layer 3 (this crate)** — the Rust coordinator: event loop, cluster
+//!   model, protocols, recovery, stats; it executes the artifacts through
+//!   PJRT (`runtime`) on the simulation path, with bit-identical Rust
+//!   fallbacks (`workloads::tracegen`, `recovery::logquery`).
+//!
+//! Quickstart:
+//! ```no_run
+//! use recxl::prelude::*;
+//! let cfg = SimConfig { ops_per_thread: 20_000, ..SimConfig::default() };
+//! let app = recxl::workloads::profiles::ycsb();
+//! let stats = recxl::cluster::run_app(cfg, &app);
+//! println!("exec time: {} ps", stats.exec_time_ps);
+//! ```
+
+pub mod benchkit;
+pub mod cache;
+pub mod cluster;
+pub mod coherence;
+pub mod config;
+pub mod cpu;
+pub mod fabric;
+pub mod figures;
+pub mod mem;
+pub mod proto;
+pub mod ptest;
+pub mod recovery;
+pub mod recxl;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod workloads;
+
+/// The commonly-needed surface in one import.
+pub mod prelude {
+    pub use crate::cluster::{run_app, slowdown_vs_wb, Cluster};
+    pub use crate::config::{CrashSpec, Protocol, SimConfig};
+    pub use crate::report::{gmean, FigureTable};
+    pub use crate::stats::RunStats;
+    pub use crate::workloads::{all_apps, by_name, AppProfile};
+}

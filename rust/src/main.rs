@@ -1,0 +1,279 @@
+//! `recxl` — the launcher.
+//!
+//! ```text
+//! recxl run   [--app NAME] [--protocol P] [--set k=v ...] [--config FILE]
+//! recxl figure <2|10..18>  [--ops N] [--no-parallel]
+//! recxl recover [--app NAME] [--crash-at-us T] [--set k=v ...]
+//! recxl apps
+//! recxl trace-check        # PJRT artifact vs Rust generator parity
+//! ```
+
+use std::process::ExitCode;
+
+use recxl::cluster::run_app;
+use recxl::config::{apply_override, SimConfig};
+use recxl::figures::{self, FigOpts};
+use recxl::prelude::*;
+use recxl::proto::MsgClass;
+use recxl::sim::time::fmt_ps;
+use recxl::workloads::{profiles, NUM_PARAMS};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "figure" => cmd_figure(rest),
+        "recover" => cmd_recover(rest),
+        "apps" => {
+            for a in all_apps() {
+                println!(
+                    "{:<14} loads={:<5.2} stores={:<5.2} remote={:<5.2} footprint=2^{} lines",
+                    a.name, a.p_load, a.p_store, a.p_remote, a.shared_log2
+                );
+            }
+            Ok(())
+        }
+        "trace-check" => cmd_trace_check(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command: {other} (try `recxl help`)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "recxl — ReCXL cluster simulator (reproduction of 'Towards CXL \
+         Resilience to CPU Failures')\n\n\
+         commands:\n  \
+         run      [--app NAME] [--protocol P] [--set k=v]... [--config FILE]\n  \
+         figure   <2|10|11|12|13|14|15|16|17|18> [--ops N] [--no-parallel]\n  \
+         recover  [--app NAME] [--set k=v]...   crash + recovery demo\n  \
+         apps     list workload profiles\n  \
+         trace-check  verify PJRT artifact == Rust trace generator"
+    );
+}
+
+/// Parse common `--app`, `--protocol`, `--set k=v`, `--config` flags.
+fn parse_common(rest: &[String]) -> Result<(SimConfig, AppProfile), String> {
+    let mut cfg = SimConfig::default();
+    let mut app = profiles::ycsb();
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--app" => {
+                let name = rest.get(i + 1).ok_or("--app needs a name")?;
+                app = by_name(name).ok_or_else(|| format!("unknown app {name}"))?;
+                i += 2;
+            }
+            "--protocol" => {
+                let p = rest.get(i + 1).ok_or("--protocol needs a value")?;
+                apply_override(&mut cfg, "protocol", p)?;
+                i += 2;
+            }
+            "--set" => {
+                let kv = rest.get(i + 1).ok_or("--set needs k=v")?;
+                let (k, v) = kv.split_once('=').ok_or("--set needs k=v")?;
+                apply_override(&mut cfg, k, v)?;
+                i += 2;
+            }
+            "--config" => {
+                let path = rest.get(i + 1).ok_or("--config needs a path")?;
+                let body = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+                recxl::config::parse::apply_file(&mut cfg, &body)?;
+                i += 2;
+            }
+            "--crash-at-us" => {
+                let v = rest.get(i + 1).ok_or("--crash-at-us needs a value")?;
+                apply_override(&mut cfg, "crash_at_us", v)?;
+                i += 2;
+            }
+            other => return Err(format!("unknown flag {other}")),
+        }
+    }
+    Ok((cfg, app))
+}
+
+fn cmd_run(rest: &[String]) -> Result<(), String> {
+    let (cfg, app) = parse_common(rest)?;
+    println!(
+        "running {} on {} ({} CNs x {} cores, {} ops/thread)",
+        cfg.protocol.name(),
+        app.name,
+        cfg.n_cns,
+        cfg.cores_per_cn,
+        cfg.ops_per_thread
+    );
+    let stats = run_app(cfg, &app);
+    print_run(&stats);
+    Ok(())
+}
+
+fn print_run(s: &RunStats) {
+    println!("exec time          : {}", fmt_ps(s.exec_time_ps));
+    println!("total ops          : {}", s.total_ops());
+    println!(
+        "stores (remote)    : {} ({})",
+        s.total_stores(),
+        s.total_remote_stores()
+    );
+    println!("store commits      : {}", s.repl.store_commits);
+    println!(
+        "REPLs / coalesced  : {} / {}",
+        s.repl.repls_sent, s.repl.stores_coalesced
+    );
+    println!(
+        "CXL bandwidth      : access {:.2} GB/s, repl {:.2} GB/s, dump {:.3} GB/s",
+        s.class_gbps(MsgClass::CxlAccess),
+        s.class_gbps(MsgClass::Replication),
+        s.class_gbps(MsgClass::LogDump)
+    );
+    if s.repl.dumps > 0 {
+        println!(
+            "log dumps          : {} (compression {:.2}x)",
+            s.repl.dumps,
+            s.repl.compression_factor()
+        );
+    }
+    let tot = |f: fn(&recxl::stats::CoreStats) -> u64| -> u64 { s.cores.iter().map(f).sum() };
+    println!(
+        "stalls             : sb-full {:.1} us, mlp {:.1} us, lock {:.1} us, barrier {:.1} us (summed over cores)",
+        tot(|c| c.sb_full_stall_ps) as f64 / 1e6,
+        tot(|c| c.mlp_stall_ps) as f64 / 1e6,
+        tot(|c| c.lock_wait_ps) as f64 / 1e6,
+        tot(|c| c.barrier_wait_ps) as f64 / 1e6,
+    );
+    println!(
+        "sim throughput     : {:.2} M events/s ({} events, {:.2}s host)",
+        s.events_per_sec() / 1e6,
+        s.events,
+        s.host_wall_s
+    );
+    if std::env::var("RECXL_CORE_DUMP").is_ok() {
+        for (i, c) in s.cores.iter().enumerate() {
+            println!(
+                "  core {i:>2}: fin={:>10} ops={} mlp={:>8} sbfull={:>8} lock={:>8} barrier={:>8}",
+                c.finished_at, c.ops, c.mlp_stall_ps, c.sb_full_stall_ps, c.lock_wait_ps, c.barrier_wait_ps
+            );
+        }
+    }
+    if s.recovery.happened {
+        println!("--- recovery ---");
+        println!(
+            "owned lines        : {} (dirty {}, exclusive {})",
+            s.recovery.owned_lines, s.recovery.dirty_lines, s.recovery.exclusive_lines
+        );
+        println!("shared entries     : {}", s.recovery.shared_lines);
+        println!(
+            "recovered          : {} from Logging Units, {} from MN logs",
+            s.recovery.recovered_from_logs, s.recovery.recovered_from_mn_logs
+        );
+        println!(
+            "recovery window    : {} -> {}",
+            fmt_ps(s.recovery.detection_at),
+            fmt_ps(s.recovery.completed_at)
+        );
+        let mut names: Vec<_> = s.recovery.messages.iter().collect();
+        names.sort();
+        for (n, c) in names {
+            println!("  msg {n:<20} x{c}");
+        }
+        println!(
+            "CONSISTENT         : {} ({} violations)",
+            s.recovery.consistent, s.recovery.inconsistencies
+        );
+    }
+}
+
+fn cmd_figure(rest: &[String]) -> Result<(), String> {
+    let n: u32 = rest
+        .first()
+        .ok_or("figure number required")?
+        .parse()
+        .map_err(|_| "figure number must be an integer")?;
+    let mut opts = FigOpts::default();
+    let mut i = 1;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--ops" => {
+                opts.ops = rest
+                    .get(i + 1)
+                    .ok_or("--ops needs a value")?
+                    .parse()
+                    .map_err(|_| "--ops must be an integer")?;
+                i += 2;
+            }
+            "--no-parallel" => {
+                opts.parallel = false;
+                i += 1;
+            }
+            other => return Err(format!("unknown flag {other}")),
+        }
+    }
+    let t = figures::by_number(n, opts).ok_or_else(|| format!("no figure {n}"))?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_recover(rest: &[String]) -> Result<(), String> {
+    let (mut cfg, app) = parse_common(rest)?;
+    cfg.protocol = Protocol::ReCxlProactive;
+    if cfg.crash.is_none() {
+        cfg.crash = Some(CrashSpec {
+            cn: 0,
+            at: recxl::sim::time::us(300),
+        });
+    }
+    println!(
+        "crash CN0 at {} during {} — ReCXL-proactive recovery",
+        fmt_ps(cfg.crash.unwrap().at),
+        app.name
+    );
+    let stats = run_app(cfg, &app);
+    print_run(&stats);
+    if !stats.recovery.happened {
+        return Err("crash did not trigger (run too short?)".into());
+    }
+    if !stats.recovery.consistent {
+        return Err("recovery left inconsistent state".into());
+    }
+    Ok(())
+}
+
+/// Cross-layer parity: the PJRT artifact and the Rust generator must be
+/// bit-identical (the L1<->L3 contract).
+fn cmd_trace_check() -> Result<(), String> {
+    use recxl::workloads::tracegen;
+    let rt = recxl::runtime::Runtime::load("artifacts").map_err(|e| e.to_string())?;
+    let mut params = [0i32; NUM_PARAMS];
+    let p = profiles::ycsb().to_params(7);
+    params.copy_from_slice(&p);
+    for (seed, base) in [(42u32, 0u32), (7, 4096), (123, 81920)] {
+        let pjrt = rt
+            .trace_block(seed as i32, base as i32, &params)
+            .map_err(|e| e.to_string())?;
+        let rust = tracegen::gen_block(seed, base, &params);
+        if pjrt != rust {
+            return Err(format!("MISMATCH at seed={seed} base={base}"));
+        }
+        println!("seed={seed} base={base}: {} ops identical", pjrt.len());
+    }
+    println!("PJRT artifact == Rust generator");
+    Ok(())
+}

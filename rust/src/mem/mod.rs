@@ -1,0 +1,132 @@
+//! Physical address model shared by every layer.
+//!
+//! Addresses are the 32-bit values produced by the trace kernel
+//! (`python/compile/kernels/trace_gen.py`, mirrored by
+//! `workloads::tracegen`):
+//!
+//! * bit 31 set  — **remote**: shared CXL memory, homed on an MN;
+//!   `1<<31 | line<<6 | word<<2` with `line` within the app's shared
+//!   footprint.
+//! * bit 31 clear — **CN-local** private memory:
+//!   `thread<<24 | line<<6 | word<<2`.
+//!
+//! Lines are 64 B (Table II); word granularity is 4 B, 16 words per line —
+//! matching the 16-bit Word Mask of the REPL message (Fig. 4a).
+
+pub mod addr {
+    /// 64 B cache line.
+    pub const LINE_BYTES: u32 = 64;
+    /// 4 B words — 16 per line, matching REPL's 16-bit word mask.
+    pub const WORDS_PER_LINE: u32 = 16;
+    pub const WORD_BYTES: u32 = 4;
+
+    /// A physical byte address.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub struct Addr(pub u32);
+
+    /// A 64 B-line address (byte address >> 6), preserving the remote bit.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+    pub struct Line(pub u32);
+
+    impl Addr {
+        #[inline]
+        pub fn is_remote(self) -> bool {
+            self.0 & 0x8000_0000 != 0
+        }
+
+        #[inline]
+        pub fn line(self) -> Line {
+            Line(self.0 >> 6)
+        }
+
+        /// Word index within the line (0..16).
+        #[inline]
+        pub fn word(self) -> u8 {
+            ((self.0 >> 2) & 15) as u8
+        }
+
+        /// Owning thread of a CN-local address (encoded by the generator).
+        #[inline]
+        pub fn local_thread(self) -> u8 {
+            debug_assert!(!self.is_remote());
+            ((self.0 >> 24) & 0x3F) as u8
+        }
+    }
+
+    impl Line {
+        #[inline]
+        pub fn is_remote(self) -> bool {
+            self.0 & 0x0200_0000 != 0
+        }
+
+        /// Base byte address of the line.
+        #[inline]
+        pub fn base(self) -> Addr {
+            Addr(self.0 << 6)
+        }
+
+        /// Byte address of `word` within the line.
+        #[inline]
+        pub fn word_addr(self, word: u8) -> Addr {
+            Addr((self.0 << 6) | ((word as u32) << 2))
+        }
+
+        /// Home MN of a remote line: low-order interleave across MNs,
+        /// like the per-line striping CXL-DSM directories use.
+        #[inline]
+        pub fn home_mn(self, n_mns: usize) -> usize {
+            debug_assert!(self.is_remote());
+            (self.0 as usize) % n_mns
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn remote_classification() {
+            assert!(Addr(0x8000_0000).is_remote());
+            assert!(!Addr(0x1500_0000).is_remote());
+            assert!(Addr(0x8000_0000).line().is_remote());
+            assert!(!Addr(0x1500_0000).line().is_remote());
+        }
+
+        #[test]
+        fn line_and_word_extraction() {
+            let a = Addr(0x8000_0000 | (5 << 6) | (3 << 2));
+            assert_eq!(a.line(), Line((0x8000_0000u32 >> 6) | 5));
+            assert_eq!(a.word(), 3);
+            assert_eq!(a.line().word_addr(3), a);
+        }
+
+        #[test]
+        fn local_thread_field() {
+            let a = Addr((21 << 24) | (7 << 6));
+            assert_eq!(a.local_thread(), 21);
+        }
+
+        #[test]
+        fn home_mn_interleave() {
+            let l = Addr(0x8000_0000 | (17 << 6)).line();
+            assert_eq!(l.home_mn(16), (l.0 as usize) % 16);
+            // different lines spread across MNs
+            let homes: std::collections::HashSet<usize> = (0..64u32)
+                .map(|i| Addr(0x8000_0000 | (i << 6)).line().home_mn(16))
+                .collect();
+            assert_eq!(homes.len(), 16);
+        }
+
+        #[test]
+        fn word_roundtrip_all() {
+            let l = Addr(0x8000_0000 | (123 << 6)).line();
+            for w in 0..16u8 {
+                let a = l.word_addr(w);
+                assert_eq!(a.word(), w);
+                assert_eq!(a.line(), l);
+            }
+        }
+    }
+}
+
+pub use addr::{Addr, Line, LINE_BYTES, WORDS_PER_LINE, WORD_BYTES};

@@ -1,0 +1,259 @@
+//! Protocol messages: CXL.mem coherence, ReCXL replication (Fig. 4),
+//! write-through, log dumping, and the recovery protocol (Table I).
+//!
+//! Every message knows its wire size so the fabric can charge link
+//! serialization and the stats layer can attribute bandwidth by class
+//! (Fig. 14).  Sizes follow the paper's field layouts (Fig. 4) plus a
+//! 16 B CXL flit header approximation.
+
+use crate::config::{CnId, MnId};
+use crate::mem::Line;
+
+/// A network endpoint: a compute node or a memory node.  The single switch
+/// (section VI) is implicit in the fabric's hop model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeId {
+    Cn(CnId),
+    Mn(MnId),
+}
+
+/// Requester identity carried by REPL/VAL (Fig. 4: {CN, Core}).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ReqId {
+    pub cn: CnId,
+    pub core: usize,
+}
+
+/// Bandwidth-accounting classes of Fig. 14 (plus recovery, which the paper
+/// excludes from steady-state bandwidth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MsgClass {
+    /// Remote reads/writes/invalidations/acks and their responses.
+    CxlAccess,
+    /// REPL / REPL_ACK / VAL replication traffic.
+    Replication,
+    /// Periodic compressed log dumping.
+    LogDump,
+    /// Recovery protocol traffic.
+    Recovery,
+}
+
+/// Word values of one line (16 x 4 B).
+pub type LineWords = [u32; 16];
+
+/// All message kinds exchanged over the CXL fabric.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MsgKind {
+    // ---- CXL.mem coherence (directory at the home MN) ----
+    /// Read-shared request (load miss).
+    RdS { line: Line, req: ReqId },
+    /// Read-exclusive / ownership request (store or exclusive prefetch).
+    RdX { line: Line, req: ReqId, prefetch: bool },
+    /// Directory grant: line data + state (true = exclusive/owned).
+    Data { line: Line, req: ReqId, exclusive: bool, words: LineWords },
+    /// Directory-to-CN invalidation.
+    Inv { line: Line },
+    /// CN-to-directory invalidation ack (carries dirty data if owner).
+    InvAck { line: Line, from: CnId, dirty: Option<(u16, LineWords)> },
+    /// Directory-to-owner downgrade (another CN wants to read).
+    Downgrade { line: Line },
+    /// Owner response to Downgrade with dirty data (None if clean).
+    DowngradeAck { line: Line, from: CnId, dirty: Option<(u16, LineWords)> },
+    /// Owner eviction writeback.
+    WbData { line: Line, from: CnId, mask: u16, words: LineWords },
+
+    // ---- write-through configuration ----
+    /// Remote store forwarded to the MN for immediate persistence.
+    WtStore { line: Line, req: ReqId, mask: u16, words: LineWords },
+    /// MN ack after invalidating sharers and persisting.
+    WtAck { line: Line, req: ReqId },
+
+    // ---- ReCXL replication (Fig. 4) ----
+    /// Replicate an update (or coalesced updates) at a replica CN's
+    /// Logging Unit.
+    Repl { req: ReqId, line: Line, mask: u16, words: LineWords, repl_seq: u64 },
+    /// Logging Unit ack after the update is applied to its SRAM buffer.
+    ReplAck { req: ReqId, line: Line, repl_seq: u64, from: CnId },
+    /// Validation: replication complete; carries the per-(src CN, dst CN)
+    /// logical timestamp (section IV-C).
+    Val { req: ReqId, line: Line, repl_seq: u64, ts: u64 },
+
+    // ---- log dumping (section IV-E) ----
+    /// A compressed log segment headed to an MN.  On the wire this is a
+    /// train of 64 B messages (section IV-E); the simulator models the
+    /// train as one message of `bytes` total so the fabric charges the
+    /// same serialization without one event per chunk.  `entries` rides
+    /// along for simulation state transfer.
+    DumpChunk { from: CnId, bytes: u32, entries: Vec<crate::recxl::logunit::LogRecord> },
+    /// MN ack of a completed dump segment (Logging Units synchronize
+    /// through the MNs before clearing their logs).
+    DumpSyncAck { to: CnId },
+
+    // ---- failure handling & recovery (section V, Table I) ----
+    /// Switch-originated MSI electing the Configuration Manager.
+    Msi { failed: CnId },
+    /// Switch broadcast: Viral_Status set for `failed` (live CNs discount
+    /// dead replicas; see DESIGN.md section "Failures").
+    ViralNotify { failed: CnId },
+    /// CM tells CNs/Logging Units to finish outstanding work and pause.
+    Interrupt,
+    InterruptResp { from: CnId },
+    /// CM tells MN directory controllers to run Algorithm 1.
+    InitRecov { failed: CnId },
+    /// Directory controller asks a replica's Logging Unit for the latest
+    /// logged versions of `lines` (Algorithm 1 -> Algorithm 2).
+    FetchLatestVers { from_mn: MnId, lines: Vec<Line> },
+    /// Sorted (latest-first) logged updates per requested line.
+    FetchLatestVersResp { from: CnId, results: Vec<crate::recovery::VersionList> },
+    InitRecovResp { from_mn: MnId },
+    RecovEnd,
+    RecovEndResp { from: CnId },
+}
+
+/// A routed message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub kind: MsgKind,
+}
+
+const HDR: u32 = 16;
+
+impl MsgKind {
+    /// Wire size in bytes (drives serialization delay + Fig. 14).
+    pub fn wire_bytes(&self) -> u32 {
+        use MsgKind::*;
+        match self {
+            RdS { .. } | RdX { .. } => HDR,
+            Data { .. } => HDR + 64,
+            Inv { .. } | Downgrade { .. } => HDR,
+            InvAck { dirty, .. } | DowngradeAck { dirty, .. } => {
+                HDR + if dirty.is_some() { 64 } else { 0 }
+            }
+            WbData { mask, .. } => HDR + 4 * mask.count_ones(),
+            WtStore { mask, .. } => HDR + 4 * mask.count_ones(),
+            WtAck { .. } => HDR,
+            // Fig. 4a: requester id + word mask + 44-bit address + masked
+            // word values (~10 B header fields, rounded into HDR).
+            Repl { mask, .. } => HDR + 4 * mask.count_ones(),
+            ReplAck { .. } => HDR,
+            // Fig. 4b: requester id + 7-bit logical TS + address.
+            Val { .. } => HDR,
+            DumpChunk { bytes, .. } => (*bytes).max(64),
+            DumpSyncAck { .. } => HDR,
+            Msi { .. } | ViralNotify { .. } | Interrupt | InterruptResp { .. } => HDR,
+            InitRecov { .. } | InitRecovResp { .. } | RecovEnd | RecovEndResp { .. } => HDR,
+            FetchLatestVers { lines, .. } => HDR + 6 * lines.len() as u32,
+            FetchLatestVersResp { results, .. } => {
+                HDR + results
+                    .iter()
+                    .map(|r| 6 + 12 * r.versions.len() as u32)
+                    .sum::<u32>()
+            }
+        }
+    }
+
+    /// Bandwidth-accounting class (Fig. 14).
+    pub fn class(&self) -> MsgClass {
+        use MsgKind::*;
+        match self {
+            Repl { .. } | ReplAck { .. } | Val { .. } => MsgClass::Replication,
+            DumpChunk { .. } | DumpSyncAck { .. } => MsgClass::LogDump,
+            Msi { .. } | ViralNotify { .. } | Interrupt | InterruptResp { .. }
+            | InitRecov { .. } | InitRecovResp { .. } | RecovEnd | RecovEndResp { .. }
+            | FetchLatestVers { .. } | FetchLatestVersResp { .. } => MsgClass::Recovery,
+            _ => MsgClass::CxlAccess,
+        }
+    }
+
+    /// Replication messages get deterministic reorder jitter in the fabric
+    /// (the CXL fabric may reorder messages; ReCXL's logical timestamps
+    /// exist precisely to survive VAL reordering, section IV-C).
+    pub fn reorderable(&self) -> bool {
+        matches!(self, MsgKind::Repl { .. } | MsgKind::Val { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+
+    fn line() -> Line {
+        Addr(0x8000_0040).line()
+    }
+
+    #[test]
+    fn repl_size_scales_with_coalesced_words() {
+        let one = MsgKind::Repl {
+            req: ReqId { cn: 0, core: 0 },
+            line: line(),
+            mask: 0b1,
+            words: [0; 16],
+            repl_seq: 1,
+        };
+        let four = MsgKind::Repl {
+            req: ReqId { cn: 0, core: 0 },
+            line: line(),
+            mask: 0b1111,
+            words: [0; 16],
+            repl_seq: 1,
+        };
+        assert_eq!(one.wire_bytes(), HDR + 4);
+        assert_eq!(four.wire_bytes(), HDR + 16);
+        assert_eq!(one.class(), MsgClass::Replication);
+        assert!(one.reorderable());
+    }
+
+    #[test]
+    fn data_carries_a_line() {
+        let d = MsgKind::Data {
+            line: line(),
+            req: ReqId { cn: 1, core: 2 },
+            exclusive: true,
+            words: [0; 16],
+        };
+        assert_eq!(d.wire_bytes(), HDR + 64);
+        assert_eq!(d.class(), MsgClass::CxlAccess);
+        assert!(!d.reorderable());
+    }
+
+    #[test]
+    fn classes_are_disjoint() {
+        assert_eq!(
+            MsgKind::DumpChunk {
+                from: 0,
+                bytes: 64,
+                entries: vec![]
+            }
+            .class(),
+            MsgClass::LogDump
+        );
+        assert_eq!(MsgKind::Interrupt.class(), MsgClass::Recovery);
+        assert_eq!(
+            MsgKind::WtAck {
+                line: line(),
+                req: ReqId { cn: 0, core: 0 }
+            }
+            .class(),
+            MsgClass::CxlAccess
+        );
+    }
+
+    #[test]
+    fn dump_chunk_rounds_up_to_one_64b_chunk() {
+        let c = MsgKind::DumpChunk {
+            from: 3,
+            bytes: 10,
+            entries: vec![],
+        };
+        assert_eq!(c.wire_bytes(), 64);
+        let big = MsgKind::DumpChunk {
+            from: 3,
+            bytes: 4096,
+            entries: vec![],
+        };
+        assert_eq!(big.wire_bytes(), 4096);
+    }
+}

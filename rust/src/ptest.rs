@@ -1,0 +1,137 @@
+//! proptest-lite: seeded randomized property testing with input shrinking
+//! (proptest is not in the offline crate set).
+//!
+//! Properties run over many generated cases; on failure the runner
+//! re-derives the failing case from its seed and greedily shrinks scalar
+//! fields registered through [`Case`] before panicking with a minimal
+//! reproduction, so CI failures are actionable.
+
+use crate::sim::Pcg;
+
+/// Number of cases per property by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` generated cases.  `gen_run` receives a fresh
+/// RNG and a `Case` recorder and returns `Err(reason)` on failure.
+///
+/// On failure, greedily shrink each recorded knob toward its minimum
+/// while the property still fails, then panic with the minimal knobs.
+pub fn check<F>(name: &str, cases: usize, seed: u64, mut gen_run: F)
+where
+    F: FnMut(&mut Pcg, &mut Vec<u64>) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let case_seed = seed.wrapping_add(i as u64);
+        let mut rng = Pcg::new(case_seed, 0xF00D);
+        let mut knobs = Vec::new();
+        if let Err(first_err) = gen_run(&mut rng, &mut knobs) {
+            // shrink: re-run with each knob reduced while still failing
+            let mut best = knobs.clone();
+            let mut best_err = first_err;
+            let mut changed = true;
+            while changed {
+                changed = false;
+                for k in 0..best.len() {
+                    let mut candidate = best.clone();
+                    while candidate[k] > 0 {
+                        let next = candidate[k] / 2;
+                        candidate[k] = next;
+                        let mut rng = Pcg::new(case_seed, 0xF00D);
+                        let mut replay = candidate.clone();
+                        match gen_run(&mut rng, &mut replay) {
+                            Err(e) => {
+                                best = candidate.clone();
+                                best_err = e;
+                                changed = true;
+                            }
+                            Ok(()) => break,
+                        }
+                        if next == 0 {
+                            break;
+                        }
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {case_seed}, case {i}):\n  {best_err}\n  minimal knobs: {best:?}"
+            );
+        }
+    }
+}
+
+/// Draw helper honoring replay: if `knobs` already holds a value at this
+/// position, use it (shrinking); otherwise draw fresh and record.
+pub fn knob(rng: &mut Pcg, knobs: &mut Vec<u64>, pos: usize, lo: u64, hi: u64) -> u64 {
+    debug_assert!(lo <= hi);
+    if pos < knobs.len() {
+        knobs[pos].clamp(lo, hi)
+    } else {
+        let v = lo + rng.below(hi - lo + 1);
+        knobs.push(v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("tautology", 32, 1, |rng, knobs| {
+            let x = knob(rng, knobs, 0, 0, 100);
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails-above-10'")]
+    fn failing_property_panics_with_shrunk_case() {
+        check("fails-above-10", 64, 2, |rng, knobs| {
+            let x = knob(rng, knobs, 0, 0, 1000);
+            if x > 10 {
+                Err(format!("x={x} too big"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_small_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            check("shrinks", 64, 3, |rng, knobs| {
+                let x = knob(rng, knobs, 0, 0, 1_000_000);
+                if x >= 17 {
+                    Err(format!("{x}"))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy halving lands in [17, 34)
+        let v: u64 = msg
+            .split("minimal knobs: [")
+            .nth(1)
+            .unwrap()
+            .trim_end_matches(|c: char| !c.is_ascii_digit())
+            .parse()
+            .unwrap();
+        assert!((17..34).contains(&v), "shrunk to {v}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = vec![];
+        let mut rng = Pcg::new(9, 0xF00D);
+        let v1 = knob(&mut rng, &mut a, 0, 0, 1000);
+        let mut rng = Pcg::new(9, 0xF00D);
+        let v2 = knob(&mut rng, &mut a.clone(), 0, 0, 1000);
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,91 @@
+//! Bulk latest-version log query — the Rust twin of the `latest_version`
+//! Pallas kernel (`python/compile/kernels/latest_version.py`).
+//!
+//! Recovery's Algorithm 2 resolves, for a batch of queried line-word
+//! addresses, the latest valid entry in a flattened log.  The kernel's
+//! contract: `key = ts * N_LOG + index` (unique; ties break to the later
+//! log index), `-1` when no valid match.  The `runtime` module can execute
+//! the AOT artifact for large batches; this implementation is the
+//! reference the cross-layer tests compare against and the fallback when
+//! artifacts are absent.
+
+/// Kernel geometry (must match `python/compile/kernels/latest_version.py`).
+pub const N_LOG: usize = 4096;
+pub const Q: usize = 256;
+
+/// Pure function matching the kernel semantics exactly.
+/// All slices must have the same length `n <= N_LOG`; `queries` up to `Q`.
+/// Returns `(key, value)` per query.
+pub fn latest_versions(
+    queries: &[i32],
+    log_addr: &[i32],
+    log_ts: &[i32],
+    log_valid: &[i32],
+    log_val: &[i32],
+) -> Vec<(i64, i32)> {
+    assert_eq!(log_addr.len(), log_ts.len());
+    assert_eq!(log_addr.len(), log_valid.len());
+    assert_eq!(log_addr.len(), log_val.len());
+    queries
+        .iter()
+        .map(|&q| {
+            let mut best_key: i64 = -1;
+            let mut best_val: i32 = 0;
+            for i in 0..log_addr.len() {
+                if log_valid[i] != 0 && log_addr[i] == q {
+                    let key = log_ts[i] as i64 * N_LOG as i64 + i as i64;
+                    if key > best_key {
+                        best_key = key;
+                        best_val = log_val[i];
+                    }
+                }
+            }
+            (best_key, best_val)
+        })
+        .collect()
+}
+
+/// Flattened-log view of a set of `LogRecord`s for kernel-format queries:
+/// the (line, word) pair is packed into the kernel's 32-bit address as
+/// `line.0 << 4 | word` with the remote bit dropped (line numbers in the
+/// shared region fit 25 bits, so the packed value fits 29).
+pub fn pack_addr(line: crate::mem::Line, word: u8) -> i32 {
+    (((line.0 & 0x01FF_FFFF) << 4) | word as u32) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latest_ts_wins() {
+        let r = latest_versions(&[100], &[100, 100], &[1, 5], &[1, 1], &[111, 222]);
+        assert_eq!(r[0], (5 * N_LOG as i64 + 1, 222));
+    }
+
+    #[test]
+    fn no_match_is_minus_one() {
+        let r = latest_versions(&[77], &[100], &[1], &[1], &[9]);
+        assert_eq!(r[0], (-1, 0));
+    }
+
+    #[test]
+    fn invalid_entries_skipped() {
+        let r = latest_versions(&[100], &[100, 100], &[1, 5], &[1, 0], &[111, 222]);
+        assert_eq!(r[0].1, 111);
+    }
+
+    #[test]
+    fn tie_breaks_to_later_index() {
+        let r = latest_versions(&[100], &[100, 100], &[3, 3], &[1, 1], &[5, 6]);
+        assert_eq!(r[0].1, 6);
+    }
+
+    #[test]
+    fn pack_addr_distinguishes_words() {
+        let l = crate::mem::Addr(0x8000_0040).line();
+        assert_ne!(pack_addr(l, 0), pack_addr(l, 1));
+        let l2 = crate::mem::Addr(0x8000_0080).line();
+        assert_ne!(pack_addr(l, 0), pack_addr(l2, 0));
+    }
+}

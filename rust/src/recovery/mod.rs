@@ -1,0 +1,264 @@
+//! Recovery algorithms (section V): the pure parts — version selection
+//! (Algorithm 1's conflict rule) and the bulk log query that mirrors the
+//! `latest_version` Pallas kernel.  The distributed orchestration (the
+//! Table-I message exchange) lives in `cluster` code, which drives these
+//! functions.
+
+pub mod logquery;
+
+use crate::config::CnId;
+use crate::mem::Line;
+use crate::proto::{LineWords, ReqId};
+use crate::recxl::logunit::LogRecord;
+
+/// Sorted (latest-first) logged updates for one requested line —
+/// the payload of `FetchLatestVersResp` (Algorithm 2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VersionList {
+    pub line: Line,
+    pub versions: Vec<LogRecord>,
+}
+
+/// The value recovery chose for one line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveredLine {
+    pub line: Line,
+    pub mask: u16,
+    pub words: LineWords,
+    /// True if any contributing entry was still unvalidated (crash hit
+    /// mid-replication; the paper's "latest in any log" rule applied).
+    pub used_unvalidated: bool,
+    /// True if any word had to come from the MN-resident dumped log.
+    pub used_mn_log: bool,
+    /// Per-word provenance `(requester CN, repl_seq)` of the applied
+    /// entry — consumed by the consistency oracle.
+    pub provenance: [Option<(CnId, u64)>; 16],
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Key {
+    req: ReqId,
+    repl_seq: u64,
+}
+
+impl Key {
+    fn of(r: &LogRecord) -> Key {
+        Key {
+            req: r.req,
+            repl_seq: r.repl_seq,
+        }
+    }
+}
+
+/// Algorithm 1's per-line version selection, given the ordered
+/// (latest-first) `FetchLatestVersResp` lists from every queried replica
+/// plus the (latest-first) MN-log fallback entries.
+///
+/// Per word:
+/// 1. The *per-log latest* entry of each replica list is a candidate —
+///    log order reflects commit order (VALs are issued at commit and
+///    pushed per-source in timestamp order, section IV-C), so anything
+///    deeper in a list is stale.
+/// 2. Disagreeing candidates (crash hit mid-replication) are resolved by
+///    dominance: if some log contains both updates, the one logged later
+///    wins — this is the paper's "pick the latest logged update in any of
+///    the N_r logs".  Residual ties prefer an unvalidated (in-flight)
+///    entry, then the higher per-CN sequence.
+/// 3. Only when no replica log has the word does the MN-resident dumped
+///    log supply it — dumped entries are strictly older than anything
+///    still resident in a Logging Unit (dumps clear the logs they save).
+///    MN arrival order interleaves dumps from *different* dump owners
+///    arbitrarily, so the fallback restricts itself to the failed CN's
+///    entries (for a line the directory still records the failed CN as
+///    owning, the failed CN's writes are the newest committed ones) and
+///    orders them by the failed CN's replication sequence.
+pub fn select_version(
+    line: Line,
+    failed: CnId,
+    lists: &[&VersionList],
+    mn_fallback: &[LogRecord],
+) -> Option<RecoveredLine> {
+    let mut mask = 0u16;
+    let mut words = [0u32; 16];
+    let mut used_unvalidated = false;
+    let mut used_mn_log = false;
+    let mut provenance: [Option<(CnId, u64)>; 16] = [None; 16];
+
+    for w in 0..16u8 {
+        // candidate = latest entry for word w in each list
+        let mut cands: Vec<(usize, usize, LogRecord)> = Vec::new();
+        for (li, l) in lists.iter().enumerate() {
+            if l.line != line {
+                continue;
+            }
+            if let Some(pos) = l.versions.iter().position(|r| r.word == w) {
+                cands.push((li, pos, l.versions[pos]));
+            }
+        }
+        let chosen: Option<LogRecord> = if cands.is_empty() {
+            mn_fallback
+                .iter()
+                .filter(|r| r.line == line && r.word == w && r.req.cn == failed)
+                .max_by_key(|r| r.repl_seq)
+                .map(|r| {
+                    used_mn_log = true;
+                    *r
+                })
+        } else {
+            // dominance: candidate X is dominated if another candidate's
+            // update appears *later* (smaller index) than X's update in
+            // some log containing both.
+            let mut best: Option<LogRecord> = None;
+            'cand: for &(_, _, c) in &cands {
+                let ck = Key::of(&c);
+                for &(_, _, d) in &cands {
+                    let dk = Key::of(&d);
+                    if dk == ck {
+                        continue;
+                    }
+                    for l in lists {
+                        if l.line != line {
+                            continue;
+                        }
+                        let pc = l.versions.iter().position(|r| Key::of(r) == ck && r.word == w);
+                        let pd = l.versions.iter().position(|r| Key::of(r) == dk && r.word == w);
+                        if let (Some(pc), Some(pd)) = (pc, pd) {
+                            if pd < pc {
+                                continue 'cand; // d is later: c dominated
+                            }
+                        }
+                    }
+                }
+                // c is non-dominated: prefer in-flight, then higher seq
+                best = Some(match best {
+                    None => c,
+                    Some(b) => {
+                        let rank = |r: &LogRecord| (!r.valid as u64, r.repl_seq);
+                        if rank(&c) > rank(&b) {
+                            c
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            best
+        };
+        if let Some(r) = chosen {
+            mask |= 1 << w;
+            words[w as usize] = r.value;
+            used_unvalidated |= !r.valid;
+            provenance[w as usize] = Some((r.req.cn, r.repl_seq));
+        }
+    }
+
+    if mask == 0 {
+        None
+    } else {
+        Some(RecoveredLine {
+            line,
+            mask,
+            words,
+            used_unvalidated,
+            used_mn_log,
+            provenance,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+
+    fn line(i: u32) -> Line {
+        Addr(0x8000_0000 | (i << 6)).line()
+    }
+
+    fn rec(cn: usize, l: u32, word: u8, value: u32, seq: u64, valid: bool) -> LogRecord {
+        LogRecord {
+            req: ReqId { cn, core: 0 },
+            line: line(l),
+            word,
+            value,
+            ts: seq,
+            repl_seq: seq,
+            valid,
+        }
+    }
+
+    fn vl(l: u32, latest_first: Vec<LogRecord>) -> VersionList {
+        VersionList {
+            line: line(l),
+            versions: latest_first,
+        }
+    }
+
+    #[test]
+    fn per_log_latest_wins() {
+        let a = vl(1, vec![rec(3, 1, 0, 30, 5, true), rec(3, 1, 0, 10, 2, true)]);
+        let r = select_version(line(1), 3, &[&a], &[]).unwrap();
+        assert_eq!(r.words[0], 30);
+        assert!(!r.used_unvalidated);
+        assert!(!r.used_mn_log);
+    }
+
+    #[test]
+    fn disagreeing_replicas_resolve_by_log_dominance() {
+        // replica A saw up to seq 5; replica B saw seq 6 as well (crash
+        // mid-replication): B's log orders 6 after 5, so 6 wins.
+        let a = vl(1, vec![rec(3, 1, 0, 50, 5, true)]);
+        let b = vl(1, vec![rec(3, 1, 0, 60, 6, false), rec(3, 1, 0, 50, 5, true)]);
+        let r = select_version(line(1), 3, &[&a, &b], &[]).unwrap();
+        assert_eq!(r.words[0], 60);
+        assert!(r.used_unvalidated);
+    }
+
+    #[test]
+    fn stale_entry_of_failed_cn_loses_to_later_committed_writer() {
+        // failed CN 3 wrote seq 5, then CN 2 wrote (committed) — both in
+        // the same logs, CN 2's later.  Recovery must NOT resurrect 3's
+        // stale value.
+        let a = vl(1, vec![rec(2, 1, 0, 222, 9, true), rec(3, 1, 0, 50, 5, true)]);
+        let b = vl(1, vec![rec(2, 1, 0, 222, 9, true), rec(3, 1, 0, 50, 5, true)]);
+        let r = select_version(line(1), 3, &[&a, &b], &[]).unwrap();
+        assert_eq!(r.words[0], 222);
+    }
+
+    #[test]
+    fn incomparable_candidates_prefer_inflight() {
+        // two logs, each saw a different update, no common entry
+        let a = vl(1, vec![rec(3, 1, 0, 50, 5, true)]);
+        let b = vl(1, vec![rec(3, 1, 0, 60, 6, false)]);
+        let r = select_version(line(1), 3, &[&a, &b], &[]).unwrap();
+        assert_eq!(r.words[0], 60);
+    }
+
+    #[test]
+    fn words_selected_independently() {
+        let a = vl(
+            1,
+            vec![rec(3, 1, 1, 11, 7, true), rec(3, 1, 0, 30, 5, true)],
+        );
+        let r = select_version(line(1), 3, &[&a], &[]).unwrap();
+        assert_eq!(r.mask, 0b11);
+        assert_eq!(r.words[0], 30);
+        assert_eq!(r.words[1], 11);
+    }
+
+    #[test]
+    fn mn_fallback_only_when_replicas_lack_the_word() {
+        let a = vl(1, vec![rec(3, 1, 0, 1, 10, true)]);
+        let fallback = [rec(3, 1, 0, 2, 3, true), rec(3, 1, 5, 5, 4, true)];
+        let r = select_version(line(1), 3, &[&a], &fallback).unwrap();
+        assert_eq!(r.words[0], 1, "replica entry beats dumped entry");
+        assert_eq!(r.words[5], 5, "MN log fills the missing word");
+        assert!(r.used_mn_log);
+    }
+
+    #[test]
+    fn empty_everything_is_none() {
+        let a = vl(1, vec![]);
+        assert!(select_version(line(1), 3, &[&a], &[]).is_none());
+    }
+}

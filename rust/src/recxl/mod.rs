@@ -1,0 +1,132 @@
+//! ReCXL replication machinery (sections III-IV): replica-group selection
+//! and the per-CN hardware Logging Unit.
+//!
+//! Every remote store is replicated to `N_r` other CNs chosen by a hash of
+//! the line address, so all updates to a line land in (nearly) the same
+//! small set of Logging Units, and recovery knows exactly where to look.
+
+pub mod logunit;
+
+use crate::config::CnId;
+use crate::mem::Line;
+use crate::sim::rng::mix32;
+
+/// Hash a line to its replica-window start.
+#[inline]
+fn line_hash(line: Line) -> u32 {
+    mix32(line.0.wrapping_mul(0x9E37_79B1))
+}
+
+/// The replica *window* of a line: `n_r + 1` candidate CNs starting at the
+/// hashed position.  An update is logged at the first `n_r` window members
+/// that are not the requester — the requester must never be its own
+/// replica ("propagate the update to a small set of *other* nodes",
+/// section III-A), and with the window one slot wider than `n_r`, every
+/// line still has a fixed, requester-independent candidate set that
+/// recovery can query (DESIGN.md section "Replica groups").
+pub fn replica_window(line: Line, n_cns: usize, n_r: usize) -> Vec<CnId> {
+    let h = line_hash(line) as usize % n_cns;
+    (0..=n_r).map(|i| (h + i) % n_cns).collect()
+}
+
+/// The `n_r` replica CNs for an update to `line` issued by `requester`.
+pub fn replicas(line: Line, requester: CnId, n_cns: usize, n_r: usize) -> Vec<CnId> {
+    replica_window(line, n_cns, n_r)
+        .into_iter()
+        .filter(|&c| c != requester)
+        .take(n_r)
+        .collect()
+}
+
+/// Which replica dumps a given logged entry to the MNs (section IV-E: the
+/// Logging Units of a replica group divide the address range among
+/// themselves).  Computable locally by each Logging Unit from fields the
+/// log entry already carries.
+pub fn dump_owner(line: Line, requester: CnId, n_cns: usize, n_r: usize) -> CnId {
+    let r = replicas(line, requester, n_cns, n_r);
+    let sub = (line_hash(line) >> 16) as usize;
+    r[sub % r.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+
+    fn line(i: u32) -> Line {
+        Addr(0x8000_0000 | (i << 6)).line()
+    }
+
+    #[test]
+    fn replicas_exclude_requester() {
+        for i in 0..500u32 {
+            for req in 0..16 {
+                let r = replicas(line(i), req, 16, 3);
+                assert_eq!(r.len(), 3);
+                assert!(!r.contains(&req), "line {i} req {req}: {r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct() {
+        for i in 0..500u32 {
+            let r = replicas(line(i), 0, 16, 3);
+            let mut s = r.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 3);
+        }
+    }
+
+    #[test]
+    fn same_line_same_window_any_requester() {
+        for i in 0..200u32 {
+            let w = replica_window(line(i), 16, 3);
+            for req in 0..16 {
+                for c in replicas(line(i), req, 16, 3) {
+                    assert!(w.contains(&c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dump_owner_is_a_replica() {
+        for i in 0..500u32 {
+            for req in 0..16 {
+                let o = dump_owner(line(i), req, 16, 3);
+                assert!(replicas(line(i), req, 16, 3).contains(&o));
+            }
+        }
+    }
+
+    #[test]
+    fn windows_spread_across_the_cluster() {
+        let mut counts = vec![0u32; 16];
+        for i in 0..4096u32 {
+            for c in replica_window(line(i), 16, 3) {
+                counts[c] += 1;
+            }
+        }
+        let avg = 4096 * 4 / 16;
+        for (c, &n) in counts.iter().enumerate() {
+            assert!(
+                (n as i64 - avg as i64).unsigned_abs() < avg as u64 / 3,
+                "cn {c} has skewed load {n} vs {avg}"
+            );
+        }
+    }
+
+    #[test]
+    fn works_at_minimum_cluster_size() {
+        // n_r = 3 needs 4 CNs: window is the whole cluster
+        for i in 0..50u32 {
+            for req in 0..4 {
+                let r = replicas(line(i), req, 4, 3);
+                assert_eq!(r.len(), 3);
+                assert!(!r.contains(&req));
+            }
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Report formatting: the tables/series the paper's figures plot,
+//! rendered as aligned text (the bench harness and CLI both use this).
+
+/// A named series over the apps (one paper figure bar group).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+/// A figure-shaped table: columns = apps (+ optional gmean), rows = series.
+#[derive(Debug, Clone, Default)]
+pub struct FigureTable {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub series: Vec<Series>,
+    pub with_gmean: bool,
+}
+
+impl FigureTable {
+    pub fn new(title: &str, columns: Vec<String>, with_gmean: bool) -> Self {
+        FigureTable {
+            title: title.to_string(),
+            columns,
+            series: Vec::new(),
+            with_gmean,
+        }
+    }
+
+    pub fn push(&mut self, name: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "series width mismatch");
+        self.series.push(Series {
+            name: name.to_string(),
+            values,
+        });
+    }
+
+    pub fn render(&self) -> String {
+        let mut cols = self.columns.clone();
+        if self.with_gmean {
+            cols.push("gmean".to_string());
+        }
+        let name_w = self
+            .series
+            .iter()
+            .map(|s| s.name.len())
+            .chain([7])
+            .max()
+            .unwrap();
+        let col_w = cols.iter().map(|c| c.len()).chain([8]).max().unwrap() + 1;
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&format!("{:name_w$}", ""));
+        for c in &cols {
+            out.push_str(&format!(" {c:>col_w$}"));
+        }
+        out.push('\n');
+        for s in &self.series {
+            out.push_str(&format!("{:name_w$}", s.name));
+            for v in &s.values {
+                out.push_str(&format!(" {v:>col_w$.3}"));
+            }
+            if self.with_gmean {
+                out.push_str(&format!(" {:>col_w$.3}", gmean(&s.values)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Geometric mean (the paper's summary statistic).
+pub fn gmean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gmean_basics() {
+        assert!((gmean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((gmean(&[3.0]) - 3.0).abs() < 1e-12);
+        assert_eq!(gmean(&[]), 0.0);
+    }
+
+    #[test]
+    fn table_renders_with_gmean() {
+        let mut t = FigureTable::new(
+            "Fig X",
+            vec!["app1".to_string(), "app2".to_string()],
+            true,
+        );
+        t.push("WB", vec![1.0, 1.0]);
+        t.push("WT", vec![4.0, 9.0]);
+        let r = t.render();
+        assert!(r.contains("Fig X"));
+        assert!(r.contains("gmean"));
+        assert!(r.contains("6.000")); // gmean(4,9)
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn width_mismatch_panics() {
+        let mut t = FigureTable::new("t", vec!["a".to_string()], false);
+        t.push("s", vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust simulation
+//! path.  Python never runs at simulation time — `make artifacts` is the
+//! only Python invocation, and this module is the only consumer of its
+//! output.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits serialized protos with 64-bit instruction ids that the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::workloads::{RawOp, TraceSource, N_OPS, NUM_PARAMS};
+
+/// Geometry contract published by `aot.py` in `manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub n_ops: usize,
+    pub num_params: usize,
+    pub n_log: usize,
+    pub q: usize,
+}
+
+impl Manifest {
+    pub fn parse(body: &str) -> Result<Manifest> {
+        let mut m = Manifest {
+            n_ops: 0,
+            num_params: 0,
+            n_log: 0,
+            q: 0,
+        };
+        for line in body.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                match k.trim() {
+                    "n_ops" => m.n_ops = v.trim().parse()?,
+                    "num_params" => m.num_params = v.trim().parse()?,
+                    "n_log" => m.n_log = v.trim().parse()?,
+                    "q" => m.q = v.trim().parse()?,
+                    _ => {}
+                }
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// A loaded PJRT runtime with both compiled executables.
+pub struct Runtime {
+    trace_exe: xla::PjRtLoadedExecutable,
+    latest_exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load and compile both artifacts from `dir` (typically
+    /// `artifacts/`).  Fails cleanly when artifacts are missing — callers
+    /// fall back to the bit-identical Rust implementations.
+    pub fn load(dir: &str) -> Result<Runtime> {
+        let d = Path::new(dir);
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(d.join("manifest.txt"))
+                .with_context(|| format!("missing {dir}/manifest.txt — run `make artifacts`"))?,
+        )?;
+        if manifest.n_ops != N_OPS || manifest.num_params != NUM_PARAMS {
+            bail!(
+                "artifact geometry mismatch: manifest {manifest:?} vs compiled-in \
+                 N_OPS={N_OPS}, NUM_PARAMS={NUM_PARAMS}"
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = d.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Runtime {
+            trace_exe: compile("trace_gen")?,
+            latest_exe: compile("latest_version")?,
+            manifest,
+        })
+    }
+
+    /// Execute the trace_gen artifact for one block.
+    pub fn trace_block(
+        &self,
+        seed: i32,
+        base: i32,
+        params: &[i32; NUM_PARAMS],
+    ) -> Result<Vec<RawOp>> {
+        let s = xla::Literal::vec1(&[seed]);
+        let b = xla::Literal::vec1(&[base]);
+        let p = xla::Literal::vec1(&params[..]);
+        let result = self.trace_exe.execute::<xla::Literal>(&[s, b, p])?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("trace_gen returned {} outputs, expected 3", parts.len());
+        }
+        let ops = parts[0].to_vec::<i32>()?;
+        let addrs = parts[1].to_vec::<i32>()?;
+        let extras = parts[2].to_vec::<i32>()?;
+        Ok(ops
+            .into_iter()
+            .zip(addrs)
+            .zip(extras)
+            .map(|((o, a), e)| RawOp {
+                op: o as u32,
+                addr: a as u32,
+                extra: e as u32,
+            })
+            .collect())
+    }
+
+    /// Execute the latest_version artifact: the bulk FetchLatestVers
+    /// query (Algorithm 2) on the recovery path.  Inputs are padded to
+    /// the kernel geometry by the caller (`recovery::logquery` docs).
+    pub fn latest_versions(
+        &self,
+        queries: &[i32],
+        log_addr: &[i32],
+        log_ts: &[i32],
+        log_valid: &[i32],
+        log_val: &[i32],
+    ) -> Result<Vec<(i64, i32)>> {
+        let (q, n) = (self.manifest.q, self.manifest.n_log);
+        let pad = |xs: &[i32], len: usize, fill: i32| -> Vec<i32> {
+            let mut v = vec![fill; len];
+            v[..xs.len()].copy_from_slice(xs);
+            v
+        };
+        let args = [
+            xla::Literal::vec1(&pad(queries, q, -1)),
+            xla::Literal::vec1(&pad(log_addr, n, -1)),
+            xla::Literal::vec1(&pad(log_ts, n, 0)),
+            xla::Literal::vec1(&pad(log_valid, n, 0)),
+            xla::Literal::vec1(&pad(log_val, n, 0)),
+        ];
+        let result = self.latest_exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("latest_version returned {} outputs, expected 2", parts.len());
+        }
+        let keys = parts[0].to_vec::<i32>()?;
+        let vals = parts[1].to_vec::<i32>()?;
+        Ok(keys
+            .into_iter()
+            .zip(vals)
+            .take(queries.len())
+            .map(|(k, v)| (k as i64, v))
+            .collect())
+    }
+}
+
+/// `TraceSource` backed by the PJRT-compiled trace_gen artifact — the
+/// production trace source of the simulator.
+pub struct PjrtTraceSource {
+    rt: Runtime,
+    pub blocks_generated: u64,
+}
+
+impl PjrtTraceSource {
+    pub fn new(rt: Runtime) -> Self {
+        PjrtTraceSource {
+            rt,
+            blocks_generated: 0,
+        }
+    }
+}
+
+impl TraceSource for PjrtTraceSource {
+    fn block(&mut self, seed: u32, base: u32, params: &[i32; NUM_PARAMS]) -> Vec<RawOp> {
+        self.blocks_generated += 1;
+        self.rt
+            .trace_block(seed as i32, base as i32, params)
+            .expect("PJRT trace_block execution failed")
+    }
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse("# c\nn_ops=4096\nnum_params=16\nn_log=4096\nq=256\n").unwrap();
+        assert_eq!(
+            m,
+            Manifest {
+                n_ops: 4096,
+                num_params: 16,
+                n_log: 4096,
+                q: 256
+            }
+        );
+    }
+
+    #[test]
+    fn missing_artifacts_fail_cleanly() {
+        assert!(Runtime::load("/nonexistent/dir").is_err());
+    }
+
+    // PJRT-backed execution tests live in rust/tests/pjrt_roundtrip.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,174 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper evaluates ReCXL on SST [31]; this module is the reproduction's
+//! equivalent: a deterministic event queue with picosecond resolution.
+//! Determinism comes from a total order on events — `(time, sequence
+//! number)` — where sequence numbers are assigned at push, so same-time
+//! events fire in insertion order, independent of heap internals.
+
+pub mod rng;
+pub mod time;
+
+pub use rng::{mix32, Pcg};
+pub use time::Ps;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A scheduled event of payload type `E`.  Ordering uses the key only, so
+/// payloads need no `Ord` (messages carry unordered data).
+#[derive(Debug, Clone)]
+struct Scheduled<E> {
+    key: Reverse<(Ps, u64)>,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Deterministic event queue.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: Ps,
+    pushed: u64,
+    popped: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
+    /// Current simulation time (the timestamp of the last popped event).
+    #[inline]
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at`.  Scheduling in the past is
+    /// a simulator bug and panics in debug builds; in release it is clamped
+    /// to `now` (same-cycle delivery).
+    #[inline]
+    pub fn push_at(&mut self, at: Ps, payload: E) {
+        debug_assert!(at >= self.now, "event scheduled in the past");
+        let at = at.max(self.now);
+        let s = self.seq;
+        self.seq += 1;
+        self.pushed += 1;
+        self.heap.push(Scheduled {
+            key: Reverse((at, s)),
+            payload,
+        });
+    }
+
+    /// Schedule `payload` `delay` picoseconds from now.
+    #[inline]
+    pub fn push_in(&mut self, delay: Ps, payload: E) {
+        self.push_at(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing `now`.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(Ps, E)> {
+        self.heap.pop().map(|s| {
+            let (t, _) = s.key.0;
+            debug_assert!(t >= self.now);
+            self.now = t;
+            self.popped += 1;
+            (t, s.payload)
+        })
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Total events processed so far (simulator throughput accounting).
+    #[inline]
+    pub fn events_processed(&self) -> u64 {
+        self.popped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(30, "c");
+        q.push_at(10, "a");
+        q.push_at(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.now(), 20);
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_time_is_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100u32 {
+            q.push_at(5, i);
+        }
+        for i in 0..100u32 {
+            assert_eq!(q.pop(), Some((5, i)));
+        }
+    }
+
+    #[test]
+    fn push_in_is_relative_to_now() {
+        let mut q = EventQueue::new();
+        q.push_at(100, 0u32);
+        q.pop();
+        q.push_in(50, 1u32);
+        assert_eq!(q.pop(), Some((150, 1)));
+    }
+
+    #[test]
+    fn counts() {
+        let mut q = EventQueue::new();
+        q.push_at(1, ());
+        q.push_at(2, ());
+        q.pop();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.events_processed(), 1);
+        assert!(!q.is_empty());
+    }
+}

@@ -1,0 +1,78 @@
+//! Simulation time base.
+//!
+//! All simulation timestamps are picoseconds in a `u64` (`Ps`), which covers
+//! ~5000 hours of simulated time — far beyond any run here.  Helper
+//! constructors convert from the clock domains of Table II:
+//! 2.4 GHz cores, 500 MHz Logging Units, nanosecond-quoted memory/fabric
+//! latencies.
+
+/// Picoseconds.
+pub type Ps = u64;
+
+/// Picoseconds per 2.4 GHz CPU core cycle (416.67 ps, rounded to integer
+/// math; the resulting 2.4038 GHz effective clock is immaterial to the
+/// normalized results the paper reports).
+pub const PS_PER_CPU_CYCLE: Ps = 417;
+
+/// Picoseconds per 500 MHz Logging Unit cycle.
+pub const PS_PER_LU_CYCLE: Ps = 2_000;
+
+#[inline]
+pub const fn cycles(n: u64) -> Ps {
+    n * PS_PER_CPU_CYCLE
+}
+
+#[inline]
+pub const fn lu_cycles(n: u64) -> Ps {
+    n * PS_PER_LU_CYCLE
+}
+
+#[inline]
+pub const fn ns(n: u64) -> Ps {
+    n * 1_000
+}
+
+#[inline]
+pub const fn us(n: u64) -> Ps {
+    n * 1_000_000
+}
+
+#[inline]
+pub const fn ms(n: u64) -> Ps {
+    n * 1_000_000_000
+}
+
+/// Render a timestamp for reports.
+pub fn fmt_ps(t: Ps) -> String {
+    if t >= 1_000_000_000 {
+        format!("{:.3} ms", t as f64 / 1e9)
+    } else if t >= 1_000_000 {
+        format!("{:.3} us", t as f64 / 1e6)
+    } else if t >= 1_000 {
+        format!("{:.3} ns", t as f64 / 1e3)
+    } else {
+        format!("{t} ps")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(ns(1), 1_000);
+        assert_eq!(us(1), 1_000_000);
+        assert_eq!(ms(1), 1_000_000_000);
+        assert_eq!(cycles(2), 834);
+        assert_eq!(lu_cycles(3), 6_000);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ps(500), "500 ps");
+        assert_eq!(fmt_ps(2_500), "2.500 ns");
+        assert_eq!(fmt_ps(2_500_000), "2.500 us");
+        assert_eq!(fmt_ps(12_500_000_000), "12.500 ms");
+    }
+}

@@ -1,0 +1,220 @@
+//! Run statistics: everything the paper's figures are computed from.
+
+use std::collections::HashMap;
+
+use crate::cache::LineCensus;
+use crate::proto::MsgClass;
+use crate::sim::time::Ps;
+
+/// Byte counts per message class (Fig. 14).
+#[derive(Debug, Default, Clone)]
+pub struct TrafficStats {
+    pub bytes: HashMap<MsgClass, u64>,
+    pub messages: HashMap<MsgClass, u64>,
+}
+
+impl TrafficStats {
+    pub fn record(&mut self, _now: Ps, class: MsgClass, bytes: u32) {
+        *self.bytes.entry(class).or_default() += bytes as u64;
+        *self.messages.entry(class).or_default() += 1;
+    }
+
+    pub fn bytes_of(&self, class: MsgClass) -> u64 {
+        self.bytes.get(&class).copied().unwrap_or(0)
+    }
+
+    /// Average bandwidth of a class over `elapsed`, in GB/s.
+    pub fn gbps(&self, class: MsgClass, elapsed: Ps) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        self.bytes_of(class) as f64 / elapsed as f64 * 1_000.0
+    }
+}
+
+/// Per-core execution accounting.
+#[derive(Debug, Default, Clone)]
+pub struct CoreStats {
+    pub ops: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub remote_loads: u64,
+    pub remote_stores: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub l3_hits: u64,
+    pub local_mem: u64,
+    pub remote_misses: u64,
+    /// Cycles the core sat stalled because the SB was full.
+    pub sb_full_stall_ps: Ps,
+    /// Cycles stalled because the MLP window (MSHRs) was full.
+    pub mlp_stall_ps: Ps,
+    pub lock_wait_ps: Ps,
+    pub barrier_wait_ps: Ps,
+    pub finished_at: Ps,
+}
+
+/// Replication/Logging accounting (Figs. 11-13).
+#[derive(Debug, Default, Clone)]
+pub struct ReplStats {
+    /// REPL transactions sent (one per coalesced group).
+    pub repls_sent: u64,
+    /// REPLs whose send happened when the store was already at the SB head
+    /// (Fig. 11's numerator; proactive only).
+    pub repls_at_head: u64,
+    /// Stores merged into an existing SB entry by coalescing.
+    pub stores_coalesced: u64,
+    pub store_commits: u64,
+    pub vals_sent: u64,
+    /// Max DRAM log occupancy observed, per CN (Fig. 13).
+    pub max_dram_log_bytes: Vec<u64>,
+    /// Log dump compression accounting (section IV-E: ~5.8x).
+    pub dump_in_bytes: u64,
+    pub dump_out_bytes: u64,
+    pub dumps: u64,
+    /// SRAM Log Buffer backpressure events (REPL had to wait for space).
+    pub sram_backpressure: u64,
+}
+
+impl ReplStats {
+    pub fn compression_factor(&self) -> f64 {
+        if self.dump_out_bytes == 0 {
+            0.0
+        } else {
+            self.dump_in_bytes as f64 / self.dump_out_bytes as f64
+        }
+    }
+
+    pub fn frac_repls_at_head(&self) -> f64 {
+        if self.repls_sent == 0 {
+            0.0
+        } else {
+            self.repls_at_head as f64 / self.repls_sent as f64
+        }
+    }
+}
+
+/// Recovery accounting (Table I message counts, Fig. 15 census).
+#[derive(Debug, Default, Clone)]
+pub struct RecoveryStats {
+    pub happened: bool,
+    pub detection_at: Ps,
+    pub completed_at: Ps,
+    /// Directory census at crash: lines whose owner was the failed CN.
+    pub owned_lines: u64,
+    /// Of those: actually dirty in the failed CN (simulator ground truth,
+    /// Fig. 15 splits Owned into Dirty vs Exclusive).
+    pub dirty_lines: u64,
+    pub exclusive_lines: u64,
+    /// Directory entries where the failed CN was a sharer.
+    pub shared_lines: u64,
+    /// Crashed-CN cache census at the moment of the crash.
+    pub cache_census: LineCensus,
+    /// Lines recovered from replica Logging-Unit logs.
+    pub recovered_from_logs: u64,
+    /// Lines recovered from the MN-resident dumped logs.
+    pub recovered_from_mn_logs: u64,
+    /// Table I message counts, by name.
+    pub messages: HashMap<&'static str, u64>,
+    /// Consistency-oracle verdict (must be true in every test).
+    pub consistent: bool,
+    pub inconsistencies: u64,
+}
+
+impl RecoveryStats {
+    pub fn count(&mut self, name: &'static str) {
+        *self.messages.entry(name).or_default() += 1;
+    }
+}
+
+/// Everything a run produces.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    /// Wall-clock of the simulated execution (time when the last thread
+    /// finished its trace).
+    pub exec_time_ps: Ps,
+    pub cores: Vec<CoreStats>,
+    pub traffic: TrafficStats,
+    pub repl: ReplStats,
+    pub recovery: RecoveryStats,
+    /// Host-side wall time of the simulation itself (perf accounting).
+    pub host_wall_s: f64,
+    pub events: u64,
+}
+
+impl RunStats {
+    pub fn total_ops(&self) -> u64 {
+        self.cores.iter().map(|c| c.ops).sum()
+    }
+
+    pub fn total_stores(&self) -> u64 {
+        self.cores.iter().map(|c| c.stores).sum()
+    }
+
+    pub fn total_remote_stores(&self) -> u64 {
+        self.cores.iter().map(|c| c.remote_stores).sum()
+    }
+
+    /// Average CXL bandwidth seen at CN ports for a class, GB/s (Fig. 14).
+    pub fn class_gbps(&self, class: MsgClass) -> f64 {
+        self.traffic.gbps(class, self.exec_time_ps)
+    }
+
+    /// Simulator throughput in events/second (perf metric, section Perf).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.host_wall_s == 0.0 {
+            0.0
+        } else {
+            self.events as f64 / self.host_wall_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_accumulates_by_class() {
+        let mut t = TrafficStats::default();
+        t.record(0, MsgClass::CxlAccess, 80);
+        t.record(0, MsgClass::CxlAccess, 20);
+        t.record(0, MsgClass::LogDump, 64);
+        assert_eq!(t.bytes_of(MsgClass::CxlAccess), 100);
+        assert_eq!(t.bytes_of(MsgClass::LogDump), 64);
+        assert_eq!(t.bytes_of(MsgClass::Replication), 0);
+    }
+
+    #[test]
+    fn gbps_math() {
+        let mut t = TrafficStats::default();
+        t.record(0, MsgClass::CxlAccess, 1_000_000);
+        // 1 MB over 1 us = 1 GB/ms = 1000 GB/s? No: 1e6 B / 1e6 ps * 1000
+        // = 1000 GB/s. Over 1 ms: 1e6 / 1e9 * 1000 = 1 GB/s.
+        assert!((t.gbps(MsgClass::CxlAccess, 1_000_000_000) - 1.0).abs() < 1e-9);
+        assert_eq!(t.gbps(MsgClass::CxlAccess, 0), 0.0);
+    }
+
+    #[test]
+    fn repl_ratios() {
+        let r = ReplStats {
+            repls_sent: 10,
+            repls_at_head: 4,
+            dump_in_bytes: 580,
+            dump_out_bytes: 100,
+            ..Default::default()
+        };
+        assert!((r.frac_repls_at_head() - 0.4).abs() < 1e-12);
+        assert!((r.compression_factor() - 5.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_message_counter() {
+        let mut r = RecoveryStats::default();
+        r.count("Interrupt");
+        r.count("Interrupt");
+        r.count("RecovEnd");
+        assert_eq!(r.messages["Interrupt"], 2);
+        assert_eq!(r.messages["RecovEnd"], 1);
+    }
+}

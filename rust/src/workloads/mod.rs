@@ -1,0 +1,186 @@
+//! Workload layer: app profiles, trace sources, and the per-thread op
+//! stream fed to the core models.
+//!
+//! A [`TraceSource`] produces blocks of raw kernel output; [`ThreadTrace`]
+//! wraps one with decode + deterministic barrier insertion (barriers must
+//! be inserted at the same op index on every thread so arrival counts
+//! agree — a stateless per-op PRNG cannot guarantee that, so the kernel
+//! never emits barriers; see `python/compile/kernels/trace_gen.py`).
+
+pub mod profiles;
+pub mod tracegen;
+
+pub use profiles::{all_apps, by_name, AppProfile};
+pub use tracegen::{RawOp, TraceOp, N_OPS, NUM_PARAMS};
+
+/// Source of raw trace blocks for one thread.
+pub trait TraceSource {
+    /// Generate the `N_OPS`-sized block starting at global op index `base`.
+    fn block(&mut self, seed: u32, base: u32, params: &[i32; NUM_PARAMS]) -> Vec<RawOp>;
+    fn name(&self) -> &'static str;
+}
+
+/// The pure-Rust generator (bit-identical to the Pallas kernel).
+pub struct RustTraceSource;
+
+impl TraceSource for RustTraceSource {
+    fn block(&mut self, seed: u32, base: u32, params: &[i32; NUM_PARAMS]) -> Vec<RawOp> {
+        tracegen::gen_block(seed, base, params)
+    }
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Per-thread op stream: pulls blocks from a shared source, decodes, and
+/// interleaves deterministic barriers.
+pub struct ThreadTrace {
+    seed: u32,
+    params: [i32; NUM_PARAMS],
+    buf: Vec<RawOp>,
+    buf_base: u64,
+    /// Next global op index to hand out.
+    next: u64,
+    /// Total ops this thread will execute (excluding inserted barriers).
+    limit: u64,
+    barrier_period: u64,
+    /// True once the barrier for the current period boundary was emitted.
+    barrier_emitted: bool,
+}
+
+impl ThreadTrace {
+    pub fn new(seed: u32, app: &AppProfile, thread: usize, limit: u64) -> Self {
+        ThreadTrace {
+            seed,
+            params: app.to_params(thread),
+            buf: Vec::new(),
+            buf_base: u64::MAX,
+            next: 0,
+            limit,
+            barrier_period: app.barrier_period,
+            barrier_emitted: false,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.next >= self.limit
+    }
+
+    pub fn consumed(&self) -> u64 {
+        self.next
+    }
+
+    /// Next op, refilling from `src` as needed.  Returns `None` at the
+    /// trace limit.  Barriers appear *between* ops at multiples of the
+    /// barrier period (the op at that index is still delivered after).
+    pub fn next_op(&mut self, src: &mut dyn TraceSource) -> Option<TraceOp> {
+        if self.done() {
+            return None;
+        }
+        let idx = self.next;
+        if self.barrier_period > 0
+            && idx > 0
+            && idx % self.barrier_period == 0
+            && !self.barrier_emitted
+        {
+            // emit exactly one barrier at each period boundary
+            self.barrier_emitted = true;
+            return Some(TraceOp::Barrier);
+        }
+        let blk = N_OPS as u64;
+        let base = idx / blk * blk;
+        if self.buf_base != base {
+            self.buf = src.block(self.seed, base as u32, &self.params);
+            self.buf_base = base;
+        }
+        let op = self.buf[(idx - base) as usize].decode();
+        self.next += 1;
+        self.barrier_emitted = false;
+        Some(op)
+    }
+
+    pub fn params(&self) -> &[i32; NUM_PARAMS] {
+        &self.params
+    }
+
+    /// Un-consume the last delivered op (the core could not execute it —
+    /// e.g. its MLP window was full).  The next `next_op` call re-delivers
+    /// it.  Any barrier at this index was already emitted, so it is not
+    /// re-emitted.
+    pub fn rewind_one(&mut self) {
+        debug_assert!(self.next > 0);
+        self.next -= 1;
+        self.barrier_emitted = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_app(barrier_period: u64) -> AppProfile {
+        AppProfile {
+            barrier_period,
+            ..profiles::bodytrack()
+        }
+    }
+
+    #[test]
+    fn trace_respects_limit() {
+        let mut src = RustTraceSource;
+        let mut t = ThreadTrace::new(1, &tiny_app(0), 0, 100);
+        let mut n = 0;
+        while t.next_op(&mut src).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 100);
+        assert!(t.done());
+    }
+
+    #[test]
+    fn barriers_inserted_once_per_period() {
+        let mut src = RustTraceSource;
+        let mut t = ThreadTrace::new(1, &tiny_app(10), 0, 35);
+        let mut barriers = 0;
+        let mut ops = 0;
+        while let Some(op) = t.next_op(&mut src) {
+            if op == TraceOp::Barrier {
+                barriers += 1;
+            } else {
+                ops += 1;
+            }
+        }
+        assert_eq!(ops, 35);
+        assert_eq!(barriers, 3); // at indices 10, 20, 30
+    }
+
+    #[test]
+    fn barrier_positions_identical_across_threads() {
+        let app = tiny_app(7);
+        let positions = |thread: usize| {
+            let mut src = RustTraceSource;
+            let mut t = ThreadTrace::new(9, &app, thread, 40);
+            let mut pos = vec![];
+            let mut i = 0;
+            while let Some(op) = t.next_op(&mut src) {
+                if op == TraceOp::Barrier {
+                    pos.push(i);
+                }
+                i += 1;
+            }
+            pos
+        };
+        assert_eq!(positions(0), positions(5));
+    }
+
+    #[test]
+    fn stream_crosses_block_boundaries() {
+        let mut src = RustTraceSource;
+        let mut t = ThreadTrace::new(3, &tiny_app(0), 2, N_OPS as u64 + 50);
+        let mut n = 0;
+        while t.next_op(&mut src).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, N_OPS as u64 + 50);
+    }
+}

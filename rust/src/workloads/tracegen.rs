@@ -1,0 +1,186 @@
+//! Bit-identical Rust port of the Pallas trace kernel
+//! (`python/compile/kernels/trace_gen.py`).
+//!
+//! The simulator's default trace source (the PJRT-executed artifact is the
+//! other, `runtime::PjrtTraceSource`); an integration test asserts the two
+//! produce identical streams, which pins the whole L1↔L3 contract.
+
+use crate::sim::rng::mix32;
+
+/// Matches `NUM_PARAMS` in the kernel.
+pub const NUM_PARAMS: usize = 16;
+/// Ops per generated block (matches the kernel's `N_OPS`).
+pub const N_OPS: usize = 4096;
+
+/// Decoded trace operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    /// One core cycle of non-memory work.
+    Compute,
+    Load { addr: u32 },
+    Store { addr: u32 },
+    /// Acquire `lock`, execute `cs_len` ops inside, then release.
+    Lock { lock: u8, cs_len: u8 },
+    /// Inserted by the workload layer (never by the generator): global
+    /// barrier.
+    Barrier,
+}
+
+/// Raw kernel output triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RawOp {
+    pub op: u32,
+    pub addr: u32,
+    pub extra: u32,
+}
+
+impl RawOp {
+    pub fn decode(self) -> TraceOp {
+        match self.op {
+            1 => TraceOp::Load { addr: self.addr },
+            2 => TraceOp::Store { addr: self.addr },
+            3 => TraceOp::Lock {
+                lock: ((self.extra >> 8) & 63) as u8,
+                cs_len: (self.extra & 0xFF) as u8,
+            },
+            _ => TraceOp::Compute,
+        }
+    }
+}
+
+/// Generate the raw fields for global index `g` — bit-identical to
+/// `gen_fields` in the kernel.
+#[inline]
+pub fn gen_one(g: u32, seed: u32, p: &[i32; NUM_PARAMS]) -> RawOp {
+    let pu = |i: usize| p[i] as u32;
+    let t = pu(0);
+    let h0 = mix32(
+        seed.wrapping_add(g.wrapping_mul(0x85EB_CA6B))
+            .wrapping_add(t.wrapping_mul(0xC2B2_AE35)),
+    );
+    let r0 = mix32(h0 ^ 0x68E3_1DA4);
+    let r1 = mix32(h0 ^ 0xB529_7A4D);
+    let r2 = mix32(h0 ^ 0x1B56_C4E9);
+    let r3 = mix32(h0 ^ 0x7FEB_352D);
+
+    let u_op = r0 >> 16;
+    let is_load = u_op < pu(1);
+    let is_store = !is_load && u_op < pu(2);
+    let is_lock = !is_load && !is_store && u_op < pu(3);
+    let op: u32 = if is_load {
+        1
+    } else if is_store {
+        2
+    } else if is_lock {
+        3
+    } else {
+        0
+    };
+
+    let remote = (r1 & 0xFFFF) < pu(5);
+    let shared_mask = (1u32 << pu(6)).wrapping_sub(1);
+    let hot_mask = (1u32 << pu(11)).wrapping_sub(1);
+    let priv_mask = (1u32 << pu(7)).wrapping_sub(1);
+
+    let seq = ((r1 >> 16) & 0xFFFF) < pu(8);
+    let g_run = g >> pu(9);
+    let line_seq = mix32(
+        g_run
+            .wrapping_mul(0x9E37_79B1)
+            .wrapping_add(t.wrapping_mul(0x632B_E59B)),
+    ) & shared_mask;
+    let hot = (r2 >> 16) < pu(10);
+    let line_rand = if hot { r2 & hot_mask } else { r2 & shared_mask };
+    let line_sh = if seq { line_seq } else { line_rand };
+    let word = if seq { g & 15 } else { r3 & 15 };
+    let raddr = 0x8000_0000 | (line_sh << 6) | (word << 2);
+
+    let line_lo = r2 & priv_mask;
+    let laddr = (t << 24) | (line_lo << 6) | (word << 2);
+    let mut addr = if remote { raddr } else { laddr };
+    if op == 0 || op == 3 {
+        addr = 0;
+    }
+
+    let lock_id = r3 & 63;
+    let extra = if op == 3 { (lock_id << 8) | pu(12) } else { 0 };
+    RawOp { op, addr, extra }
+}
+
+/// Generate a full `N_OPS` block starting at global index `base` — the
+/// Rust equivalent of one artifact invocation.
+pub fn gen_block(seed: u32, base: u32, p: &[i32; NUM_PARAMS]) -> Vec<RawOp> {
+    (0..N_OPS as u32)
+        .map(|i| gen_one(base.wrapping_add(i), seed, p))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The golden parameter vector + digests produced by the Python kernel
+    /// (see DESIGN.md section "Cross-layer"); regenerate with
+    /// `python -m pytest` helpers if the kernel contract changes.
+    pub const GOLDEN_PARAMS: [i32; NUM_PARAMS] = [
+        21, 19660, 32768, 32833, 0, 32768, 16, 12, 39321, 3, 13107, 8, 8, 0, 0, 0,
+    ];
+
+    #[test]
+    fn golden_digest_matches_python_kernel() {
+        let block = gen_block(42, 4096, &GOLDEN_PARAMS);
+        let sum_op: u64 = block.iter().map(|r| r.op as u64).sum();
+        let xor_addr = block.iter().fold(0u32, |a, r| a ^ r.addr);
+        let sum_extra: u64 = block.iter().map(|r| r.extra as u64).sum();
+        assert_eq!(sum_op, 2863);
+        assert_eq!(xor_addr, 0x152238a4);
+        assert_eq!(sum_extra, 15128);
+    }
+
+    #[test]
+    fn golden_prefix_matches_python_kernel() {
+        let block = gen_block(42, 4096, &GOLDEN_PARAMS);
+        let ops: Vec<u32> = block[..8].iter().map(|r| r.op).collect();
+        assert_eq!(ops, vec![0, 2, 2, 0, 2, 1, 0, 2]);
+        let addrs: Vec<u32> = block[..8].iter().map(|r| r.addr).collect();
+        assert_eq!(
+            addrs,
+            vec![
+                0x0, 0x801d5714, 0x800df908, 0x0, 0x15024810, 0x1500a714, 0x0,
+                0x800018dc
+            ]
+        );
+    }
+
+    #[test]
+    fn counter_based_random_access() {
+        let p = GOLDEN_PARAMS;
+        let a = gen_block(7, 0, &p);
+        let b = gen_block(7, 512, &p);
+        assert_eq!(&a[512..1024], &b[..512]);
+    }
+
+    #[test]
+    fn decode_ops() {
+        assert_eq!(
+            RawOp { op: 1, addr: 0x10, extra: 0 }.decode(),
+            TraceOp::Load { addr: 0x10 }
+        );
+        assert_eq!(
+            RawOp { op: 3, addr: 0, extra: (5 << 8) | 9 }.decode(),
+            TraceOp::Lock { lock: 5, cs_len: 9 }
+        );
+        assert_eq!(RawOp { op: 0, addr: 0, extra: 0 }.decode(), TraceOp::Compute);
+    }
+
+    #[test]
+    fn thread_streams_differ() {
+        let mut p1 = GOLDEN_PARAMS;
+        let mut p2 = GOLDEN_PARAMS;
+        p1[0] = 1;
+        p2[0] = 2;
+        let a = gen_block(7, 0, &p1);
+        let b = gen_block(7, 0, &p2);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,198 @@
+//! Whole-cluster integration tests: every protocol configuration runs to
+//! completion on a small cluster and upholds the cross-protocol
+//! performance and accounting invariants the paper's evaluation rests on.
+
+use recxl::prelude::*;
+use recxl::proto::MsgClass;
+
+fn small(protocol: Protocol) -> SimConfig {
+    SimConfig {
+        protocol,
+        ops_per_thread: 3_000,
+        ..SimConfig::default()
+    }
+}
+
+fn run(protocol: Protocol, app: &str) -> RunStats {
+    run_app(small(protocol), &by_name(app).unwrap())
+}
+
+#[test]
+fn all_protocols_complete_on_all_apps() {
+    for app in all_apps() {
+        for p in Protocol::ALL {
+            let cfg = SimConfig {
+                protocol: p,
+                ops_per_thread: 800,
+                ..SimConfig::default()
+            };
+            let s = run_app(cfg, &app);
+            assert!(s.exec_time_ps > 0, "{}/{}", app.name, p.name());
+            assert_eq!(
+                s.total_ops(),
+                64 * 800,
+                "{}/{} must consume the whole trace",
+                app.name,
+                p.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_result() {
+    let a = run(Protocol::ReCxlProactive, "ycsb");
+    let b = run(Protocol::ReCxlProactive, "ycsb");
+    assert_eq!(a.exec_time_ps, b.exec_time_ps);
+    assert_eq!(a.repl.repls_sent, b.repl.repls_sent);
+    assert_eq!(a.events, b.events);
+    assert_eq!(
+        a.traffic.bytes_of(MsgClass::Replication),
+        b.traffic.bytes_of(MsgClass::Replication)
+    );
+}
+
+#[test]
+fn different_seed_different_schedule() {
+    let a = run(Protocol::WriteBack, "ycsb");
+    let mut cfg = small(Protocol::WriteBack);
+    cfg.seed = 999;
+    let b = run_app(cfg, &by_name("ycsb").unwrap());
+    assert_ne!(a.exec_time_ps, b.exec_time_ps);
+}
+
+#[test]
+fn fig2_shape_wt_much_slower_than_wb() {
+    // the motivation figure: WT with TSO serialization is prohibitively
+    // expensive on write-intensive workloads
+    for app in ["ocean-ncp", "ycsb"] {
+        let wb = run(Protocol::WriteBack, app);
+        let wt = run(Protocol::WriteThrough, app);
+        let ratio = wt.exec_time_ps as f64 / wb.exec_time_ps as f64;
+        assert!(ratio > 2.0, "{app}: WT/WB = {ratio:.2}, expected >> 1");
+    }
+}
+
+#[test]
+fn fig10_shape_protocol_ordering() {
+    // WB <= proactive < parallel <= ~baseline < WT on a write-heavy app
+    let app = "ocean-cp";
+    let wb = run(Protocol::WriteBack, app).exec_time_ps as f64;
+    let pro = run(Protocol::ReCxlProactive, app).exec_time_ps as f64;
+    let par = run(Protocol::ReCxlParallel, app).exec_time_ps as f64;
+    let base = run(Protocol::ReCxlBaseline, app).exec_time_ps as f64;
+    let wt = run(Protocol::WriteThrough, app).exec_time_ps as f64;
+    assert!(wb <= pro * 1.01, "WB is the lower bound");
+    assert!(pro < par, "proactive beats parallel (ocean)");
+    assert!(par <= base * 1.05, "parallel no worse than baseline");
+    assert!(base < wt, "every ReCXL variant beats write-through");
+}
+
+#[test]
+fn wb_generates_no_replication_traffic() {
+    let s = run(Protocol::WriteBack, "ycsb");
+    assert_eq!(s.traffic.bytes_of(MsgClass::Replication), 0);
+    assert_eq!(s.repl.repls_sent, 0);
+    assert_eq!(s.repl.vals_sent, 0);
+}
+
+#[test]
+fn recxl_vals_match_commits_times_replicas() {
+    let s = run(Protocol::ReCxlProactive, "ycsb");
+    assert!(s.repl.repls_sent > 0);
+    // every replicated group commits exactly once and VALs all N_r replicas
+    assert_eq!(s.repl.vals_sent, s.repl.repls_sent * 3);
+}
+
+#[test]
+fn baseline_sends_all_repls_at_head() {
+    // Fig. 6a: baseline's replication transaction starts at the SB head
+    let s = run(Protocol::ReCxlBaseline, "ycsb");
+    assert_eq!(s.repl.repls_at_head, s.repl.repls_sent);
+}
+
+#[test]
+fn proactive_sends_most_repls_early() {
+    // Fig. 6c / Fig. 11: under a loaded SB, most REPLs leave before the
+    // store reaches the head
+    let s = run(Protocol::ReCxlProactive, "ycsb");
+    assert!(
+        s.repl.frac_repls_at_head() < 0.5,
+        "frac at head = {}",
+        s.repl.frac_repls_at_head()
+    );
+}
+
+#[test]
+fn coalescing_reduces_repl_count() {
+    let with = run(Protocol::ReCxlProactive, "ocean-cp");
+    let mut cfg = small(Protocol::ReCxlProactive);
+    cfg.coalescing = false;
+    let without = run_app(cfg, &by_name("ocean-cp").unwrap());
+    assert!(
+        with.repl.repls_sent < without.repl.repls_sent,
+        "coalescing must merge store groups: {} vs {}",
+        with.repl.repls_sent,
+        without.repl.repls_sent
+    );
+    assert!(with.repl.stores_coalesced > 0);
+}
+
+#[test]
+fn log_dump_compresses_and_stays_small() {
+    let mut cfg = small(Protocol::ReCxlProactive);
+    cfg.ops_per_thread = 6_000;
+    cfg.dump_period_ps = recxl::sim::time::us(30); // force several dumps
+    let s = run_app(cfg, &by_name("ocean-ncp").unwrap());
+    assert!(s.repl.dumps > 0, "dumps must have run");
+    let cf = s.repl.compression_factor();
+    assert!(cf > 1.5, "gzip-9 on structured logs compresses (got {cf:.2}x)");
+    // Fig. 14: dump bandwidth is a small fraction of access bandwidth
+    let access = s.class_gbps(MsgClass::CxlAccess);
+    let dump = s.class_gbps(MsgClass::LogDump);
+    assert!(
+        dump < access / 5.0,
+        "dump {dump:.2} GB/s must be small vs access {access:.2} GB/s"
+    );
+}
+
+#[test]
+fn link_bandwidth_sensitivity_direction() {
+    // Fig. 16: starving the links hurts ReCXL on bandwidth-hungry apps
+    let fast = run(Protocol::ReCxlProactive, "ycsb").exec_time_ps;
+    let mut cfg = small(Protocol::ReCxlProactive);
+    cfg.link_bw_gbps = 20;
+    let slow = run_app(cfg, &by_name("ycsb").unwrap()).exec_time_ps;
+    assert!(slow > fast, "20 GB/s must be slower than 160 GB/s");
+}
+
+#[test]
+fn replication_factor_monotonicity() {
+    // Fig. 17: higher N_r costs (weakly) more on write-heavy apps
+    let app = by_name("ocean-ncp").unwrap();
+    let mut times = Vec::new();
+    for nr in [2usize, 4] {
+        let mut cfg = small(Protocol::ReCxlProactive);
+        cfg.n_r = nr;
+        times.push(run_app(cfg, &app).exec_time_ps);
+    }
+    assert!(times[1] >= times[0], "N_r=4 {} vs N_r=2 {}", times[1], times[0]);
+}
+
+#[test]
+fn smaller_cluster_runs_and_validates() {
+    let mut cfg = small(Protocol::ReCxlProactive);
+    cfg.n_cns = 4;
+    cfg.n_mns = 4;
+    let s = run_app(cfg, &by_name("barnes").unwrap());
+    assert_eq!(s.total_ops(), 16 * 3_000);
+}
+
+#[test]
+fn fence_drains_sb_before_locks() {
+    // lock-dense app: lock waits exist and the run completes (fence
+    // semantics don't deadlock)
+    let s = run(Protocol::ReCxlBaseline, "fluidanimate");
+    let lock_wait: u64 = s.cores.iter().map(|c| c.lock_wait_ps).sum();
+    assert!(lock_wait > 0, "fluidanimate must contend on locks");
+}

@@ -1,0 +1,106 @@
+//! Cross-layer tests: the AOT-compiled Pallas artifacts executed through
+//! PJRT must agree bit-for-bit with the Rust reference implementations.
+//! This pins the whole L1 (Pallas) <-> L3 (Rust) contract.
+//!
+//! Requires `make artifacts` (skipped, loudly, when artifacts are absent —
+//! e.g. in a fresh checkout before the Python toolchain ran).
+
+use recxl::recovery::logquery;
+use recxl::runtime::Runtime;
+use recxl::sim::Pcg;
+use recxl::workloads::{profiles, tracegen, TraceSource};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn trace_gen_artifact_matches_rust_generator() {
+    let Some(rt) = runtime() else { return };
+    for (seed, base, thread) in [(42u32, 0u32, 0usize), (7, 4096, 17), (0xDEAD, 123 * 4096, 63)] {
+        for app in ["ycsb", "ocean-cp", "raytrace"] {
+            let params = profiles::by_name(app).unwrap().to_params(thread);
+            let pjrt = rt.trace_block(seed as i32, base as i32, &params).unwrap();
+            let rust = tracegen::gen_block(seed, base, &params);
+            assert_eq!(pjrt.len(), rust.len());
+            assert_eq!(pjrt, rust, "app {app} seed {seed} base {base}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_trace_source_streams_blocks() {
+    let Some(rt) = runtime() else { return };
+    let mut src = recxl::runtime::PjrtTraceSource::new(rt);
+    let params = profiles::ycsb().to_params(3);
+    let a = src.block(9, 0, &params);
+    let b = src.block(9, 4096, &params);
+    assert_eq!(a.len(), tracegen::N_OPS);
+    assert_ne!(a, b);
+    assert_eq!(src.blocks_generated, 2);
+    assert_eq!(src.name(), "pjrt");
+}
+
+#[test]
+fn latest_version_artifact_matches_rust_query() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg::new(0xA0B1, 7);
+    for _ in 0..5 {
+        let n = 64 + rng.below(512) as usize;
+        let nq = 1 + rng.below(64) as usize;
+        let space = 1 + rng.below(40) as i32;
+        let la: Vec<i32> = (0..n).map(|_| (rng.below(space as u64)) as i32).collect();
+        let ts: Vec<i32> = (0..n).map(|_| rng.below(1 << 14) as i32).collect();
+        let valid: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let val: Vec<i32> = (0..n).map(|_| rng.next_u32() as i32).collect();
+        let q: Vec<i32> = (0..nq).map(|_| rng.below(space as u64 + 4) as i32).collect();
+
+        // the Rust reference operates on padded arrays like the kernel
+        let pad = |xs: &[i32], len: usize, fill: i32| {
+            let mut v = vec![fill; len];
+            v[..xs.len()].copy_from_slice(xs);
+            v
+        };
+        let want = logquery::latest_versions(
+            &q,
+            &pad(&la, logquery::N_LOG, -1),
+            &pad(&ts, logquery::N_LOG, 0),
+            &pad(&valid, logquery::N_LOG, 0),
+            &pad(&val, logquery::N_LOG, 0),
+        );
+        let got = rt.latest_versions(&q, &la, &ts, &valid, &val).unwrap();
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn simulation_identical_under_pjrt_and_rust_sources() {
+    use recxl::cluster::Cluster;
+    use recxl::config::SimConfig;
+    use recxl::workloads::RustTraceSource;
+
+    let Some(rt) = runtime() else { return };
+    let cfg = SimConfig {
+        n_cns: 4,
+        n_mns: 4,
+        ops_per_thread: 1_500,
+        ..SimConfig::default()
+    };
+    let app = profiles::ycsb();
+    let a = Cluster::with_source(cfg.clone(), &app, Box::new(RustTraceSource)).run();
+    let b = Cluster::with_source(
+        cfg,
+        &app,
+        Box::new(recxl::runtime::PjrtTraceSource::new(rt)),
+    )
+    .run();
+    assert_eq!(a.exec_time_ps, b.exec_time_ps, "trace sources must be equivalent");
+    assert_eq!(a.repl.repls_sent, b.repl.repls_sent);
+    assert_eq!(a.events, b.events);
+}

@@ -1,0 +1,137 @@
+//! Crash + recovery integration tests (section V): the consistency oracle
+//! must hold for every ReCXL recovery, the Table-I exchange must be
+//! complete, and — the paper's motivation — plain write-back must be shown
+//! to actually *lose* data on a crash.
+
+use recxl::prelude::*;
+use recxl::sim::time::us;
+
+fn crash_cfg(protocol: Protocol, ops: u64, cn: usize, at_us: u64) -> SimConfig {
+    SimConfig {
+        protocol,
+        ops_per_thread: ops,
+        crash: Some(CrashSpec { cn, at: us(at_us) }),
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn recxl_recovery_is_consistent_across_apps() {
+    for app in ["ycsb", "ocean-cp", "bodytrack", "canneal"] {
+        let s = run_app(crash_cfg(Protocol::ReCxlProactive, 6_000, 0, 35), &by_name(app).unwrap());
+        assert!(s.recovery.happened, "{app}: recovery must trigger");
+        assert!(
+            s.recovery.consistent,
+            "{app}: {} violations",
+            s.recovery.inconsistencies
+        );
+        assert!(s.recovery.owned_lines > 0, "{app}: crashed CN owned lines");
+    }
+}
+
+#[test]
+fn recovery_consistent_for_all_recxl_variants() {
+    for p in [Protocol::ReCxlBaseline, Protocol::ReCxlParallel, Protocol::ReCxlProactive] {
+        let s = run_app(crash_cfg(p, 5_000, 0, 50), &by_name("ycsb").unwrap());
+        assert!(s.recovery.happened && s.recovery.consistent, "{}", p.name());
+    }
+}
+
+#[test]
+fn recovery_consistent_for_any_crashed_cn() {
+    for cn in [0usize, 7, 15] {
+        let s = run_app(crash_cfg(Protocol::ReCxlProactive, 5_000, cn, 50), &by_name("ycsb").unwrap());
+        assert!(s.recovery.consistent, "crash of CN {cn}");
+    }
+}
+
+#[test]
+fn recovery_consistent_across_seeds_and_crash_times() {
+    for (seed, at) in [(1u64, 20u64), (77, 35), (31337, 50)] {
+        let mut cfg = crash_cfg(Protocol::ReCxlProactive, 6_000, 3, at);
+        cfg.seed = seed;
+        let s = run_app(cfg, &by_name("ocean-ncp").unwrap());
+        assert!(s.recovery.happened, "seed {seed} at {at}us");
+        assert!(s.recovery.consistent, "seed {seed} at {at}us");
+    }
+}
+
+#[test]
+fn recovery_with_minimum_replication_factor() {
+    let mut cfg = crash_cfg(Protocol::ReCxlProactive, 5_000, 0, 50);
+    cfg.n_r = 2;
+    let s = run_app(cfg, &by_name("ycsb").unwrap());
+    assert!(s.recovery.consistent, "N_r=2 still tolerates one failure");
+}
+
+#[test]
+fn recovery_uses_mn_logs_after_dumps() {
+    // force frequent dumps so some of the crashed CN's updates only
+    // survive in the MN-resident dumped logs
+    let mut cfg = crash_cfg(Protocol::ReCxlProactive, 8_000, 0, 60);
+    cfg.dump_period_ps = us(15);
+    let s = run_app(cfg, &by_name("ocean-cp").unwrap());
+    assert!(s.recovery.consistent);
+    assert!(s.repl.dumps > 0);
+}
+
+#[test]
+fn table1_message_exchange_is_complete() {
+    let s = run_app(crash_cfg(Protocol::ReCxlProactive, 5_000, 0, 50), &by_name("ycsb").unwrap());
+    let m = &s.recovery.messages;
+    let live = 15u64; // 16 CNs - 1 failed
+    let mns = 16u64;
+    assert_eq!(m["Msi"], 1);
+    assert_eq!(m["Interrupt"], live);
+    assert_eq!(m["InterruptResp"], live);
+    assert_eq!(m["InitRecov"], mns);
+    assert_eq!(m["InitRecovResp"], mns);
+    assert_eq!(m["RecovEnd"], live);
+    assert_eq!(m["RecovEndResp"], live);
+    assert!(m["FetchLatestVers"] >= 1);
+    assert_eq!(m["FetchLatestVers"], m["FetchLatestVersResp"]);
+}
+
+#[test]
+fn census_splits_owned_into_dirty_and_exclusive() {
+    let s = run_app(crash_cfg(Protocol::ReCxlProactive, 6_000, 0, 40), &by_name("ycsb").unwrap());
+    let r = &s.recovery;
+    assert_eq!(r.owned_lines, r.dirty_lines + r.exclusive_lines);
+    // Fig. 15 ground truth: the directory census must agree with the
+    // crashed CN's cache contents for dirty lines
+    assert_eq!(r.dirty_lines, r.cache_census.dirty);
+}
+
+#[test]
+fn write_back_crash_loses_committed_data() {
+    // the paper's motivation (section II-B): without ReCXL, the dirty
+    // data in a failed CN's caches is simply gone.
+    let s = run_app(crash_cfg(Protocol::WriteBack, 6_000, 0, 40), &by_name("ycsb").unwrap());
+    assert!(s.recovery.happened);
+    assert!(
+        !s.recovery.consistent,
+        "WB has no replicas: a crash with {} dirty lines must lose data",
+        s.recovery.dirty_lines
+    );
+}
+
+#[test]
+fn live_nodes_make_forward_progress_after_recovery() {
+    // crash early so the survivors have most of their trace left
+    let s = run_app(crash_cfg(Protocol::ReCxlProactive, 8_000, 0, 25), &by_name("ycsb").unwrap());
+    assert!(s.recovery.consistent);
+    // 60 live cores each consume their full trace
+    let live_ops: u64 = s.cores.iter().skip(4).map(|c| c.ops).sum();
+    assert_eq!(live_ops, 60 * 8_000);
+    assert!(s.exec_time_ps > s.recovery.completed_at);
+}
+
+#[test]
+fn recovery_completes_quickly_relative_to_run() {
+    let s = run_app(crash_cfg(Protocol::ReCxlProactive, 8_000, 0, 45), &by_name("bodytrack").unwrap());
+    let window = s.recovery.completed_at - s.recovery.detection_at;
+    assert!(
+        window < recxl::sim::time::ms(5),
+        "recovery took {window} ps — unexpectedly long"
+    );
+}
