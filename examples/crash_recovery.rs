@@ -1,38 +1,62 @@
-//! Crash + recovery walkthrough (sections III-B, V): run YCSB under
-//! ReCXL-proactive, fail CN 0 mid-run, let the Table-I protocol repair
-//! directory + memory, and verify against the consistency oracle.
+//! Crash + recovery walkthrough (sections III-B, V), scenario-driven:
+//! pick any scenario from the registry (default `crash-during-recovery`),
+//! run YCSB under ReCXL-proactive through its fault plan, let the Table-I
+//! protocol repair directory + memory — across however many rounds the
+//! plan needs — and verify against the consistency oracle.
 //!
 //! ```sh
-//! cargo run --release --example crash_recovery
+//! cargo run --release --example crash_recovery [SCENARIO]
+//! cargo run --release --example crash_recovery cm-crash
 //! ```
 
 use recxl::prelude::*;
-use recxl::sim::time::{fmt_ps, us};
+use recxl::scenarios;
+use recxl::sim::time::fmt_ps;
 
 fn main() {
+    let which = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "crash-during-recovery".to_string());
+    let sc = scenarios::by_name(&which).unwrap_or_else(|| {
+        eprintln!("unknown scenario '{which}'; available:");
+        for s in scenarios::all() {
+            eprintln!("  {}", s.name);
+        }
+        std::process::exit(2);
+    });
+
     let app = by_name("ycsb").unwrap();
     let cfg = SimConfig {
         protocol: Protocol::ReCxlProactive,
         ops_per_thread: 20_000,
-        crash: Some(CrashSpec { cn: 0, at: us(250) }),
         ..SimConfig::default()
     };
 
     println!(
-        "running {} with a fail-stop crash of CN0 at {}",
+        "scenario {} on {}: fault plan [{}]",
+        sc.name,
         app.name,
-        fmt_ps(cfg.crash.unwrap().at)
+        sc.plan(&cfg).summary()
     );
-    let s = run_app(cfg, &app);
+    let s = scenarios::run_scenario(&sc, cfg.clone(), &app);
     let r = &s.recovery;
-    assert!(r.happened, "crash must have triggered recovery");
+    if sc.plan(&cfg).is_empty() {
+        assert!(!r.happened, "fault-free scenario must not recover");
+        println!("no faults injected; recovery machinery stayed idle. OK.");
+        return;
+    }
+    assert!(r.happened, "fault plan must have triggered recovery");
 
     println!("\n-- failure detection (section V-A) --");
-    println!("  Viral_Status set at {}", fmt_ps(r.detection_at));
+    println!("  first Viral_Status set at {}", fmt_ps(r.detection_at));
+    println!(
+        "  failures recovered: {:?} over {} round(s)",
+        r.failed_cns, r.rounds
+    );
 
     println!("\n-- directory census (Algorithm 1 / Fig. 15) --");
     println!(
-        "  lines owned by CN0 : {} ({} dirty + {} exclusive-clean)",
+        "  lines owned by failed CNs : {} ({} dirty + {} exclusive-clean)",
         r.owned_lines, r.dirty_lines, r.exclusive_lines
     );
     println!("  sharer entries scrubbed : {}", r.shared_lines);
@@ -65,6 +89,6 @@ fn main() {
         if r.consistent { "CONSISTENT" } else { "INCONSISTENT" },
         r.inconsistencies
     );
-    assert!(r.consistent, "recovery must restore a consistent state");
+    scenarios::verdict(&sc, &cfg, &s).expect("scenario contract must hold");
     println!("\nOK: application state recovered; live nodes resumed.");
 }

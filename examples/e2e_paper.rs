@@ -16,7 +16,6 @@ use recxl::cluster::Cluster;
 use recxl::prelude::*;
 use recxl::report::gmean;
 use recxl::runtime::{PjrtTraceSource, Runtime};
-use recxl::sim::time::us;
 use recxl::workloads::RustTraceSource;
 
 fn run_with_best_source(cfg: SimConfig, app: &AppProfile, use_pjrt: bool) -> RunStats {
@@ -74,21 +73,23 @@ fn main() {
     println!("          paper reports ~1.30x on its SST testbed");
     assert!(g > 1.0 && g < 2.0, "headline shape must hold");
 
-    // fault tolerance must actually tolerate faults
-    println!("\ncrash + recovery check (CN0 fails mid-run)...");
+    // fault tolerance must actually tolerate faults — including a second
+    // CN dying while the first recovery round is still running
+    println!("\ncrash + recovery check (CN0 fails mid-run, CN8 mid-recovery)...");
     let s = run_app(
         SimConfig {
             protocol: Protocol::ReCxlProactive,
             ops_per_thread: ops,
-            crash: Some(CrashSpec { cn: 0, at: us(120) }),
+            faults: FaultPlan::parse("cn0@120us,cn8@135us").unwrap(),
             ..SimConfig::default()
         },
         &by_name("ycsb").unwrap(),
     );
     assert!(s.recovery.happened && s.recovery.consistent);
+    assert_eq!(s.recovery.failed_cns.len(), 2, "both failures covered");
     println!(
-        "recovered {} owned lines, consistent = {}",
-        s.recovery.owned_lines, s.recovery.consistent
+        "recovered {} owned lines across {} round(s), consistent = {}",
+        s.recovery.owned_lines, s.recovery.rounds, s.recovery.consistent
     );
     println!("\nE2E OK");
 }

@@ -79,7 +79,7 @@ fn main() {
                     SimConfig {
                         protocol: Protocol::ReCxlProactive,
                         detect_delay_ps: us(d),
-                        crash: Some(CrashSpec { cn: 0, at: us(40) }),
+                        faults: FaultPlan::single_crash(0, us(40)),
                         ..base.clone()
                     },
                     &app,

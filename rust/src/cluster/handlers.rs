@@ -95,14 +95,16 @@ impl Cluster {
             // ---- recovery traffic (section V, Table I) ----
             MsgKind::ViralNotify { failed } => self.on_viral_notify(cn, failed),
             MsgKind::Msi { failed } => self.on_msi(cn, failed),
-            MsgKind::Interrupt => self.on_interrupt(cn),
-            MsgKind::InterruptResp { from } => self.on_interrupt_resp(cn, from),
-            MsgKind::FetchLatestVers { from_mn, lines } => {
-                self.on_fetch_latest_vers(cn, from_mn, lines)
+            MsgKind::Interrupt { epoch } => self.on_interrupt(cn, epoch),
+            MsgKind::InterruptResp { from, epoch } => self.on_interrupt_resp(cn, from, epoch),
+            MsgKind::FetchLatestVers { from_mn, lines, epoch } => {
+                self.on_fetch_latest_vers(cn, from_mn, lines, epoch)
             }
-            MsgKind::InitRecovResp { from_mn } => self.on_init_recov_resp(cn, from_mn),
-            MsgKind::RecovEnd => self.on_recov_end(cn),
-            MsgKind::RecovEndResp { from } => self.on_recov_end_resp(cn, from),
+            MsgKind::InitRecovResp { from_mn, epoch } => {
+                self.on_init_recov_resp(cn, from_mn, epoch)
+            }
+            MsgKind::RecovEnd { epoch } => self.on_recov_end(cn, epoch),
+            MsgKind::RecovEndResp { from, epoch } => self.on_recov_end_resp(cn, from, epoch),
             other => unreachable!("CN {cn} got {other:?}"),
         }
     }
@@ -200,12 +202,12 @@ impl Cluster {
                 );
                 vec![]
             }
-            MsgKind::InitRecov { failed } => {
-                self.on_init_recov(mn, failed);
+            MsgKind::InitRecov { failed, epoch } => {
+                self.on_init_recov(mn, failed, epoch);
                 vec![]
             }
-            MsgKind::FetchLatestVersResp { from, results } => {
-                self.on_fetch_resp(mn, from, results);
+            MsgKind::FetchLatestVersResp { from, results, epoch } => {
+                self.on_fetch_resp(mn, from, results, epoch);
                 vec![]
             }
             MsgKind::ViralNotify { failed } => {

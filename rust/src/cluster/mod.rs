@@ -22,11 +22,12 @@ pub use oracle::Oracle;
 pub use recovery_impl::RecoveryCtrl;
 
 use rustc_hash::{FxHashMap, FxHashSet};
+use std::collections::BTreeSet;
 use std::time::Instant;
 
 use crate::cache::CnCaches;
 use crate::coherence::Directory;
-use crate::config::{CnId, CoreId, Protocol, SimConfig};
+use crate::config::{CnId, CoreId, FaultKind, Protocol, SimConfig};
 use crate::cpu::sync::{Barrier, LockTable};
 use crate::cpu::{Block, Core};
 use crate::fabric::{Delivery, Fabric};
@@ -61,8 +62,10 @@ pub enum Ev {
     Crash(CnId),
     /// Switch detects the failed CN (Viral_Status set, MSI fired).
     Detect(CnId),
-    /// Quiesce deadline during recovery (see recovery_impl).
-    QuiesceTimeout(CnId),
+    /// Quiesce deadline during recovery, stamped with the round epoch
+    /// that armed it (stale timers from aborted rounds must not cut the
+    /// restarted round's drain window short — see recovery_impl).
+    QuiesceTimeout(CnId, u64),
 }
 
 /// Per-CN shared state (CXL port side).
@@ -79,6 +82,9 @@ pub struct CnState {
     pub quiescing: bool,
     /// Recovery: CN is paused (InterruptResp sent).
     pub paused: bool,
+    /// Epoch of the newest Interrupt this CN has seen (stale interrupts
+    /// from aborted recovery rounds are ignored).
+    pub interrupt_epoch: u64,
 }
 
 /// The whole simulated cluster.
@@ -106,6 +112,18 @@ pub struct Cluster {
     /// Which cores had already finished *before* the crash (detection
     /// must purge only genuinely-running dead cores from sync state).
     prefinished_at_crash: Vec<bool>,
+    /// Detected failures no completed recovery round has covered yet
+    /// (ordered, so round membership is deterministic).
+    pub(crate) unrecovered: BTreeSet<CnId>,
+    /// Monotone recovery-round generation (stamped on round messages).
+    pub(crate) recovery_epoch: u64,
+    /// Failures covered by completed rounds.
+    pub(crate) failures_recovered: usize,
+    /// (line, dead owner) pairs already counted in the recovery census
+    /// stats: a round restart re-censuses the same pair (count once), but
+    /// a line re-acquired by a survivor that later fails is a genuinely
+    /// new repair and counts again.
+    pub(crate) census_counted: FxHashSet<(Line, CnId)>,
 }
 
 impl Cluster {
@@ -139,6 +157,7 @@ impl Cluster {
                 val_ts: vec![0; cfg.n_cns],
                 quiescing: false,
                 paused: false,
+                interrupt_epoch: 0,
             })
             .collect();
         let dirs = (0..cfg.n_mns)
@@ -176,6 +195,10 @@ impl Cluster {
             finished_flag: vec![false; n_threads],
             last_progress_at: 0,
             prefinished_at_crash: vec![false; n_threads],
+            unrecovered: BTreeSet::new(),
+            recovery_epoch: 0,
+            failures_recovered: 0,
+            census_counted: FxHashSet::default(),
             cfg,
         }
     }
@@ -185,8 +208,9 @@ impl Cluster {
         eprintln!("--- stall diagnostic at {} ---", self.q.now());
         if let Some(r) = &self.recovery {
             eprintln!(
-                "recovery: failed={} cm={} complete={} pending_cns={:?} pending_mns={:?} pending_end={:?} repairs={:?}",
+                "recovery: failed={:?} epoch={} cm={} complete={} pending_cns={:?} pending_mns={:?} pending_end={:?} repairs={:?}",
                 r.failed,
+                r.epoch,
                 r.cm_cn,
                 r.complete,
                 r.pending_cns,
@@ -293,8 +317,10 @@ impl Cluster {
                 self.q.push_at(self.cfg.dump_period_ps, Ev::DumpTick(cn));
             }
         }
-        if let Some(c) = self.cfg.crash {
-            self.q.push_at(c.at, Ev::Crash(c.cn));
+        for f in self.cfg.faults.events().to_vec() {
+            match f.kind {
+                FaultKind::CnCrash { cn } => self.q.push_at(f.at, Ev::Crash(cn)),
+            }
         }
         let mut last_progress = (0usize, 0u64);
         while let Some((_, ev)) = self.q.pop() {
@@ -323,13 +349,11 @@ impl Cluster {
         self.finalize(wall)
     }
 
+    /// Every fault in the plan has been injected, detected, and covered by
+    /// a completed recovery round.  Until then the event loop keeps
+    /// running even after all live cores finish their traces.
     fn recovery_is_settled(&self) -> bool {
-        match (&self.cfg.crash, &self.recovery) {
-            (None, _) => true,
-            (Some(_), Some(r)) => r.is_complete(),
-            // crash scheduled but not yet fired/detected
-            (Some(c), None) => self.q.now() < c.at,
-        }
+        self.failures_recovered >= self.cfg.faults.len()
     }
 
     fn dispatch(&mut self, ev: Ev) {
@@ -343,7 +367,7 @@ impl Cluster {
             Ev::DumpTick(cn) => self.dump_tick(cn),
             Ev::Crash(cn) => self.crash(cn),
             Ev::Detect(cn) => self.detect(cn),
-            Ev::QuiesceTimeout(cn) => self.quiesce_timeout(cn),
+            Ev::QuiesceTimeout(cn, epoch) => self.quiesce_timeout(cn, epoch),
         }
     }
 
@@ -401,12 +425,13 @@ impl Cluster {
 /// Debug helper: when RECXL_TRACE_LINE=<hex line> is set, print protocol
 /// activity on that line.
 pub fn trace_line(line: crate::mem::Line, msg: impl FnOnce() -> String) {
-    static TARGET: once_cell::sync::Lazy<Option<u32>> = once_cell::sync::Lazy::new(|| {
+    static TARGET: std::sync::OnceLock<Option<u32>> = std::sync::OnceLock::new();
+    let target = TARGET.get_or_init(|| {
         std::env::var("RECXL_TRACE_LINE")
             .ok()
             .and_then(|v| u32::from_str_radix(v.trim_start_matches("0x"), 16).ok())
     });
-    if *TARGET == Some(line.0) {
+    if *target == Some(line.0) {
         eprintln!("[trace {:x}] {}", line.0, msg());
     }
 }
@@ -417,15 +442,11 @@ pub fn run_app(cfg: SimConfig, app: &AppProfile) -> RunStats {
 }
 
 /// Normalized execution time of `proto` vs plain write-back for `app`
-/// (the y-axis of Figs. 2, 10, 16-18).
+/// (the y-axis of Figs. 2, 10, 16-18).  The WB baseline is memoized
+/// process-wide (`figures::wb_exec_time`): repeated slowdown queries and
+/// figure sweeps run WB once per distinct (config, app).
 pub fn slowdown_vs_wb(cfg: &SimConfig, app: &AppProfile, proto: Protocol) -> f64 {
-    let wb = run_app(
-        SimConfig {
-            protocol: Protocol::WriteBack,
-            ..cfg.clone()
-        },
-        app,
-    );
+    let wb = crate::figures::wb_exec_time(cfg, app);
     let p = run_app(
         SimConfig {
             protocol: proto,
@@ -433,5 +454,5 @@ pub fn slowdown_vs_wb(cfg: &SimConfig, app: &AppProfile, proto: Protocol) -> f64
         },
         app,
     );
-    p.exec_time_ps as f64 / wb.exec_time_ps as f64
+    p.exec_time_ps as f64 / wb as f64
 }

@@ -61,6 +61,36 @@ impl Oracle {
         self.last.get(&(line, word)).map(|c| c.value)
     }
 
+    /// Recovery applied `value` (provenance `(cn, repl_seq)`) to a word
+    /// and [`Self::verify_word`] accepted it: promote the repair to the
+    /// committed truth.  Under an arbitrary fault sequence each recovery
+    /// round must validate against the *recovered* state left by earlier
+    /// rounds, not the pre-crash history — without promotion, a later
+    /// round could resurrect an entry the oracle still considered "newer
+    /// in-flight" and silently regress repaired memory.
+    pub fn on_recovery_applied(
+        &mut self,
+        line: Line,
+        word: u8,
+        value: u32,
+        cn: CnId,
+        repl_seq: u64,
+    ) {
+        if !line.is_remote() {
+            return;
+        }
+        self.last.insert(
+            (line, word),
+            Committed {
+                value,
+                cn,
+                repl_seq,
+            },
+        );
+        let e = self.committed_seq.entry((line, word, cn)).or_default();
+        *e = (*e).max(repl_seq);
+    }
+
     /// Verify a post-recovery memory word.  `applied` is the (cn,
     /// repl_seq) of the log entry recovery applied, if any.
     pub fn verify_word(
@@ -146,5 +176,29 @@ mod tests {
     fn untracked_words_always_pass() {
         let o = Oracle::default();
         assert!(o.verify_word(line(9), 3, 123, None));
+    }
+
+    #[test]
+    fn recovery_promotion_pins_later_rounds_to_the_repaired_state() {
+        let mut o = Oracle::default();
+        o.on_commit(line(1), 1, &[7; 16], 2, 5);
+        // round 1: recovery applies CN 2's newer in-flight seq-6 value 99
+        assert!(o.verify_word(line(1), 0, 99, Some((2, 6))));
+        o.on_recovery_applied(line(1), 0, 99, 2, 6);
+        // round 2 must accept the repaired value as the plain truth...
+        assert!(o.verify_word(line(1), 0, 99, None));
+        assert_eq!(o.committed_value(line(1), 0), Some(99));
+        // ...and must no longer accept seq 6 as "newer in-flight" cover
+        // for a different value (that would be a regression)
+        assert!(!o.verify_word(line(1), 0, 55, Some((2, 6))));
+        // a genuinely newer entry is still a legal forward choice
+        assert!(o.verify_word(line(1), 0, 123, Some((2, 7))));
+    }
+
+    #[test]
+    fn promotion_ignores_local_lines() {
+        let mut o = Oracle::default();
+        o.on_recovery_applied(Addr(0x0100_0040).line(), 0, 9, 1, 1);
+        assert_eq!(o.words_tracked(), 0);
     }
 }

@@ -1,14 +1,17 @@
 //! Failure injection, detection, and the distributed recovery protocol
-//! (section V, Table I, Fig. 9).
+//! (section V, Table I, Fig. 9) — generalized to arbitrary fault
+//! sequences from a [`crate::config::FaultPlan`].
 //!
-//! Timeline:
+//! Per-failure timeline:
 //! 1. `Ev::Crash(cn)` — fail-stop: the CN's cores halt, its caches and
 //!    Logging Unit are lost (the structures stay around for the
 //!    simulator's ground-truth census, Fig. 15).
 //! 2. `Ev::Detect(cn)` — the switch sets the CN's Viral_Status bit,
 //!    broadcasts `ViralNotify` (live CNs discount dead replicas; MN
 //!    directory controllers complete transactions stuck on the dead CN),
-//!    and fires the MSI electing the Configuration Manager (CM).
+//!    and fires the MSI electing the Configuration Manager (CM): the
+//!    lowest-indexed live CN, deterministically — so the CM itself dying
+//!    re-elects the next live CN.
 //! 3. CM broadcasts `Interrupt`; each CN drains outstanding work,
 //!    pauses, answers `InterruptResp`.
 //! 4. CM sends `InitRecov` to every MN; each directory controller runs
@@ -16,7 +19,18 @@
 //!    version selection, memory + directory repair, `InitRecovResp`.
 //! 5. CM broadcasts `RecovEnd`; CNs resume and answer `RecovEndResp`.
 //!
-//! Every recovery run is checked against the consistency oracle.
+//! Multi-failure handling: recovery runs in **rounds**.  A round covers
+//! every failure detected so far that no completed round has repaired.
+//! When another CN dies mid-round — including the CM — its MSI *restarts*
+//! the round under a fresh `epoch` covering the enlarged failure set; the
+//! quiesce/census/repair machinery of Table I is simply re-entered, and
+//! stale responses from the aborted round are dropped by epoch mismatch.
+//! Sequential failures (the previous round already completed) start a
+//! fresh round the same way.
+//!
+//! Every repair is checked against the consistency oracle; accepted
+//! repairs are promoted to the oracle's committed truth so later rounds
+//! validate against the *recovered* state, not pre-crash history.
 
 use std::collections::{HashMap, HashSet};
 
@@ -32,15 +46,19 @@ use crate::sim::time::lu_cycles;
 
 /// Per-MN repair bookkeeping while log responses are outstanding.
 pub struct MnRepair {
-    pub owned: Vec<Line>,
+    /// Lines to repair, each with the dead CN that owned it.
+    pub owned: Vec<(Line, CnId)>,
     pub expected: HashSet<CnId>,
     pub responses: HashMap<CnId, HashMap<Line, VersionList>>,
 }
 
-/// The Configuration Manager's state machine.
+/// The Configuration Manager's state machine for one recovery round.
 pub struct RecoveryCtrl {
-    pub failed: CnId,
+    /// Failures covered by this round (ascending CN order).
+    pub failed: Vec<CnId>,
     pub cm_cn: CnId,
+    /// Round generation; stamped on every message of the round.
+    pub epoch: u64,
     pub pending_cns: HashSet<CnId>,
     pub pending_mns: HashSet<MnId>,
     pub pending_end: HashSet<CnId>,
@@ -62,9 +80,13 @@ impl Cluster {
             return;
         }
         self.dead[cn] = true;
+        self.unrecovered.insert(cn);
         // Fig. 15 ground truth: what was in the caches at the instant of
-        // the crash.
-        self.stats.recovery.cache_census = self.caches[cn].census();
+        // the crash (accumulated over the fault plan).
+        let census = self.caches[cn].census();
+        self.stats.recovery.cache_census.dirty += census.dirty;
+        self.stats.recovery.cache_census.exclusive += census.exclusive;
+        self.stats.recovery.cache_census.shared += census.shared;
         for local in 0..self.cfg.cores_per_cn {
             let id = self.core_id(cn, local);
             self.cores[id].block = Block::Dead;
@@ -84,7 +106,9 @@ impl Cluster {
     pub(crate) fn detect(&mut self, failed: CnId) {
         let now = self.q.now();
         self.fabric.set_viral(failed);
-        self.stats.recovery.detection_at = now;
+        if self.stats.recovery.detection_at == 0 {
+            self.stats.recovery.detection_at = now;
+        }
         // purge dead cores from sync structures so live threads make
         // forward progress (section V-B)
         let cores_per = self.cfg.cores_per_cn;
@@ -127,7 +151,9 @@ impl Cluster {
                 },
             );
         }
-        // MSI to the Configuration Manager: first live CN, core 0
+        // MSI to the Configuration Manager: lowest-indexed live CN (the
+        // deterministic re-election rule — if the previous CM died, the
+        // next live CN takes over)
         let cm = live.first().copied().expect("no live CN to recover on");
         self.send(
             now,
@@ -150,27 +176,52 @@ impl Cluster {
 
     // ----------------------------------------------- CM + interrupts ----
 
-    pub(crate) fn on_msi(&mut self, cn: CnId, failed: CnId) {
-        if self.recovery.is_some() {
+    pub(crate) fn on_msi(&mut self, cn: CnId, _failed: CnId) {
+        // Every failure this MSI could be about is already recovered (a
+        // round triggered by an earlier failure covered it): nothing to do.
+        if self.unrecovered.is_empty() {
             return;
         }
-        self.stats.recovery.count("Msi");
+        // Duplicate MSI: an active round on a live CM already covers every
+        // unrecovered failure — nothing to do.  Anything else (no round,
+        // finished round, a new failure, or a dead CM) starts or restarts
+        // a round on the freshly-elected CM.
+        if let Some(r) = &self.recovery {
+            if !r.complete
+                && r.cm_cn == cn
+                && !self.dead[r.cm_cn]
+                && self.unrecovered.iter().all(|f| r.failed.contains(f))
+            {
+                return;
+            }
+        }
+        self.start_recovery_round(cn);
+    }
+
+    /// Start (or restart) a recovery round on CM `cm`, covering every
+    /// detected-but-unrecovered failure.
+    fn start_recovery_round(&mut self, cm: CnId) {
         let now = self.q.now();
+        self.recovery_epoch += 1;
+        let epoch = self.recovery_epoch;
+        let failed: Vec<CnId> = self.unrecovered.iter().copied().collect();
+        self.stats.recovery.count("Msi");
         let live: HashSet<CnId> = self.live_cns().collect();
         for &c in &live {
             self.stats.recovery.count("Interrupt");
             self.send(
                 now,
                 Message {
-                    src: NodeId::Cn(cn),
+                    src: NodeId::Cn(cm),
                     dst: NodeId::Cn(c),
-                    kind: MsgKind::Interrupt,
+                    kind: MsgKind::Interrupt { epoch },
                 },
             );
         }
         self.recovery = Some(RecoveryCtrl {
             failed,
-            cm_cn: cn,
+            cm_cn: cm,
+            epoch,
             pending_cns: live,
             pending_mns: HashSet::new(),
             pending_end: HashSet::new(),
@@ -179,7 +230,11 @@ impl Cluster {
         });
     }
 
-    pub(crate) fn on_interrupt(&mut self, cn: CnId) {
+    pub(crate) fn on_interrupt(&mut self, cn: CnId, epoch: u64) {
+        if epoch < self.cns[cn].interrupt_epoch {
+            return; // stale interrupt from an aborted round
+        }
+        self.cns[cn].interrupt_epoch = epoch;
         self.cns[cn].quiescing = true;
         for local in 0..self.cfg.cores_per_cn {
             let id = self.core_id(cn, local);
@@ -192,14 +247,16 @@ impl Cluster {
         // InterruptResp.  The timeout breaks the cycle: whatever is still
         // outstanding then is exactly the deferred set.
         self.q
-            .push_in(crate::sim::time::us(25), Ev::QuiesceTimeout(cn));
+            .push_in(crate::sim::time::us(25), Ev::QuiesceTimeout(cn, epoch));
         self.try_quiesce(cn);
     }
 
     /// Quiesce deadline reached: answer the Interrupt with whatever is
-    /// still deferred at the directories.
-    pub(crate) fn quiesce_timeout(&mut self, cn: CnId) {
-        if !self.cns[cn].quiescing || self.dead[cn] {
+    /// still deferred at the directories.  A timer armed by an aborted
+    /// round (older epoch) must not cut the restarted round's drain
+    /// window short.
+    pub(crate) fn quiesce_timeout(&mut self, cn: CnId, epoch: u64) {
+        if !self.cns[cn].quiescing || self.dead[cn] || epoch != self.cns[cn].interrupt_epoch {
             return;
         }
         self.finish_quiesce(cn);
@@ -232,6 +289,7 @@ impl Cluster {
         }
         let Some(ctrl) = &self.recovery else { return };
         let cm = ctrl.cm_cn;
+        let epoch = self.cns[cn].interrupt_epoch;
         let now = self.q.now();
         self.stats.recovery.count("InterruptResp");
         self.send(
@@ -239,24 +297,30 @@ impl Cluster {
             Message {
                 src: NodeId::Cn(cn),
                 dst: NodeId::Cn(cm),
-                kind: MsgKind::InterruptResp { from: cn },
+                kind: MsgKind::InterruptResp { from: cn, epoch },
             },
         );
     }
 
-    pub(crate) fn on_interrupt_resp(&mut self, _cm_cn: CnId, from: CnId) {
+    pub(crate) fn on_interrupt_resp(&mut self, _cm_cn: CnId, from: CnId, epoch: u64) {
         let now = self.q.now();
-        let (all_in, cm_cn) = {
+        let (all_in, cm_cn, failed) = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
+            if ctrl.epoch != epoch || ctrl.complete {
+                return; // response from an aborted round
+            }
             ctrl.pending_cns.remove(&from);
-            (ctrl.pending_cns.is_empty(), ctrl.cm_cn)
+            (
+                ctrl.pending_cns.is_empty(),
+                ctrl.cm_cn,
+                ctrl.failed.clone(),
+            )
         };
         if !all_in {
             return;
         }
         // phase 2: directory-level recovery on every MN
         let mut pending = HashSet::new();
-        let failed = self.recovery.as_ref().unwrap().failed;
         for mn in 0..self.cfg.n_mns {
             pending.insert(mn);
             self.stats.recovery.count("InitRecov");
@@ -265,7 +329,7 @@ impl Cluster {
                 Message {
                     src: NodeId::Cn(cm_cn),
                     dst: NodeId::Mn(mn),
-                    kind: MsgKind::InitRecov { failed },
+                    kind: MsgKind::InitRecov { failed: failed.clone(), epoch },
                 },
             );
         }
@@ -274,45 +338,67 @@ impl Cluster {
 
     // ----------------------------------------------- directory repair ---
 
-    pub(crate) fn on_init_recov(&mut self, mn: MnId, failed: CnId) {
+    pub(crate) fn on_init_recov(&mut self, mn: MnId, failed: Vec<CnId>, epoch: u64) {
         let now = self.q.now();
-        // complete transactions stuck on the dead CN, then census
-        let out = self.dirs[mn].recovery_unblock(failed);
-        for (d, m) in out {
-            self.send(now + d, m);
+        if self.recovery.as_ref().map(|r| r.epoch) != Some(epoch) {
+            return; // aborted round
         }
-        let (owned, shared) = self.dirs[mn].recovery_census(failed);
-        self.stats.recovery.shared_lines += shared;
-        self.stats.recovery.owned_lines += owned.len() as u64;
-        for l in &owned {
-            match self.caches[failed].state(*l).map(|s| s.mesi) {
-                Some(Mesi::Modified) => self.stats.recovery.dirty_lines += 1,
-                _ => self.stats.recovery.exclusive_lines += 1,
+        // complete transactions stuck on the dead CNs, then census — per
+        // failure, attributing each owned line to its dead owner
+        let mut owned_all: Vec<(Line, CnId)> = Vec::new();
+        for &f in &failed {
+            self.dirs[mn].mark_dead(f);
+            let out = self.dirs[mn].recovery_unblock(f);
+            for (d, m) in out {
+                self.send(now + d, m);
+            }
+            let (owned, shared) = self.dirs[mn].recovery_census(f);
+            self.stats.recovery.shared_lines += shared;
+            for l in owned {
+                // a round restart re-censuses lines the aborted round saw;
+                // count each (line, dead owner) repair once
+                if self.census_counted.insert((l, f)) {
+                    self.stats.recovery.owned_lines += 1;
+                    match self.caches[f].state(l).map(|s| s.mesi) {
+                        Some(Mesi::Modified) => self.stats.recovery.dirty_lines += 1,
+                        _ => self.stats.recovery.exclusive_lines += 1,
+                    }
+                }
+                owned_all.push((l, f));
             }
         }
-        if owned.is_empty() {
-            self.finish_mn_repair(mn);
+        if owned_all.is_empty() {
+            self.finish_mn_repair(mn, epoch);
             return;
         }
         // group owned lines by the replica-window CNs that may hold them
-        let mut per_cn: HashMap<CnId, Vec<Line>> = HashMap::new();
-        for &l in &owned {
+        // (BTreeMap: the query order must be deterministic)
+        let mut per_cn: std::collections::BTreeMap<CnId, Vec<Line>> = Default::default();
+        for &(l, owner) in &owned_all {
             for c in replica_window(l, self.cfg.n_cns, self.cfg.n_r) {
-                if c != failed && !self.dead[c] {
+                if c != owner && !self.dead[c] {
                     per_cn.entry(c).or_default().push(l);
                 }
             }
         }
         let expected: HashSet<CnId> = per_cn.keys().copied().collect();
+        let no_replicas = expected.is_empty();
         let Some(ctrl) = self.recovery.as_mut() else { return };
         ctrl.repairs.insert(
             mn,
             MnRepair {
-                owned,
+                owned: owned_all,
                 expected,
                 responses: HashMap::new(),
             },
         );
+        if no_replicas {
+            // every replica of every owned line is dead: repair straight
+            // from the MN-resident dumped logs (or release the lines)
+            self.repair_mn(mn);
+            self.finish_mn_repair(mn, epoch);
+            return;
+        }
         for (cn, lines) in per_cn {
             self.stats.recovery.count("FetchLatestVers");
             self.send(
@@ -320,14 +406,20 @@ impl Cluster {
                 Message {
                     src: NodeId::Mn(mn),
                     dst: NodeId::Cn(cn),
-                    kind: MsgKind::FetchLatestVers { from_mn: mn, lines },
+                    kind: MsgKind::FetchLatestVers { from_mn: mn, lines, epoch },
                 },
             );
         }
     }
 
     /// A replica CN's Logging Unit runs Algorithm 2.
-    pub(crate) fn on_fetch_latest_vers(&mut self, cn: CnId, from_mn: MnId, lines: Vec<Line>) {
+    pub(crate) fn on_fetch_latest_vers(
+        &mut self,
+        cn: CnId,
+        from_mn: MnId,
+        lines: Vec<Line>,
+        epoch: u64,
+    ) {
         let now = self.q.now();
         let results = self.logunits[cn].fetch_latest_vers(&lines);
         // software handler cost: proportional to a log traversal
@@ -338,14 +430,23 @@ impl Cluster {
             Message {
                 src: NodeId::Cn(cn),
                 dst: NodeId::Mn(from_mn),
-                kind: MsgKind::FetchLatestVersResp { from: cn, results },
+                kind: MsgKind::FetchLatestVersResp { from: cn, results, epoch },
             },
         );
     }
 
-    pub(crate) fn on_fetch_resp(&mut self, mn: MnId, from: CnId, results: Vec<VersionList>) {
+    pub(crate) fn on_fetch_resp(
+        &mut self,
+        mn: MnId,
+        from: CnId,
+        results: Vec<VersionList>,
+        epoch: u64,
+    ) {
         let done = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
+            if ctrl.epoch != epoch {
+                return; // aborted round
+            }
             let Some(rep) = ctrl.repairs.get_mut(&mn) else { return };
             let map: HashMap<Line, VersionList> =
                 results.into_iter().map(|v| (v.line, v)).collect();
@@ -354,15 +455,14 @@ impl Cluster {
         };
         if done {
             self.repair_mn(mn);
-            self.finish_mn_repair(mn);
+            self.finish_mn_repair(mn, epoch);
         }
     }
 
     /// Algorithm 1's core: select + apply the latest version per owned
-    /// line, then verify against the oracle.
+    /// line (per dead owner), then verify against the oracle.
     fn repair_mn(&mut self, mn: MnId) {
         let Some(ctrl) = self.recovery.as_ref() else { return };
-        let failed = ctrl.failed;
         let Some(rep) = ctrl.repairs.get(&mn) else { return };
         let owned = rep.owned.clone();
         // borrow-friendly copies of the response lists per line
@@ -372,13 +472,13 @@ impl Cluster {
                 per_line.entry(*l).or_default().push(v.clone());
             }
         }
-        for line in owned {
+        for (line, owner) in owned {
             let lists: Vec<&VersionList> = per_line
                 .get(&line)
                 .map(|v| v.iter().collect())
                 .unwrap_or_default();
             let fallback = self.dirs[mn].mn_log_latest(line);
-            match select_version(line, failed, &lists, &fallback) {
+            match select_version(line, owner, &lists, &fallback) {
                 Some(rl) => {
                     let out = self.dirs[mn].recovery_apply(line, rl.mask, &rl.words);
                     let now = self.q.now();
@@ -401,13 +501,18 @@ impl Cluster {
                         );
                         if !ok {
                             self.stats.recovery.inconsistencies += 1;
+                        } else if let Some((acn, aseq)) = rl.provenance[w as usize] {
+                            // promote the accepted repair to committed
+                            // truth: later rounds must not regress it
+                            self.oracle
+                                .on_recovery_applied(line, w, mem[w as usize], acn, aseq);
                         }
                     }
                 }
                 None => {
                     // Exclusive-clean in the dead CN: memory already holds
                     // the latest data; just release ownership.
-                    let out = self.dirs[mn].recovery_release(line, failed);
+                    let out = self.dirs[mn].recovery_release(line, owner);
                     let now = self.q.now();
                     for (d, m) in out {
                         self.send(now + d, m);
@@ -423,9 +528,12 @@ impl Cluster {
         }
     }
 
-    fn finish_mn_repair(&mut self, mn: MnId) {
+    fn finish_mn_repair(&mut self, mn: MnId, epoch: u64) {
         let now = self.q.now();
         let Some(ctrl) = self.recovery.as_ref() else { return };
+        if ctrl.epoch != epoch {
+            return;
+        }
         let cm = ctrl.cm_cn;
         self.stats.recovery.count("InitRecovResp");
         self.send(
@@ -433,15 +541,18 @@ impl Cluster {
             Message {
                 src: NodeId::Mn(mn),
                 dst: NodeId::Cn(cm),
-                kind: MsgKind::InitRecovResp { from_mn: mn },
+                kind: MsgKind::InitRecovResp { from_mn: mn, epoch },
             },
         );
     }
 
-    pub(crate) fn on_init_recov_resp(&mut self, _cm_cn: CnId, from_mn: MnId) {
+    pub(crate) fn on_init_recov_resp(&mut self, _cm_cn: CnId, from_mn: MnId, epoch: u64) {
         let now = self.q.now();
         let (all_in, cm_cn) = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
+            if ctrl.epoch != epoch || ctrl.complete {
+                return;
+            }
             ctrl.pending_mns.remove(&from_mn);
             (ctrl.pending_mns.is_empty(), ctrl.cm_cn)
         };
@@ -456,7 +567,7 @@ impl Cluster {
                 Message {
                     src: NodeId::Cn(cm_cn),
                     dst: NodeId::Cn(c),
-                    kind: MsgKind::RecovEnd,
+                    kind: MsgKind::RecovEnd { epoch },
                 },
             );
         }
@@ -465,7 +576,13 @@ impl Cluster {
 
     // ----------------------------------------------- resume -------------
 
-    pub(crate) fn on_recov_end(&mut self, cn: CnId) {
+    pub(crate) fn on_recov_end(&mut self, cn: CnId, epoch: u64) {
+        if epoch < self.cns[cn].interrupt_epoch {
+            // delayed RecovEnd from an aborted round: this CN has already
+            // re-quiesced for the restarted round — resuming it now would
+            // let its cores mutate lines mid-repair
+            return;
+        }
         let now = self.q.now();
         self.cns[cn].paused = false;
         self.cns[cn].quiescing = false;
@@ -486,20 +603,33 @@ impl Cluster {
             Message {
                 src: NodeId::Cn(cn),
                 dst: NodeId::Cn(cm),
-                kind: MsgKind::RecovEndResp { from: cn },
+                kind: MsgKind::RecovEndResp { from: cn, epoch },
             },
         );
     }
 
-    pub(crate) fn on_recov_end_resp(&mut self, _cm_cn: CnId, from: CnId) {
+    pub(crate) fn on_recov_end_resp(&mut self, _cm_cn: CnId, from: CnId, epoch: u64) {
         let now = self.q.now();
-        let Some(ctrl) = self.recovery.as_mut() else { return };
-        ctrl.pending_end.remove(&from);
-        if ctrl.pending_end.is_empty() {
+        let covered = {
+            let Some(ctrl) = self.recovery.as_mut() else { return };
+            if ctrl.epoch != epoch || ctrl.complete {
+                return;
+            }
+            ctrl.pending_end.remove(&from);
+            if !ctrl.pending_end.is_empty() {
+                return;
+            }
             ctrl.complete = true;
-            self.stats.recovery.happened = true;
-            self.stats.recovery.completed_at = now;
-            self.stats.recovery.consistent = self.stats.recovery.inconsistencies == 0;
+            ctrl.failed.clone()
+        };
+        for f in &covered {
+            self.unrecovered.remove(f);
         }
+        self.failures_recovered += covered.len();
+        self.stats.recovery.failed_cns.extend(covered);
+        self.stats.recovery.rounds += 1;
+        self.stats.recovery.happened = true;
+        self.stats.recovery.completed_at = now;
+        self.stats.recovery.consistent = self.stats.recovery.inconsistencies == 0;
     }
 }

@@ -1,0 +1,281 @@
+//! Fault plans: ordered, timed fault injections.
+//!
+//! The simulator used to carry a single `Option<CrashSpec>`; a
+//! [`FaultPlan`] generalizes that to an arbitrary sequence of timed fault
+//! events, so multi-failure scenarios — a second CN dying mid-recovery,
+//! the Configuration Manager itself failing, up to `N_r` concurrent
+//! failures — become first-class, scriptable workloads (the paper's
+//! replication factor `N_r` is exactly a claim about how many such
+//! failures the system survives).
+//!
+//! Plans come from three places, all producing the same structure:
+//! * CLI / config file: `faults = cn0@12.5ms, cn3@20us` (bare numbers are
+//!   microseconds);
+//! * the scenario registry (`crate::scenarios`);
+//! * code, via [`FaultPlan::single_crash`] / [`FaultPlan::push_crash`].
+
+use super::CnId;
+use crate::sim::time::{fmt_ps, Ps};
+
+/// What fails.  CN fail-stop crashes are the only kind the simulator
+/// injects today; the enum is the extension point for MN and link faults
+/// (parse rejects them explicitly until they are modeled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail-stop crash of a compute node (section V's failure model).
+    CnCrash { cn: CnId },
+}
+
+/// One timed fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: Ps,
+    pub kind: FaultKind,
+}
+
+/// An ordered list of timed fault events.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+/// Legacy default crash time (the paper's Fig. 15 crashes CN0 at 12.5 ms).
+pub const DEFAULT_CRASH_AT: Ps = 12_500_000_000;
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// The old single-shot injection, as a plan.
+    pub fn single_crash(cn: CnId, at: Ps) -> Self {
+        let mut p = FaultPlan::default();
+        p.push_crash(cn, at);
+        p
+    }
+
+    /// Append a CN crash.  Order is preserved as given; [`Self::validate`]
+    /// rejects out-of-order times.
+    pub fn push_crash(&mut self, cn: CnId, at: Ps) {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::CnCrash { cn },
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// CNs crashed anywhere in the plan, in event order.
+    pub fn crashed_cns(&self) -> Vec<CnId> {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::CnCrash { cn } => cn,
+            })
+            .collect()
+    }
+
+    /// First event, if any, as `(cn, at)` — the legacy single-crash view.
+    pub fn first_crash(&self) -> Option<(CnId, Ps)> {
+        self.events.first().map(|e| match e.kind {
+            FaultKind::CnCrash { cn } => (cn, e.at),
+        })
+    }
+
+    /// Legacy `crash_cn=N` override: retarget the first event (creating it
+    /// at the paper's default 12.5 ms if the plan is empty).
+    pub fn set_first_cn(&mut self, cn: CnId) {
+        match self.events.first_mut() {
+            Some(e) => e.kind = FaultKind::CnCrash { cn },
+            None => self.push_crash(cn, DEFAULT_CRASH_AT),
+        }
+    }
+
+    /// Legacy `crash_at_us=T` override: retime the first event (creating a
+    /// CN0 crash if the plan is empty).
+    pub fn set_first_at(&mut self, at: Ps) {
+        match self.events.first_mut() {
+            Some(e) => e.at = at,
+            None => self.push_crash(0, at),
+        }
+    }
+
+    /// Parse `cn0@12.5ms,cn3@20us` (bare times are microseconds).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (node, at) = tok
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{tok}': expected cn<N>@<time>"))?;
+            let node = node.trim().to_ascii_lowercase();
+            let Some(id) = node.strip_prefix("cn") else {
+                return Err(format!(
+                    "fault '{tok}': only CN crashes are supported (cn<N>@<time>)"
+                ));
+            };
+            let cn: CnId = id
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault '{tok}': bad CN index"))?;
+            plan.push_crash(cn, parse_time(at)?);
+        }
+        Ok(plan)
+    }
+
+    /// Check the plan against a cluster size: every CN in range, times
+    /// non-decreasing, no CN crashing twice, and at least one survivor.
+    pub fn validate(&self, n_cns: usize) -> Result<(), String> {
+        let mut last: Ps = 0;
+        let mut seen = vec![false; n_cns];
+        for e in &self.events {
+            let FaultKind::CnCrash { cn } = e.kind;
+            if cn >= n_cns {
+                return Err(format!("fault cn {cn} out of range (n_cns = {n_cns})"));
+            }
+            if seen[cn] {
+                return Err(format!("cn {cn} crashes twice in the fault plan"));
+            }
+            seen[cn] = true;
+            if e.at < last {
+                return Err(format!(
+                    "fault plan times must be non-decreasing (cn {cn} at {} after {})",
+                    fmt_ps(e.at),
+                    fmt_ps(last)
+                ));
+            }
+            last = e.at;
+        }
+        if !self.events.is_empty() && self.events.len() >= n_cns {
+            return Err("fault plan must leave at least one CN alive".into());
+        }
+        Ok(())
+    }
+
+    /// Human-readable one-liner, e.g. `cn0@12.500 ms, cn3@20.000 us`.
+    pub fn summary(&self) -> String {
+        if self.events.is_empty() {
+            return "none".to_string();
+        }
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::CnCrash { cn } => format!("cn{cn}@{}", fmt_ps(e.at)),
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// Parse a time with an optional `ms`/`us`/`ns`/`ps` suffix (bare numbers
+/// are microseconds), into picoseconds.
+fn parse_time(s: &str) -> Result<Ps, String> {
+    let s = s.trim();
+    let (num, mult): (&str, f64) = if let Some(p) = s.strip_suffix("ms") {
+        (p, 1e9)
+    } else if let Some(p) = s.strip_suffix("us") {
+        (p, 1e6)
+    } else if let Some(p) = s.strip_suffix("ns") {
+        (p, 1e3)
+    } else if let Some(p) = s.strip_suffix("ps") {
+        (p, 1.0)
+    } else {
+        (s, 1e6)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad fault time: '{s}'"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("bad fault time: '{s}'"));
+    }
+    Ok((v * mult).round() as Ps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{ms, ns, us};
+
+    #[test]
+    fn parses_the_issue_example() {
+        let p = FaultPlan::parse("cn0@12.5ms,cn3@20ms").unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.crashed_cns(), vec![0, 3]);
+        assert_eq!(p.events()[0].at, ms(12) + us(500));
+        assert_eq!(p.events()[1].at, ms(20));
+        assert!(p.validate(16).is_ok());
+    }
+
+    #[test]
+    fn parses_all_time_units_and_bare_us() {
+        let p = FaultPlan::parse("cn1@500ns, cn2@30us, cn3@1ms, cn4@42").unwrap();
+        assert_eq!(p.events()[0].at, ns(500));
+        assert_eq!(p.events()[1].at, us(30));
+        assert_eq!(p.events()[2].at, ms(1));
+        assert_eq!(p.events()[3].at, us(42));
+    }
+
+    #[test]
+    fn rejects_malformed_tokens() {
+        assert!(FaultPlan::parse("cn0").is_err(), "missing @time");
+        assert!(FaultPlan::parse("mn0@5us").is_err(), "MN faults not modeled");
+        assert!(FaultPlan::parse("cnx@5us").is_err(), "bad CN index");
+        assert!(FaultPlan::parse("cn0@fast").is_err(), "bad time");
+        assert!(FaultPlan::parse("cn0@-5us").is_err(), "negative time");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_and_unsorted_and_dup() {
+        let p = FaultPlan::parse("cn9@5us").unwrap();
+        assert!(p.validate(8).is_err(), "cn out of range");
+        let p = FaultPlan::parse("cn0@50us,cn1@20us").unwrap();
+        assert!(p.validate(8).is_err(), "unsorted times");
+        let p = FaultPlan::parse("cn0@20us,cn0@50us").unwrap();
+        assert!(p.validate(8).is_err(), "same CN twice");
+        let p = FaultPlan::parse("cn0@1us,cn1@2us").unwrap();
+        assert!(p.validate(2).is_err(), "no survivor left");
+        assert!(p.validate(3).is_ok());
+    }
+
+    #[test]
+    fn empty_plan_is_valid_and_empty() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.is_empty());
+        assert!(p.validate(4).is_ok());
+        assert_eq!(p.summary(), "none");
+        assert_eq!(p.first_crash(), None);
+    }
+
+    #[test]
+    fn legacy_first_crash_mutators_compose() {
+        let mut p = FaultPlan::default();
+        p.set_first_cn(3);
+        assert_eq!(p.first_crash(), Some((3, DEFAULT_CRASH_AT)));
+        p.set_first_at(us(100));
+        assert_eq!(p.first_crash(), Some((3, us(100))));
+        let mut q = FaultPlan::default();
+        q.set_first_at(us(7));
+        assert_eq!(q.first_crash(), Some((0, us(7))));
+    }
+
+    #[test]
+    fn summary_round_trips_through_parse() {
+        let p = FaultPlan::parse("cn2@30us,cn5@1.5ms").unwrap();
+        let q = FaultPlan::parse(&p.summary()).unwrap();
+        assert_eq!(p, q);
+    }
+}

@@ -1,8 +1,10 @@
 //! Configuration system: Table II architecture parameters, the five
 //! evaluated protocol configurations, and CLI-style `key=value` overrides.
 
+pub mod faults;
 pub mod parse;
 
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 pub use parse::{apply_file, apply_override};
 
 use crate::sim::time::{self, Ps};
@@ -66,13 +68,6 @@ impl Protocol {
             _ => return None,
         })
     }
-}
-
-/// Crash injection: fail `cn` at `at` ps (Fig. 15 uses CN 0 @ 12.5 ms).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct CrashSpec {
-    pub cn: CnId,
-    pub at: Ps,
 }
 
 /// One cache level's geometry.
@@ -147,7 +142,9 @@ pub struct SimConfig {
     pub seed: u64,
 
     // --- failure injection ---
-    pub crash: Option<CrashSpec>,
+    /// Ordered, timed fault events (Fig. 15 uses a single CN0 crash at
+    /// 12.5 ms; scenarios inject several).
+    pub faults: FaultPlan,
     /// Switch CN-failure detection delay (Viral_Status set after this).
     pub detect_delay_ps: Ps,
 
@@ -197,7 +194,7 @@ impl Default for SimConfig {
             ops_per_thread: 100_000,
             barrier_period: 20_000,
             seed: 0xCE_C5_1,
-            crash: None,
+            faults: FaultPlan::default(),
             detect_delay_ps: time::us(10),
             use_pjrt: false,
             artifacts_dir: "artifacts".to_string(),
@@ -249,11 +246,7 @@ impl SimConfig {
         if self.link_bw_gbps == 0 {
             return Err("link bandwidth must be nonzero".into());
         }
-        if let Some(c) = self.crash {
-            if c.cn >= self.n_cns {
-                return Err(format!("crash cn {} out of range", c.cn));
-            }
-        }
+        self.faults.validate(self.n_cns)?;
         Ok(())
     }
 }
@@ -317,8 +310,10 @@ mod tests {
         assert!(c.validate().is_err()); // n_r=3 needs 4 CNs
         c.n_r = 2;
         assert!(c.validate().is_ok());
-        c.crash = Some(CrashSpec { cn: 99, at: 0 });
+        c.faults = FaultPlan::single_crash(99, 0);
         assert!(c.validate().is_err());
+        c.faults = FaultPlan::parse("cn0@50us,cn1@20us").unwrap();
+        assert!(c.validate().is_err(), "unsorted plans rejected at config level");
     }
 
     #[test]

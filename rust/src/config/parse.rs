@@ -5,7 +5,7 @@
 //! `--config` file; `#` comments allowed).  Keys mirror the `SimConfig`
 //! fields used by the paper's sweeps.
 
-use super::{CrashSpec, Protocol, SimConfig};
+use super::{FaultPlan, Protocol, SimConfig};
 use crate::sim::time;
 
 /// Apply a single `key=value` override to `cfg`.
@@ -37,23 +37,10 @@ pub fn apply_override(cfg: &mut SimConfig, key: &str, value: &str) -> Result<(),
         "ops_per_thread" | "ops" => cfg.ops_per_thread = num!(),
         "barrier_period" => cfg.barrier_period = num!(),
         "seed" => cfg.seed = num!(),
-        "crash_cn" => {
-            let cn = num!();
-            cfg.crash = Some(match cfg.crash {
-                Some(c) => CrashSpec { cn, at: c.at },
-                None => CrashSpec {
-                    cn,
-                    at: time::ms(12) + time::us(500),
-                },
-            });
-        }
-        "crash_at_us" => {
-            let at = time::us(num!());
-            cfg.crash = Some(match cfg.crash {
-                Some(c) => CrashSpec { cn: c.cn, at },
-                None => CrashSpec { cn: 0, at },
-            });
-        }
+        "faults" => cfg.faults = FaultPlan::parse(value)?,
+        // legacy single-crash keys: operate on the plan's first event
+        "crash_cn" => cfg.faults.set_first_cn(num!()),
+        "crash_at_us" => cfg.faults.set_first_at(time::us(num!())),
         "use_pjrt" => cfg.use_pjrt = parse_bool(value).ok_or_else(|| bad("bool"))?,
         "artifacts_dir" => cfg.artifacts_dir = value.to_string(),
         "detect_delay_us" => cfg.detect_delay_ps = time::us(num!()),
@@ -108,9 +95,32 @@ mod tests {
         let mut c = SimConfig::default();
         apply_override(&mut c, "crash_cn", "0").unwrap();
         // default crash time is the paper's 12.5 ms
-        assert_eq!(c.crash.unwrap().at, time::us(12_500));
+        assert_eq!(c.faults.first_crash().unwrap().1, time::us(12_500));
         apply_override(&mut c, "crash_at_us", "100").unwrap();
-        assert_eq!(c.crash.unwrap(), CrashSpec { cn: 0, at: time::us(100) });
+        assert_eq!(c.faults.first_crash(), Some((0, time::us(100))));
+        assert_eq!(c.faults.len(), 1, "legacy keys drive a single event");
+    }
+
+    #[test]
+    fn fault_plan_key_applies_and_rejects() {
+        let mut c = SimConfig::default();
+        apply_override(&mut c, "faults", "cn0@12.5ms, cn3@20ms").unwrap();
+        assert_eq!(c.faults.crashed_cns(), vec![0, 3]);
+        assert_eq!(c.faults.events()[0].at, time::ms(12) + time::us(500));
+        assert!(c.validate().is_ok());
+        assert!(apply_override(&mut c, "faults", "cn0@nope").is_err());
+        // out-of-range CNs parse but fail config validation
+        apply_override(&mut c, "faults", "cn99@5us").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fault_plan_from_config_file() {
+        let mut c = SimConfig::default();
+        apply_file(&mut c, "n_cns = 8\nfaults = cn1@30us, cn2@55us # double\n").unwrap();
+        assert_eq!(c.faults.len(), 2);
+        assert_eq!(c.faults.crashed_cns(), vec![1, 2]);
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -211,7 +211,7 @@ mod tests {
         let to_dead = Message {
             src: NodeId::Cn(0),
             dst: NodeId::Cn(3),
-            kind: MsgKind::Interrupt,
+            kind: MsgKind::Interrupt { epoch: 1 },
         };
         assert_eq!(f.send(0, &to_dead, &mut t), Delivery::Dropped);
         assert_eq!(f.dropped_to_dead, 1);

@@ -3,7 +3,8 @@
 //! ```text
 //! recxl run   [--app NAME] [--protocol P] [--set k=v ...] [--config FILE]
 //! recxl figure <2|10..18>  [--ops N] [--no-parallel]
-//! recxl recover [--app NAME] [--crash-at-us T] [--set k=v ...]
+//! recxl recover [--app NAME] [--crash-at-us T] [--set faults=cn0@30us,cn3@45us ...]
+//! recxl scenarios [NAME|all] [--app NAME] [--ops N] [--set k=v ...]
 //! recxl apps
 //! recxl trace-check        # PJRT artifact vs Rust generator parity
 //! ```
@@ -39,6 +40,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "run" => cmd_run(rest),
         "figure" => cmd_figure(rest),
         "recover" => cmd_recover(rest),
+        "scenarios" => cmd_scenarios(rest),
         "apps" => {
             for a in all_apps() {
                 println!(
@@ -64,7 +66,9 @@ fn print_help() {
          commands:\n  \
          run      [--app NAME] [--protocol P] [--set k=v]... [--config FILE]\n  \
          figure   <2|10|11|12|13|14|15|16|17|18> [--ops N] [--no-parallel]\n  \
-         recover  [--app NAME] [--set k=v]...   crash + recovery demo\n  \
+         recover  [--app NAME] [--set faults=cn0@30us,cn3@45us]...   crash + recovery demo\n  \
+         scenarios [NAME|all] [--app NAME] [--ops N] [--set k=v]...\n           \
+         (bare `scenarios` lists the registry)\n  \
          apps     list workload profiles\n  \
          trace-check  verify PJRT artifact == Rust trace generator"
     );
@@ -176,6 +180,10 @@ fn print_run(s: &RunStats) {
     if s.recovery.happened {
         println!("--- recovery ---");
         println!(
+            "failures recovered : {:?} over {} round(s)",
+            s.recovery.failed_cns, s.recovery.rounds
+        );
+        println!(
             "owned lines        : {} (dirty {}, exclusive {})",
             s.recovery.owned_lines, s.recovery.dirty_lines, s.recovery.exclusive_lines
         );
@@ -234,15 +242,12 @@ fn cmd_figure(rest: &[String]) -> Result<(), String> {
 fn cmd_recover(rest: &[String]) -> Result<(), String> {
     let (mut cfg, app) = parse_common(rest)?;
     cfg.protocol = Protocol::ReCxlProactive;
-    if cfg.crash.is_none() {
-        cfg.crash = Some(CrashSpec {
-            cn: 0,
-            at: recxl::sim::time::us(300),
-        });
+    if cfg.faults.is_empty() {
+        cfg.faults = FaultPlan::single_crash(0, recxl::sim::time::us(300));
     }
     println!(
-        "crash CN0 at {} during {} — ReCXL-proactive recovery",
-        fmt_ps(cfg.crash.unwrap().at),
+        "fault plan [{}] during {} — ReCXL-proactive recovery",
+        cfg.faults.summary(),
         app.name
     );
     let stats = run_app(cfg, &app);
@@ -254,6 +259,76 @@ fn cmd_recover(rest: &[String]) -> Result<(), String> {
         return Err("recovery left inconsistent state".into());
     }
     Ok(())
+}
+
+/// `recxl scenarios` — list the registry; `recxl scenarios NAME` — run
+/// one scenario; `recxl scenarios all` — sweep every scenario into one
+/// table.
+fn cmd_scenarios(rest: &[String]) -> Result<(), String> {
+    let Some(which) = rest.first().filter(|a| !a.starts_with("--")) else {
+        println!("named fault scenarios (run with `recxl scenarios NAME`):");
+        for sc in recxl::scenarios::all() {
+            let plan = sc.plan(&SimConfig::default());
+            println!("  {:<22} [{}]\n  {:22} {}", sc.name, plan.summary(), "", sc.about);
+        }
+        return Ok(());
+    };
+    let flags = &rest[1..];
+    if which == "all" {
+        let (cfg, app) = scenario_cfg(flags)?;
+        let t = recxl::figures::scenario_sweep(&cfg, true, app.name);
+        println!("{}", t.render());
+        return Ok(());
+    }
+    let sc = recxl::scenarios::by_name(which)
+        .ok_or_else(|| format!("unknown scenario {which} (try `recxl scenarios`)"))?;
+    let (cfg, app) = scenario_cfg(flags)?;
+    println!(
+        "scenario {} on {}: faults [{}]",
+        sc.name,
+        app.name,
+        sc.plan(&cfg).summary()
+    );
+    let stats = recxl::scenarios::run_scenario(&sc, cfg.clone(), &app);
+    print_run(&stats);
+    recxl::scenarios::verdict(&sc, &cfg, &stats)
+        .map_err(|e| format!("scenario {} failed: {e}", sc.name))?;
+    println!("\nscenario {}: OK", sc.name);
+    Ok(())
+}
+
+/// Scenario defaults: ReCXL-proactive at a run length that puts every
+/// scenario's fault times mid-run, plus the common flags (`--ops N`
+/// shortcut included).
+fn scenario_cfg(rest: &[String]) -> Result<(SimConfig, AppProfile), String> {
+    let mut filtered = Vec::new();
+    let mut ops: Option<u64> = None;
+    let mut i = 0;
+    while i < rest.len() {
+        if rest[i] == "--ops" {
+            ops = Some(
+                rest.get(i + 1)
+                    .ok_or("--ops needs a value")?
+                    .parse()
+                    .map_err(|_| "--ops must be an integer")?,
+            );
+            i += 2;
+        } else {
+            filtered.push(rest[i].clone());
+            i += 1;
+        }
+    }
+    let (mut cfg, app) = parse_common(&filtered)?;
+    cfg.protocol = Protocol::ReCxlProactive;
+    match ops {
+        Some(o) => cfg.ops_per_thread = o,
+        // untouched default run length is far longer than scenarios need
+        None if cfg.ops_per_thread == SimConfig::default().ops_per_thread => {
+            cfg.ops_per_thread = 8_000
+        }
+        None => {}
+    }
+    Ok((cfg, app))
 }
 
 /// Cross-layer parity: the PJRT artifact and the Rust generator must be

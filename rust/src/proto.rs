@@ -90,24 +90,30 @@ pub enum MsgKind {
     DumpSyncAck { to: CnId },
 
     // ---- failure handling & recovery (section V, Table I) ----
+    //
+    // Recovery messages carry the round `epoch`: a failure arriving
+    // mid-recovery (including the CM itself dying) restarts the round
+    // under a fresh epoch, and stale in-flight responses from the aborted
+    // round are discarded by epoch mismatch.
     /// Switch-originated MSI electing the Configuration Manager.
     Msi { failed: CnId },
     /// Switch broadcast: Viral_Status set for `failed` (live CNs discount
     /// dead replicas; see DESIGN.md section "Failures").
     ViralNotify { failed: CnId },
     /// CM tells CNs/Logging Units to finish outstanding work and pause.
-    Interrupt,
-    InterruptResp { from: CnId },
-    /// CM tells MN directory controllers to run Algorithm 1.
-    InitRecov { failed: CnId },
+    Interrupt { epoch: u64 },
+    InterruptResp { from: CnId, epoch: u64 },
+    /// CM tells MN directory controllers to run Algorithm 1 over every
+    /// failure covered by this round.
+    InitRecov { failed: Vec<CnId>, epoch: u64 },
     /// Directory controller asks a replica's Logging Unit for the latest
     /// logged versions of `lines` (Algorithm 1 -> Algorithm 2).
-    FetchLatestVers { from_mn: MnId, lines: Vec<Line> },
+    FetchLatestVers { from_mn: MnId, lines: Vec<Line>, epoch: u64 },
     /// Sorted (latest-first) logged updates per requested line.
-    FetchLatestVersResp { from: CnId, results: Vec<crate::recovery::VersionList> },
-    InitRecovResp { from_mn: MnId },
-    RecovEnd,
-    RecovEndResp { from: CnId },
+    FetchLatestVersResp { from: CnId, results: Vec<crate::recovery::VersionList>, epoch: u64 },
+    InitRecovResp { from_mn: MnId, epoch: u64 },
+    RecovEnd { epoch: u64 },
+    RecovEndResp { from: CnId, epoch: u64 },
 }
 
 /// A routed message.
@@ -142,8 +148,10 @@ impl MsgKind {
             Val { .. } => HDR,
             DumpChunk { bytes, .. } => (*bytes).max(64),
             DumpSyncAck { .. } => HDR,
-            Msi { .. } | ViralNotify { .. } | Interrupt | InterruptResp { .. } => HDR,
-            InitRecov { .. } | InitRecovResp { .. } | RecovEnd | RecovEndResp { .. } => HDR,
+            Msi { .. } | ViralNotify { .. } | Interrupt { .. } | InterruptResp { .. } => HDR,
+            InitRecovResp { .. } | RecovEnd { .. } | RecovEndResp { .. } => HDR,
+            // one byte per covered failure, rounded into the flit header
+            InitRecov { .. } => HDR,
             FetchLatestVers { lines, .. } => HDR + 6 * lines.len() as u32,
             FetchLatestVersResp { results, .. } => {
                 HDR + results
@@ -160,8 +168,8 @@ impl MsgKind {
         match self {
             Repl { .. } | ReplAck { .. } | Val { .. } => MsgClass::Replication,
             DumpChunk { .. } | DumpSyncAck { .. } => MsgClass::LogDump,
-            Msi { .. } | ViralNotify { .. } | Interrupt | InterruptResp { .. }
-            | InitRecov { .. } | InitRecovResp { .. } | RecovEnd | RecovEndResp { .. }
+            Msi { .. } | ViralNotify { .. } | Interrupt { .. } | InterruptResp { .. }
+            | InitRecov { .. } | InitRecovResp { .. } | RecovEnd { .. } | RecovEndResp { .. }
             | FetchLatestVers { .. } | FetchLatestVersResp { .. } => MsgClass::Recovery,
             _ => MsgClass::CxlAccess,
         }
@@ -230,7 +238,11 @@ mod tests {
             .class(),
             MsgClass::LogDump
         );
-        assert_eq!(MsgKind::Interrupt.class(), MsgClass::Recovery);
+        assert_eq!(MsgKind::Interrupt { epoch: 1 }.class(), MsgClass::Recovery);
+        assert_eq!(
+            MsgKind::InitRecov { failed: vec![0, 3], epoch: 2 }.class(),
+            MsgClass::Recovery
+        );
         assert_eq!(
             MsgKind::WtAck {
                 line: line(),

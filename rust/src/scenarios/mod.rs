@@ -1,0 +1,207 @@
+//! Named fault scenarios: the resilience workloads the ReCXL claim is
+//! actually about, packaged as a registry consumed by the
+//! `recxl scenarios` CLI subcommand, the figure sweep
+//! (`figures::scenario_sweep`), the examples, and the property tests.
+//!
+//! Each scenario is a *function from configuration to fault plan* — the
+//! same scenario scales with `n_cns`/`n_r` instead of hard-coding node
+//! indices that a small cluster doesn't have.  Times are chosen for the
+//! default scenario run length (≥ ~6 k ops/thread): the first failure
+//! lands mid-run, later failures land relative to the recovery machinery
+//! (detection is 10 us after a crash, quiesce timeout 25 us), so
+//! `crash-during-recovery` and `cm-crash` genuinely overlap an active
+//! round.
+
+use crate::cluster::run_app;
+use crate::config::{CnId, FaultPlan, SimConfig};
+use crate::sim::time::us;
+use crate::stats::RunStats;
+use crate::workloads::AppProfile;
+
+/// A named, self-describing fault scenario.
+pub struct Scenario {
+    pub name: &'static str,
+    pub about: &'static str,
+    builder: fn(&SimConfig) -> FaultPlan,
+}
+
+impl Scenario {
+    /// Materialize the fault plan for a concrete configuration.
+    pub fn plan(&self, cfg: &SimConfig) -> FaultPlan {
+        (self.builder)(cfg)
+    }
+}
+
+/// A CN index guaranteed to exist and distinct from `avoid`.
+fn other_cn(n_cns: usize, avoid: CnId) -> CnId {
+    (avoid + n_cns / 2) % n_cns
+}
+
+/// The registry.  Order is the order `recxl scenarios` lists and
+/// `scenario_sweep` plots.
+pub fn all() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "no-crash",
+            about: "fault-free baseline; recovery machinery stays idle",
+            builder: |_| FaultPlan::default(),
+        },
+        Scenario {
+            name: "single-crash",
+            about: "the paper's Fig. 15 shape: one CN fails mid-run",
+            builder: |_| FaultPlan::single_crash(0, us(40)),
+        },
+        Scenario {
+            name: "double-crash",
+            about: "a second CN fails after the first recovery completes",
+            builder: |cfg| {
+                let mut p = FaultPlan::single_crash(0, us(30));
+                p.push_crash(other_cn(cfg.n_cns, 0), us(150));
+                p
+            },
+        },
+        Scenario {
+            name: "crash-during-recovery",
+            about: "a second CN fails while the first round is quiescing; \
+                    the round restarts covering both",
+            builder: |cfg| {
+                let mut p = FaultPlan::single_crash(0, us(30));
+                // first detection fires at 40 us; 45 us is mid-round
+                p.push_crash(other_cn(cfg.n_cns, 0), us(45));
+                p
+            },
+        },
+        Scenario {
+            name: "cm-crash",
+            about: "the Configuration Manager itself dies mid-round; the \
+                    next live CN is re-elected deterministically",
+            builder: |cfg| {
+                // CN1 dies first, so CN0 (lowest live) becomes CM; CN0
+                // then dies 4 us into the round it coordinates
+                let mut p = FaultPlan::single_crash(1.min(cfg.n_cns - 1), us(30));
+                if cfg.n_cns > 2 {
+                    p.push_crash(0, us(44));
+                }
+                p
+            },
+        },
+        Scenario {
+            name: "nr-failures",
+            about: "N_r staggered failures — the replication factor's full \
+                    tolerance claim",
+            builder: |cfg| {
+                let mut p = FaultPlan::default();
+                // leave at least one CN alive even for tiny clusters
+                let n = cfg.n_r.min(cfg.n_cns - 1);
+                for i in 0..n {
+                    p.push_crash(i, us(30 + 14 * i as u64));
+                }
+                p
+            },
+        },
+    ]
+}
+
+/// Look a scenario up by name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    all().into_iter().find(|s| s.name == name)
+}
+
+/// Install the scenario's fault plan into `cfg` and run it.
+pub fn run_scenario(sc: &Scenario, mut cfg: SimConfig, app: &AppProfile) -> RunStats {
+    cfg.faults = sc.plan(&cfg);
+    run_app(cfg, app)
+}
+
+/// Did the run uphold the scenario's contract?  Fault-free scenarios must
+/// not trigger recovery; faulty ones must recover every injected failure
+/// and pass the consistency oracle.
+pub fn verdict(sc: &Scenario, cfg: &SimConfig, stats: &RunStats) -> Result<(), String> {
+    let planned = sc.plan(cfg).len();
+    if planned == 0 {
+        return if stats.recovery.happened {
+            Err("fault-free scenario triggered recovery".into())
+        } else {
+            Ok(())
+        };
+    }
+    if !stats.recovery.happened {
+        return Err("no recovery round completed".into());
+    }
+    if stats.recovery.failed_cns.len() != planned {
+        return Err(format!(
+            "recovered {} of {planned} injected failures",
+            stats.recovery.failed_cns.len()
+        ));
+    }
+    if !stats.recovery.consistent {
+        return Err(format!(
+            "oracle found {} inconsistencies",
+            stats.recovery.inconsistencies
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_the_required_scenarios() {
+        let names: Vec<&str> = all().iter().map(|s| s.name).collect();
+        assert!(names.len() >= 6, "need >= 6 named scenarios, got {names:?}");
+        for required in [
+            "no-crash",
+            "single-crash",
+            "double-crash",
+            "crash-during-recovery",
+            "cm-crash",
+            "nr-failures",
+        ] {
+            assert!(names.contains(&required), "missing scenario {required}");
+        }
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "names must be unique");
+    }
+
+    #[test]
+    fn every_plan_validates_on_default_and_small_clusters() {
+        for cfg in [
+            SimConfig::default(),
+            SimConfig {
+                n_cns: 4,
+                n_mns: 4,
+                n_r: 2,
+                ..SimConfig::default()
+            },
+        ] {
+            for sc in all() {
+                let plan = sc.plan(&cfg);
+                plan.validate(cfg.n_cns)
+                    .unwrap_or_else(|e| panic!("{} on {} CNs: {e}", sc.name, cfg.n_cns));
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_finds_and_misses() {
+        assert!(by_name("cm-crash").is_some());
+        assert!(by_name("warp-core-breach").is_none());
+    }
+
+    #[test]
+    fn plans_shape_matches_intent() {
+        let cfg = SimConfig::default();
+        assert!(by_name("no-crash").unwrap().plan(&cfg).is_empty());
+        assert_eq!(by_name("single-crash").unwrap().plan(&cfg).len(), 1);
+        assert_eq!(by_name("double-crash").unwrap().plan(&cfg).len(), 2);
+        let nr = by_name("nr-failures").unwrap().plan(&cfg);
+        assert_eq!(nr.len(), cfg.n_r);
+        // cm-crash: second failure is CN0 — the CM elected after the first
+        let cm = by_name("cm-crash").unwrap().plan(&cfg);
+        assert_eq!(cm.crashed_cns(), vec![1, 0]);
+    }
+}

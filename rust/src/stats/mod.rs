@@ -3,6 +3,7 @@
 use std::collections::HashMap;
 
 use crate::cache::LineCensus;
+use crate::config::CnId;
 use crate::proto::MsgClass;
 use crate::sim::time::Ps;
 
@@ -98,7 +99,15 @@ impl ReplStats {
 #[derive(Debug, Default, Clone)]
 pub struct RecoveryStats {
     pub happened: bool,
+    /// Completed recovery rounds (a multi-failure plan may need several;
+    /// an overlapping failure restarts — and so re-counts — a round only
+    /// when it completes).
+    pub rounds: u64,
+    /// CNs covered by completed rounds, in recovery order.
+    pub failed_cns: Vec<CnId>,
+    /// First failure detection (Viral_Status set).
     pub detection_at: Ps,
+    /// Completion of the last recovery round.
     pub completed_at: Ps,
     /// Directory census at crash: lines whose owner was the failed CN.
     pub owned_lines: u64,

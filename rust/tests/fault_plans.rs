@@ -1,0 +1,153 @@
+//! FaultPlan + scenario engine: parsing through the config surface, the
+//! ISSUE's double-crash-at-minimum-replication integration check, the
+//! named scenarios, and the randomized fault-plan property — recovery
+//! completes and the oracle passes whenever concurrent failures stay
+//! within the replication factor `N_r`.
+
+use recxl::config::apply_override;
+use recxl::prelude::*;
+use recxl::ptest::{check, knob};
+use recxl::scenarios;
+use recxl::sim::time::us;
+
+// ---------------------------------------------------------------- parsing
+
+#[test]
+fn faults_override_parses_into_the_plan() {
+    let mut cfg = SimConfig::default();
+    apply_override(&mut cfg, "faults", "cn0@12.5ms,cn3@20ms").unwrap();
+    assert_eq!(cfg.faults.len(), 2);
+    assert_eq!(cfg.faults.crashed_cns(), vec![0, 3]);
+    assert_eq!(cfg.faults.events()[0].at, us(12_500));
+    assert!(cfg.validate().is_ok());
+}
+
+#[test]
+fn bad_fault_plans_are_rejected() {
+    let mut cfg = SimConfig::default();
+    assert!(apply_override(&mut cfg, "faults", "cn0").is_err(), "no time");
+    assert!(apply_override(&mut cfg, "faults", "mn2@5us").is_err(), "MN faults unsupported");
+    // out-of-range CN and unsorted times parse, then fail validation
+    apply_override(&mut cfg, "faults", "cn99@5us").unwrap();
+    assert!(cfg.validate().is_err(), "out-of-range CN");
+    apply_override(&mut cfg, "faults", "cn0@50us,cn1@20us").unwrap();
+    assert!(cfg.validate().is_err(), "unsorted times");
+    apply_override(&mut cfg, "faults", "cn0@20us,cn0@50us").unwrap();
+    assert!(cfg.validate().is_err(), "duplicate CN");
+}
+
+// ------------------------------------------------------------ integration
+
+#[test]
+fn double_crash_with_minimum_replication_recovers() {
+    // ISSUE acceptance: a double crash with n_r = 2 recovers and passes
+    // the generalized oracle
+    let cfg = SimConfig {
+        protocol: Protocol::ReCxlProactive,
+        ops_per_thread: 6_000,
+        n_r: 2,
+        faults: FaultPlan::parse("cn0@30us,cn5@120us").unwrap(),
+        ..SimConfig::default()
+    };
+    let s = run_app(cfg, &by_name("ycsb").unwrap());
+    assert!(s.recovery.happened);
+    let mut failed = s.recovery.failed_cns.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, vec![0, 5]);
+    assert!(
+        s.recovery.consistent,
+        "n_r=2 must tolerate two failures: {} violations",
+        s.recovery.inconsistencies
+    );
+}
+
+#[test]
+fn named_scenarios_run_to_completion_with_oracle_passing() {
+    // ISSUE acceptance: double-crash, crash-during-recovery, and cm-crash
+    // each run to completion with the generalized oracle passing
+    for name in [
+        "no-crash",
+        "single-crash",
+        "double-crash",
+        "crash-during-recovery",
+        "cm-crash",
+        "nr-failures",
+    ] {
+        let sc = scenarios::by_name(name).unwrap();
+        let cfg = SimConfig {
+            protocol: Protocol::ReCxlProactive,
+            ops_per_thread: 6_000,
+            ..SimConfig::default()
+        };
+        let s = scenarios::run_scenario(&sc, cfg.clone(), &by_name("ycsb").unwrap());
+        scenarios::verdict(&sc, &cfg, &s).unwrap_or_else(|e| panic!("scenario {name}: {e}"));
+    }
+}
+
+// --------------------------------------------------------------- property
+
+#[test]
+fn prop_random_fault_plans_recover_when_failures_le_nr() {
+    // ISSUE acceptance: the property holds over >= 100 randomized plans.
+    // Small cluster so 100 full simulations stay fast; n_r = 2, so plans
+    // inject 0..=2 failures at random CNs and random (sorted) times.
+    check("fault-plan-recovery", 100, 0xFA17, |rng, knobs| {
+        let n_cns = 6usize;
+        let n_r = 2usize;
+        let mut pos = 0;
+        let mut draw = |rng: &mut recxl::sim::Pcg, knobs: &mut Vec<u64>, lo: u64, hi: u64| {
+            let v = knob(rng, knobs, pos, lo, hi);
+            pos += 1;
+            v
+        };
+        let n_failures = draw(rng, knobs, 0, n_r as u64) as usize;
+        let mut t_us = 15 + draw(rng, knobs, 0, 25);
+        let mut plan = FaultPlan::default();
+        let mut used = vec![false; n_cns];
+        for _ in 0..n_failures {
+            let mut cn = draw(rng, knobs, 0, n_cns as u64 - 1) as usize;
+            while used[cn] {
+                cn = (cn + 1) % n_cns;
+            }
+            used[cn] = true;
+            plan.push_crash(cn, us(t_us));
+            t_us += 3 + draw(rng, knobs, 0, 40);
+        }
+        let seed = draw(rng, knobs, 0, u32::MAX as u64);
+        plan.validate(n_cns).map_err(|e| format!("generated plan invalid: {e}"))?;
+        let cfg = SimConfig {
+            protocol: Protocol::ReCxlProactive,
+            n_cns,
+            n_mns: 4,
+            cores_per_cn: 2,
+            n_r,
+            ops_per_thread: 1_200,
+            seed,
+            faults: plan,
+            ..SimConfig::default()
+        };
+        let s = run_app(cfg, &by_name("ycsb").unwrap());
+        if n_failures == 0 {
+            if s.recovery.happened {
+                return Err("fault-free plan triggered recovery".into());
+            }
+            return Ok(());
+        }
+        if !s.recovery.happened {
+            return Err(format!("{n_failures} failures but no recovery completed"));
+        }
+        if s.recovery.failed_cns.len() != n_failures {
+            return Err(format!(
+                "recovered {} of {n_failures} failures",
+                s.recovery.failed_cns.len()
+            ));
+        }
+        if !s.recovery.consistent {
+            return Err(format!(
+                "oracle: {} violations with {n_failures} <= n_r failures",
+                s.recovery.inconsistencies
+            ));
+        }
+        Ok(())
+    });
+}

@@ -10,7 +10,7 @@ fn crash_cfg(protocol: Protocol, ops: u64, cn: usize, at_us: u64) -> SimConfig {
     SimConfig {
         protocol,
         ops_per_thread: ops,
-        crash: Some(CrashSpec { cn, at: us(at_us) }),
+        faults: FaultPlan::single_crash(cn, us(at_us)),
         ..SimConfig::default()
     }
 }
@@ -134,4 +134,87 @@ fn recovery_completes_quickly_relative_to_run() {
         window < recxl::sim::time::ms(5),
         "recovery took {window} ps — unexpectedly long"
     );
+}
+
+// ---- multi-failure fault plans (the FaultPlan scenario engine) ----
+
+fn multi_cfg(faults: &str, ops: u64) -> SimConfig {
+    SimConfig {
+        protocol: Protocol::ReCxlProactive,
+        ops_per_thread: ops,
+        faults: FaultPlan::parse(faults).unwrap(),
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn sequential_double_crash_runs_two_rounds() {
+    // second failure lands well after the first round completes
+    let s = run_app(multi_cfg("cn0@30us,cn8@300us", 8_000), &by_name("ycsb").unwrap());
+    assert!(s.recovery.happened);
+    assert_eq!(s.recovery.rounds, 2, "sequential failures = two rounds");
+    assert_eq!(s.recovery.failed_cns, vec![0, 8]);
+    assert!(
+        s.recovery.consistent,
+        "{} violations",
+        s.recovery.inconsistencies
+    );
+}
+
+#[test]
+fn crash_during_recovery_restarts_the_round_and_covers_both() {
+    // first detection at 40 us; the second CN dies 5 us into the round
+    let s = run_app(multi_cfg("cn0@30us,cn3@45us", 6_000), &by_name("ycsb").unwrap());
+    assert!(s.recovery.happened);
+    let mut failed = s.recovery.failed_cns.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, vec![0, 3], "restarted round must cover both");
+    assert!(s.recovery.consistent);
+}
+
+#[test]
+fn cm_crash_reelects_deterministically_and_recovers() {
+    // CN1 dies first, electing CN0 as CM; CN0 then dies mid-round, so the
+    // MSI re-elects CN2 and the round restarts covering both failures
+    let s = run_app(multi_cfg("cn1@30us,cn0@44us", 6_000), &by_name("ycsb").unwrap());
+    assert!(s.recovery.happened);
+    let mut failed = s.recovery.failed_cns.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, vec![0, 1]);
+    assert!(s.recovery.consistent, "CM re-election must not lose data");
+    assert!(
+        s.recovery.messages["Msi"] >= 2,
+        "the round must have been (re)started at least twice"
+    );
+}
+
+#[test]
+fn nr_staggered_failures_stay_consistent() {
+    // the replication factor's full claim: N_r = 3 failures tolerated
+    let s = run_app(
+        multi_cfg("cn0@30us,cn1@44us,cn2@58us", 6_000),
+        &by_name("ycsb").unwrap(),
+    );
+    assert!(s.recovery.happened);
+    assert_eq!(s.recovery.failed_cns.len(), 3);
+    assert!(
+        s.recovery.consistent,
+        "{} violations",
+        s.recovery.inconsistencies
+    );
+}
+
+#[test]
+fn survivors_complete_their_traces_after_a_double_crash() {
+    let s = run_app(multi_cfg("cn0@25us,cn5@40us", 6_000), &by_name("ycsb").unwrap());
+    assert!(s.recovery.consistent);
+    // 14 live CNs x 4 cores each consume their full trace
+    let live_ops: u64 = s
+        .cores
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i / 4 != 0 && i / 4 != 5)
+        .map(|(_, c)| c.ops)
+        .sum();
+    assert_eq!(live_ops, 56 * 6_000);
 }
