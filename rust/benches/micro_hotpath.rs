@@ -1,32 +1,62 @@
 //! Microbenchmarks of the simulator's hot paths (the §Perf targets in
-//! EXPERIMENTS.md): event queue, cache lookup, trace generation, Logging
-//! Unit ingest, fabric routing, log compression, and whole-cluster
-//! simulation throughput.
+//! EXPERIMENTS.md): event queue (packed + spread), cache lookup, trace
+//! generation, Logging Unit ingest, consistency-oracle commits, traffic
+//! accounting, log compression, and whole-cluster simulation throughput.
+//!
+//! Emits `BENCH_hotpath.json` (override with `RECXL_BENCH_OUT`) — the
+//! tracked baseline future PRs diff against; see EXPERIMENTS.md §Perf.
+//! `RECXL_BENCH_QUICK=1` shrinks sizes/samples for the CI smoke job
+//! (trajectory tracking, not publication numbers).
 
-use recxl::benchkit::{bench, header};
+use recxl::benchkit::{bench, header, Report};
 use recxl::cache::{CnCaches, Mesi};
-use recxl::cluster::run_app;
+use recxl::cluster::{run_app, Oracle};
 use recxl::config::SimConfig;
 use recxl::mem::Addr;
 use recxl::prelude::*;
-use recxl::proto::ReqId;
+use recxl::proto::{MsgClass, ReqId};
 use recxl::recxl::logunit::{LoggingUnit, PendingRepl};
 use recxl::sim::EventQueue;
+use recxl::stats::TrafficStats;
 use recxl::workloads::tracegen;
 
 fn main() {
+    let quick = std::env::var("RECXL_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    // (warmup, samples) per bench; quick mode tracks the trajectory with
+    // minimal CI cost
+    let (warm, samp) = if quick { (1, 3) } else { (3, 20) };
+    let mut report = Report::new();
     header();
 
-    bench("event_queue push+pop 10k", 3, 20, || {
+    // packed: 10k events inside ~10 ns of simulated time — an adversarial
+    // same-bucket burst that exercises the calendar's heap spill tier
+    report.push(bench("event_queue push+pop 10k packed", warm, samp, || {
         let mut q: EventQueue<u64> = EventQueue::new();
         for i in 0..10_000u64 {
             q.push_at(i * 7 % 9973, i);
         }
         while q.pop().is_some() {}
-    });
+    }));
+
+    // spread: the steady-state shape — delivery/run events scattered over
+    // ~1 ms, interleaved push/pop as the simulator actually drives it
+    report.push(bench("event_queue steady-state 10k spread", warm, samp, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..256u64 {
+            q.push_at((i * 7919) % 1_000_000, i);
+        }
+        let mut popped = 0u64;
+        while let Some((t, v)) = q.pop() {
+            popped += 1;
+            if popped <= 10_000 {
+                // reschedule a fabric-RTT out, like a message round trip
+                q.push_at(t + 200_000 + (v % 4_096), v);
+            }
+        }
+    }));
 
     let cfg = SimConfig::default();
-    bench("cache lookup+fill 10k lines", 3, 20, || {
+    report.push(bench("cache lookup+fill 10k lines", warm, samp, || {
         let mut c = CnCaches::new(&cfg);
         for i in 0..10_000u32 {
             let l = Addr(0x8000_0000 | ((i % 4096) << 6)).line();
@@ -34,14 +64,38 @@ fn main() {
                 c.fill(0, l, Mesi::Exclusive, [0; 16]);
             }
         }
-    });
+    }));
 
     let params = recxl::workloads::profiles::ycsb().to_params(0);
-    bench("trace_gen 4096-op block (rust)", 3, 50, || {
+    report.push(bench("trace_gen 4096-op block (rust)", warm, samp, || {
         std::hint::black_box(tracegen::gen_block(42, 0, &params));
-    });
+    }));
 
-    bench("logging unit 1k REPL+VAL", 3, 20, || {
+    // commit-path oracle: one committed store per iteration step, cycling
+    // lines and masks the way the SB drains them
+    report.push(bench("oracle on_commit 10k stores", warm, samp, || {
+        let mut o = Oracle::default();
+        let mut words = [0u32; 16];
+        for i in 0..10_000u64 {
+            let line = Addr(0x8000_0000 | (((i % 512) as u32) << 6)).line();
+            words[(i % 16) as usize] = i as u32;
+            let mask = 1u16 << (i % 16) | 1;
+            o.on_commit(line, mask, &words, (i % 16) as usize, i + 1);
+        }
+        std::hint::black_box(o.words_tracked());
+    }));
+
+    // per-message stats accounting (two counter bumps + timeline bucket)
+    report.push(bench("traffic record 100k msgs", warm, samp, || {
+        let mut t = TrafficStats::default();
+        for i in 0..100_000u64 {
+            let class = MsgClass::ALL[(i % 4) as usize];
+            t.record(i * 1_000, class, 16 + (i % 64) as u32);
+        }
+        std::hint::black_box(t.total_messages());
+    }));
+
+    report.push(bench("logging unit 1k REPL+VAL", warm, samp, || {
         let mut lu = LoggingUnit::new(1, 16, 341, 1 << 20);
         let req = ReqId { cn: 0, core: 0 };
         for i in 0..1_000u64 {
@@ -52,9 +106,9 @@ fn main() {
             );
             lu.val(0, req, line, i + 1, i + 1);
         }
-    });
+    }));
 
-    bench("log dump gzip-9 (8k entries)", 2, 10, || {
+    report.push(bench("log dump gzip-9 (8k entries)", warm.min(2), samp.min(10), || {
         let mut lu = LoggingUnit::new(1, 16, 341, 1 << 20);
         let req = ReqId { cn: 0, core: 0 };
         for i in 0..8_192u64 {
@@ -63,23 +117,46 @@ fn main() {
             lu.val(0, req, line, i + 1, i + 1);
         }
         std::hint::black_box(lu.dump(16, 16, 3, 9));
-    });
+    }));
 
     // end-to-end simulator throughput: the §Perf headline metric
+    let (ops, ops_label): (u64, &str) = if quick { (500, "500") } else { (2_000, "2k") };
     let mut events_per_sec = 0.0;
-    let s = bench("full sim: ycsb proactive 2k ops/thread", 1, 3, || {
+    let mut events = 0u64;
+    let mut pool = (0u64, 0u64);
+    let name = format!("full sim: ycsb proactive {ops_label} ops/thread");
+    let s = bench(&name, 1, if quick { 2 } else { 3 }, || {
         let stats = run_app(
             SimConfig {
-                ops_per_thread: 2_000,
+                ops_per_thread: ops,
                 ..SimConfig::default()
             },
             &by_name("ycsb").unwrap(),
         );
         events_per_sec = stats.events_per_sec();
+        events = stats.events;
+        pool = (stats.msg_pool_allocated, stats.msg_pool_recycled);
     });
+    report.push(s.clone());
     println!(
-        "sim throughput: {:.2} M events/s (sample mean {:.2} ms)",
+        "sim throughput: {:.2} M events/s (sample mean {:.2} ms); \
+         msg pool: {} allocated / {} recycled",
         events_per_sec / 1e6,
-        s.mean_s * 1e3
+        s.mean_s * 1e3,
+        pool.0,
+        pool.1,
     );
+
+    report.metric("full_sim_events_per_sec", events_per_sec);
+    report.metric("full_sim_events", events as f64);
+    report.metric("full_sim_ops_per_thread", ops as f64);
+    report.metric("msg_pool_allocated", pool.0 as f64);
+    report.metric("msg_pool_recycled", pool.1 as f64);
+    report.metric("quick", if quick { 1.0 } else { 0.0 });
+
+    let out = std::env::var("RECXL_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
 }

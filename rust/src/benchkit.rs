@@ -1,8 +1,10 @@
 //! Minimal criterion-style bench harness (criterion is not in the offline
 //! crate set).  Provides warmup + sampled timing with mean/median/stddev,
-//! and a `figure` helper for the paper-reproduction benches, which are
-//! end-to-end simulations reported as figure tables rather than
-//! microsecond loops.
+//! a `figure` helper for the paper-reproduction benches (end-to-end
+//! simulations reported as figure tables rather than microsecond loops),
+//! and a machine-readable [`Report`] — the rebar-style tracked baseline
+//! (`BENCH_hotpath.json`) EXPERIMENTS.md's §Perf methodology diffs
+//! against across PRs.
 
 use std::time::Instant;
 
@@ -87,6 +89,97 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (r, t.elapsed().as_secs_f64())
 }
 
+/// Machine-readable bench report.  Serialized by hand — the offline crate
+/// set has no serde — into a stable schema (`recxl-bench-v1`) so CI can
+/// diff the throughput trajectory PR over PR.
+#[derive(Debug, Default)]
+pub struct Report {
+    benches: Vec<Summary>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    /// Record a bench summary (chain through [`bench`]'s return value).
+    pub fn push(&mut self, s: Summary) {
+        self.benches.push(s);
+    }
+
+    /// Record a free-standing scalar metric (e.g. `full_sim_events_per_sec`).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"recxl-bench-v1\",\n  \"benches\": [\n");
+        for (i, b) in self.benches.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"samples\": {}, \"mean_s\": {}, \"median_s\": {}, \
+                 \"stddev_s\": {}, \"min_s\": {}, \"max_s\": {}}}{}\n",
+                json_str(&b.name),
+                b.samples,
+                json_f64(b.mean_s),
+                json_f64(b.median_s),
+                json_f64(b.stddev_s),
+                json_f64(b.min_s),
+                json_f64(b.max_s),
+                if i + 1 < self.benches.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n  \"metrics\": {\n");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            out.push_str(&format!(
+                "    {}: {}{}\n",
+                json_str(k),
+                json_f64(*v),
+                if i + 1 < self.metrics.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        // Display of f64 is shortest-roundtrip and valid JSON; integral
+        // values need an explicit ".0" to stay typed as numbers elsewhere
+        let s = format!("{v}");
+        if s.contains('.') || s.contains('e') {
+            s
+        } else {
+            format!("{s}.0")
+        }
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +199,44 @@ mod tests {
         let (v, t) = timed(|| 42);
         assert_eq!(v, 42);
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn report_emits_schema_benches_and_metrics() {
+        let mut r = Report::new();
+        r.push(Summary {
+            name: "queue".into(),
+            samples: 5,
+            mean_s: 0.25,
+            median_s: 0.2,
+            stddev_s: 0.01,
+            min_s: 0.1,
+            max_s: 0.5,
+        });
+        r.metric("full_sim_events_per_sec", 1_500_000.0);
+        let j = r.to_json();
+        assert!(j.contains("\"schema\": \"recxl-bench-v1\""));
+        assert!(j.contains("\"name\": \"queue\""));
+        assert!(j.contains("\"mean_s\": 0.25"));
+        assert!(j.contains("\"full_sim_events_per_sec\": 1500000.0"));
+        // braces/brackets balance (cheap well-formedness check, no parser
+        // in the offline crate set)
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(
+                j.matches(open).count(),
+                j.matches(close).count(),
+                "unbalanced {open}{close}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_escaping_and_numbers() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_f64(2.0), "2.0");
+        assert_eq!(json_f64(0.5), "0.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
     }
 
     #[test]

@@ -6,10 +6,12 @@ use crate::cache::Mesi;
 use crate::mem::Line;
 use crate::proto::{LineWords, Message, MsgKind, NodeId, ReqId};
 use crate::recxl::logunit::PendingRepl;
-use crate::sim::time::Ps;
 
 impl Cluster {
-    pub(crate) fn deliver(&mut self, msg: Message) {
+    /// Deliver a routed message; the `Ev::Deliver` box is reclaimed into
+    /// the message pool first, so the next `send` reuses its allocation.
+    pub(crate) fn deliver(&mut self, boxed: Box<Message>) {
+        let msg = self.pool.reclaim(boxed);
         match msg.dst {
             NodeId::Cn(cn) => {
                 if self.dead[cn] {
@@ -269,7 +271,4 @@ impl Cluster {
         }
         self.q.push_at(now + self.cfg.dump_period_ps, Ev::DumpTick(cn));
     }
-
-    #[allow(dead_code)]
-    fn unused(_: Ps) {}
 }

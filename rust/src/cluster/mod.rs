@@ -32,7 +32,7 @@ use crate::cpu::sync::{Barrier, LockTable};
 use crate::cpu::{Block, Core};
 use crate::fabric::{Delivery, Fabric};
 use crate::mem::Line;
-use crate::proto::Message;
+use crate::proto::{Message, MsgPool};
 use crate::recxl::logunit::LoggingUnit;
 use crate::sim::time::Ps;
 use crate::sim::EventQueue;
@@ -45,8 +45,10 @@ pub enum Ev {
     /// Consume trace ops on a core.
     Run(CoreId),
     /// Message arrival at its destination.  Boxed: `Message` carries a
-    /// 64 B line payload, and a fat `Ev` makes every binary-heap sift a
-    /// memmove (this was the top §Perf hotspot — see EXPERIMENTS.md).
+    /// 64 B line payload, and a fat `Ev` makes every queue move a memmove
+    /// (this was the top §Perf hotspot — see EXPERIMENTS.md).  The box
+    /// comes from the cluster's [`MsgPool`] and is reclaimed on delivery,
+    /// so steady-state message traffic allocates nothing.
     Deliver(Box<Message>),
     /// Re-attempt SB-head commit on a core.
     Commit(CoreId),
@@ -92,6 +94,8 @@ pub struct Cluster {
     pub cfg: SimConfig,
     pub q: EventQueue<Ev>,
     pub fabric: Fabric,
+    /// Recycled `Ev::Deliver` boxes (§Perf: zero-alloc steady state).
+    pub(crate) pool: MsgPool,
     pub cores: Vec<Core>,
     pub caches: Vec<CnCaches>,
     pub cns: Vec<CnState>,
@@ -179,6 +183,7 @@ impl Cluster {
         Cluster {
             fabric: Fabric::new(&cfg),
             q: EventQueue::new(),
+            pool: MsgPool::new(),
             cores,
             caches,
             cns,
@@ -265,7 +270,10 @@ impl Cluster {
     pub fn send(&mut self, at: Ps, msg: Message) {
         let at = at.max(self.q.now());
         match self.fabric.send(at, &msg, &mut self.stats.traffic) {
-            Delivery::At(t) => self.q.push_at(t, Ev::Deliver(Box::new(msg))),
+            Delivery::At(t) => {
+                let boxed = self.pool.boxed(msg);
+                self.q.push_at(t, Ev::Deliver(boxed));
+            }
             Delivery::Dropped => {}
         }
     }
@@ -331,7 +339,10 @@ impl Cluster {
             // stall watchdog: if nothing but housekeeping events fire for
             // a long stretch of simulated time, the protocol livelocked —
             // dump the blocked cores and abort loudly instead of spinning.
-            let commits = self.stats.repl.store_commits + self.stats.traffic.messages.len() as u64;
+            // Progress means commits or finishes, deliberately NOT message
+            // traffic: a coherence livelock ping-pongs messages forever,
+            // and counting them would keep resetting the watchdog.
+            let commits = self.stats.repl.store_commits;
             if self.finished != last_progress.0 || commits != last_progress.1 {
                 last_progress = (self.finished, commits);
                 self.last_progress_at = self.q.now();
@@ -359,7 +370,7 @@ impl Cluster {
     fn dispatch(&mut self, ev: Ev) {
         match ev {
             Ev::Run(id) => self.run_core(id),
-            Ev::Deliver(msg) => self.deliver(*msg),
+            Ev::Deliver(boxed) => self.deliver(boxed),
             Ev::Commit(id) => self.commit_check(id),
             Ev::LoadDone(id) => self.load_done(id, 1),
             Ev::GrantLock { core, lock } => self.grant_lock(core, lock),
@@ -390,6 +401,8 @@ impl Cluster {
         }
         self.stats.host_wall_s = wall.elapsed().as_secs_f64();
         self.stats.events = self.q.events_processed();
+        self.stats.msg_pool_allocated = self.pool.allocated;
+        self.stats.msg_pool_recycled = self.pool.recycled;
         self.stats
     }
 

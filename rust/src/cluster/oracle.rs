@@ -8,6 +8,12 @@
 //! value from the same CN (the paper's "latest logged update in any log"
 //! forward choice).  Anything else is lost or resurrected data — a
 //! correctness bug.
+//!
+//! §Perf: both maps are keyed per *line*, with 16-wide word arrays inside
+//! the entry.  `on_commit` runs on every committed store, and the old
+//! per-`(Line, word)` / per-`(Line, word, CnId)` keying cost up to 32
+//! hash-map operations per commit; per-line keying costs exactly two
+//! (see EXPERIMENTS.md).
 
 use rustc_hash::FxHashMap;
 
@@ -15,21 +21,37 @@ use crate::config::CnId;
 use crate::mem::Line;
 use crate::proto::LineWords;
 
-#[derive(Debug, Clone, Copy)]
-#[allow(dead_code)] // cn/repl_seq aid debugging dumps
-struct Committed {
-    value: u32,
-    cn: CnId,
-    repl_seq: u64,
+/// Committed state of one line: a present-mask plus 16-wide word arrays
+/// (value + provenance per word).
+#[derive(Debug, Clone)]
+struct LineEntry {
+    /// Bit w set: word w has a committed value.
+    present: u16,
+    values: [u32; 16],
+    /// Committing CN per word (debugging dumps; n_cns never nears 256).
+    cn: [u8; 16],
+    /// Committing repl_seq per word (debugging dumps).
+    repl_seq: [u64; 16],
+}
+
+impl Default for LineEntry {
+    fn default() -> Self {
+        LineEntry {
+            present: 0,
+            values: [0; 16],
+            cn: [0; 16],
+            repl_seq: [0; 16],
+        }
+    }
 }
 
 /// Oracle over committed shared-memory state.
 #[derive(Debug, Default)]
 pub struct Oracle {
-    last: FxHashMap<(Line, u8), Committed>,
-    /// Highest committed repl_seq per (line, word, cn) — distinguishes
+    last: FxHashMap<Line, LineEntry>,
+    /// Highest committed repl_seq per (line, cn), per word — distinguishes
     /// newer in-flight updates from stale resurrections.
-    committed_seq: FxHashMap<(Line, u8, CnId), u64>,
+    committed_seq: FxHashMap<(Line, CnId), [u64; 16]>,
 }
 
 impl Oracle {
@@ -39,26 +61,26 @@ impl Oracle {
         if !line.is_remote() {
             return;
         }
-        for w in 0..16u8 {
-            if mask & (1 << w) != 0 {
-                self.last.insert(
-                    (line, w),
-                    Committed {
-                        value: words[w as usize],
-                        cn,
-                        repl_seq,
-                    },
-                );
-                let k = (line, w, cn);
-                let e = self.committed_seq.entry(k).or_default();
-                *e = (*e).max(repl_seq);
-            }
+        let e = self.last.entry(line).or_default();
+        let seqs = self.committed_seq.entry((line, cn)).or_insert([0; 16]);
+        let mut m = mask;
+        while m != 0 {
+            let w = m.trailing_zeros() as usize;
+            m &= m - 1;
+            e.present |= 1 << w;
+            e.values[w] = words[w];
+            e.cn[w] = cn as u8;
+            e.repl_seq[w] = repl_seq;
+            seqs[w] = seqs[w].max(repl_seq);
         }
     }
 
     /// Last committed value of a word, if any store ever committed to it.
     pub fn committed_value(&self, line: Line, word: u8) -> Option<u32> {
-        self.last.get(&(line, word)).map(|c| c.value)
+        self.last
+            .get(&line)
+            .filter(|e| e.present & (1 << word) != 0)
+            .map(|e| e.values[word as usize])
     }
 
     /// Recovery applied `value` (provenance `(cn, repl_seq)`) to a word
@@ -79,16 +101,14 @@ impl Oracle {
         if !line.is_remote() {
             return;
         }
-        self.last.insert(
-            (line, word),
-            Committed {
-                value,
-                cn,
-                repl_seq,
-            },
-        );
-        let e = self.committed_seq.entry((line, word, cn)).or_default();
-        *e = (*e).max(repl_seq);
+        let w = word as usize;
+        let e = self.last.entry(line).or_default();
+        e.present |= 1 << word;
+        e.values[w] = value;
+        e.cn[w] = cn as u8;
+        e.repl_seq[w] = repl_seq;
+        let seqs = self.committed_seq.entry((line, cn)).or_insert([0; 16]);
+        seqs[w] = seqs[w].max(repl_seq);
     }
 
     /// Verify a post-recovery memory word.  `applied` is the (cn,
@@ -100,18 +120,20 @@ impl Oracle {
         mem_value: u32,
         applied: Option<(CnId, u64)>,
     ) -> bool {
-        match self.last.get(&(line, word)) {
-            None => true, // never committed: anything (incl. in-flight) ok
-            Some(c) => {
-                if mem_value == c.value {
+        match self.last.get(&line) {
+            // never committed: anything (incl. in-flight) ok
+            None => true,
+            Some(e) if e.present & (1 << word) == 0 => true,
+            Some(e) => {
+                if mem_value == e.values[word as usize] {
                     return true;
                 }
                 // accept a strictly newer in-flight update from the same CN
                 if let Some((acn, aseq)) = applied {
                     let committed = self
                         .committed_seq
-                        .get(&(line, word, acn))
-                        .copied()
+                        .get(&(line, acn))
+                        .map(|s| s[word as usize])
                         .unwrap_or(0);
                     return aseq > committed;
                 }
@@ -121,7 +143,10 @@ impl Oracle {
     }
 
     pub fn words_tracked(&self) -> usize {
-        self.last.len()
+        self.last
+            .values()
+            .map(|e| e.present.count_ones() as usize)
+            .sum()
     }
 }
 
@@ -144,6 +169,21 @@ mod tests {
         o.on_commit(line(1), 1, &w, 0, 2);
         assert_eq!(o.committed_value(line(1), 0), Some(2));
         assert_eq!(o.committed_value(line(1), 1), None);
+    }
+
+    #[test]
+    fn multi_word_masks_commit_each_selected_word() {
+        let mut o = Oracle::default();
+        let mut w = [0u32; 16];
+        w[2] = 22;
+        w[5] = 55;
+        w[15] = 1515;
+        o.on_commit(line(3), (1 << 2) | (1 << 5) | (1 << 15), &w, 1, 9);
+        assert_eq!(o.committed_value(line(3), 2), Some(22));
+        assert_eq!(o.committed_value(line(3), 5), Some(55));
+        assert_eq!(o.committed_value(line(3), 15), Some(1515));
+        assert_eq!(o.committed_value(line(3), 0), None);
+        assert_eq!(o.words_tracked(), 3);
     }
 
     #[test]
@@ -170,6 +210,20 @@ mod tests {
         // stale resurrection (seq <= committed): a bug
         assert!(!o.verify_word(line(1), 0, 99, Some((2, 5))));
         assert!(!o.verify_word(line(1), 0, 99, Some((2, 3))));
+    }
+
+    #[test]
+    fn committed_seq_is_tracked_per_cn_and_word() {
+        let mut o = Oracle::default();
+        // CN 2 commits seq 5 on word 0; CN 3 commits seq 1 on word 1
+        o.on_commit(line(1), 1, &[7; 16], 2, 5);
+        o.on_commit(line(1), 2, &[8; 16], 3, 1);
+        // CN 3's seq 2 is newer *for CN 3* even though CN 2 reached 5
+        assert!(o.verify_word(line(1), 1, 42, Some((3, 2))));
+        // CN 2's seq 2 on word 0 is stale (its committed is 5)
+        assert!(!o.verify_word(line(1), 0, 42, Some((2, 2))));
+        // a CN that never committed on this line: any seq > 0 is newer
+        assert!(o.verify_word(line(1), 0, 42, Some((9, 1))));
     }
 
     #[test]

@@ -43,6 +43,7 @@ use crate::proto::{Message, MsgKind, NodeId};
 use crate::recovery::{select_version, VersionList};
 use crate::recxl::replica_window;
 use crate::sim::time::lu_cycles;
+use crate::stats::RecoveryMsg;
 
 /// Per-MN repair bookkeeping while log responses are outstanding.
 pub struct MnRepair {
@@ -205,10 +206,10 @@ impl Cluster {
         self.recovery_epoch += 1;
         let epoch = self.recovery_epoch;
         let failed: Vec<CnId> = self.unrecovered.iter().copied().collect();
-        self.stats.recovery.count("Msi");
+        self.stats.recovery.count(RecoveryMsg::Msi);
         let live: HashSet<CnId> = self.live_cns().collect();
         for &c in &live {
-            self.stats.recovery.count("Interrupt");
+            self.stats.recovery.count(RecoveryMsg::Interrupt);
             self.send(
                 now,
                 Message {
@@ -291,7 +292,7 @@ impl Cluster {
         let cm = ctrl.cm_cn;
         let epoch = self.cns[cn].interrupt_epoch;
         let now = self.q.now();
-        self.stats.recovery.count("InterruptResp");
+        self.stats.recovery.count(RecoveryMsg::InterruptResp);
         self.send(
             now,
             Message {
@@ -323,7 +324,7 @@ impl Cluster {
         let mut pending = HashSet::new();
         for mn in 0..self.cfg.n_mns {
             pending.insert(mn);
-            self.stats.recovery.count("InitRecov");
+            self.stats.recovery.count(RecoveryMsg::InitRecov);
             self.send(
                 now,
                 Message {
@@ -400,7 +401,7 @@ impl Cluster {
             return;
         }
         for (cn, lines) in per_cn {
-            self.stats.recovery.count("FetchLatestVers");
+            self.stats.recovery.count(RecoveryMsg::FetchLatestVers);
             self.send(
                 now,
                 Message {
@@ -424,7 +425,7 @@ impl Cluster {
         let results = self.logunits[cn].fetch_latest_vers(&lines);
         // software handler cost: proportional to a log traversal
         let cost = lu_cycles(16 + self.logunits[cn].dram_len() as u64 / 8);
-        self.stats.recovery.count("FetchLatestVersResp");
+        self.stats.recovery.count(RecoveryMsg::FetchLatestVersResp);
         self.send(
             now + cost,
             Message {
@@ -535,7 +536,7 @@ impl Cluster {
             return;
         }
         let cm = ctrl.cm_cn;
-        self.stats.recovery.count("InitRecovResp");
+        self.stats.recovery.count(RecoveryMsg::InitRecovResp);
         self.send(
             now,
             Message {
@@ -561,7 +562,7 @@ impl Cluster {
         }
         let live: HashSet<CnId> = self.live_cns().collect();
         for &c in &live {
-            self.stats.recovery.count("RecovEnd");
+            self.stats.recovery.count(RecoveryMsg::RecovEnd);
             self.send(
                 now,
                 Message {
@@ -597,7 +598,7 @@ impl Cluster {
         }
         let Some(ctrl) = &self.recovery else { return };
         let cm = ctrl.cm_cn;
-        self.stats.recovery.count("RecovEndResp");
+        self.stats.recovery.count(RecoveryMsg::RecovEndResp);
         self.send(
             now,
             Message {

@@ -113,13 +113,16 @@ impl Fabric {
         let mut arrive = down_done + self.one_way;
         if self.jitter > 0 && msg.kind.reorderable() {
             // Deterministic per-message jitter: hash of (salt, src, dst,
-            // payload size, time) — reproducible across runs.
+            // payload size, time) — reproducible across runs.  The full
+            // 64-bit timestamp is folded in (`now ^ (now >> 32)`): a plain
+            // `now as u32` truncation made sends whose times agree in the
+            // low 32 bits (every ~4.3 ms of simulated time) share jitter.
             let h = mix32(
                 self.jitter_salt
                     ^ ((src_port as u32) << 8)
                     ^ ((dst_port as u32) << 16)
                     ^ bytes
-                    ^ now as u32,
+                    ^ ((now ^ (now >> 32)) as u32),
             );
             arrive += (h as u64) % self.jitter;
         }
@@ -216,6 +219,44 @@ mod tests {
         assert_eq!(f.send(0, &to_dead, &mut t), Delivery::Dropped);
         assert_eq!(f.dropped_to_dead, 1);
         assert!(matches!(f.send(0, &rds(0, 0), &mut t), Delivery::At(_)));
+    }
+
+    #[test]
+    fn jitter_mixes_the_full_timestamp_and_stays_deterministic() {
+        let mut cv = cfg();
+        cv.repl_jitter_ps = 50_000;
+        let repl = Message {
+            src: NodeId::Cn(0),
+            dst: NodeId::Cn(1),
+            kind: MsgKind::Repl {
+                req: ReqId { cn: 0, core: 0 },
+                line: Addr(0x8000_0040).line(),
+                mask: 1,
+                words: [0; 16],
+                repl_seq: 1,
+            },
+        };
+        // jitter component of a send at time t from a fresh fabric
+        let jitter_at = |t: Ps| {
+            let mut f = Fabric::new(&cv);
+            let mut tr = TrafficStats::default();
+            let Delivery::At(a) = f.send(t, &repl, &mut tr) else {
+                panic!()
+            };
+            a - t
+        };
+        // deterministic: same timestamp (with high bits set) -> same jitter
+        let t0: Ps = (7 << 32) | 1_234_567;
+        assert_eq!(jitter_at(t0), jitter_at(t0));
+        // timestamps equal in the low 32 bits must not all collapse to one
+        // jitter value (each pair colliding mod 50_000 has odds 1/50_000;
+        // all three colliding is ~1e-14 — effectively pinned)
+        let base: Ps = 1_234_567;
+        let j0 = jitter_at(base);
+        assert!(
+            (1..=3).any(|hi| jitter_at(base + ((hi as Ps) << 32)) != j0),
+            "high timestamp bits must reach the jitter hash"
+        );
     }
 
     #[test]

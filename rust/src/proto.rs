@@ -38,6 +38,25 @@ pub enum MsgClass {
     Recovery,
 }
 
+impl MsgClass {
+    /// Number of classes (sizes the fixed counter arrays in `stats`).
+    pub const COUNT: usize = 4;
+
+    pub const ALL: [MsgClass; MsgClass::COUNT] = [
+        MsgClass::CxlAccess,
+        MsgClass::Replication,
+        MsgClass::LogDump,
+        MsgClass::Recovery,
+    ];
+
+    /// Dense index for counter arrays (`stats::TrafficStats` replaced its
+    /// per-message `HashMap` lookups with `[u64; COUNT]` — §Perf).
+    #[inline]
+    pub const fn idx(self) -> usize {
+        self as usize
+    }
+}
+
 /// Word values of one line (16 x 4 B).
 pub type LineWords = [u32; 16];
 
@@ -122,6 +141,75 @@ pub struct Message {
     pub src: NodeId,
     pub dst: NodeId,
     pub kind: MsgKind,
+}
+
+impl Message {
+    /// The inert value a recycled pool box holds between uses (cheapest
+    /// variant: no heap payload to keep alive in the free list).
+    #[inline]
+    fn recycled() -> Message {
+        Message {
+            src: NodeId::Cn(0),
+            dst: NodeId::Cn(0),
+            kind: MsgKind::DumpSyncAck { to: 0 },
+        }
+    }
+}
+
+/// Recycled `Box<Message>` allocations bounded by `MSG_POOL_CAP`; beyond
+/// that, reclaimed boxes are simply dropped.  In-flight message counts are
+/// bounded by link backpressure, so the cap is only a guard against
+/// pathological bursts retaining memory forever.
+const MSG_POOL_CAP: usize = 1024;
+
+/// Free-list of recycled `Box<Message>`es for `Ev::Deliver` (§Perf:
+/// steady-state message delivery allocates nothing — every `Fabric` send
+/// reuses the box of a previously delivered message).
+#[derive(Debug, Default)]
+pub struct MsgPool {
+    free: Vec<Box<Message>>,
+    /// Boxes obtained from the global allocator (pool empty at `boxed`).
+    pub allocated: u64,
+    /// Boxes reused from the free list.
+    pub recycled: u64,
+}
+
+impl MsgPool {
+    pub fn new() -> Self {
+        MsgPool::default()
+    }
+
+    /// Box `msg`, reusing a recycled allocation when one is available.
+    #[inline]
+    pub fn boxed(&mut self, msg: Message) -> Box<Message> {
+        match self.free.pop() {
+            Some(mut b) => {
+                self.recycled += 1;
+                *b = msg;
+                b
+            }
+            None => {
+                self.allocated += 1;
+                Box::new(msg)
+            }
+        }
+    }
+
+    /// Take the message out of a delivered box and keep the allocation for
+    /// reuse (any heap payload the message carried moves out with it).
+    #[inline]
+    pub fn reclaim(&mut self, mut b: Box<Message>) -> Message {
+        let msg = std::mem::replace(&mut *b, Message::recycled());
+        if self.free.len() < MSG_POOL_CAP {
+            self.free.push(b);
+        }
+        msg
+    }
+
+    /// Recycled boxes currently parked in the free list.
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
 }
 
 const HDR: u32 = 16;
@@ -251,6 +339,45 @@ mod tests {
             .class(),
             MsgClass::CxlAccess
         );
+    }
+
+    #[test]
+    fn msg_class_indices_are_dense_and_unique() {
+        let mut seen = [false; MsgClass::COUNT];
+        for c in MsgClass::ALL {
+            assert!(c.idx() < MsgClass::COUNT);
+            assert!(!seen[c.idx()], "duplicate index for {c:?}");
+            seen[c.idx()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn msg_pool_recycles_allocations() {
+        let mut pool = MsgPool::new();
+        let b = pool.boxed(Message {
+            src: NodeId::Cn(1),
+            dst: NodeId::Mn(2),
+            kind: MsgKind::RdS {
+                line: line(),
+                req: ReqId { cn: 1, core: 0 },
+            },
+        });
+        assert_eq!((pool.allocated, pool.recycled), (1, 0));
+        let msg = pool.reclaim(b);
+        assert_eq!(msg.src, NodeId::Cn(1));
+        assert!(matches!(msg.kind, MsgKind::RdS { .. }));
+        assert_eq!(pool.free_len(), 1);
+        // second boxed reuses the reclaimed allocation
+        let b2 = pool.boxed(Message {
+            src: NodeId::Cn(3),
+            dst: NodeId::Cn(4),
+            kind: MsgKind::Interrupt { epoch: 7 },
+        });
+        assert_eq!((pool.allocated, pool.recycled), (1, 1));
+        assert_eq!(pool.free_len(), 0);
+        assert_eq!(b2.src, NodeId::Cn(3));
+        assert!(matches!(b2.kind, MsgKind::Interrupt { epoch: 7 }));
     }
 
     #[test]

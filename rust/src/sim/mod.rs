@@ -4,7 +4,20 @@
 //! equivalent: a deterministic event queue with picosecond resolution.
 //! Determinism comes from a total order on events — `(time, sequence
 //! number)` — where sequence numbers are assigned at push, so same-time
-//! events fire in insertion order, independent of heap internals.
+//! events fire in insertion order, independent of queue internals.
+//!
+//! # Queue structure (§Perf, EXPERIMENTS.md)
+//!
+//! The queue is a two-tier calendar: a circular array of near-future
+//! buckets (each covering a fixed power-of-two time window) in front of a
+//! binary-heap overflow tier.  Steady-state events — message deliveries a
+//! few hundred ns out, core re-schedules a quantum ahead — land in small
+//! buckets and pop in O(bucket) with no heap sifting; far-future events
+//! (dump ticks, fault injections, quiesce deadlines) and pathological
+//! bucket pile-ups spill to the heap.  `pop` always compares the current
+//! bucket's minimum against the heap top under the same `(time, seq)`
+//! order, so *where* an event physically lives never affects the order in
+//! which events fire: the schedule is bit-identical to a single heap's.
 
 pub mod rng;
 pub mod time;
@@ -15,8 +28,24 @@ pub use time::Ps;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// A scheduled event of payload type `E`.  Ordering uses the key only, so
-/// payloads need no `Ord` (messages carry unordered data).
+/// log2 of the bucket width: 2^13 ps ≈ 8.2 ns per bucket.
+const WIDTH_SHIFT: u32 = 13;
+/// Number of calendar buckets (power of two).  With the width above the
+/// calendar covers a "day" of `N_BUCKETS << WIDTH_SHIFT` ≈ 33.6 us —
+/// beyond the fabric RTT, the run-ahead quantum, and the quiesce window,
+/// so the steady-state schedule stays in the near tier.
+const N_BUCKETS: usize = 1 << 12;
+/// Per-bucket spill threshold: a bucket already holding this many events
+/// sends further same-window pushes to the overflow heap, bounding the
+/// per-pop scan.  Order is unaffected (pop compares both tiers).
+const BUCKET_CAP: usize = 64;
+
+const WIDTH: Ps = 1 << WIDTH_SHIFT;
+const DAY: Ps = (N_BUCKETS as Ps) << WIDTH_SHIFT;
+
+/// A scheduled event of payload type `E` in the overflow tier.  Ordering
+/// uses the key only, so payloads need no `Ord` (messages carry unordered
+/// data).
 #[derive(Debug, Clone)]
 struct Scheduled<E> {
     key: Reverse<(Ps, u64)>,
@@ -40,10 +69,26 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
-/// Deterministic event queue.
+/// Deterministic event queue: calendar front-end + heap overflow tier.
+///
+/// Invariants the implementation maintains:
+/// * `now ∈ [bucket_start, bucket_start + WIDTH)` — the calendar cursor
+///   tracks the last popped time;
+/// * every event in `buckets[i]` has its timestamp inside bucket `i`'s
+///   *current* window (the unique occurrence of slot `i` within
+///   `[bucket_start, bucket_start + DAY)`), because pushes only use the
+///   near tier for `at < bucket_start + DAY` and `at >= now`;
+/// * `pop` takes the global `(time, seq)` minimum across both tiers.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    buckets: Vec<Vec<(Ps, u64, E)>>,
+    /// Index of the bucket whose window contains `now`.
+    cur: usize,
+    /// Start time of `buckets[cur]`'s window.
+    bucket_start: Ps,
+    /// Events currently in the calendar tier.
+    n_near: usize,
+    overflow: BinaryHeap<Scheduled<E>>,
     seq: u64,
     now: Ps,
     pushed: u64,
@@ -59,7 +104,11 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            buckets: (0..N_BUCKETS).map(|_| Vec::new()).collect(),
+            cur: 0,
+            bucket_start: 0,
+            n_near: 0,
+            overflow: BinaryHeap::new(),
             seq: 0,
             now: 0,
             pushed: 0,
@@ -83,7 +132,16 @@ impl<E> EventQueue<E> {
         let s = self.seq;
         self.seq += 1;
         self.pushed += 1;
-        self.heap.push(Scheduled {
+        if at < self.bucket_start + DAY {
+            let idx = ((at >> WIDTH_SHIFT) as usize) & (N_BUCKETS - 1);
+            let b = &mut self.buckets[idx];
+            if b.len() < BUCKET_CAP {
+                b.push((at, s, payload));
+                self.n_near += 1;
+                return;
+            }
+        }
+        self.overflow.push(Scheduled {
             key: Reverse((at, s)),
             payload,
         });
@@ -98,23 +156,73 @@ impl<E> EventQueue<E> {
     /// Pop the next event, advancing `now`.
     #[inline]
     pub fn pop(&mut self) -> Option<(Ps, E)> {
-        self.heap.pop().map(|s| {
-            let (t, _) = s.key.0;
-            debug_assert!(t >= self.now);
-            self.now = t;
-            self.popped += 1;
-            (t, s.payload)
-        })
+        if self.n_near == 0 {
+            // calendar empty: the overflow top is the global minimum; jump
+            // the cursor straight to its window (no bucket-by-bucket walk)
+            let sch = self.overflow.pop()?;
+            let (t, _) = sch.key.0;
+            self.cur = ((t >> WIDTH_SHIFT) as usize) & (N_BUCKETS - 1);
+            self.bucket_start = (t >> WIDTH_SHIFT) << WIDTH_SHIFT;
+            return Some(self.emit(t, sch.payload));
+        }
+        loop {
+            // minimum of the current bucket (all of its events lie inside
+            // the current window, see the struct invariants)
+            let mut best: Option<(usize, Ps, u64)> = None;
+            for (i, it) in self.buckets[self.cur].iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some((_, bt, bs)) => (it.0, it.1) < (bt, bs),
+                };
+                if better {
+                    best = Some((i, it.0, it.1));
+                }
+            }
+            let wend = self.bucket_start + WIDTH;
+            if let Some((i, bt, bs)) = best {
+                // an overflow event may precede it (spilled same-window
+                // push, or a far push whose time has come)
+                let over_first = self.overflow.peek().is_some_and(|top| top.key.0 < (bt, bs));
+                if over_first {
+                    let sch = self.overflow.pop().unwrap();
+                    let (t, _) = sch.key.0;
+                    return Some(self.emit(t, sch.payload));
+                }
+                let (t, _, payload) = self.buckets[self.cur].swap_remove(i);
+                self.n_near -= 1;
+                return Some(self.emit(t, payload));
+            }
+            // current bucket empty: overflow may own this window
+            if let Some(top) = self.overflow.peek() {
+                if top.key.0 .0 < wend {
+                    let sch = self.overflow.pop().unwrap();
+                    let (t, _) = sch.key.0;
+                    return Some(self.emit(t, sch.payload));
+                }
+            }
+            // advance to the next window.  Terminates: n_near > 0 means
+            // some bucket holds an event within one DAY of the cursor.
+            self.cur = (self.cur + 1) & (N_BUCKETS - 1);
+            self.bucket_start = wend;
+        }
+    }
+
+    #[inline]
+    fn emit(&mut self, t: Ps, payload: E) -> (Ps, E) {
+        debug_assert!(t >= self.now);
+        self.now = t;
+        self.popped += 1;
+        (t, payload)
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.n_near == 0 && self.overflow.is_empty()
     }
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.n_near + self.overflow.len()
     }
 
     /// Total events processed so far (simulator throughput accounting).
@@ -143,6 +251,8 @@ mod tests {
 
     #[test]
     fn same_time_is_fifo() {
+        // 100 same-time events exceed BUCKET_CAP, so this also checks
+        // FIFO order across the bucket -> overflow spill
         let mut q = EventQueue::new();
         for i in 0..100u32 {
             q.push_at(5, i);
@@ -150,6 +260,7 @@ mod tests {
         for i in 0..100u32 {
             assert_eq!(q.pop(), Some((5, i)));
         }
+        assert!(q.is_empty());
     }
 
     #[test]
@@ -170,5 +281,101 @@ mod tests {
         assert_eq!(q.len(), 1);
         assert_eq!(q.events_processed(), 1);
         assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn order_holds_across_the_day_boundary() {
+        // events beyond the calendar horizon start in the overflow tier
+        // and must still interleave correctly with near events
+        let mut q = EventQueue::new();
+        q.push_at(2 * DAY + 7, "far");
+        q.push_at(3, "near");
+        q.push_at(DAY - 1, "edge");
+        q.push_at(2 * DAY + 7, "far2"); // same time as "far": FIFO
+        assert_eq!(q.pop(), Some((3, "near")));
+        assert_eq!(q.pop(), Some((DAY - 1, "edge")));
+        assert_eq!(q.pop(), Some((2 * DAY + 7, "far")));
+        assert_eq!(q.pop(), Some((2 * DAY + 7, "far2")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn near_pushes_after_far_jumps_stay_ordered() {
+        // pop of a far event jumps the cursor; subsequent near pushes must
+        // land in the right windows
+        let mut q = EventQueue::new();
+        q.push_at(5 * DAY, 0u32);
+        assert_eq!(q.pop(), Some((5 * DAY, 0)));
+        q.push_at(5 * DAY + 10, 1u32);
+        q.push_at(5 * DAY + 2, 2u32);
+        assert_eq!(q.pop(), Some((5 * DAY + 2, 2)));
+        assert_eq!(q.pop(), Some((5 * DAY + 10, 1)));
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_global_order() {
+        let mut q = EventQueue::new();
+        q.push_at(10, 0u32);
+        q.push_at(1_000_000, 1);
+        assert_eq!(q.pop(), Some((10, 0)));
+        // now = 10; schedule same-time and mid-range events
+        q.push_at(10, 2);
+        q.push_at(500, 3);
+        assert_eq!(q.pop(), Some((10, 2)));
+        assert_eq!(q.pop(), Some((500, 3)));
+        assert_eq!(q.pop(), Some((1_000_000, 1)));
+    }
+
+    /// Differential test: the calendar queue must agree with a plain
+    /// binary heap on every pop of a long randomized push/pop schedule
+    /// spanning same-time bursts, near-window, cross-bucket, and
+    /// beyond-day horizons.
+    #[test]
+    fn matches_reference_heap_on_random_schedules() {
+        let mut rng = Pcg::new(0xBEEF, 17);
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut reference: BinaryHeap<Reverse<(Ps, u64, u32)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut id = 0u32;
+        for _ in 0..20_000 {
+            if rng.chance(0.55) || q.is_empty() {
+                let horizon = match rng.below(5) {
+                    0 => 0,                              // same-time burst
+                    1 => rng.below(WIDTH),               // same bucket
+                    2 => rng.below(200_000),             // a few buckets out
+                    3 => rng.below(DAY),                 // anywhere in the day
+                    _ => DAY + rng.below(4 * DAY),       // overflow tier
+                };
+                let at = q.now() + horizon;
+                q.push_at(at, id);
+                reference.push(Reverse((at, seq, id)));
+                seq += 1;
+                id += 1;
+            } else {
+                let got = q.pop();
+                let want = reference.pop().map(|Reverse((t, _, i))| (t, i));
+                assert_eq!(got, want);
+            }
+        }
+        while let Some(got) = q.pop() {
+            let want = reference.pop().map(|Reverse((t, _, i))| (t, i));
+            assert_eq!(Some(got), want);
+        }
+        assert!(reference.is_empty());
+    }
+
+    #[test]
+    fn bucket_cap_spill_preserves_order() {
+        // overfill one window, then interleave a later window; pops must
+        // come out in exact (time, seq) order regardless of tier
+        let mut q = EventQueue::new();
+        for i in 0..(BUCKET_CAP as u32 + 40) {
+            q.push_at(100, i);
+        }
+        q.push_at(WIDTH + 5, 9_999u32);
+        for i in 0..(BUCKET_CAP as u32 + 40) {
+            assert_eq!(q.pop(), Some((100, i)));
+        }
+        assert_eq!(q.pop(), Some((WIDTH + 5, 9_999)));
     }
 }

@@ -1,27 +1,58 @@
 //! Run statistics: everything the paper's figures are computed from.
-
-use std::collections::HashMap;
+//!
+//! The per-message counters on the hot path (`TrafficStats::record`,
+//! `RecoveryStats::count`) are fixed arrays indexed by dense enums, not
+//! hash maps — two map lookups per routed message was a measured §Perf
+//! cost (see EXPERIMENTS.md).  `record` also folds bytes into a
+//! time-bucketed timeline so bandwidth can be plotted over time (the
+//! Fig. 14 time-series), not just averaged over the run.
 
 use crate::cache::LineCensus;
 use crate::config::CnId;
 use crate::proto::MsgClass;
-use crate::sim::time::Ps;
+use crate::sim::time::{self, Ps};
 
-/// Byte counts per message class (Fig. 14).
+/// Width of one traffic-timeline bucket.
+pub const TRAFFIC_BUCKET_PS: Ps = time::us(50);
+
+/// Timeline length cap: later traffic saturates into the final bucket
+/// (bounds memory on very long runs; ~0.8 s of simulated time uncapped).
+const TIMELINE_MAX_BUCKETS: usize = 16 * 1024;
+
+/// Byte counts per message class (Fig. 14), plus a bandwidth timeline.
 #[derive(Debug, Default, Clone)]
 pub struct TrafficStats {
-    pub bytes: HashMap<MsgClass, u64>,
-    pub messages: HashMap<MsgClass, u64>,
+    bytes: [u64; MsgClass::COUNT],
+    messages: [u64; MsgClass::COUNT],
+    /// `timeline[i][c]` = bytes of class `c` sent in
+    /// `[i * TRAFFIC_BUCKET_PS, (i+1) * TRAFFIC_BUCKET_PS)`.
+    timeline: Vec<[u64; MsgClass::COUNT]>,
 }
 
 impl TrafficStats {
-    pub fn record(&mut self, _now: Ps, class: MsgClass, bytes: u32) {
-        *self.bytes.entry(class).or_default() += bytes as u64;
-        *self.messages.entry(class).or_default() += 1;
+    pub fn record(&mut self, now: Ps, class: MsgClass, bytes: u32) {
+        let c = class.idx();
+        self.bytes[c] += bytes as u64;
+        self.messages[c] += 1;
+        let b = ((now / TRAFFIC_BUCKET_PS) as usize).min(TIMELINE_MAX_BUCKETS - 1);
+        if b >= self.timeline.len() {
+            self.timeline.resize(b + 1, [0; MsgClass::COUNT]);
+        }
+        self.timeline[b][c] += bytes as u64;
     }
 
     pub fn bytes_of(&self, class: MsgClass) -> u64 {
-        self.bytes.get(&class).copied().unwrap_or(0)
+        self.bytes[class.idx()]
+    }
+
+    pub fn messages_of(&self, class: MsgClass) -> u64 {
+        self.messages[class.idx()]
+    }
+
+    /// Total messages routed, all classes (the event-loop watchdog's
+    /// progress signal).
+    pub fn total_messages(&self) -> u64 {
+        self.messages.iter().sum()
     }
 
     /// Average bandwidth of a class over `elapsed`, in GB/s.
@@ -30,6 +61,21 @@ impl TrafficStats {
             return 0.0;
         }
         self.bytes_of(class) as f64 / elapsed as f64 * 1_000.0
+    }
+
+    /// Raw per-bucket byte counts of a class (determinism fingerprints,
+    /// custom plots).
+    pub fn timeline_bytes(&self, class: MsgClass) -> Vec<u64> {
+        self.timeline.iter().map(|b| b[class.idx()]).collect()
+    }
+
+    /// Bandwidth of a class per timeline bucket, in GB/s — the Fig. 14
+    /// time-series.
+    pub fn timeline_gbps(&self, class: MsgClass) -> Vec<f64> {
+        self.timeline
+            .iter()
+            .map(|b| b[class.idx()] as f64 / TRAFFIC_BUCKET_PS as f64 * 1_000.0)
+            .collect()
     }
 }
 
@@ -95,6 +141,93 @@ impl ReplStats {
     }
 }
 
+/// The Table-I recovery message kinds — a closed set, so counting them is
+/// an array increment, not a hash insert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryMsg {
+    Msi,
+    Interrupt,
+    InterruptResp,
+    InitRecov,
+    InitRecovResp,
+    FetchLatestVers,
+    FetchLatestVersResp,
+    RecovEnd,
+    RecovEndResp,
+}
+
+impl RecoveryMsg {
+    pub const COUNT: usize = 9;
+
+    pub const ALL: [RecoveryMsg; RecoveryMsg::COUNT] = [
+        RecoveryMsg::Msi,
+        RecoveryMsg::Interrupt,
+        RecoveryMsg::InterruptResp,
+        RecoveryMsg::InitRecov,
+        RecoveryMsg::InitRecovResp,
+        RecoveryMsg::FetchLatestVers,
+        RecoveryMsg::FetchLatestVersResp,
+        RecoveryMsg::RecovEnd,
+        RecoveryMsg::RecovEndResp,
+    ];
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            RecoveryMsg::Msi => "Msi",
+            RecoveryMsg::Interrupt => "Interrupt",
+            RecoveryMsg::InterruptResp => "InterruptResp",
+            RecoveryMsg::InitRecov => "InitRecov",
+            RecoveryMsg::InitRecovResp => "InitRecovResp",
+            RecoveryMsg::FetchLatestVers => "FetchLatestVers",
+            RecoveryMsg::FetchLatestVersResp => "FetchLatestVersResp",
+            RecoveryMsg::RecovEnd => "RecovEnd",
+            RecoveryMsg::RecovEndResp => "RecovEndResp",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<RecoveryMsg> {
+        RecoveryMsg::ALL.into_iter().find(|m| m.name() == name)
+    }
+}
+
+/// Table-I message counts as a fixed array, with name-indexed reads
+/// (`counts["Msi"]`) kept for tests and report code.
+#[derive(Debug, Default, Clone)]
+pub struct RecoveryMsgCounts {
+    counts: [u64; RecoveryMsg::COUNT],
+}
+
+impl RecoveryMsgCounts {
+    #[inline]
+    pub fn count(&mut self, m: RecoveryMsg) {
+        self.counts[m as usize] += 1;
+    }
+
+    pub fn get(&self, m: RecoveryMsg) -> u64 {
+        self.counts[m as usize]
+    }
+
+    /// `(name, count)` pairs of the messages actually exchanged, in
+    /// protocol order.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        RecoveryMsg::ALL
+            .into_iter()
+            .map(|m| (m.name(), self.get(m)))
+            .filter(|&(_, c)| c > 0)
+    }
+}
+
+impl std::ops::Index<&str> for RecoveryMsgCounts {
+    type Output = u64;
+
+    fn index(&self, name: &str) -> &u64 {
+        match RecoveryMsg::from_name(name) {
+            Some(m) => &self.counts[m as usize],
+            None => panic!("unknown recovery message {name:?}"),
+        }
+    }
+}
+
 /// Recovery accounting (Table I message counts, Fig. 15 census).
 #[derive(Debug, Default, Clone)]
 pub struct RecoveryStats {
@@ -123,16 +256,17 @@ pub struct RecoveryStats {
     pub recovered_from_logs: u64,
     /// Lines recovered from the MN-resident dumped logs.
     pub recovered_from_mn_logs: u64,
-    /// Table I message counts, by name.
-    pub messages: HashMap<&'static str, u64>,
+    /// Table I message counts.
+    pub messages: RecoveryMsgCounts,
     /// Consistency-oracle verdict (must be true in every test).
     pub consistent: bool,
     pub inconsistencies: u64,
 }
 
 impl RecoveryStats {
-    pub fn count(&mut self, name: &'static str) {
-        *self.messages.entry(name).or_default() += 1;
+    #[inline]
+    pub fn count(&mut self, m: RecoveryMsg) {
+        self.messages.count(m);
     }
 }
 
@@ -149,6 +283,10 @@ pub struct RunStats {
     /// Host-side wall time of the simulation itself (perf accounting).
     pub host_wall_s: f64,
     pub events: u64,
+    /// Message-pool accounting (§Perf: steady-state delivery must recycle,
+    /// not allocate).
+    pub msg_pool_allocated: u64,
+    pub msg_pool_recycled: u64,
 }
 
 impl RunStats {
@@ -192,6 +330,8 @@ mod tests {
         assert_eq!(t.bytes_of(MsgClass::CxlAccess), 100);
         assert_eq!(t.bytes_of(MsgClass::LogDump), 64);
         assert_eq!(t.bytes_of(MsgClass::Replication), 0);
+        assert_eq!(t.messages_of(MsgClass::CxlAccess), 2);
+        assert_eq!(t.total_messages(), 3);
     }
 
     #[test]
@@ -202,6 +342,33 @@ mod tests {
         // = 1000 GB/s. Over 1 ms: 1e6 / 1e9 * 1000 = 1 GB/s.
         assert!((t.gbps(MsgClass::CxlAccess, 1_000_000_000) - 1.0).abs() < 1e-9);
         assert_eq!(t.gbps(MsgClass::CxlAccess, 0), 0.0);
+    }
+
+    #[test]
+    fn timeline_buckets_by_send_time() {
+        let mut t = TrafficStats::default();
+        t.record(0, MsgClass::CxlAccess, 10);
+        t.record(TRAFFIC_BUCKET_PS - 1, MsgClass::CxlAccess, 5);
+        t.record(TRAFFIC_BUCKET_PS, MsgClass::CxlAccess, 7);
+        t.record(3 * TRAFFIC_BUCKET_PS + 1, MsgClass::Replication, 100);
+        assert_eq!(t.timeline_bytes(MsgClass::CxlAccess), vec![15, 7, 0, 0]);
+        assert_eq!(t.timeline_bytes(MsgClass::Replication), vec![0, 0, 0, 100]);
+        let series = t.timeline_gbps(MsgClass::Replication);
+        assert_eq!(series.len(), 4);
+        // 100 B / 50 us = 0.002 GB/s
+        assert!((series[3] - 100.0 / TRAFFIC_BUCKET_PS as f64 * 1_000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_saturates_at_the_cap() {
+        let mut t = TrafficStats::default();
+        let far = TRAFFIC_BUCKET_PS * (TIMELINE_MAX_BUCKETS as u64 + 50);
+        t.record(far, MsgClass::LogDump, 64);
+        t.record(far + TRAFFIC_BUCKET_PS, MsgClass::LogDump, 64);
+        let tl = t.timeline_bytes(MsgClass::LogDump);
+        assert_eq!(tl.len(), TIMELINE_MAX_BUCKETS);
+        assert_eq!(tl[TIMELINE_MAX_BUCKETS - 1], 128);
+        assert_eq!(t.bytes_of(MsgClass::LogDump), 128);
     }
 
     #[test]
@@ -220,10 +387,21 @@ mod tests {
     #[test]
     fn recovery_message_counter() {
         let mut r = RecoveryStats::default();
-        r.count("Interrupt");
-        r.count("Interrupt");
-        r.count("RecovEnd");
+        r.count(RecoveryMsg::Interrupt);
+        r.count(RecoveryMsg::Interrupt);
+        r.count(RecoveryMsg::RecovEnd);
         assert_eq!(r.messages["Interrupt"], 2);
         assert_eq!(r.messages["RecovEnd"], 1);
+        assert_eq!(r.messages["Msi"], 0);
+        let seen: Vec<_> = r.messages.iter().collect();
+        assert_eq!(seen, vec![("Interrupt", 2), ("RecovEnd", 1)]);
+    }
+
+    #[test]
+    fn recovery_msg_names_roundtrip() {
+        for m in RecoveryMsg::ALL {
+            assert_eq!(RecoveryMsg::from_name(m.name()), Some(m));
+        }
+        assert_eq!(RecoveryMsg::from_name("NotATableIMessage"), None);
     }
 }

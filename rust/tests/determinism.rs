@@ -1,0 +1,110 @@
+//! Determinism under the hot-path overhaul (§Perf): the calendar event
+//! queue, the pooled zero-alloc message delivery, the per-line oracle,
+//! and the counter-array stats must leave the simulated schedule — and
+//! therefore every reported number — bit-identical run over run, on every
+//! named fault scenario, and across `run_grid` thread counts.
+
+use recxl::figures::run_grid;
+use recxl::prelude::*;
+use recxl::proto::MsgClass;
+use recxl::sim::time::Ps;
+
+/// A small cluster keeps the 2x-run sweep cheap; scenarios scale their
+/// fault plans to it (`Scenario::plan` takes the config).
+fn scen_cfg(ops: u64) -> SimConfig {
+    SimConfig {
+        n_cns: 4,
+        n_mns: 4,
+        protocol: Protocol::ReCxlProactive,
+        ops_per_thread: ops,
+        ..SimConfig::default()
+    }
+}
+
+/// Everything that must match bit-for-bit between two runs: simulated
+/// time, event count, per-class traffic (totals + the 50 us timeline),
+/// commits, and the recovery outcome.
+#[allow(clippy::type_complexity)]
+fn fingerprint(s: &RunStats) -> (Ps, u64, Vec<u64>, Vec<u64>, Vec<Vec<u64>>, u64, Vec<usize>) {
+    (
+        s.exec_time_ps,
+        s.events,
+        MsgClass::ALL.iter().map(|&c| s.traffic.bytes_of(c)).collect(),
+        MsgClass::ALL
+            .iter()
+            .map(|&c| s.traffic.messages_of(c))
+            .collect(),
+        MsgClass::ALL
+            .iter()
+            .map(|&c| s.traffic.timeline_bytes(c))
+            .collect(),
+        s.repl.store_commits,
+        s.recovery.failed_cns.clone(),
+    )
+}
+
+#[test]
+fn fixed_seed_is_bit_identical_on_every_named_scenario() {
+    let app = by_name("ycsb").unwrap();
+    for sc in recxl::scenarios::all() {
+        let mut cfg = scen_cfg(6_000);
+        cfg.faults = sc.plan(&cfg);
+        let a = run_app(cfg.clone(), &app);
+        let b = run_app(cfg, &app);
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "scenario {} must be bit-identical across reruns",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn run_grid_is_identical_across_thread_counts() {
+    let app = by_name("ycsb").unwrap();
+    let mut points = Vec::new();
+    for name in ["no-crash", "double-crash"] {
+        let sc = recxl::scenarios::by_name(name).unwrap();
+        let mut cfg = scen_cfg(4_000);
+        cfg.faults = sc.plan(&cfg);
+        points.push((cfg, app.clone()));
+    }
+    let seq = run_grid(points.clone(), false);
+    let par = run_grid(points, true);
+    for (i, (s, p)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(
+            fingerprint(s),
+            fingerprint(p),
+            "grid point {i} must not depend on host parallelism"
+        );
+    }
+}
+
+#[test]
+fn message_pool_recycles_in_steady_state() {
+    let s = run_app(scen_cfg(6_000), &by_name("ycsb").unwrap());
+    assert!(
+        s.msg_pool_allocated > 0,
+        "a nonempty run must deliver messages"
+    );
+    assert!(
+        s.msg_pool_recycled > s.msg_pool_allocated,
+        "steady-state delivery must reuse pooled boxes, not allocate: \
+         allocated {} vs recycled {}",
+        s.msg_pool_allocated,
+        s.msg_pool_recycled
+    );
+}
+
+#[test]
+fn seeds_still_differentiate_schedules() {
+    // the pooled/bucketed fast paths must not have frozen the seed out of
+    // the schedule
+    let app = by_name("ycsb").unwrap();
+    let a = run_app(scen_cfg(4_000), &app);
+    let mut cfg = scen_cfg(4_000);
+    cfg.seed = 0xDEAD_BEEF;
+    let b = run_app(cfg, &app);
+    assert_ne!(a.exec_time_ps, b.exec_time_ps);
+}
