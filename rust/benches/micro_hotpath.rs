@@ -12,7 +12,7 @@ use recxl::benchkit::{bench, header, Report};
 use recxl::cache::{CnCaches, Mesi};
 use recxl::cluster::{run_app, Oracle};
 use recxl::config::SimConfig;
-use recxl::mem::Addr;
+use recxl::mem::{Addr, LineId, LineTable};
 use recxl::prelude::*;
 use recxl::proto::{MsgClass, ReqId};
 use recxl::recxl::logunit::{LoggingUnit, PendingRepl};
@@ -56,13 +56,37 @@ fn main() {
     }));
 
     let cfg = SimConfig::default();
+    // pre-intern the working set once (what the cluster does at the
+    // trace boundary); the bench then measures pure slab probes
+    let pts: Vec<(recxl::mem::Line, LineId)> = {
+        let mut t = LineTable::new(12, 0, 0, 16);
+        (0..4096u32)
+            .map(|i| {
+                let l = Addr(0x8000_0000 | (i << 6)).line();
+                (l, t.intern(l))
+            })
+            .collect()
+    };
     report.push(bench("cache lookup+fill 10k lines", warm, samp, || {
         let mut c = CnCaches::new(&cfg);
         for i in 0..10_000u32 {
-            let l = Addr(0x8000_0000 | ((i % 4096) << 6)).line();
-            if c.lookup(0, l) == recxl::cache::LookupResult::Miss {
-                c.fill(0, l, Mesi::Exclusive, [0; 16]);
+            let (l, id) = pts[(i % 4096) as usize];
+            if c.lookup(0, l, id) == recxl::cache::LookupResult::Miss {
+                c.fill(0, l, id, Mesi::Exclusive, [0; 16]);
             }
+        }
+    }));
+
+    // the translation itself: arithmetic direct-map probes, mostly hits
+    report.push(bench("line_table intern 64k translations", warm, samp, || {
+        let mut t = LineTable::new(16, 10, 64, 16);
+        for i in 0..65_536u32 {
+            let l = if i % 4 == 0 {
+                Addr(((i % 64) << 24) | ((i % 1024) << 6)).line()
+            } else {
+                Addr(0x8000_0000 | ((i * 7 % 65_536) << 6)).line()
+            };
+            std::hint::black_box(t.intern(l));
         }
     }));
 
@@ -77,10 +101,10 @@ fn main() {
         let mut o = Oracle::default();
         let mut words = [0u32; 16];
         for i in 0..10_000u64 {
-            let line = Addr(0x8000_0000 | (((i % 512) as u32) << 6)).line();
+            let lid = LineId((i % 512) as u32);
             words[(i % 16) as usize] = i as u32;
             let mask = 1u16 << (i % 16) | 1;
-            o.on_commit(line, mask, &words, (i % 16) as usize, i + 1);
+            o.on_commit(lid, mask, &words, (i % 16) as usize, i + 1);
         }
         std::hint::black_box(o.words_tracked());
     }));
@@ -100,9 +124,10 @@ fn main() {
         let req = ReqId { cn: 0, core: 0 };
         for i in 0..1_000u64 {
             let line = Addr(0x8000_0000 | (((i % 64) as u32) << 6)).line();
+            let lid = LineId((i % 64) as u32);
             lu.repl(
                 0,
-                PendingRepl { req, line, mask: 0b11, words: [i as u32; 16], repl_seq: i + 1 },
+                PendingRepl { req, line, lid, mask: 0b11, words: [i as u32; 16], repl_seq: i + 1 },
             );
             lu.val(0, req, line, i + 1, i + 1);
         }
@@ -113,7 +138,11 @@ fn main() {
         let req = ReqId { cn: 0, core: 0 };
         for i in 0..8_192u64 {
             let line = Addr(0x8000_0000 | (((i % 512) as u32) << 6)).line();
-            lu.repl(0, PendingRepl { req, line, mask: 1, words: [i as u32; 16], repl_seq: i + 1 });
+            let lid = LineId((i % 512) as u32);
+            lu.repl(
+                0,
+                PendingRepl { req, line, lid, mask: 1, words: [i as u32; 16], repl_seq: i + 1 },
+            );
             lu.val(0, req, line, i + 1, i + 1);
         }
         std::hint::black_box(lu.dump(16, 16, 3, 9));

@@ -3,18 +3,21 @@
 //! Each CN has private per-core L1/L2 and a shared L3 (Table II).  The tag
 //! arrays model *placement* (hit/miss + evictions); inter-CN coherence
 //! state (MESI at CN granularity, as tracked by the MN-side remote
-//! directory) and dirty-word values live in the per-CN [`CnLineState`] map,
-//! since that is the state a CN failure destroys and ReCXL must be able to
-//! reconstruct.
+//! directory) and dirty-word values live in the per-CN [`CnLineState`]
+//! slab, since that is the state a CN failure destroys and ReCXL must be
+//! able to reconstruct.
+//!
+//! The slab is indexed by interned [`LineId`] (`idx[lid] -> slot`), not a
+//! hash map: the state probe on every lookup/commit/invalidation is two
+//! array reads.  Slots are recycled through a free list, so resident
+//! state stays bounded by cache capacity exactly as the map was.
 
 mod setassoc;
 
 pub use setassoc::SetAssocCache;
 
-use rustc_hash::FxHashMap;
-
 use crate::config::SimConfig;
-use crate::mem::{Line, WORDS_PER_LINE};
+use crate::mem::{Line, LineId, NO_SLOT, WORDS_PER_LINE};
 use crate::sim::time::{cycles, Ps};
 
 /// MESI coherence state of a line within one CN (CN granularity —
@@ -32,8 +35,8 @@ pub struct CnLineState {
     pub mesi: Mesi,
     /// Words dirtied since the line was last written back.
     pub dirty_mask: u16,
-    /// Current word values (only tracked for remote lines — these are what
-    /// recovery must reconstruct when the CN dies).
+    /// Current word values (only meaningful for remote lines — these are
+    /// what recovery must reconstruct when the CN dies).
     pub words: [u32; WORDS_PER_LINE as usize],
 }
 
@@ -45,6 +48,15 @@ impl CnLineState {
             words,
         }
     }
+}
+
+/// One slab slot: a resident line's identity + state.  `lid == NO_SLOT`
+/// marks a free slot.
+#[derive(Debug, Clone)]
+struct LineSlot {
+    line: Line,
+    lid: u32,
+    st: CnLineState,
 }
 
 /// Which level a lookup hit (for latency) or miss.
@@ -66,7 +78,7 @@ pub struct Writeback {
 }
 
 /// The cache hierarchy of one CN: per-core L1/L2, shared L3, plus the
-/// CN-granularity coherence/value state.
+/// CN-granularity coherence/value state slab.
 pub struct CnCaches {
     l1: Vec<SetAssocCache>,
     l2: Vec<SetAssocCache>,
@@ -74,9 +86,10 @@ pub struct CnCaches {
     l1_lat: Ps,
     l2_lat: Ps,
     l3_lat: Ps,
-    /// Coherence + value state per resident remote line; local lines are
-    /// tracked in the tag arrays only (no coherence needed).
-    pub lines: FxHashMap<Line, CnLineState>,
+    /// `LineId -> slot` (NO_SLOT = not resident).
+    idx: Vec<u32>,
+    slots: Vec<LineSlot>,
+    free: Vec<u32>,
 }
 
 impl CnCaches {
@@ -92,21 +105,38 @@ impl CnCaches {
             l1_lat: cycles(cfg.l1.latency_cycles),
             l2_lat: cycles(cfg.l2.latency_cycles),
             l3_lat: cycles(cfg.l3.latency_cycles),
-            lines: FxHashMap::default(),
+            idx: Vec::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn slot_of(&self, lid: LineId) -> Option<usize> {
+        match self.idx.get(lid.idx()) {
+            Some(&s) if s != NO_SLOT => Some(s as usize),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    fn ensure_idx(&mut self, lid: LineId) {
+        if self.idx.len() <= lid.idx() {
+            self.idx.resize(lid.idx() + 1, NO_SLOT);
         }
     }
 
     /// Look up `line` for `core`, updating LRU. Returns where it hit.
-    pub fn lookup(&mut self, core: usize, line: Line) -> LookupResult {
+    pub fn lookup(&mut self, core: usize, line: Line, lid: LineId) -> LookupResult {
         if self.l1[core].touch(line.0) {
             LookupResult::L1
         } else if self.l2[core].touch(line.0) {
-            // refill L1 (may displace)
-            self.install_l1(core, line);
+            // refill L1 (inclusive hierarchy: L1 victims stay in L2/L3)
+            self.l1[core].insert(line.0, lid);
             LookupResult::L2
         } else if self.l3.touch(line.0) {
-            self.install_l1(core, line);
-            self.l2[core].insert(line.0);
+            self.l1[core].insert(line.0, lid);
+            self.l2[core].insert(line.0, lid);
             LookupResult::L3
         } else {
             LookupResult::Miss
@@ -123,10 +153,6 @@ impl CnCaches {
         }
     }
 
-    fn install_l1(&mut self, core: usize, line: Line) {
-        self.l1[core].insert(line.0);
-    }
-
     /// Install `line` in all levels for `core` (inclusive fill from
     /// memory/directory).  Returns a writeback if a dirty remote line got
     /// displaced from L3 (the point of no return in an inclusive
@@ -135,19 +161,41 @@ impl CnCaches {
         &mut self,
         core: usize,
         line: Line,
+        lid: LineId,
         mesi: Mesi,
         words: [u32; WORDS_PER_LINE as usize],
     ) -> Option<Writeback> {
-        self.l1[core].insert(line.0);
-        self.l2[core].insert(line.0);
-        let victim = self.l3.insert(line.0);
-        self.lines.insert(line, CnLineState::new(mesi, words));
-        victim.and_then(|v| self.evict_line(Line(v)))
+        self.l1[core].insert(line.0, lid);
+        self.l2[core].insert(line.0, lid);
+        let victim = self.l3.insert(line.0, lid);
+        self.ensure_idx(lid);
+        match self.slot_of(lid) {
+            Some(s) => self.slots[s].st = CnLineState::new(mesi, words),
+            None => {
+                let slot = LineSlot {
+                    line,
+                    lid: lid.0,
+                    st: CnLineState::new(mesi, words),
+                };
+                let s = match self.free.pop() {
+                    Some(s) => {
+                        self.slots[s as usize] = slot;
+                        s
+                    }
+                    None => {
+                        self.slots.push(slot);
+                        (self.slots.len() - 1) as u32
+                    }
+                };
+                self.idx[lid.idx()] = s;
+            }
+        }
+        victim.and_then(|(v, vlid)| self.evict_line(Line(v), vlid))
     }
 
     /// Remove a line from the whole hierarchy (inclusive invalidation),
     /// returning its dirty data if it was a modified remote line.
-    pub fn evict_line(&mut self, line: Line) -> Option<Writeback> {
+    pub fn evict_line(&mut self, line: Line, lid: LineId) -> Option<Writeback> {
         for c in &mut self.l1 {
             c.remove(line.0);
         }
@@ -155,7 +203,11 @@ impl CnCaches {
             c.remove(line.0);
         }
         self.l3.remove(line.0);
-        let st = self.lines.remove(&line)?;
+        let s = self.slot_of(lid)?;
+        self.idx[lid.idx()] = NO_SLOT;
+        self.slots[s].lid = NO_SLOT;
+        self.free.push(s as u32);
+        let st = &self.slots[s].st;
         if st.mesi == Mesi::Modified && line.is_remote() && st.dirty_mask != 0 {
             Some(Writeback {
                 line,
@@ -169,11 +221,13 @@ impl CnCaches {
 
     /// Downgrade to Shared (directory asked on another CN's read).
     /// Returns dirty data to forward home if the line was Modified.
-    pub fn downgrade(&mut self, line: Line) -> Option<Writeback> {
-        let st = self.lines.get_mut(&line)?;
+    pub fn downgrade(&mut self, lid: LineId) -> Option<Writeback> {
+        let s = self.slot_of(lid)?;
+        let slot = &mut self.slots[s];
+        let st = &mut slot.st;
         let wb = if st.mesi == Mesi::Modified && st.dirty_mask != 0 {
             Some(Writeback {
-                line,
+                line: slot.line,
                 mask: st.dirty_mask,
                 words: st.words,
             })
@@ -188,11 +242,11 @@ impl CnCaches {
     /// Apply a committed store of `mask`/`values` to a resident line.
     /// Panics if the line is not owned — the protocol must have acquired
     /// ownership first.
-    pub fn write_words(&mut self, line: Line, mask: u16, values: &[u32; 16]) {
-        let st = self
-            .lines
-            .get_mut(&line)
+    pub fn write_words(&mut self, lid: LineId, mask: u16, values: &[u32; 16]) {
+        let s = self
+            .slot_of(lid)
             .expect("store commit to non-resident line");
+        let st = &mut self.slots[s].st;
         debug_assert!(
             matches!(st.mesi, Mesi::Modified | Mesi::Exclusive),
             "store commit without ownership"
@@ -207,14 +261,14 @@ impl CnCaches {
     }
 
     /// State of a resident line (None = not cached in this CN).
-    pub fn state(&self, line: Line) -> Option<&CnLineState> {
-        self.lines.get(&line)
+    pub fn state(&self, lid: LineId) -> Option<&CnLineState> {
+        self.slot_of(lid).map(|s| &self.slots[s].st)
     }
 
     /// Whether this CN currently owns the line (M or E).
-    pub fn owns(&self, line: Line) -> bool {
+    pub fn owns(&self, lid: LineId) -> bool {
         matches!(
-            self.lines.get(&line).map(|s| s.mesi),
+            self.state(lid).map(|s| s.mesi),
             Some(Mesi::Modified) | Some(Mesi::Exclusive)
         )
     }
@@ -223,11 +277,11 @@ impl CnCaches {
     /// (Exclusive, Dirty) census of a crashed CN's caches.
     pub fn census(&self) -> LineCensus {
         let mut c = LineCensus::default();
-        for (l, st) in &self.lines {
-            if !l.is_remote() {
+        for slot in &self.slots {
+            if slot.lid == NO_SLOT || !slot.line.is_remote() {
                 continue;
             }
-            match st.mesi {
+            match slot.st.mesi {
                 Mesi::Modified => c.dirty += 1,
                 Mesi::Exclusive => c.exclusive += 1,
                 Mesi::Shared => c.shared += 1,
@@ -248,10 +302,14 @@ pub struct LineCensus {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::Addr;
+    use crate::mem::{Addr, LineTable};
 
     fn cfg() -> SimConfig {
         SimConfig::default()
+    }
+
+    fn table() -> LineTable {
+        LineTable::new(16, 10, 4, 16)
     }
 
     fn rline(i: u32) -> Line {
@@ -260,25 +318,29 @@ mod tests {
 
     #[test]
     fn miss_then_hit_ladder() {
+        let mut t = table();
         let mut c = CnCaches::new(&cfg());
         let l = rline(5);
-        assert_eq!(c.lookup(0, l), LookupResult::Miss);
-        assert!(c.fill(0, l, Mesi::Exclusive, [0; 16]).is_none());
-        assert_eq!(c.lookup(0, l), LookupResult::L1);
+        let id = t.intern(l);
+        assert_eq!(c.lookup(0, l, id), LookupResult::Miss);
+        assert!(c.fill(0, l, id, Mesi::Exclusive, [0; 16]).is_none());
+        assert_eq!(c.lookup(0, l, id), LookupResult::L1);
         // other core of the same CN hits in L3 and refills its own L1/L2
-        assert_eq!(c.lookup(1, l), LookupResult::L3);
-        assert_eq!(c.lookup(1, l), LookupResult::L1);
+        assert_eq!(c.lookup(1, l, id), LookupResult::L3);
+        assert_eq!(c.lookup(1, l, id), LookupResult::L1);
     }
 
     #[test]
     fn store_requires_ownership_and_dirties() {
+        let mut t = table();
         let mut c = CnCaches::new(&cfg());
         let l = rline(9);
-        c.fill(0, l, Mesi::Exclusive, [7; 16]);
+        let id = t.intern(l);
+        c.fill(0, l, id, Mesi::Exclusive, [7; 16]);
         let mut vals = [0u32; 16];
         vals[3] = 0xDEAD;
-        c.write_words(l, 1 << 3, &vals);
-        let st = c.state(l).unwrap();
+        c.write_words(id, 1 << 3, &vals);
+        let st = c.state(id).unwrap();
         assert_eq!(st.mesi, Mesi::Modified);
         assert_eq!(st.dirty_mask, 1 << 3);
         assert_eq!(st.words[3], 0xDEAD);
@@ -287,42 +349,52 @@ mod tests {
 
     #[test]
     fn eviction_returns_dirty_writeback() {
+        let mut t = table();
         let mut c = CnCaches::new(&cfg());
         let l = rline(1);
-        c.fill(0, l, Mesi::Exclusive, [1; 16]);
-        c.write_words(l, 0xFFFF, &[2; 16]);
-        let wb = c.evict_line(l).expect("dirty line must write back");
+        let id = t.intern(l);
+        c.fill(0, l, id, Mesi::Exclusive, [1; 16]);
+        c.write_words(id, 0xFFFF, &[2; 16]);
+        let wb = c.evict_line(l, id).expect("dirty line must write back");
         assert_eq!(wb.mask, 0xFFFF);
         assert_eq!(wb.words[0], 2);
-        assert!(c.state(l).is_none());
-        // clean eviction yields nothing
-        c.fill(0, l, Mesi::Shared, [1; 16]);
-        assert!(c.evict_line(l).is_none());
+        assert!(c.state(id).is_none());
+        // clean eviction yields nothing; the freed slot is recycled
+        c.fill(0, l, id, Mesi::Shared, [1; 16]);
+        assert!(c.evict_line(l, id).is_none());
     }
 
     #[test]
     fn downgrade_flushes_and_shares() {
+        let mut t = table();
         let mut c = CnCaches::new(&cfg());
         let l = rline(2);
-        c.fill(0, l, Mesi::Exclusive, [0; 16]);
-        c.write_words(l, 1, &[9; 16]);
-        let wb = c.downgrade(l).unwrap();
+        let id = t.intern(l);
+        c.fill(0, l, id, Mesi::Exclusive, [0; 16]);
+        c.write_words(id, 1, &[9; 16]);
+        let wb = c.downgrade(id).unwrap();
         assert_eq!(wb.words[0], 9);
-        assert_eq!(c.state(l).unwrap().mesi, Mesi::Shared);
-        assert!(!c.owns(l));
+        assert_eq!(wb.line, l);
+        assert_eq!(c.state(id).unwrap().mesi, Mesi::Shared);
+        assert!(!c.owns(id));
         // downgrading a clean Shared line is a no-op
-        assert!(c.downgrade(l).is_none());
+        assert!(c.downgrade(id).is_none());
     }
 
     #[test]
     fn census_counts_remote_only() {
+        let mut t = table();
         let mut c = CnCaches::new(&cfg());
-        c.fill(0, rline(1), Mesi::Exclusive, [0; 16]);
-        c.fill(0, rline(2), Mesi::Exclusive, [0; 16]);
-        c.write_words(rline(2), 1, &[1; 16]);
-        c.fill(0, rline(3), Mesi::Shared, [0; 16]);
+        for (i, mesi) in [(1, Mesi::Exclusive), (2, Mesi::Exclusive), (3, Mesi::Shared)] {
+            let l = rline(i);
+            let id = t.intern(l);
+            c.fill(0, l, id, mesi, [0; 16]);
+        }
+        c.write_words(t.lookup(rline(2)).unwrap(), 1, &[1; 16]);
         // a local line must not show up
-        c.fill(0, Addr(0x0100_0040).line(), Mesi::Exclusive, [0; 16]);
+        let loc = Addr(0x0100_0040).line();
+        let lid = t.intern(loc);
+        c.fill(0, loc, lid, Mesi::Exclusive, [0; 16]);
         let census = c.census();
         assert_eq!(
             (census.exclusive, census.dirty, census.shared),
@@ -339,21 +411,23 @@ mod tests {
             assoc: 4,
             latency_cycles: 36,
         };
+        let mut t = table();
         let mut c = CnCaches::new(&cfgv);
         // fill one L3 set (same set index) beyond capacity
         let sets = cfgv.l3.sets();
-        let mut dirty_wbs = 0;
+        let mut displaced = 0;
         for i in 0..6u32 {
             let l = rline(i * sets);
-            c.fill(0, l, Mesi::Exclusive, [0; 16]);
-            c.write_words(l, 1, &[i; 16]);
-            // re-fill may evict an older dirty line
+            let id = t.intern(l);
+            c.fill(0, l, id, Mesi::Exclusive, [0; 16]);
+            c.write_words(id, 1, &[i; 16]);
         }
         for i in 0..6u32 {
-            if c.state(rline(i * sets)).is_none() {
-                dirty_wbs += 1;
+            let id = t.lookup(rline(i * sets)).unwrap();
+            if c.state(id).is_none() {
+                displaced += 1;
             }
         }
-        assert!(dirty_wbs >= 2, "4-way set must have displaced lines");
+        assert!(displaced >= 2, "4-way set must have displaced lines");
     }
 }

@@ -3,11 +3,18 @@
 //! Models placement only — coherence state and data live at the CN level
 //! (`cache::CnLineState`).  Sets are small fixed-capacity vectors ordered
 //! MRU-first, so `touch`/`insert` are O(assoc) with no per-line clock.
+//!
+//! Each tag carries the line's interned [`LineId`] so an eviction victim
+//! comes back with the id that keys the CN's line-state slab — without
+//! it, every victim would need a `Line -> LineId` translation on the
+//! eviction path.
+
+use crate::mem::LineId;
 
 /// Set-associative tag array, LRU, indexed by line address.
 #[derive(Debug, Clone)]
 pub struct SetAssocCache {
-    sets: Vec<Vec<u32>>,
+    sets: Vec<Vec<(u32, LineId)>>,
     set_mask: u32,
     assoc: usize,
     hits: u64,
@@ -37,7 +44,7 @@ impl SetAssocCache {
     pub fn touch(&mut self, line: u32) -> bool {
         let s = self.set_of(line);
         let set = &mut self.sets[s];
-        if let Some(pos) = set.iter().position(|&t| t == line) {
+        if let Some(pos) = set.iter().position(|&(t, _)| t == line) {
             // move to MRU (front)
             let t = set.remove(pos);
             set.insert(0, t);
@@ -51,22 +58,22 @@ impl SetAssocCache {
 
     /// Probe without LRU update or stats.
     pub fn contains(&self, line: u32) -> bool {
-        self.sets[self.set_of(line)].iter().any(|&t| t == line)
+        self.sets[self.set_of(line)].iter().any(|&(t, _)| t == line)
     }
 
-    /// Insert `line` as MRU; returns the evicted victim line, if any.
-    /// Inserting a resident line just refreshes LRU.
-    pub fn insert(&mut self, line: u32) -> Option<u32> {
+    /// Insert `line` as MRU; returns the evicted victim `(line, id)`, if
+    /// any.  Inserting a resident line just refreshes LRU.
+    pub fn insert(&mut self, line: u32, lid: LineId) -> Option<(u32, LineId)> {
         let s = self.set_of(line);
         let assoc = self.assoc;
         let set = &mut self.sets[s];
-        if let Some(pos) = set.iter().position(|&t| t == line) {
+        if let Some(pos) = set.iter().position(|&(t, _)| t == line) {
             let t = set.remove(pos);
             set.insert(0, t);
             return None;
         }
         let victim = if set.len() == assoc { set.pop() } else { None };
-        set.insert(0, line);
+        set.insert(0, (line, lid));
         victim
     }
 
@@ -74,7 +81,7 @@ impl SetAssocCache {
     pub fn remove(&mut self, line: u32) -> bool {
         let s = self.set_of(line);
         let set = &mut self.sets[s];
-        if let Some(pos) = set.iter().position(|&t| t == line) {
+        if let Some(pos) = set.iter().position(|&(t, _)| t == line) {
             set.remove(pos);
             true
         } else {
@@ -101,22 +108,26 @@ impl SetAssocCache {
 mod tests {
     use super::*;
 
+    fn lid(i: u32) -> LineId {
+        LineId(i)
+    }
+
     #[test]
     fn hit_after_insert() {
         let mut c = SetAssocCache::new(4, 2);
         assert!(!c.touch(12));
-        c.insert(12);
+        c.insert(12, lid(1));
         assert!(c.touch(12));
         assert!(c.contains(12));
     }
 
     #[test]
-    fn lru_eviction_order() {
+    fn lru_eviction_order_and_victim_id() {
         let mut c = SetAssocCache::new(1, 2);
-        c.insert(1);
-        c.insert(2);
+        c.insert(1, lid(10));
+        c.insert(2, lid(20));
         c.touch(1); // 1 becomes MRU, 2 is LRU
-        assert_eq!(c.insert(3), Some(2));
+        assert_eq!(c.insert(3, lid(30)), Some((2, lid(20))));
         assert!(c.contains(1));
         assert!(!c.contains(2));
     }
@@ -124,20 +135,20 @@ mod tests {
     #[test]
     fn reinsert_refreshes_without_eviction() {
         let mut c = SetAssocCache::new(1, 2);
-        c.insert(1);
-        c.insert(2);
-        assert_eq!(c.insert(1), None); // refresh
-        assert_eq!(c.insert(3), Some(2));
+        c.insert(1, lid(1));
+        c.insert(2, lid(2));
+        assert_eq!(c.insert(1, lid(1)), None); // refresh
+        assert_eq!(c.insert(3, lid(3)), Some((2, lid(2))));
     }
 
     #[test]
     fn sets_are_independent() {
         let mut c = SetAssocCache::new(2, 1);
-        c.insert(0); // set 0
-        c.insert(1); // set 1
+        c.insert(0, lid(0)); // set 0
+        c.insert(1, lid(1)); // set 1
         assert!(c.contains(0));
         assert!(c.contains(1));
-        assert_eq!(c.insert(2), Some(0)); // set 0 again
+        assert_eq!(c.insert(2, lid(2)), Some((0, lid(0)))); // set 0 again
         assert!(c.contains(1));
     }
 
@@ -145,7 +156,7 @@ mod tests {
     fn remove_and_occupancy() {
         let mut c = SetAssocCache::new(4, 4);
         for i in 0..8 {
-            c.insert(i);
+            c.insert(i, lid(i));
         }
         assert_eq!(c.occupancy(), 8);
         assert!(c.remove(3));
@@ -156,7 +167,7 @@ mod tests {
     #[test]
     fn hit_rate_accounting() {
         let mut c = SetAssocCache::new(4, 2);
-        c.insert(0);
+        c.insert(0, lid(0));
         c.touch(0);
         c.touch(0);
         c.touch(99);

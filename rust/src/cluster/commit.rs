@@ -17,7 +17,7 @@
 use super::{Cluster, Ev};
 use crate::config::Protocol;
 use crate::cpu::Block;
-use crate::mem::Line;
+use crate::mem::LineId;
 use crate::proto::{Message, MsgKind, NodeId, ReqId};
 use crate::recxl::replicas;
 use crate::sim::time::Ps;
@@ -35,12 +35,13 @@ impl Cluster {
         loop {
             let Some(head) = self.cores[id].sb.head() else { break };
             let line = head.line;
+            let lid = head.lid;
             let remote = head.remote;
 
             if !remote {
-                // CN-local store: commit at cache speed, no coherence
-                let e = self.cores[id].sb.pop_head().unwrap();
-                self.oracle.on_commit(e.line, e.mask, &e.words, cn, 0);
+                // CN-local store: commit at cache speed, no coherence;
+                // the oracle tracks shared memory only
+                let _ = self.cores[id].sb.pop_head().unwrap();
                 self.stats.repl.store_commits += 1;
                 self.cores[id].stats.l1_hits += 1;
                 continue;
@@ -48,7 +49,7 @@ impl Cluster {
 
             match self.cfg.protocol {
                 Protocol::WriteBack => {
-                    if !self.try_own_and_apply(id, line, now) {
+                    if !self.try_own_and_apply(id, lid, now) {
                         break;
                     }
                 }
@@ -56,7 +57,7 @@ impl Cluster {
                     let head = self.cores[id].sb.head_mut().unwrap();
                     if head.wt_acked {
                         let e = self.cores[id].sb.pop_head().unwrap();
-                        self.oracle.on_commit(e.line, e.mask, &e.words, cn, 0);
+                        self.oracle.on_commit(e.lid, e.mask, &e.words, cn, 0);
                         self.stats.repl.store_commits += 1;
                         continue;
                     }
@@ -64,7 +65,7 @@ impl Cluster {
                         head.committing = true;
                         let (mask, words) = (head.mask, head.words);
                         let local = self.cores[id].local;
-                        let mn = line.home_mn(self.cfg.n_mns);
+                        let mn = self.lines.home_mn(lid);
                         self.send(
                             now,
                             Message {
@@ -83,8 +84,8 @@ impl Cluster {
                 }
                 Protocol::ReCxlBaseline => {
                     // coherence strictly first (Fig. 6a)
-                    if !self.caches[cn].owns(line) {
-                        self.ensure_ownership(id, line, now);
+                    if !self.caches[cn].owns(lid) {
+                        self.ensure_ownership(id, lid, now);
                         break;
                     }
                     if !self.replication_step(id, now) {
@@ -94,8 +95,8 @@ impl Cluster {
                 Protocol::ReCxlParallel | Protocol::ReCxlProactive => {
                     // replication may start/finish while coherence is
                     // still in flight (Figs. 6b/6c)
-                    if !self.caches[cn].owns(line) {
-                        self.ensure_ownership(id, line, now);
+                    if !self.caches[cn].owns(lid) {
+                        self.ensure_ownership(id, lid, now);
                     }
                     let advanced = self.replication_step(id, now);
                     if !advanced {
@@ -125,28 +126,29 @@ impl Cluster {
 
     /// WB commit: apply if owner, else (re)request ownership.  True if the
     /// head was popped.
-    fn try_own_and_apply(&mut self, id: usize, line: Line, now: Ps) -> bool {
+    fn try_own_and_apply(&mut self, id: usize, lid: LineId, now: Ps) -> bool {
         let cn = self.cores[id].cn;
-        if self.caches[cn].owns(line) {
+        if self.caches[cn].owns(lid) {
             let e = self.cores[id].sb.pop_head().unwrap();
-            self.caches[cn].write_words(line, e.mask, &e.words);
-            self.oracle.on_commit(line, e.mask, &e.words, cn, 0);
+            self.caches[cn].write_words(lid, e.mask, &e.words);
+            self.oracle.on_commit(lid, e.mask, &e.words, cn, 0);
             self.stats.repl.store_commits += 1;
             // NOTE: commits never advance the core's front-end clock —
             // stores are asynchronous after retirement; the core only
             // feels the SB via full-stalls (TSO).
             true
         } else {
-            self.ensure_ownership(id, line, now);
+            self.ensure_ownership(id, lid, now);
             false
         }
     }
 
     /// Make sure an ownership request is in flight for the head's line.
-    fn ensure_ownership(&mut self, id: usize, line: Line, now: Ps) {
+    fn ensure_ownership(&mut self, id: usize, lid: LineId, now: Ps) {
         let (cn, local) = (self.cores[id].cn, self.cores[id].local);
-        if !self.caches[cn].owns(line) {
-            self.issue_rdx(cn, local, line, now, false);
+        if !self.caches[cn].owns(lid) {
+            let line = self.lines.line(lid);
+            self.issue_rdx(cn, local, line, lid, now, false);
         }
     }
 
@@ -156,6 +158,7 @@ impl Cluster {
         let cn = self.cores[id].cn;
         let head = self.cores[id].sb.head().unwrap();
         let line = head.line;
+        let lid = head.lid;
         if !head.repl_sent {
             // baseline/parallel always send at the head; proactive lands
             // here only when coalescing delayed the send to the head
@@ -163,7 +166,7 @@ impl Cluster {
         }
         let head = self.cores[id].sb.head_mut().unwrap();
         head.committing = true;
-        if head.acks_mask != 0 || !self.caches[cn].owns(line) {
+        if head.acks_mask != 0 || !self.caches[cn].owns(lid) {
             return false; // still waiting (acks and/or coherence)
         }
         // commit: send VALs, apply to cache, pop (Fig. 3 steps 5-6)
@@ -191,8 +194,8 @@ impl Cluster {
             );
             self.stats.repl.vals_sent += 1;
         }
-        self.caches[cn].write_words(line, e.mask, &e.words);
-        self.oracle.on_commit(line, e.mask, &e.words, cn, e.repl_seq);
+        self.caches[cn].write_words(lid, e.mask, &e.words);
+        self.oracle.on_commit(lid, e.mask, &e.words, cn, e.repl_seq);
         self.stats.repl.store_commits += 1;
         true
     }

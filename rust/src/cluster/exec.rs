@@ -183,7 +183,10 @@ impl Cluster {
             return true;
         }
 
-        let res = self.caches[cn].lookup(local, line);
+        // workload boundary: one arithmetic translation, then every
+        // downstream structure probes by dense id
+        let lid = self.lines.intern(line);
+        let res = self.caches[cn].lookup(local, line, lid);
         self.cores[id].clock += PS_PER_CPU_CYCLE; // issue slot
         match res {
             LookupResult::L1 => {
@@ -205,7 +208,7 @@ impl Cluster {
                 self.cores[id].outstanding_loads += 1;
                 let done =
                     self.cores[id].clock + self.caches[cn].latency(res) + self.cfg.local_dram_ps;
-                let wb = self.caches[cn].fill(local, line, Mesi::Exclusive, [0; 16]);
+                let wb = self.caches[cn].fill(local, line, lid, Mesi::Exclusive, [0; 16]);
                 self.writeback(cn, wb);
                 self.q.push_at(done.max(self.q.now()), Ev::LoadDone(id));
                 true
@@ -216,14 +219,13 @@ impl Cluster {
                 self.cores[id].stats.remote_misses += 1;
                 self.cores[id].outstanding_loads += 1;
                 let clock = self.cores[id].clock + self.caches[cn].latency(res);
+                let cores_per_cn = self.cfg.cores_per_cn;
                 let fresh = {
                     let st = &mut self.cns[cn];
-                    let waiters = st.mshr.entry(line).or_default();
-                    waiters.push(local);
-                    waiters.len() == 1 && !st.rdx_inflight.contains(&line)
+                    st.mshr_push(lid, local, cores_per_cn) && !st.rdx_contains(lid)
                 };
                 if fresh {
-                    let mn = line.home_mn(self.cfg.n_mns);
+                    let mn = self.lines.home_mn(lid);
                     self.send(
                         clock,
                         Message {
@@ -275,7 +277,8 @@ impl Cluster {
         if remote {
             self.cores[id].stats.remote_stores += 1;
         }
-        let dep = self.cores[id].sb.deposit(line, remote, word, value, clock);
+        let lid = self.lines.intern(line);
+        let dep = self.cores[id].sb.deposit(line, lid, remote, word, value, clock);
         match dep {
             Deposit::Full => {
                 self.cores[id].stats.stores -= 1; // will retry
@@ -298,9 +301,9 @@ impl Cluster {
         // retires into the SB (Fig. 7 step 1)
         if remote
             && self.cfg.protocol != crate::config::Protocol::WriteThrough
-            && !self.caches[cn].owns(line)
+            && !self.caches[cn].owns(lid)
         {
-            self.issue_rdx(cn, self.cores[id].local, line, clock, true);
+            self.issue_rdx(cn, self.cores[id].local, line, lid, clock, true);
         }
         // ReCXL-proactive: send REPLs for entries sealed by this deposit
         if self.cfg.protocol == crate::config::Protocol::ReCxlProactive {
@@ -320,15 +323,16 @@ impl Cluster {
         cn: usize,
         local: usize,
         line: crate::mem::Line,
+        lid: crate::mem::LineId,
         at: crate::sim::time::Ps,
         prefetch: bool,
     ) {
-        if self.cns[cn].rdx_inflight.contains(&line) {
+        if self.cns[cn].rdx_contains(lid) {
             return;
         }
-        self.cns[cn].rdx_inflight.insert(line);
+        self.cns[cn].rdx_insert(lid);
         crate::cluster::trace_line(line, || format!("cn{cn} issue_rdx prefetch={prefetch}"));
-        let mn = line.home_mn(self.cfg.n_mns);
+        let mn = self.lines.home_mn(lid);
         self.send(
             at,
             Message {

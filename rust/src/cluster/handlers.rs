@@ -3,7 +3,7 @@
 
 use super::{Cluster, Ev};
 use crate::cache::Mesi;
-use crate::mem::Line;
+use crate::mem::{Line, LineId};
 use crate::proto::{LineWords, Message, MsgKind, NodeId, ReqId};
 use crate::recxl::logunit::PendingRepl;
 
@@ -29,14 +29,16 @@ impl Cluster {
         let now = self.q.now();
         match msg.kind {
             MsgKind::Data { line, req, exclusive, words } => {
-                self.on_data(cn, line, req, exclusive, words);
+                let lid = self.lines.intern(line);
+                self.on_data(cn, line, lid, req, exclusive, words);
             }
             MsgKind::Inv { line } => {
+                let lid = self.lines.intern(line);
                 let dirty = self
                     .caches[cn]
-                    .evict_line(line)
+                    .evict_line(line, lid)
                     .map(|wb| (wb.mask, wb.words));
-                let mn = line.home_mn(self.cfg.n_mns);
+                let mn = self.lines.home_mn(lid);
                 self.send(
                     now,
                     Message {
@@ -48,8 +50,9 @@ impl Cluster {
                 self.ownership_lost(cn, line);
             }
             MsgKind::Downgrade { line } => {
-                let dirty = self.caches[cn].downgrade(line).map(|wb| (wb.mask, wb.words));
-                let mn = line.home_mn(self.cfg.n_mns);
+                let lid = self.lines.intern(line);
+                let dirty = self.caches[cn].downgrade(lid).map(|wb| (wb.mask, wb.words));
+                let mn = self.lines.home_mn(lid);
                 self.send(
                     now,
                     Message {
@@ -68,9 +71,10 @@ impl Cluster {
                 self.commit_check(id);
             }
             MsgKind::Repl { req, line, mask, words, repl_seq } => {
+                let lid = self.lines.intern(line);
                 let ack_at = self.logunits[cn].repl(
                     now,
-                    PendingRepl { req, line, mask, words, repl_seq },
+                    PendingRepl { req, line, lid, mask, words, repl_seq },
                 );
                 self.send(
                     ack_at,
@@ -113,29 +117,33 @@ impl Cluster {
 
     /// Directory data grant: fill the cache, free the waiters' MLP slots,
     /// mark coherence done for pending stores.
-    fn on_data(&mut self, cn: usize, line: Line, req: ReqId, exclusive: bool, words: LineWords) {
+    fn on_data(
+        &mut self,
+        cn: usize,
+        line: Line,
+        lid: LineId,
+        req: ReqId,
+        exclusive: bool,
+        words: LineWords,
+    ) {
         crate::cluster::trace_line(line, || format!("cn{cn} on_data excl={exclusive} req={req:?}"));
         let mesi = if exclusive { Mesi::Exclusive } else { Mesi::Shared };
-        let wb = self.caches[cn].fill(req.core, line, mesi, words);
+        let wb = self.caches[cn].fill(req.core, line, lid, mesi, words);
         self.writeback(cn, wb);
 
         if exclusive {
-            self.cns[cn].rdx_inflight.remove(&line);
+            self.cns[cn].rdx_remove(lid);
             for local in 0..self.cfg.cores_per_cn {
                 let id = self.core_id(cn, local);
                 self.cores[id].sb.coherence_done(line);
             }
         }
         // complete every outstanding load miss on this line
-        if let Some(waiters) = self.cns[cn].mshr.remove(&line) {
-            let mut per_core = vec![0usize; self.cfg.cores_per_cn];
-            for local in waiters {
-                per_core[local] += 1;
-            }
-            for (local, n) in per_core.into_iter().enumerate() {
+        if let Some(counts) = self.cns[cn].mshr_take(lid) {
+            for (local, n) in counts.into_iter().enumerate() {
                 if n > 0 {
                     let id = self.core_id(cn, local);
-                    self.load_done(id, n);
+                    self.load_done(id, n as usize);
                 }
             }
         }
@@ -176,21 +184,29 @@ impl Cluster {
         let out = match msg.kind {
             MsgKind::RdS { line, req } => {
                 crate::cluster::trace_line(line, || format!("mn{mn} on_rds req={req:?}"));
-                self.dirs[mn].on_rds(line, req)
+                let slot = self.mn_slot_of(line);
+                self.dirs[mn].on_rds(line, slot, req)
             }
             MsgKind::RdX { line, req, .. } => {
                 crate::cluster::trace_line(line, || format!("mn{mn} on_rdx req={req:?}"));
-                self.dirs[mn].on_rdx(line, req, false)
+                let slot = self.mn_slot_of(line);
+                self.dirs[mn].on_rdx(line, slot, req, false)
             }
             MsgKind::WtStore { line, req, mask, words } => {
-                self.dirs[mn].on_wt_store(line, req, mask, words)
+                let slot = self.mn_slot_of(line);
+                self.dirs[mn].on_wt_store(line, slot, req, mask, words)
             }
             MsgKind::WbData { line, from, mask, words } => {
-                self.dirs[mn].on_wb(line, from, mask, words)
+                let slot = self.mn_slot_of(line);
+                self.dirs[mn].on_wb(line, slot, from, mask, words)
             }
-            MsgKind::InvAck { line, from, dirty } => self.dirs[mn].on_inv_ack(line, from, dirty),
+            MsgKind::InvAck { line, from, dirty } => {
+                let slot = self.mn_slot_of(line);
+                self.dirs[mn].on_inv_ack(line, slot, from, dirty)
+            }
             MsgKind::DowngradeAck { line, from, dirty } => {
-                self.dirs[mn].on_downgrade_ack(line, from, dirty)
+                let slot = self.mn_slot_of(line);
+                self.dirs[mn].on_downgrade_ack(line, slot, from, dirty)
             }
             MsgKind::DumpChunk { from, entries, .. } => {
                 self.dirs[mn].mn_log.extend(entries);

@@ -21,7 +21,7 @@ mod recovery_impl;
 pub use oracle::Oracle;
 pub use recovery_impl::RecoveryCtrl;
 
-use rustc_hash::{FxHashMap, FxHashSet};
+use rustc_hash::FxHashSet;
 use std::collections::BTreeSet;
 use std::time::Instant;
 
@@ -31,7 +31,7 @@ use crate::config::{CnId, CoreId, FaultKind, Protocol, SimConfig};
 use crate::cpu::sync::{Barrier, LockTable};
 use crate::cpu::{Block, Core};
 use crate::fabric::{Delivery, Fabric};
-use crate::mem::Line;
+use crate::mem::{Line, LineId, LineTable, NO_SLOT};
 use crate::proto::{Message, MsgPool};
 use crate::recxl::logunit::LoggingUnit;
 use crate::sim::time::Ps;
@@ -70,12 +70,24 @@ pub enum Ev {
     QuiesceTimeout(CnId, u64),
 }
 
+/// One MSHR slab slot: per-local-core waiter counts for a line miss.
+#[derive(Debug, Default, Clone)]
+struct MshrEntry {
+    counts: Vec<u32>,
+}
+
 /// Per-CN shared state (CXL port side).
+///
+/// MSHRs and the RdX in-flight set are slab/bitmap structures indexed by
+/// interned [`LineId`] — the per-miss and per-prefetch probes on the
+/// load/store hot paths are array reads, not hash lookups (§Perf).
 pub struct CnState {
-    /// Load misses in flight: line -> waiting local cores.
-    pub mshr: FxHashMap<Line, Vec<usize>>,
-    /// Exclusive (RdX) requests in flight.
-    pub rdx_inflight: FxHashSet<Line>,
+    /// `LineId -> MSHR slot` (NO_SLOT = no miss in flight).
+    mshr_idx: Vec<u32>,
+    mshr_slots: Vec<MshrEntry>,
+    mshr_free: Vec<u32>,
+    /// Exclusive (RdX) requests in flight: one bit per `LineId`.
+    rdx: Vec<u64>,
     /// Next replication sequence number (per-CN monotone; REPL carries it).
     pub repl_seq: u64,
     /// Per-destination logical-timestamp counters for VALs (section IV-C).
@@ -89,11 +101,99 @@ pub struct CnState {
     pub interrupt_epoch: u64,
 }
 
+impl CnState {
+    fn new(n_cns: usize) -> Self {
+        CnState {
+            mshr_idx: Vec::new(),
+            mshr_slots: Vec::new(),
+            mshr_free: Vec::new(),
+            rdx: Vec::new(),
+            repl_seq: 0,
+            val_ts: vec![0; n_cns],
+            quiescing: false,
+            paused: false,
+            interrupt_epoch: 0,
+        }
+    }
+
+    #[inline]
+    pub fn rdx_contains(&self, lid: LineId) -> bool {
+        self.rdx
+            .get(lid.idx() / 64)
+            .is_some_and(|w| w & (1 << (lid.idx() % 64)) != 0)
+    }
+
+    #[inline]
+    pub fn rdx_insert(&mut self, lid: LineId) {
+        let w = lid.idx() / 64;
+        if self.rdx.len() <= w {
+            self.rdx.resize(w + 1, 0);
+        }
+        self.rdx[w] |= 1 << (lid.idx() % 64);
+    }
+
+    #[inline]
+    pub fn rdx_remove(&mut self, lid: LineId) {
+        if let Some(w) = self.rdx.get_mut(lid.idx() / 64) {
+            *w &= !(1 << (lid.idx() % 64));
+        }
+    }
+
+    /// Register `local` as a waiter for a miss on `lid`.  Returns true if
+    /// this created the MSHR entry (i.e. the miss request must be sent).
+    pub fn mshr_push(&mut self, lid: LineId, local: usize, cores_per_cn: usize) -> bool {
+        if self.mshr_idx.len() <= lid.idx() {
+            self.mshr_idx.resize(lid.idx() + 1, NO_SLOT);
+        }
+        let fresh = self.mshr_idx[lid.idx()] == NO_SLOT;
+        if fresh {
+            let s = match self.mshr_free.pop() {
+                Some(s) => s,
+                None => {
+                    self.mshr_slots.push(MshrEntry::default());
+                    (self.mshr_slots.len() - 1) as u32
+                }
+            };
+            let e = &mut self.mshr_slots[s as usize];
+            e.counts.clear();
+            e.counts.resize(cores_per_cn, 0);
+            self.mshr_idx[lid.idx()] = s;
+        }
+        let s = self.mshr_idx[lid.idx()] as usize;
+        self.mshr_slots[s].counts[local] += 1;
+        fresh
+    }
+
+    /// Complete the miss on `lid`: detach and return the per-local-core
+    /// waiter counts, freeing the slot.
+    pub fn mshr_take(&mut self, lid: LineId) -> Option<Vec<u32>> {
+        let s = match self.mshr_idx.get(lid.idx()) {
+            Some(&s) if s != NO_SLOT => s,
+            _ => return None,
+        };
+        self.mshr_idx[lid.idx()] = NO_SLOT;
+        self.mshr_free.push(s);
+        Some(std::mem::take(&mut self.mshr_slots[s as usize].counts))
+    }
+
+    /// Waiters currently registered on `lid` (stall diagnostics).
+    pub fn mshr_waiters(&self, lid: LineId) -> u32 {
+        match self.mshr_idx.get(lid.idx()) {
+            Some(&s) if s != NO_SLOT => self.mshr_slots[s as usize].counts.iter().sum(),
+            _ => 0,
+        }
+    }
+}
+
 /// The whole simulated cluster.
 pub struct Cluster {
     pub cfg: SimConfig,
     pub q: EventQueue<Ev>,
     pub fabric: Fabric,
+    /// Line interner: dense ids for every touched line, assigned at the
+    /// workload/trace boundary; all per-line state below is slab-indexed
+    /// by them (§Perf — see `mem::interner`).
+    pub lines: LineTable,
     /// Recycled `Ev::Deliver` boxes (§Perf: zero-alloc steady state).
     pub(crate) pool: MsgPool,
     pub cores: Vec<Core>,
@@ -153,17 +253,7 @@ impl Cluster {
             ));
         }
         let caches = (0..cfg.n_cns).map(|_| CnCaches::new(&cfg)).collect();
-        let cns = (0..cfg.n_cns)
-            .map(|_| CnState {
-                mshr: FxHashMap::default(),
-                rdx_inflight: FxHashSet::default(),
-                repl_seq: 0,
-                val_ts: vec![0; cfg.n_cns],
-                quiescing: false,
-                paused: false,
-                interrupt_epoch: 0,
-            })
-            .collect();
+        let cns = (0..cfg.n_cns).map(|_| CnState::new(cfg.n_cns)).collect();
         let dirs = (0..cfg.n_mns)
             .map(|m| Directory::new(m, cfg.mn_dram_ps, cfg.mn_pmem_ps))
             .collect();
@@ -183,6 +273,7 @@ impl Cluster {
         Cluster {
             fabric: Fabric::new(&cfg),
             q: EventQueue::new(),
+            lines: LineTable::for_app(app, n_threads, cfg.n_mns),
             pool: MsgPool::new(),
             cores,
             caches,
@@ -249,15 +340,20 @@ impl Cluster {
                     c.trace.consumed(),
                 );
                 if let Some(h) = c.sb.head() {
-                    let line = h.line;
+                    let (line, lid) = (h.line, h.lid);
                     let cn = c.cn;
+                    let dir = if line.is_remote() {
+                        self.dirs[self.lines.home_mn(lid)].dir_state(self.lines.mn_slot(lid))
+                    } else {
+                        (None, 0)
+                    };
                     eprintln!(
-                        "  head line {:x}: rdx_inflight={} mshr={:?} owns={} dir={:?}",
+                        "  head line {:x}: rdx_inflight={} mshr_waiters={} owns={} dir={:?}",
                         line.0,
-                        self.cns[cn].rdx_inflight.contains(&line),
-                        self.cns[cn].mshr.get(&line),
-                        self.caches[cn].owns(line),
-                        self.dirs[line.home_mn(self.cfg.n_mns)].dir_state(line),
+                        self.cns[cn].rdx_contains(lid),
+                        self.cns[cn].mshr_waiters(lid),
+                        self.caches[cn].owns(lid),
+                        dir,
                     );
                 }
             }
@@ -280,6 +376,14 @@ impl Cluster {
 
     pub fn core_id(&self, cn: CnId, local: usize) -> CoreId {
         cn * self.cfg.cores_per_cn + local
+    }
+
+    /// Intern a remote `line` and return its home directory's dense slot
+    /// (delivery-side translation; O(1), no hashing for in-footprint
+    /// lines).
+    pub(crate) fn mn_slot_of(&mut self, line: Line) -> u32 {
+        let lid = self.lines.intern(line);
+        self.lines.mn_slot(lid)
     }
 
     pub fn live_cns(&self) -> impl Iterator<Item = CnId> + '_ {

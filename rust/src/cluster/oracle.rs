@@ -9,20 +9,21 @@
 //! forward choice).  Anything else is lost or resurrected data — a
 //! correctness bug.
 //!
-//! §Perf: both maps are keyed per *line*, with 16-wide word arrays inside
-//! the entry.  `on_commit` runs on every committed store, and the old
-//! per-`(Line, word)` / per-`(Line, word, CnId)` keying cost up to 32
-//! hash-map operations per commit; per-line keying costs exactly two
-//! (see EXPERIMENTS.md).
-
-use rustc_hash::FxHashMap;
+//! §Perf: the oracle is keyed by interned [`LineId`] into a dense slab
+//! (`idx[lid] -> slot`), with 16-wide word arrays per entry.  PR 2 cut
+//! the per-commit cost from ≤32 hash operations to 2; this removes the
+//! remaining hashes entirely — `on_commit` is now two array probes plus
+//! a short linear scan of the line's writer list (per-CN sequence
+//! tracking: lines have 1-2 writers in practice).  Callers filter out
+//! CN-local lines (the oracle tracks shared memory only).
 
 use crate::config::CnId;
-use crate::mem::Line;
+use crate::mem::{LineId, NO_SLOT};
 use crate::proto::LineWords;
 
 /// Committed state of one line: a present-mask plus 16-wide word arrays
-/// (value + provenance per word).
+/// (value + provenance per word), and the per-writer-CN committed
+/// sequence floors.
 #[derive(Debug, Clone)]
 struct LineEntry {
     /// Bit w set: word w has a committed value.
@@ -32,6 +33,10 @@ struct LineEntry {
     cn: [u8; 16],
     /// Committing repl_seq per word (debugging dumps).
     repl_seq: [u64; 16],
+    /// Highest committed repl_seq per (writer CN, word) — distinguishes
+    /// newer in-flight updates from stale resurrections.  Lines have few
+    /// distinct writers, so a scanned inline list beats a map.
+    seqs: Vec<(CnId, [u64; 16])>,
 }
 
 impl Default for LineEntry {
@@ -41,28 +46,61 @@ impl Default for LineEntry {
             values: [0; 16],
             cn: [0; 16],
             repl_seq: [0; 16],
+            seqs: Vec::new(),
         }
     }
 }
 
-/// Oracle over committed shared-memory state.
+impl LineEntry {
+    fn seqs_mut(&mut self, cn: CnId) -> &mut [u64; 16] {
+        if let Some(pos) = self.seqs.iter().position(|(c, _)| *c == cn) {
+            return &mut self.seqs[pos].1;
+        }
+        self.seqs.push((cn, [0; 16]));
+        &mut self.seqs.last_mut().unwrap().1
+    }
+
+    fn seq_of(&self, cn: CnId, word: usize) -> u64 {
+        self.seqs
+            .iter()
+            .find(|(c, _)| *c == cn)
+            .map(|(_, s)| s[word])
+            .unwrap_or(0)
+    }
+}
+
+/// Oracle over committed shared-memory state, slab-indexed by [`LineId`].
 #[derive(Debug, Default)]
 pub struct Oracle {
-    last: FxHashMap<Line, LineEntry>,
-    /// Highest committed repl_seq per (line, cn), per word — distinguishes
-    /// newer in-flight updates from stale resurrections.
-    committed_seq: FxHashMap<(Line, CnId), [u64; 16]>,
+    /// `LineId -> slot` (NO_SLOT = never committed to).
+    idx: Vec<u32>,
+    slots: Vec<LineEntry>,
 }
 
 impl Oracle {
-    /// Record a committed store (any protocol; `repl_seq` 0 outside
-    /// ReCXL).
-    pub fn on_commit(&mut self, line: Line, mask: u16, words: &LineWords, cn: CnId, repl_seq: u64) {
-        if !line.is_remote() {
-            return;
+    #[inline]
+    fn slot_of(&self, lid: LineId) -> Option<usize> {
+        match self.idx.get(lid.idx()) {
+            Some(&s) if s != NO_SLOT => Some(s as usize),
+            _ => None,
         }
-        let e = self.last.entry(line).or_default();
-        let seqs = self.committed_seq.entry((line, cn)).or_insert([0; 16]);
+    }
+
+    fn slot_mut(&mut self, lid: LineId) -> &mut LineEntry {
+        if self.idx.len() <= lid.idx() {
+            self.idx.resize(lid.idx() + 1, NO_SLOT);
+        }
+        if self.idx[lid.idx()] == NO_SLOT {
+            self.idx[lid.idx()] = self.slots.len() as u32;
+            self.slots.push(LineEntry::default());
+        }
+        &mut self.slots[self.idx[lid.idx()] as usize]
+    }
+
+    /// Record a committed store to a *remote* line (any protocol;
+    /// `repl_seq` 0 outside ReCXL).  Callers skip CN-local lines.
+    pub fn on_commit(&mut self, lid: LineId, mask: u16, words: &LineWords, cn: CnId, repl_seq: u64) {
+        let e = self.slot_mut(lid);
         let mut m = mask;
         while m != 0 {
             let w = m.trailing_zeros() as usize;
@@ -71,14 +109,20 @@ impl Oracle {
             e.values[w] = words[w];
             e.cn[w] = cn as u8;
             e.repl_seq[w] = repl_seq;
+        }
+        let seqs = e.seqs_mut(cn);
+        let mut m = mask;
+        while m != 0 {
+            let w = m.trailing_zeros() as usize;
+            m &= m - 1;
             seqs[w] = seqs[w].max(repl_seq);
         }
     }
 
     /// Last committed value of a word, if any store ever committed to it.
-    pub fn committed_value(&self, line: Line, word: u8) -> Option<u32> {
-        self.last
-            .get(&line)
+    pub fn committed_value(&self, lid: LineId, word: u8) -> Option<u32> {
+        self.slot_of(lid)
+            .map(|s| &self.slots[s])
             .filter(|e| e.present & (1 << word) != 0)
             .map(|e| e.values[word as usize])
     }
@@ -92,22 +136,19 @@ impl Oracle {
     /// in-flight" and silently regress repaired memory.
     pub fn on_recovery_applied(
         &mut self,
-        line: Line,
+        lid: LineId,
         word: u8,
         value: u32,
         cn: CnId,
         repl_seq: u64,
     ) {
-        if !line.is_remote() {
-            return;
-        }
         let w = word as usize;
-        let e = self.last.entry(line).or_default();
+        let e = self.slot_mut(lid);
         e.present |= 1 << word;
         e.values[w] = value;
         e.cn[w] = cn as u8;
         e.repl_seq[w] = repl_seq;
-        let seqs = self.committed_seq.entry((line, cn)).or_insert([0; 16]);
+        let seqs = e.seqs_mut(cn);
         seqs[w] = seqs[w].max(repl_seq);
     }
 
@@ -115,12 +156,12 @@ impl Oracle {
     /// repl_seq) of the log entry recovery applied, if any.
     pub fn verify_word(
         &self,
-        line: Line,
+        lid: LineId,
         word: u8,
         mem_value: u32,
         applied: Option<(CnId, u64)>,
     ) -> bool {
-        match self.last.get(&line) {
+        match self.slot_of(lid).map(|s| &self.slots[s]) {
             // never committed: anything (incl. in-flight) ok
             None => true,
             Some(e) if e.present & (1 << word) == 0 => true,
@@ -130,12 +171,7 @@ impl Oracle {
                 }
                 // accept a strictly newer in-flight update from the same CN
                 if let Some((acn, aseq)) = applied {
-                    let committed = self
-                        .committed_seq
-                        .get(&(line, acn))
-                        .map(|s| s[word as usize])
-                        .unwrap_or(0);
-                    return aseq > committed;
+                    return aseq > e.seq_of(acn, word as usize);
                 }
                 false
             }
@@ -143,8 +179,8 @@ impl Oracle {
     }
 
     pub fn words_tracked(&self) -> usize {
-        self.last
-            .values()
+        self.slots
+            .iter()
             .map(|e| e.present.count_ones() as usize)
             .sum()
     }
@@ -153,10 +189,9 @@ impl Oracle {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::Addr;
 
-    fn line(i: u32) -> Line {
-        Addr(0x8000_0000 | (i << 6)).line()
+    fn lid(i: u32) -> LineId {
+        LineId(i)
     }
 
     #[test]
@@ -164,11 +199,11 @@ mod tests {
         let mut o = Oracle::default();
         let mut w = [0u32; 16];
         w[0] = 1;
-        o.on_commit(line(1), 1, &w, 0, 1);
+        o.on_commit(lid(1), 1, &w, 0, 1);
         w[0] = 2;
-        o.on_commit(line(1), 1, &w, 0, 2);
-        assert_eq!(o.committed_value(line(1), 0), Some(2));
-        assert_eq!(o.committed_value(line(1), 1), None);
+        o.on_commit(lid(1), 1, &w, 0, 2);
+        assert_eq!(o.committed_value(lid(1), 0), Some(2));
+        assert_eq!(o.committed_value(lid(1), 1), None);
     }
 
     #[test]
@@ -178,81 +213,84 @@ mod tests {
         w[2] = 22;
         w[5] = 55;
         w[15] = 1515;
-        o.on_commit(line(3), (1 << 2) | (1 << 5) | (1 << 15), &w, 1, 9);
-        assert_eq!(o.committed_value(line(3), 2), Some(22));
-        assert_eq!(o.committed_value(line(3), 5), Some(55));
-        assert_eq!(o.committed_value(line(3), 15), Some(1515));
-        assert_eq!(o.committed_value(line(3), 0), None);
+        o.on_commit(lid(3), (1 << 2) | (1 << 5) | (1 << 15), &w, 1, 9);
+        assert_eq!(o.committed_value(lid(3), 2), Some(22));
+        assert_eq!(o.committed_value(lid(3), 5), Some(55));
+        assert_eq!(o.committed_value(lid(3), 15), Some(1515));
+        assert_eq!(o.committed_value(lid(3), 0), None);
         assert_eq!(o.words_tracked(), 3);
     }
 
     #[test]
-    fn local_lines_ignored() {
-        let mut o = Oracle::default();
-        o.on_commit(Addr(0x0100_0040).line(), 1, &[1; 16], 0, 1);
+    fn untouched_ids_track_nothing() {
+        let o = Oracle::default();
+        assert_eq!(o.committed_value(lid(77), 0), None);
         assert_eq!(o.words_tracked(), 0);
     }
 
     #[test]
     fn verify_accepts_committed_value() {
         let mut o = Oracle::default();
-        o.on_commit(line(1), 1, &[7; 16], 2, 5);
-        assert!(o.verify_word(line(1), 0, 7, None));
-        assert!(!o.verify_word(line(1), 0, 9, None));
+        o.on_commit(lid(1), 1, &[7; 16], 2, 5);
+        assert!(o.verify_word(lid(1), 0, 7, None));
+        assert!(!o.verify_word(lid(1), 0, 9, None));
     }
 
     #[test]
     fn verify_accepts_newer_inflight_rejects_stale() {
         let mut o = Oracle::default();
-        o.on_commit(line(1), 1, &[7; 16], 2, 5);
+        o.on_commit(lid(1), 1, &[7; 16], 2, 5);
         // newer in-flight from the same CN: acceptable forward choice
-        assert!(o.verify_word(line(1), 0, 99, Some((2, 6))));
+        assert!(o.verify_word(lid(1), 0, 99, Some((2, 6))));
         // stale resurrection (seq <= committed): a bug
-        assert!(!o.verify_word(line(1), 0, 99, Some((2, 5))));
-        assert!(!o.verify_word(line(1), 0, 99, Some((2, 3))));
+        assert!(!o.verify_word(lid(1), 0, 99, Some((2, 5))));
+        assert!(!o.verify_word(lid(1), 0, 99, Some((2, 3))));
     }
 
     #[test]
     fn committed_seq_is_tracked_per_cn_and_word() {
         let mut o = Oracle::default();
         // CN 2 commits seq 5 on word 0; CN 3 commits seq 1 on word 1
-        o.on_commit(line(1), 1, &[7; 16], 2, 5);
-        o.on_commit(line(1), 2, &[8; 16], 3, 1);
+        o.on_commit(lid(1), 1, &[7; 16], 2, 5);
+        o.on_commit(lid(1), 2, &[8; 16], 3, 1);
         // CN 3's seq 2 is newer *for CN 3* even though CN 2 reached 5
-        assert!(o.verify_word(line(1), 1, 42, Some((3, 2))));
+        assert!(o.verify_word(lid(1), 1, 42, Some((3, 2))));
         // CN 2's seq 2 on word 0 is stale (its committed is 5)
-        assert!(!o.verify_word(line(1), 0, 42, Some((2, 2))));
+        assert!(!o.verify_word(lid(1), 0, 42, Some((2, 2))));
         // a CN that never committed on this line: any seq > 0 is newer
-        assert!(o.verify_word(line(1), 0, 42, Some((9, 1))));
+        assert!(o.verify_word(lid(1), 0, 42, Some((9, 1))));
     }
 
     #[test]
     fn untracked_words_always_pass() {
         let o = Oracle::default();
-        assert!(o.verify_word(line(9), 3, 123, None));
+        assert!(o.verify_word(lid(9), 3, 123, None));
     }
 
     #[test]
     fn recovery_promotion_pins_later_rounds_to_the_repaired_state() {
         let mut o = Oracle::default();
-        o.on_commit(line(1), 1, &[7; 16], 2, 5);
+        o.on_commit(lid(1), 1, &[7; 16], 2, 5);
         // round 1: recovery applies CN 2's newer in-flight seq-6 value 99
-        assert!(o.verify_word(line(1), 0, 99, Some((2, 6))));
-        o.on_recovery_applied(line(1), 0, 99, 2, 6);
+        assert!(o.verify_word(lid(1), 0, 99, Some((2, 6))));
+        o.on_recovery_applied(lid(1), 0, 99, 2, 6);
         // round 2 must accept the repaired value as the plain truth...
-        assert!(o.verify_word(line(1), 0, 99, None));
-        assert_eq!(o.committed_value(line(1), 0), Some(99));
+        assert!(o.verify_word(lid(1), 0, 99, None));
+        assert_eq!(o.committed_value(lid(1), 0), Some(99));
         // ...and must no longer accept seq 6 as "newer in-flight" cover
         // for a different value (that would be a regression)
-        assert!(!o.verify_word(line(1), 0, 55, Some((2, 6))));
+        assert!(!o.verify_word(lid(1), 0, 55, Some((2, 6))));
         // a genuinely newer entry is still a legal forward choice
-        assert!(o.verify_word(line(1), 0, 123, Some((2, 7))));
+        assert!(o.verify_word(lid(1), 0, 123, Some((2, 7))));
     }
 
     #[test]
-    fn promotion_ignores_local_lines() {
+    fn sparse_ids_do_not_collide() {
         let mut o = Oracle::default();
-        o.on_recovery_applied(Addr(0x0100_0040).line(), 0, 9, 1, 1);
-        assert_eq!(o.words_tracked(), 0);
+        o.on_commit(lid(1000), 1, &[1; 16], 0, 1);
+        o.on_commit(lid(3), 1, &[2; 16], 0, 1);
+        assert_eq!(o.committed_value(lid(1000), 0), Some(1));
+        assert_eq!(o.committed_value(lid(3), 0), Some(2));
+        assert_eq!(o.words_tracked(), 2);
     }
 }

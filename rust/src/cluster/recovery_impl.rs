@@ -32,7 +32,8 @@
 //! repairs are promoted to the oracle's committed truth so later rounds
 //! validate against the *recovered* state, not pre-crash history.
 
-use std::collections::{HashMap, HashSet};
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::{Cluster, Ev};
 use crate::cache::Mesi;
@@ -46,11 +47,16 @@ use crate::sim::time::lu_cycles;
 use crate::stats::RecoveryMsg;
 
 /// Per-MN repair bookkeeping while log responses are outstanding.
+///
+/// `responses` is a `BTreeMap`: `repair_mn` flattens it into per-line
+/// version lists whose order feeds `select_version`'s tie-breaking, so
+/// the iteration order must be a function of the CN ids, not of hash
+/// state (determinism across processes).
 pub struct MnRepair {
     /// Lines to repair, each with the dead CN that owned it.
     pub owned: Vec<(Line, CnId)>,
-    pub expected: HashSet<CnId>,
-    pub responses: HashMap<CnId, HashMap<Line, VersionList>>,
+    pub expected: BTreeSet<CnId>,
+    pub responses: BTreeMap<CnId, FxHashMap<Line, VersionList>>,
 }
 
 /// The Configuration Manager's state machine for one recovery round.
@@ -60,10 +66,12 @@ pub struct RecoveryCtrl {
     pub cm_cn: CnId,
     /// Round generation; stamped on every message of the round.
     pub epoch: u64,
-    pub pending_cns: HashSet<CnId>,
-    pub pending_mns: HashSet<MnId>,
-    pub pending_end: HashSet<CnId>,
-    pub repairs: HashMap<MnId, MnRepair>,
+    /// Membership-only sets (never iterated — broadcast order comes from
+    /// the ordered live-CN list).
+    pub pending_cns: FxHashSet<CnId>,
+    pub pending_mns: FxHashSet<MnId>,
+    pub pending_end: FxHashSet<CnId>,
+    pub repairs: FxHashMap<MnId, MnRepair>,
     pub complete: bool,
 }
 
@@ -207,7 +215,10 @@ impl Cluster {
         let epoch = self.recovery_epoch;
         let failed: Vec<CnId> = self.unrecovered.iter().copied().collect();
         self.stats.recovery.count(RecoveryMsg::Msi);
-        let live: HashSet<CnId> = self.live_cns().collect();
+        // broadcast in ascending CN order: these sends serialize on the
+        // CM's uplink, so their order is part of the schedule — it must
+        // come from the ids, not from hash-set iteration order
+        let live: Vec<CnId> = self.live_cns().collect();
         for &c in &live {
             self.stats.recovery.count(RecoveryMsg::Interrupt);
             self.send(
@@ -223,10 +234,10 @@ impl Cluster {
             failed,
             cm_cn: cm,
             epoch,
-            pending_cns: live,
-            pending_mns: HashSet::new(),
-            pending_end: HashSet::new(),
-            repairs: HashMap::new(),
+            pending_cns: live.into_iter().collect(),
+            pending_mns: FxHashSet::default(),
+            pending_end: FxHashSet::default(),
+            repairs: FxHashMap::default(),
             complete: false,
         });
     }
@@ -321,7 +332,7 @@ impl Cluster {
             return;
         }
         // phase 2: directory-level recovery on every MN
-        let mut pending = HashSet::new();
+        let mut pending = FxHashSet::default();
         for mn in 0..self.cfg.n_mns {
             pending.insert(mn);
             self.stats.recovery.count(RecoveryMsg::InitRecov);
@@ -360,7 +371,8 @@ impl Cluster {
                 // count each (line, dead owner) repair once
                 if self.census_counted.insert((l, f)) {
                     self.stats.recovery.owned_lines += 1;
-                    match self.caches[f].state(l).map(|s| s.mesi) {
+                    let lid = self.lines.intern(l);
+                    match self.caches[f].state(lid).map(|s| s.mesi) {
                         Some(Mesi::Modified) => self.stats.recovery.dirty_lines += 1,
                         _ => self.stats.recovery.exclusive_lines += 1,
                     }
@@ -374,7 +386,7 @@ impl Cluster {
         }
         // group owned lines by the replica-window CNs that may hold them
         // (BTreeMap: the query order must be deterministic)
-        let mut per_cn: std::collections::BTreeMap<CnId, Vec<Line>> = Default::default();
+        let mut per_cn: BTreeMap<CnId, Vec<Line>> = Default::default();
         for &(l, owner) in &owned_all {
             for c in replica_window(l, self.cfg.n_cns, self.cfg.n_r) {
                 if c != owner && !self.dead[c] {
@@ -382,7 +394,7 @@ impl Cluster {
                 }
             }
         }
-        let expected: HashSet<CnId> = per_cn.keys().copied().collect();
+        let expected: BTreeSet<CnId> = per_cn.keys().copied().collect();
         let no_replicas = expected.is_empty();
         let Some(ctrl) = self.recovery.as_mut() else { return };
         ctrl.repairs.insert(
@@ -390,7 +402,7 @@ impl Cluster {
             MnRepair {
                 owned: owned_all,
                 expected,
-                responses: HashMap::new(),
+                responses: BTreeMap::new(),
             },
         );
         if no_replicas {
@@ -422,7 +434,11 @@ impl Cluster {
         epoch: u64,
     ) {
         let now = self.q.now();
-        let results = self.logunits[cn].fetch_latest_vers(&lines);
+        let pairs: Vec<(Line, crate::mem::LineId)> = lines
+            .iter()
+            .map(|&l| (l, self.lines.intern(l)))
+            .collect();
+        let results = self.logunits[cn].fetch_latest_vers(&pairs);
         // software handler cost: proportional to a log traversal
         let cost = lu_cycles(16 + self.logunits[cn].dram_len() as u64 / 8);
         self.stats.recovery.count(RecoveryMsg::FetchLatestVersResp);
@@ -449,7 +465,7 @@ impl Cluster {
                 return; // aborted round
             }
             let Some(rep) = ctrl.repairs.get_mut(&mn) else { return };
-            let map: HashMap<Line, VersionList> =
+            let map: FxHashMap<Line, VersionList> =
                 results.into_iter().map(|v| (v.line, v)).collect();
             rep.responses.insert(from, map);
             rep.responses.len() >= rep.expected.len()
@@ -466,14 +482,18 @@ impl Cluster {
         let Some(ctrl) = self.recovery.as_ref() else { return };
         let Some(rep) = ctrl.repairs.get(&mn) else { return };
         let owned = rep.owned.clone();
-        // borrow-friendly copies of the response lists per line
-        let mut per_line: HashMap<Line, Vec<VersionList>> = HashMap::new();
+        // borrow-friendly copies of the response lists per line; BTreeMap
+        // iteration makes the list order (and so select_version's
+        // tie-breaking input) deterministic
+        let mut per_line: FxHashMap<Line, Vec<VersionList>> = FxHashMap::default();
         for lists in rep.responses.values() {
             for (l, v) in lists {
                 per_line.entry(*l).or_default().push(v.clone());
             }
         }
         for (line, owner) in owned {
+            let lid = self.lines.intern(line);
+            let slot = self.lines.mn_slot(lid);
             let lists: Vec<&VersionList> = per_line
                 .get(&line)
                 .map(|v| v.iter().collect())
@@ -481,7 +501,7 @@ impl Cluster {
             let fallback = self.dirs[mn].mn_log_latest(line);
             match select_version(line, owner, &lists, &fallback) {
                 Some(rl) => {
-                    let out = self.dirs[mn].recovery_apply(line, rl.mask, &rl.words);
+                    let out = self.dirs[mn].recovery_apply(line, slot, rl.mask, &rl.words);
                     let now = self.q.now();
                     for (d, m) in out {
                         self.send(now + d, m);
@@ -492,10 +512,10 @@ impl Cluster {
                         self.stats.recovery.recovered_from_logs += 1;
                     }
                     // consistency oracle: nothing committed may be lost
-                    let mem = self.dirs[mn].mem_words(line);
+                    let mem = self.dirs[mn].mem_words(slot);
                     for w in 0..16u8 {
                         let ok = self.oracle.verify_word(
-                            line,
+                            lid,
                             w,
                             mem[w as usize],
                             rl.provenance[w as usize],
@@ -506,21 +526,21 @@ impl Cluster {
                             // promote the accepted repair to committed
                             // truth: later rounds must not regress it
                             self.oracle
-                                .on_recovery_applied(line, w, mem[w as usize], acn, aseq);
+                                .on_recovery_applied(lid, w, mem[w as usize], acn, aseq);
                         }
                     }
                 }
                 None => {
                     // Exclusive-clean in the dead CN: memory already holds
                     // the latest data; just release ownership.
-                    let out = self.dirs[mn].recovery_release(line, owner);
+                    let out = self.dirs[mn].recovery_release(line, slot, owner);
                     let now = self.q.now();
                     for (d, m) in out {
                         self.send(now + d, m);
                     }
-                    let mem = self.dirs[mn].mem_words(line);
+                    let mem = self.dirs[mn].mem_words(slot);
                     for w in 0..16u8 {
-                        if !self.oracle.verify_word(line, w, mem[w as usize], None) {
+                        if !self.oracle.verify_word(lid, w, mem[w as usize], None) {
                             self.stats.recovery.inconsistencies += 1;
                         }
                     }
@@ -560,7 +580,8 @@ impl Cluster {
         if !all_in {
             return;
         }
-        let live: HashSet<CnId> = self.live_cns().collect();
+        // ascending CN order (see start_recovery_round)
+        let live: Vec<CnId> = self.live_cns().collect();
         for &c in &live {
             self.stats.recovery.count(RecoveryMsg::RecovEnd);
             self.send(
@@ -572,7 +593,7 @@ impl Cluster {
                 },
             );
         }
-        self.recovery.as_mut().unwrap().pending_end = live;
+        self.recovery.as_mut().unwrap().pending_end = live.into_iter().collect();
     }
 
     // ----------------------------------------------- resume -------------

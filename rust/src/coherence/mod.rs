@@ -8,8 +8,16 @@
 //! behaviour (invalidate sharers, persist, ack) also lives here, as does
 //! the MN-resident dumped log and the directory-side recovery hooks
 //! (Algorithm 1's census + repair).
+//!
+//! Entries and memory words are **slot-indexed slabs**, not hash maps:
+//! every remote line is homed on exactly one MN, and the cluster's
+//! [`crate::mem::LineTable`] assigns each line a dense per-MN slot at
+//! intern time.  Directory probes — several per coherence transaction —
+//! are plain array reads.  A never-touched slot behaves exactly like an
+//! absent map entry did (no owner, no sharers, zeroed memory), and slab
+//! iteration order is first-touch order, which is deterministic (the old
+//! hash-map iteration order was not stable across processes).
 
-use rustc_hash::FxHashMap;
 use std::collections::VecDeque;
 
 use crate::config::{CnId, MnId};
@@ -56,8 +64,12 @@ pub type DirOut = Vec<(Ps, Message)>;
 /// One MN's directory controller + memory + resident dumped log.
 pub struct Directory {
     pub mn: MnId,
-    entries: FxHashMap<Line, DirEntry>,
-    memory: FxHashMap<Line, LineWords>,
+    /// Per-slot directory entries (slot = `LineTable::mn_slot`).
+    entries: Vec<DirEntry>,
+    /// Per-slot memory words.
+    memory: Vec<LineWords>,
+    /// Per-slot reverse translation (census / unblock iteration).
+    slot_line: Vec<Line>,
     /// Dumped log records, in arrival order (recovery's fallback search).
     pub mn_log: Vec<LogRecord>,
     /// CNs whose Viral_Status is set (requests involving them are deferred
@@ -73,8 +85,9 @@ impl Directory {
     pub fn new(mn: MnId, dram_ps: Ps, pmem_ps: Ps) -> Self {
         Directory {
             mn,
-            entries: FxHashMap::default(),
-            memory: FxHashMap::default(),
+            entries: Vec::new(),
+            memory: Vec::new(),
+            slot_line: Vec::new(),
             mn_log: Vec::new(),
             dead_mask: 0,
             dram_ps,
@@ -87,12 +100,25 @@ impl Directory {
         NodeId::Mn(self.mn)
     }
 
-    pub fn mem_words(&self, line: Line) -> LineWords {
-        self.memory.get(&line).copied().unwrap_or([0; 16])
+    /// Grow the slabs to cover `slot` and record its line.
+    #[inline]
+    fn ensure(&mut self, slot: u32, line: Line) {
+        let s = slot as usize;
+        if s >= self.entries.len() {
+            self.entries.resize_with(s + 1, DirEntry::default);
+            self.memory.resize(s + 1, [0; 16]);
+            self.slot_line.resize(s + 1, Line(0));
+        }
+        self.slot_line[s] = line;
     }
 
-    pub fn write_mem(&mut self, line: Line, mask: u16, words: &LineWords) {
-        let m = self.memory.entry(line).or_insert([0; 16]);
+    pub fn mem_words(&self, slot: u32) -> LineWords {
+        self.memory.get(slot as usize).copied().unwrap_or([0; 16])
+    }
+
+    pub fn write_mem(&mut self, slot: u32, line: Line, mask: u16, words: &LineWords) {
+        self.ensure(slot, line);
+        let m = &mut self.memory[slot as usize];
         for w in 0..16 {
             if mask & (1 << w) != 0 {
                 m[w] = words[w];
@@ -101,9 +127,9 @@ impl Directory {
     }
 
     /// Directory view of a line (owner, sharer bitmap).
-    pub fn dir_state(&self, line: Line) -> (Option<CnId>, u32) {
+    pub fn dir_state(&self, slot: u32) -> (Option<CnId>, u32) {
         self.entries
-            .get(&line)
+            .get(slot as usize)
             .map(|e| (e.owner, e.sharers))
             .unwrap_or((None, 0))
     }
@@ -115,10 +141,14 @@ impl Directory {
         self.dead_mask |= 1 << cn;
     }
 
-    pub fn on_rds(&mut self, line: Line, req: ReqId) -> DirOut {
+    pub fn on_rds(&mut self, line: Line, slot: u32, req: ReqId) -> DirOut {
         self.transactions += 1;
+        self.ensure(slot, line);
         let dead = self.dead_mask;
-        let e = self.entries.entry(line).or_default();
+        let words = self.memory[slot as usize];
+        let dram = self.dram_ps;
+        let me = self.me();
+        let e = &mut self.entries[slot as usize];
         if e.busy.is_some() {
             e.pending.push_back(Queued::RdS(req));
             return vec![];
@@ -137,7 +167,7 @@ impl Directory {
                 vec![(
                     0,
                     Message {
-                        src: NodeId::Mn(self.mn),
+                        src: me,
                         dst: NodeId::Cn(o),
                         kind: MsgKind::Downgrade { line },
                     },
@@ -152,11 +182,10 @@ impl Directory {
                 } else {
                     e.sharers |= 1 << req.cn;
                 }
-                let words = self.mem_words(line);
                 vec![(
-                    self.dram_ps,
+                    dram,
                     Message {
-                        src: self.me(),
+                        src: me,
                         dst: NodeId::Cn(req.cn),
                         kind: MsgKind::Data { line, req, exclusive, words },
                     },
@@ -165,11 +194,14 @@ impl Directory {
         }
     }
 
-    pub fn on_rdx(&mut self, line: Line, req: ReqId, prefetch: bool) -> DirOut {
+    pub fn on_rdx(&mut self, line: Line, slot: u32, req: ReqId, prefetch: bool) -> DirOut {
         self.transactions += 1;
+        self.ensure(slot, line);
         let me = self.me();
         let dead = self.dead_mask;
-        let e = self.entries.entry(line).or_default();
+        let words = self.memory[slot as usize];
+        let dram = self.dram_ps;
+        let e = &mut self.entries[slot as usize];
         if e.busy.is_some() {
             e.pending.push_back(Queued::RdX(req, prefetch));
             return vec![];
@@ -183,9 +215,8 @@ impl Directory {
         }
         if e.owner == Some(req.cn) {
             // already owner (prefetch raced with an earlier grant)
-            let words = self.mem_words(line);
             return vec![(
-                self.dram_ps,
+                dram,
                 Message {
                     src: me,
                     dst: NodeId::Cn(req.cn),
@@ -200,9 +231,8 @@ impl Directory {
         if targets == 0 {
             e.owner = Some(req.cn);
             e.sharers = 0;
-            let words = self.mem_words(line);
             return vec![(
-                self.dram_ps,
+                dram,
                 Message {
                     src: me,
                     dst: NodeId::Cn(req.cn),
@@ -227,11 +257,20 @@ impl Directory {
 
     /// Write-through remote store (WT config): invalidate every other
     /// cacher, persist, then ack.
-    pub fn on_wt_store(&mut self, line: Line, req: ReqId, mask: u16, words: LineWords) -> DirOut {
+    pub fn on_wt_store(
+        &mut self,
+        line: Line,
+        slot: u32,
+        req: ReqId,
+        mask: u16,
+        words: LineWords,
+    ) -> DirOut {
         self.transactions += 1;
+        self.ensure(slot, line);
         let me = self.me();
         let dead = self.dead_mask;
-        let e = self.entries.entry(line).or_default();
+        let pmem = self.pmem_ps;
+        let e = &mut self.entries[slot as usize];
         if e.busy.is_some() {
             e.pending.push_back(Queued::Wt(req, mask, words));
             return vec![];
@@ -250,9 +289,9 @@ impl Directory {
             }
         }
         if targets == 0 {
-            self.write_mem(line, mask, &words);
+            self.write_mem(slot, line, mask, &words);
             return vec![(
-                self.pmem_ps,
+                pmem,
                 Message {
                     src: me,
                     dst: NodeId::Cn(req.cn),
@@ -276,9 +315,9 @@ impl Directory {
     }
 
     /// Owner eviction writeback.
-    pub fn on_wb(&mut self, line: Line, from: CnId, mask: u16, words: LineWords) -> DirOut {
-        self.write_mem(line, mask, &words);
-        let e = self.entries.entry(line).or_default();
+    pub fn on_wb(&mut self, line: Line, slot: u32, from: CnId, mask: u16, words: LineWords) -> DirOut {
+        self.write_mem(slot, line, mask, &words);
+        let e = &mut self.entries[slot as usize];
         if e.owner == Some(from) {
             e.owner = None;
         }
@@ -286,11 +325,17 @@ impl Directory {
     }
 
     /// Invalidation ack (may carry dirty data from a former owner).
-    pub fn on_inv_ack(&mut self, line: Line, from: CnId, dirty: Option<(u16, LineWords)>) -> DirOut {
+    pub fn on_inv_ack(
+        &mut self,
+        line: Line,
+        slot: u32,
+        from: CnId,
+        dirty: Option<(u16, LineWords)>,
+    ) -> DirOut {
         if let Some((mask, words)) = dirty {
-            self.write_mem(line, mask, &words);
+            self.write_mem(slot, line, mask, &words);
         }
-        let Some(e) = self.entries.get_mut(&line) else { return vec![] };
+        let Some(e) = self.entries.get_mut(slot as usize) else { return vec![] };
         e.sharers &= !(1 << from);
         if e.owner == Some(from) {
             e.owner = None;
@@ -301,29 +346,35 @@ impl Directory {
             }
             _ => return vec![],
         }
-        self.try_complete(line)
+        self.try_complete(line, slot)
     }
 
     /// Downgrade ack from the owner (RdS path).
-    pub fn on_downgrade_ack(&mut self, line: Line, from: CnId, dirty: Option<(u16, LineWords)>) -> DirOut {
+    pub fn on_downgrade_ack(
+        &mut self,
+        line: Line,
+        slot: u32,
+        from: CnId,
+        dirty: Option<(u16, LineWords)>,
+    ) -> DirOut {
         if let Some((mask, words)) = dirty {
-            self.write_mem(line, mask, &words);
+            self.write_mem(slot, line, mask, &words);
         }
-        let Some(e) = self.entries.get_mut(&line) else { return vec![] };
+        let Some(e) = self.entries.get_mut(slot as usize) else { return vec![] };
         if e.owner == Some(from) {
             e.owner = None;
             e.sharers |= 1 << from; // former owner keeps a shared copy
         }
-        self.try_complete(line)
+        self.try_complete(line, slot)
     }
 
     /// Complete the busy transaction on `line` if its acks are all in.
-    fn try_complete(&mut self, line: Line) -> DirOut {
+    fn try_complete(&mut self, line: Line, slot: u32) -> DirOut {
         let me = self.me();
         let dram = self.dram_ps;
         let pmem = self.pmem_ps;
-        let words_now = self.mem_words(line);
-        let Some(e) = self.entries.get_mut(&line) else { return vec![] };
+        let words_now = self.mem_words(slot);
+        let Some(e) = self.entries.get_mut(slot as usize) else { return vec![] };
         let mut out: DirOut = vec![];
         match e.busy.clone() {
             Some(Txn::RdS { req }) => {
@@ -354,8 +405,7 @@ impl Directory {
             Some(Txn::Wt { req, waiting, mask, words }) if waiting == 0 => {
                 e.busy = None;
                 // persist after invalidations (entry borrow ends here)
-                let _ = e;
-                self.write_mem(line, mask, &words);
+                self.write_mem(slot, line, mask, &words);
                 out.push((
                     pmem,
                     Message {
@@ -368,25 +418,25 @@ impl Directory {
             _ => return vec![],
         }
         // start the next queued request, if any
-        out.extend(self.pop_pending(line));
+        out.extend(self.pop_pending(line, slot));
         out
     }
 
     /// Start queued requests until one goes busy (or the queue drains).
     /// Requests that complete immediately (no invalidations needed) must
     /// not strand the ones queued behind them.
-    fn pop_pending(&mut self, line: Line) -> DirOut {
+    fn pop_pending(&mut self, line: Line, slot: u32) -> DirOut {
         let mut out = Vec::new();
         loop {
-            let Some(e) = self.entries.get_mut(&line) else { break };
+            let Some(e) = self.entries.get_mut(slot as usize) else { break };
             if e.busy.is_some() {
                 break;
             }
             let Some(q) = e.pending.pop_front() else { break };
             out.extend(match q {
-                Queued::RdS(req) => self.on_rds(line, req),
-                Queued::RdX(req, p) => self.on_rdx(line, req, p),
-                Queued::Wt(req, mask, words) => self.on_wt_store(line, req, mask, words),
+                Queued::RdS(req) => self.on_rds(line, slot, req),
+                Queued::RdX(req, p) => self.on_rdx(line, slot, req, p),
+                Queued::Wt(req, mask, words) => self.on_wt_store(line, slot, req, mask, words),
             });
         }
         out
@@ -400,13 +450,13 @@ impl Directory {
     pub fn recovery_census(&mut self, failed: CnId) -> (Vec<Line>, u64) {
         let mut owned = Vec::new();
         let mut shared = 0;
-        for (l, e) in self.entries.iter_mut() {
+        for (s, e) in self.entries.iter_mut().enumerate() {
             if e.sharers & (1 << failed) != 0 {
                 e.sharers &= !(1 << failed);
                 shared += 1;
             }
             if e.owner == Some(failed) {
-                owned.push(*l);
+                owned.push(self.slot_line[s]);
             }
         }
         owned.sort_unstable_by_key(|l| l.0);
@@ -416,20 +466,19 @@ impl Directory {
     /// Apply a recovered value and mark the line unowned/unshared
     /// (Algorithm 1's final step).  Requests deferred on the dead owner
     /// restart now, so the output must be routed.
-    pub fn recovery_apply(&mut self, line: Line, mask: u16, words: &LineWords) -> DirOut {
-        self.write_mem(line, mask, words);
-        if let Some(e) = self.entries.get_mut(&line) {
-            e.owner = None;
-            e.sharers = 0;
-            e.busy = None;
-        }
-        self.pop_pending(line)
+    pub fn recovery_apply(&mut self, line: Line, slot: u32, mask: u16, words: &LineWords) -> DirOut {
+        self.write_mem(slot, line, mask, words);
+        let e = &mut self.entries[slot as usize];
+        e.owner = None;
+        e.sharers = 0;
+        e.busy = None;
+        self.pop_pending(line, slot)
     }
 
     /// Clear ownership of a line that turned out Exclusive-clean in the
     /// failed CN (memory already current).
-    pub fn recovery_release(&mut self, line: Line, failed: CnId) -> DirOut {
-        if let Some(e) = self.entries.get_mut(&line) {
+    pub fn recovery_release(&mut self, line: Line, slot: u32, failed: CnId) -> DirOut {
+        if let Some(e) = self.entries.get_mut(slot as usize) {
             if e.owner == Some(failed) {
                 e.owner = None;
             }
@@ -437,7 +486,7 @@ impl Directory {
                 e.busy = None;
             }
         }
-        self.pop_pending(line)
+        self.pop_pending(line, slot)
     }
 
     /// Unblock transactions stuck waiting on acks from the failed CN.
@@ -452,9 +501,9 @@ impl Directory {
     ///   `AwaitRecovery` until Algorithm 1 repairs it.
     pub fn recovery_unblock(&mut self, failed: CnId) -> DirOut {
         let mut out = vec![];
-        let lines: Vec<Line> = self.entries.keys().copied().collect();
-        for l in lines {
-            let Some(e) = self.entries.get_mut(&l) else { continue };
+        for s in 0..self.entries.len() as u32 {
+            let l = self.slot_line[s as usize];
+            let e = &mut self.entries[s as usize];
             let owner_dead = e.owner == Some(failed);
             match e.busy.clone() {
                 Some(Txn::RdS { req }) if owner_dead => {
@@ -466,7 +515,7 @@ impl Directory {
                         e.busy = Some(Txn::AwaitRecovery);
                         e.pending.push_front(Queued::RdX(req, prefetch));
                     } else {
-                        out.extend(self.on_inv_ack(l, failed, None));
+                        out.extend(self.on_inv_ack(l, s, failed, None));
                     }
                 }
                 Some(Txn::Wt { req, waiting, mask, words }) if waiting & (1 << failed) != 0 => {
@@ -474,7 +523,7 @@ impl Directory {
                         e.busy = Some(Txn::AwaitRecovery);
                         e.pending.push_front(Queued::Wt(req, mask, words));
                     } else {
-                        out.extend(self.on_inv_ack(l, failed, None));
+                        out.extend(self.on_inv_ack(l, s, failed, None));
                     }
                 }
                 _ => {}
@@ -509,6 +558,12 @@ mod tests {
         Addr(0x8000_0000 | (i << 6)).line()
     }
 
+    /// Test slot assignment: one dense slot per distinct test line index
+    /// (what `LineTable::mn_slot` provides in the cluster).
+    fn slot(i: u32) -> u32 {
+        i
+    }
+
     fn req(cn: usize) -> ReqId {
         ReqId { cn, core: 0 }
     }
@@ -524,67 +579,67 @@ mod tests {
     #[test]
     fn first_reader_gets_exclusive() {
         let mut d = dir();
-        let out = d.on_rds(line(1), req(0));
+        let out = d.on_rds(line(1), slot(1), req(0));
         assert!(matches!(
             kinds(&out)[0],
             MsgKind::Data { exclusive: true, .. }
         ));
-        assert_eq!(d.dir_state(line(1)), (Some(0), 0));
+        assert_eq!(d.dir_state(slot(1)), (Some(0), 0));
     }
 
     #[test]
     fn second_reader_downgrades_owner() {
         let mut d = dir();
-        d.on_rds(line(1), req(0));
-        let out = d.on_rds(line(1), req(1));
+        d.on_rds(line(1), slot(1), req(0));
+        let out = d.on_rds(line(1), slot(1), req(1));
         assert!(matches!(kinds(&out)[0], MsgKind::Downgrade { .. }));
         // owner responds with dirty data
         let mut words = [0u32; 16];
         words[2] = 42;
-        let out = d.on_downgrade_ack(line(1), 0, Some((1 << 2, words)));
+        let out = d.on_downgrade_ack(line(1), slot(1), 0, Some((1 << 2, words)));
         assert!(matches!(
             kinds(&out)[0],
             MsgKind::Data { exclusive: false, .. }
         ));
-        let (owner, sharers) = d.dir_state(line(1));
+        let (owner, sharers) = d.dir_state(slot(1));
         assert_eq!(owner, None);
         assert_eq!(sharers, 0b11);
-        assert_eq!(d.mem_words(line(1))[2], 42);
+        assert_eq!(d.mem_words(slot(1))[2], 42);
     }
 
     #[test]
     fn rdx_invalidates_all_sharers_then_grants() {
         let mut d = dir();
-        d.on_rds(line(1), req(0));
-        d.on_downgrade_ack(line(1), 0, None); // completes reader 1's txn? no-op
-        d.on_rds(line(1), req(1));
-        d.on_downgrade_ack(line(1), 0, None);
+        d.on_rds(line(1), slot(1), req(0));
+        d.on_downgrade_ack(line(1), slot(1), 0, None); // no-op: nothing busy
+        d.on_rds(line(1), slot(1), req(1));
+        d.on_downgrade_ack(line(1), slot(1), 0, None);
         // now 0 and 1 share; CN 2 wants exclusive
-        let out = d.on_rdx(line(1), req(2), false);
+        let out = d.on_rdx(line(1), slot(1), req(2), false);
         let invs = kinds(&out)
             .iter()
             .filter(|k| matches!(k, MsgKind::Inv { .. }))
             .count();
         assert_eq!(invs, 2);
-        assert!(d.on_inv_ack(line(1), 0, None).is_empty());
-        let out = d.on_inv_ack(line(1), 1, None);
+        assert!(d.on_inv_ack(line(1), slot(1), 0, None).is_empty());
+        let out = d.on_inv_ack(line(1), slot(1), 1, None);
         assert!(matches!(
             kinds(&out)[0],
             MsgKind::Data { exclusive: true, .. }
         ));
-        assert_eq!(d.dir_state(line(1)), (Some(2), 0));
+        assert_eq!(d.dir_state(slot(1)), (Some(2), 0));
     }
 
     #[test]
     fn conflicting_requests_queue_fifo() {
         let mut d = dir();
-        d.on_rds(line(1), req(0)); // 0 owns E
-        let out = d.on_rdx(line(1), req(1), false); // invalidates 0
+        d.on_rds(line(1), slot(1), req(0)); // 0 owns E
+        let out = d.on_rdx(line(1), slot(1), req(1), false); // invalidates 0
         assert_eq!(out.len(), 1);
         // while busy, CN 2's RdX queues
-        assert!(d.on_rdx(line(1), req(2), false).is_empty());
+        assert!(d.on_rdx(line(1), slot(1), req(2), false).is_empty());
         // 0 acks: grant to 1 AND the queued txn for 2 starts (inv to 1)
-        let out = d.on_inv_ack(line(1), 0, None);
+        let out = d.on_inv_ack(line(1), slot(1), 0, None);
         assert!(out.iter().any(|(_, m)| matches!(
             m.kind,
             MsgKind::Data { req: ReqId { cn: 1, .. }, .. }
@@ -599,80 +654,80 @@ mod tests {
         let mut d = dir();
         let mut w = [0u32; 16];
         w[0] = 7;
-        let out = d.on_wt_store(line(3), req(0), 1, w);
+        let out = d.on_wt_store(line(3), slot(3), req(0), 1, w);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].0, 500_000, "PMem persist latency");
         assert!(matches!(out[0].1.kind, MsgKind::WtAck { .. }));
-        assert_eq!(d.mem_words(line(3))[0], 7);
+        assert_eq!(d.mem_words(slot(3))[0], 7);
     }
 
     #[test]
     fn wt_store_invalidates_sharers_first() {
         let mut d = dir();
-        d.on_rds(line(3), req(1)); // CN1 E-owner
-        let out = d.on_wt_store(line(3), req(0), 1, [9; 16]);
+        d.on_rds(line(3), slot(3), req(1)); // CN1 E-owner
+        let out = d.on_wt_store(line(3), slot(3), req(0), 1, [9; 16]);
         assert!(matches!(kinds(&out)[0], MsgKind::Inv { .. }));
-        let out = d.on_inv_ack(line(3), 1, None);
+        let out = d.on_inv_ack(line(3), slot(3), 1, None);
         assert!(matches!(out[0].1.kind, MsgKind::WtAck { .. }));
-        assert_eq!(d.mem_words(line(3))[0], 9);
+        assert_eq!(d.mem_words(slot(3))[0], 9);
     }
 
     #[test]
     fn writeback_clears_owner_and_updates_memory() {
         let mut d = dir();
-        d.on_rds(line(1), req(0));
-        d.on_wb(line(1), 0, 1, [5; 16]);
-        assert_eq!(d.dir_state(line(1)), (None, 0));
-        assert_eq!(d.mem_words(line(1))[0], 5);
+        d.on_rds(line(1), slot(1), req(0));
+        d.on_wb(line(1), slot(1), 0, 1, [5; 16]);
+        assert_eq!(d.dir_state(slot(1)), (None, 0));
+        assert_eq!(d.mem_words(slot(1))[0], 5);
     }
 
     #[test]
     fn recovery_census_and_repair() {
         let mut d = dir();
-        d.on_rds(line(1), req(3)); // 3 owns line 1
-        d.on_rds(line(2), req(0));
-        d.on_rds(line(2), req(3)); // 3 shares line 2 (after downgrade)
-        d.on_downgrade_ack(line(2), 0, None);
+        d.on_rds(line(1), slot(1), req(3)); // 3 owns line 1
+        d.on_rds(line(2), slot(2), req(0));
+        d.on_rds(line(2), slot(2), req(3)); // 3 shares line 2 (after downgrade)
+        d.on_downgrade_ack(line(2), slot(2), 0, None);
         let (owned, shared) = d.recovery_census(3);
         assert_eq!(owned, vec![line(1)]);
         assert_eq!(shared, 1);
-        assert_eq!(d.dir_state(line(2)).1 & (1 << 3), 0);
-        d.recovery_apply(line(1), 1, &[77; 16]);
-        assert_eq!(d.mem_words(line(1))[0], 77);
-        assert_eq!(d.dir_state(line(1)), (None, 0));
+        assert_eq!(d.dir_state(slot(2)).1 & (1 << 3), 0);
+        d.recovery_apply(line(1), slot(1), 1, &[77; 16]);
+        assert_eq!(d.mem_words(slot(1))[0], 77);
+        assert_eq!(d.dir_state(slot(1)), (None, 0));
     }
 
     #[test]
     fn recovery_defers_requests_on_dead_owner_until_repair() {
         let mut d = dir();
-        d.on_rds(line(1), req(3)); // 3 owns (E)
-        let _ = d.on_rdx(line(1), req(0), false); // inv to 3 (dead, no ack)
+        d.on_rds(line(1), slot(1), req(3)); // 3 owns (E)
+        let _ = d.on_rdx(line(1), slot(1), req(0), false); // inv to 3 (dead, no ack)
         // unblock must NOT grant from stale memory — 3's dirty data lives
         // only in the replica logs; the request parks until repair
         let out = d.recovery_unblock(3);
         assert!(out.is_empty());
         // Algorithm 1 repairs the line; the deferred RdX restarts and wins
-        let out = d.recovery_apply(line(1), 1, &[777; 16]);
+        let out = d.recovery_apply(line(1), slot(1), 1, &[777; 16]);
         assert!(out.iter().any(|(_, m)| matches!(
             m.kind,
             MsgKind::Data { exclusive: true, req: ReqId { cn: 0, .. }, .. }
         )));
-        assert_eq!(d.dir_state(line(1)).0, Some(0));
-        assert_eq!(d.mem_words(line(1))[0], 777);
+        assert_eq!(d.dir_state(slot(1)).0, Some(0));
+        assert_eq!(d.mem_words(slot(1))[0], 777);
     }
 
     #[test]
     fn dead_sharer_invalidation_completes_immediately() {
         let mut d = dir();
         // 3 and 1 share the line (via downgrades)
-        d.on_rds(line(2), req(3));
-        d.on_rds(line(2), req(1));
-        d.on_downgrade_ack(line(2), 3, None);
+        d.on_rds(line(2), slot(2), req(3));
+        d.on_rds(line(2), slot(2), req(1));
+        d.on_downgrade_ack(line(2), slot(2), 3, None);
         // CN 0 wants exclusive: invs to 3 (dead) and 1
-        let _ = d.on_rdx(line(2), req(0), false);
+        let _ = d.on_rdx(line(2), slot(2), req(0), false);
         let out = d.recovery_unblock(3); // dead CN was a mere sharer
         assert!(out.is_empty(), "still waiting on live sharer 1");
-        let out = d.on_inv_ack(line(2), 1, None);
+        let out = d.on_inv_ack(line(2), slot(2), 1, None);
         assert!(out.iter().any(|(_, m)| matches!(
             m.kind,
             MsgKind::Data { exclusive: true, req: ReqId { cn: 0, .. }, .. }
@@ -682,13 +737,20 @@ mod tests {
     #[test]
     fn new_requests_on_dead_owned_lines_defer() {
         let mut d = dir();
-        d.on_rds(line(5), req(3)); // 3 owns E
+        d.on_rds(line(5), slot(5), req(3)); // 3 owns E
         d.mark_dead(3);
-        assert!(d.on_rds(line(5), req(1)).is_empty(), "deferred");
-        assert!(d.on_rdx(line(5), req(2), false).is_empty(), "deferred");
+        assert!(d.on_rds(line(5), slot(5), req(1)).is_empty(), "deferred");
+        assert!(d.on_rdx(line(5), slot(5), req(2), false).is_empty(), "deferred");
         // repair releases both queued requests in FIFO order
-        let out = d.recovery_apply(line(5), 1, &[9; 16]);
+        let out = d.recovery_apply(line(5), slot(5), 1, &[9; 16]);
         assert!(out.iter().any(|(_, m)| m.dst == NodeId::Cn(1)));
+    }
+
+    #[test]
+    fn untouched_slots_read_as_absent_entries() {
+        let d = dir();
+        assert_eq!(d.dir_state(slot(40)), (None, 0));
+        assert_eq!(d.mem_words(slot(40)), [0; 16]);
     }
 
     #[test]

@@ -167,7 +167,14 @@ mod tests {
         let mut c = core();
         c.block = Block::Done;
         assert!(c.finished());
-        c.sb.deposit(crate::mem::Addr(0x8000_0040).line(), true, 0, 1, 0);
+        c.sb.deposit(
+            crate::mem::Addr(0x8000_0040).line(),
+            crate::mem::LineId(1),
+            true,
+            0,
+            1,
+            0,
+        );
         assert!(!c.finished());
     }
 }

@@ -13,7 +13,7 @@
 
 use std::collections::VecDeque;
 
-use crate::mem::Line;
+use crate::mem::{Line, LineId};
 use crate::proto::LineWords;
 use crate::sim::time::Ps;
 
@@ -21,6 +21,9 @@ use crate::sim::time::Ps;
 #[derive(Debug, Clone)]
 pub struct SbEntry {
     pub line: Line,
+    /// Interned id of `line` (assigned at deposit; the commit engine's
+    /// cache/oracle probes are slab lookups keyed by it).
+    pub lid: LineId,
     pub remote: bool,
     pub mask: u16,
     pub words: LineWords,
@@ -41,11 +44,12 @@ pub struct SbEntry {
 }
 
 impl SbEntry {
-    fn new(line: Line, remote: bool, word: u8, value: u32, now: Ps) -> Self {
+    fn new(line: Line, lid: LineId, remote: bool, word: u8, value: u32, now: Ps) -> Self {
         let mut words = [0u32; 16];
         words[word as usize] = value;
         SbEntry {
             line,
+            lid,
             remote,
             mask: 1 << word,
             words,
@@ -134,7 +138,15 @@ impl StoreBuffer {
     /// Deposit a retiring store.  Coalesces into the tail when permitted:
     /// same line, tail not yet committing, and (for proactive) tail's
     /// REPLs not yet sent.
-    pub fn deposit(&mut self, line: Line, remote: bool, word: u8, value: u32, now: Ps) -> Deposit {
+    pub fn deposit(
+        &mut self,
+        line: Line,
+        lid: LineId,
+        remote: bool,
+        word: u8,
+        value: u32,
+        now: Ps,
+    ) -> Deposit {
         if self.coalescing {
             if let Some(tail) = self.entries.back_mut() {
                 if tail.line == line && !tail.committing && !tail.repl_sent {
@@ -148,7 +160,8 @@ impl StoreBuffer {
         if self.is_full() {
             return Deposit::Full;
         }
-        self.entries.push_back(SbEntry::new(line, remote, word, value, now));
+        self.entries
+            .push_back(SbEntry::new(line, lid, remote, word, value, now));
         Deposit::NewEntry
     }
 
@@ -234,6 +247,10 @@ mod tests {
         Addr(0x8000_0000 | (i << 6)).line()
     }
 
+    fn lid(i: u32) -> LineId {
+        LineId(i)
+    }
+
     fn sb(cap: usize, coalescing: bool) -> StoreBuffer {
         StoreBuffer::new(cap, coalescing)
     }
@@ -241,19 +258,19 @@ mod tests {
     #[test]
     fn fifo_order_and_capacity() {
         let mut b = sb(2, false);
-        assert_eq!(b.deposit(rl(1), true, 0, 1, 0), Deposit::NewEntry);
-        assert_eq!(b.deposit(rl(2), true, 0, 2, 0), Deposit::NewEntry);
-        assert_eq!(b.deposit(rl(3), true, 0, 3, 0), Deposit::Full);
+        assert_eq!(b.deposit(rl(1), lid(1), true, 0, 1, 0), Deposit::NewEntry);
+        assert_eq!(b.deposit(rl(2), lid(2), true, 0, 2, 0), Deposit::NewEntry);
+        assert_eq!(b.deposit(rl(3), lid(3), true, 0, 3, 0), Deposit::Full);
         assert!(b.is_full());
         assert_eq!(b.pop_head().unwrap().line, rl(1));
-        assert_eq!(b.deposit(rl(3), true, 0, 3, 0), Deposit::NewEntry);
+        assert_eq!(b.deposit(rl(3), lid(3), true, 0, 3, 0), Deposit::NewEntry);
     }
 
     #[test]
     fn coalesces_same_line_different_words() {
         let mut b = sb(8, true);
-        b.deposit(rl(1), true, 0, 10, 0);
-        assert_eq!(b.deposit(rl(1), true, 4, 20, 1), Deposit::Coalesced);
+        b.deposit(rl(1), lid(1), true, 0, 10, 0);
+        assert_eq!(b.deposit(rl(1), lid(1), true, 4, 20, 1), Deposit::Coalesced);
         assert_eq!(b.len(), 1);
         let h = b.head().unwrap();
         assert_eq!(h.mask, 0b1_0001);
@@ -265,43 +282,43 @@ mod tests {
     fn no_coalescing_across_interleaved_line() {
         // ST B, ST B+4, ST C, ST B+8: the last B store cannot merge
         let mut b = sb(8, true);
-        b.deposit(rl(1), true, 0, 1, 0);
-        b.deposit(rl(1), true, 1, 2, 0);
-        b.deposit(rl(2), true, 0, 3, 0);
-        assert_eq!(b.deposit(rl(1), true, 2, 4, 0), Deposit::NewEntry);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
+        b.deposit(rl(1), lid(1), true, 1, 2, 0);
+        b.deposit(rl(2), lid(2), true, 0, 3, 0);
+        assert_eq!(b.deposit(rl(1), lid(1), true, 2, 4, 0), Deposit::NewEntry);
         assert_eq!(b.len(), 3);
     }
 
     #[test]
     fn coalescing_disabled_never_merges() {
         let mut b = sb(8, false);
-        b.deposit(rl(1), true, 0, 1, 0);
-        assert_eq!(b.deposit(rl(1), true, 1, 2, 0), Deposit::NewEntry);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
+        assert_eq!(b.deposit(rl(1), lid(1), true, 1, 2, 0), Deposit::NewEntry);
     }
 
     #[test]
     fn no_merge_after_repl_sent() {
         // proactive coalescing rule: once REPLs left, the entry is sealed
         let mut b = sb(8, true);
-        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
         b.head_mut().unwrap().repl_sent = true;
-        assert_eq!(b.deposit(rl(1), true, 1, 2, 0), Deposit::NewEntry);
+        assert_eq!(b.deposit(rl(1), lid(1), true, 1, 2, 0), Deposit::NewEntry);
     }
 
     #[test]
     fn no_merge_into_committing_head() {
         let mut b = sb(8, true);
-        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
         b.head_mut().unwrap().committing = true;
-        assert_eq!(b.deposit(rl(1), true, 1, 2, 0), Deposit::NewEntry);
+        assert_eq!(b.deposit(rl(1), lid(1), true, 1, 2, 0), Deposit::NewEntry);
     }
 
     #[test]
     fn forwarding_returns_youngest() {
         let mut b = sb(8, false);
-        b.deposit(rl(1), true, 3, 10, 0);
-        b.deposit(rl(2), true, 3, 20, 0);
-        b.deposit(rl(1), true, 3, 30, 0);
+        b.deposit(rl(1), lid(1), true, 3, 10, 0);
+        b.deposit(rl(2), lid(2), true, 3, 20, 0);
+        b.deposit(rl(1), lid(1), true, 3, 30, 0);
         assert_eq!(b.forward(rl(1), 3), Some(30));
         assert_eq!(b.forward(rl(1), 4), None);
         assert_eq!(b.forward(rl(9), 3), None);
@@ -310,10 +327,10 @@ mod tests {
     #[test]
     fn proactive_candidates_exclude_open_tail_when_coalescing() {
         let mut b = sb(8, true);
-        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
         // tail may still coalesce: nothing to send yet
         assert!(b.proactive_repl_candidates().is_empty());
-        b.deposit(rl(2), true, 0, 2, 0);
+        b.deposit(rl(2), lid(2), true, 0, 2, 0);
         // entry 0 is now sealed by a non-coalescable successor
         assert_eq!(b.proactive_repl_candidates(), vec![0]);
         b.entry_mut(0).repl_sent = true;
@@ -323,21 +340,21 @@ mod tests {
     #[test]
     fn proactive_candidates_without_coalescing_include_tail() {
         let mut b = sb(8, false);
-        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
         assert_eq!(b.proactive_repl_candidates(), vec![0]);
     }
 
     #[test]
     fn local_stores_never_replicate() {
         let mut b = sb(8, false);
-        b.deposit(Addr(0x0100_0040).line(), false, 0, 1, 0);
+        b.deposit(Addr(0x0100_0040).line(), lid(99), false, 0, 1, 0);
         assert!(b.proactive_repl_candidates().is_empty());
     }
 
     #[test]
     fn ack_matching_by_seq_and_replica() {
         let mut b = sb(8, false);
-        b.deposit(rl(1), true, 0, 1, 0);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
         let e = b.entry_mut(0);
         e.repl_sent = true;
         e.repl_seq = 42;
@@ -351,8 +368,8 @@ mod tests {
     #[test]
     fn dead_replica_discounted_from_all_pending_entries() {
         let mut b = sb(8, false);
-        b.deposit(rl(1), true, 0, 1, 0);
-        b.deposit(rl(2), true, 0, 2, 0);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
+        b.deposit(rl(2), lid(2), true, 0, 2, 0);
         for i in 0..2 {
             let e = b.entry_mut(i);
             e.repl_sent = true;
@@ -366,9 +383,9 @@ mod tests {
     #[test]
     fn coherence_done_applies_to_all_entries_of_line() {
         let mut b = sb(8, false);
-        b.deposit(rl(1), true, 0, 1, 0);
-        b.deposit(rl(2), true, 0, 2, 0);
-        b.deposit(rl(1), true, 1, 3, 0);
+        b.deposit(rl(1), lid(1), true, 0, 1, 0);
+        b.deposit(rl(2), lid(2), true, 0, 2, 0);
+        b.deposit(rl(1), lid(1), true, 1, 3, 0);
         b.coherence_done(rl(1));
         let flags: Vec<bool> = b.iter().map(|e| e.coherence_done).collect();
         assert_eq!(flags, vec![true, false, true]);

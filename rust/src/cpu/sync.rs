@@ -7,13 +7,19 @@
 //! track a generation counter so they are reusable.  Recovery must purge
 //! dead cores from both (section V-B: the application makes forward
 //! progress on the remaining nodes).
+//!
+//! The lock table is a `BTreeMap`: recovery's `purge_cores` *iterates*
+//! it, and the grants it emits become same-timestamp events whose queue
+//! order is part of the determinism fingerprint — `HashMap` iteration
+//! order is not stable across processes (SipHash random state), so the
+//! purge order must come from the lock ids themselves.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 /// Cluster-wide lock table: FIFO queue per lock id.
 #[derive(Debug, Default)]
 pub struct LockTable {
-    locks: HashMap<u8, LockState>,
+    locks: BTreeMap<u8, LockState>,
     pub acquires: u64,
     pub contended: u64,
 }
@@ -159,6 +165,19 @@ mod tests {
         let grants = t.purge_cores(&|c| c == 1 || c == 2);
         assert_eq!(grants, vec![(5, 3)]);
         assert_eq!(t.holder(5), Some(3));
+    }
+
+    #[test]
+    fn purge_grants_are_ordered_by_lock_id() {
+        // grants become same-timestamp events: their order must be a
+        // function of the lock ids, not of hash-map iteration order
+        let mut t = LockTable::default();
+        for l in [9u8, 2, 7] {
+            t.acquire(l, 1); // dead holder
+            t.acquire(l, 100 + l as usize); // live waiter
+        }
+        let grants = t.purge_cores(&|c| c == 1);
+        assert_eq!(grants, vec![(2, 102), (7, 107), (9, 109)]);
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod ptest;
 pub mod recovery;
 pub mod recxl;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scenarios;
 pub mod sim;

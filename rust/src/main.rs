@@ -17,7 +17,7 @@ use recxl::figures::{self, FigOpts};
 use recxl::prelude::*;
 use recxl::proto::MsgClass;
 use recxl::sim::time::fmt_ps;
-use recxl::workloads::{profiles, NUM_PARAMS};
+use recxl::workloads::profiles;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -333,8 +333,9 @@ fn scenario_cfg(rest: &[String]) -> Result<(SimConfig, AppProfile), String> {
 
 /// Cross-layer parity: the PJRT artifact and the Rust generator must be
 /// bit-identical (the L1<->L3 contract).
+#[cfg(feature = "pjrt")]
 fn cmd_trace_check() -> Result<(), String> {
-    use recxl::workloads::tracegen;
+    use recxl::workloads::{tracegen, NUM_PARAMS};
     let rt = recxl::runtime::Runtime::load("artifacts").map_err(|e| e.to_string())?;
     let mut params = [0i32; NUM_PARAMS];
     let p = profiles::ycsb().to_params(7);
@@ -351,4 +352,11 @@ fn cmd_trace_check() -> Result<(), String> {
     }
     println!("PJRT artifact == Rust generator");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_trace_check() -> Result<(), String> {
+    Err("built without the `pjrt` feature; rebuild with --features pjrt \
+         (needs the image's local xla crate)"
+        .to_string())
 }

@@ -1,0 +1,335 @@
+//! Line interning: dense `u32` ids for the workload's line footprint.
+//!
+//! Every coherence transaction, cache fill, MSHR allocation, oracle
+//! commit and Logging-Unit entry used to key a hash map by [`Line`];
+//! hash-and-probe was the dominant per-event cost left after the PR-2
+//! overhaul (see EXPERIMENTS.md §Perf).  The workload's line universe is
+//! known up front from the trace-generator encoding
+//! (`workloads::tracegen` / `python/compile/kernels/trace_gen.py`):
+//!
+//! * remote lines are `0x0200_0000 | s` with `s < 2^shared_log2`;
+//! * local lines are `t << 18 | p` with `t < n_threads` and
+//!   `p < 2^priv_log2` (`priv_log2 <= 18`).
+//!
+//! so `Line -> LineId` translation is *arithmetic* — an index into a
+//! direct-mapped table, no hashing — and ids are assigned densely in
+//! first-touch order, which keeps every downstream slab proportional to
+//! the *touched* footprint, exactly like the hash maps it replaces, but
+//! with O(1) array probes.  Lines outside the declared universe (unit
+//! tests, custom sources, oversized footprints) fall back to a hashed
+//! overflow map, so interning is total.
+//!
+//! Remote lines additionally get a **per-MN dense slot** assigned at
+//! intern time: each line is homed on exactly one MN
+//! (`Line::home_mn`), so the MN-side directory indexes its entry and
+//! memory slabs by this slot with zero cross-MN waste.
+//!
+//! Translation happens only at the workload/trace boundary (op decode)
+//! and at message delivery; messages on the fabric keep carrying `Line`
+//! (recovery must name lines across node failures, and the wire format
+//! is part of the determinism fingerprint).
+
+use rustc_hash::FxHashMap;
+
+use super::addr::Line;
+
+/// Sentinel for "no slot assigned" in slab index vectors.
+pub const NO_SLOT: u32 = u32::MAX;
+
+/// Dense id of an interned [`Line`] (first-touch order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LineId(pub u32);
+
+impl LineId {
+    /// Slab index of this id.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Upper bound on the direct-mapped universe (entries, 4 B each — 32 MB
+/// at the cap); footprints above this fall back to hashed interning
+/// entirely.  The default apps top out at ~2.2 M entries (ycsb).
+const UNIVERSE_CAP: usize = 1 << 23;
+
+/// The line interner shared by one cluster.
+pub struct LineTable {
+    shared_size: u32,
+    priv_size: u32,
+    n_threads: u32,
+    n_mns: usize,
+    /// Direct map: universe index -> id (`NO_SLOT` = not yet interned).
+    /// Empty when the declared universe exceeds [`UNIVERSE_CAP`].
+    universe: Vec<u32>,
+    /// Hashed fallback for lines outside the declared universe.
+    overflow: FxHashMap<u32, u32>,
+    /// id -> line (reverse translation).
+    lines: Vec<Line>,
+    /// id -> home MN (remote lines; `NO_SLOT` for local lines).
+    home: Vec<u32>,
+    /// id -> per-MN dense directory slot (remote; `NO_SLOT` local).
+    slot: Vec<u32>,
+    /// Next free slot per MN.
+    mn_next: Vec<u32>,
+}
+
+impl LineTable {
+    /// Build an interner for a footprint of `2^shared_log2` shared lines
+    /// plus `n_threads x 2^priv_log2` private lines, homed across
+    /// `n_mns` MNs.
+    pub fn new(shared_log2: u32, priv_log2: u32, n_threads: usize, n_mns: usize) -> Self {
+        let shared_size = 1u32 << shared_log2.min(25);
+        let priv_size = 1u32 << priv_log2.min(18);
+        let total = shared_size as usize + n_threads * priv_size as usize;
+        let universe = if total <= UNIVERSE_CAP {
+            vec![NO_SLOT; total]
+        } else {
+            Vec::new()
+        };
+        LineTable {
+            shared_size,
+            priv_size,
+            n_threads: n_threads as u32,
+            n_mns: n_mns.max(1),
+            universe,
+            overflow: FxHashMap::default(),
+            lines: Vec::new(),
+            home: Vec::new(),
+            slot: Vec::new(),
+            mn_next: vec![0; n_mns.max(1)],
+        }
+    }
+
+    /// Interner for an app profile's declared footprint.
+    pub fn for_app(app: &crate::workloads::AppProfile, n_threads: usize, n_mns: usize) -> Self {
+        LineTable::new(
+            app.shared_log2.clamp(0, 25) as u32,
+            app.priv_log2.clamp(0, 18) as u32,
+            n_threads,
+            n_mns,
+        )
+    }
+
+    /// Arithmetic universe index of `line`, when it lies in the declared
+    /// footprint.
+    #[inline]
+    fn universe_index(&self, line: Line) -> Option<usize> {
+        if self.universe.is_empty() {
+            return None;
+        }
+        let v = line.0;
+        if v & 0x0200_0000 != 0 {
+            // remote: low bits are the shared-footprint offset
+            let off = v & !0x0200_0000;
+            if off < self.shared_size {
+                return Some(off as usize);
+            }
+        } else if v >> 24 == 0 {
+            // local: thread in bits 18..24, private offset below
+            let t = v >> 18;
+            let off = v & 0x3_FFFF;
+            if t < self.n_threads && off < self.priv_size {
+                return Some(
+                    self.shared_size as usize
+                        + t as usize * self.priv_size as usize
+                        + off as usize,
+                );
+            }
+        }
+        None
+    }
+
+    #[inline]
+    fn push_meta(&mut self, line: Line) -> LineId {
+        let id = self.lines.len() as u32;
+        self.lines.push(line);
+        if line.is_remote() {
+            let mn = line.home_mn(self.n_mns);
+            self.home.push(mn as u32);
+            self.slot.push(self.mn_next[mn]);
+            self.mn_next[mn] += 1;
+        } else {
+            self.home.push(NO_SLOT);
+            self.slot.push(NO_SLOT);
+        }
+        LineId(id)
+    }
+
+    /// Intern `line`, assigning a dense id on first touch.  O(1): one
+    /// array probe for in-universe lines, a hash probe otherwise.
+    #[inline]
+    pub fn intern(&mut self, line: Line) -> LineId {
+        match self.universe_index(line) {
+            Some(u) => {
+                let cur = self.universe[u];
+                if cur != NO_SLOT {
+                    return LineId(cur);
+                }
+                let id = self.push_meta(line);
+                self.universe[u] = id.0;
+                id
+            }
+            None => {
+                if let Some(&id) = self.overflow.get(&line.0) {
+                    return LineId(id);
+                }
+                let id = self.push_meta(line);
+                self.overflow.insert(line.0, id.0);
+                id
+            }
+        }
+    }
+
+    /// Id of `line` if it was ever interned (read-only probes).
+    #[inline]
+    pub fn lookup(&self, line: Line) -> Option<LineId> {
+        match self.universe_index(line) {
+            Some(u) => {
+                let id = self.universe[u];
+                (id != NO_SLOT).then_some(LineId(id))
+            }
+            None => self.overflow.get(&line.0).map(|&id| LineId(id)),
+        }
+    }
+
+    /// Reverse translation.
+    #[inline]
+    pub fn line(&self, id: LineId) -> Line {
+        self.lines[id.idx()]
+    }
+
+    /// Home MN of an interned *remote* line (precomputed — replaces the
+    /// `% n_mns` on every message route).
+    #[inline]
+    pub fn home_mn(&self, id: LineId) -> usize {
+        debug_assert_ne!(self.home[id.idx()], NO_SLOT, "home_mn of local line");
+        self.home[id.idx()] as usize
+    }
+
+    /// Per-MN dense directory slot of an interned *remote* line.
+    #[inline]
+    pub fn mn_slot(&self, id: LineId) -> u32 {
+        debug_assert_ne!(self.slot[id.idx()], NO_SLOT, "mn_slot of local line");
+        self.slot[id.idx()]
+    }
+
+    /// Interned lines so far.
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// Interned lines homed at `mn` so far.
+    pub fn mn_lines(&self, mn: usize) -> u32 {
+        self.mn_next[mn]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Addr;
+
+    fn rline(i: u32) -> Line {
+        Addr(0x8000_0000 | (i << 6)).line()
+    }
+
+    fn lline(thread: u32, p: u32) -> Line {
+        Addr((thread << 24) | (p << 6)).line()
+    }
+
+    fn table() -> LineTable {
+        LineTable::new(10, 6, 8, 4)
+    }
+
+    #[test]
+    fn ids_are_dense_in_first_touch_order() {
+        let mut t = table();
+        let a = t.intern(rline(5));
+        let b = t.intern(rline(9));
+        let c = t.intern(lline(2, 3));
+        assert_eq!((a, b, c), (LineId(0), LineId(1), LineId(2)));
+        // re-interning is idempotent
+        assert_eq!(t.intern(rline(5)), a);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn reverse_translation_roundtrips() {
+        let mut t = table();
+        for i in 0..20 {
+            let l = rline(i);
+            let id = t.intern(l);
+            assert_eq!(t.line(id), l);
+            assert_eq!(t.lookup(l), Some(id));
+        }
+        assert_eq!(t.lookup(rline(999)), None);
+    }
+
+    #[test]
+    fn remote_lines_get_home_and_dense_mn_slots() {
+        let mut t = table();
+        let mut per_mn = vec![0u32; 4];
+        for i in 0..32 {
+            let l = rline(i);
+            let id = t.intern(l);
+            let mn = l.home_mn(4);
+            assert_eq!(t.home_mn(id), mn);
+            assert_eq!(t.mn_slot(id), per_mn[mn], "slots dense per MN");
+            per_mn[mn] += 1;
+        }
+        for mn in 0..4 {
+            assert_eq!(t.mn_lines(mn), per_mn[mn]);
+        }
+    }
+
+    #[test]
+    fn out_of_footprint_lines_use_the_overflow_map() {
+        let mut t = table();
+        // shared footprint is 2^10 lines; line 5000 is outside it
+        let far = rline(5000);
+        let a = t.intern(far);
+        assert_eq!(t.intern(far), a);
+        assert_eq!(t.line(a), far);
+        // local line of an out-of-range thread
+        let odd = lline(40, 1);
+        let b = t.intern(odd);
+        assert_ne!(a, b);
+        assert_eq!(t.lookup(odd), Some(b));
+    }
+
+    #[test]
+    fn local_and_remote_never_collide() {
+        let mut t = table();
+        // remote offset 3 and thread-0 private offset 3 are distinct lines
+        let r = t.intern(rline(3));
+        let l = t.intern(lline(0, 3));
+        assert_ne!(r, l);
+        assert!(t.line(r).is_remote());
+        assert!(!t.line(l).is_remote());
+    }
+
+    #[test]
+    fn interning_is_deterministic() {
+        let seq: Vec<Line> = (0..64)
+            .map(|i| if i % 3 == 0 { lline(i % 8, i) } else { rline(i * 7 % 1024) })
+            .collect();
+        let ids = |mut t: LineTable| -> Vec<u32> {
+            seq.iter().map(|&l| t.intern(l).0).collect()
+        };
+        assert_eq!(ids(table()), ids(table()));
+    }
+
+    #[test]
+    fn oversized_universe_falls_back_to_hashing() {
+        // 2^25 shared + many threads overflows UNIVERSE_CAP
+        let mut t = LineTable::new(25, 18, 64, 4);
+        let a = t.intern(rline(123));
+        assert_eq!(t.intern(rline(123)), a);
+        assert_eq!(t.line(a), rline(123));
+    }
+}

@@ -129,4 +129,7 @@ pub mod addr {
     }
 }
 
+pub mod interner;
+
 pub use addr::{Addr, Line, LINE_BYTES, WORDS_PER_LINE, WORD_BYTES};
+pub use interner::{LineId, LineTable, NO_SLOT};

@@ -10,17 +10,24 @@
 //! that lets an overloaded Logging Unit slow requesters instead of losing
 //! updates.
 //!
-//! Periodically the unit compresses its share of the DRAM log (gzip,
-//! section IV-E) and ships it to the MNs.
-
-use std::collections::VecDeque;
-use std::io::Write;
-
-use flate2::write::GzEncoder;
-use flate2::Compression;
+//! §Perf: like the hardware unit the paper describes, nothing here does
+//! associative search on the hot path.  SRAM groups live in a slab with
+//! **per-source-CN index queues**: a VAL probes only its own source's
+//! outstanding groups, and the in-order DRAM drain advances one source's
+//! timestamp chain instead of re-scanning the whole buffer to fixpoint
+//! (the drain order is provably identical — eligibility depends only on
+//! the validated group's source, so the old global re-scan always pushed
+//! that source's groups in ascending-timestamp order too).  The DRAM log
+//! keeps a per-[`LineId`] newest-first chain so recovery's Algorithm 2
+//! (`fetch_latest_vers`) walks exactly the requested line's records
+//! instead of scanning the full log per line.
+//!
+//! Periodically the unit compresses its share of the DRAM log
+//! (section IV-E; sized by the deterministic [`super::logcomp`] LZSS
+//! model — the offline crate set has no gzip) and ships it to the MNs.
 
 use crate::config::CnId;
-use crate::mem::Line;
+use crate::mem::{Line, LineId, NO_SLOT};
 use crate::proto::ReqId;
 use crate::sim::time::{lu_cycles, Ps};
 
@@ -62,11 +69,15 @@ impl LogRecord {
 struct SramGroup {
     req: ReqId,
     line: Line,
+    lid: LineId,
     mask: u16,
     words: [u32; 16],
     repl_seq: u64,
     /// Some(ts) once the VAL arrived.
     ts: Option<u64>,
+    /// Global arrival stamp (recovery reconstructs cross-source arrival
+    /// order from it).
+    arrival: u64,
 }
 
 impl SramGroup {
@@ -80,6 +91,8 @@ impl SramGroup {
 pub struct PendingRepl {
     pub req: ReqId,
     pub line: Line,
+    /// Interned id of `line` (drives the DRAM log's per-line index).
+    pub lid: LineId,
     pub mask: u16,
     pub words: [u32; 16],
     pub repl_seq: u64,
@@ -88,10 +101,24 @@ pub struct PendingRepl {
 /// The Logging Unit of one CN.
 pub struct LoggingUnit {
     pub cn: CnId,
-    sram: VecDeque<SramGroup>,
+    /// SRAM group slab; freed slots are recycled.
+    groups: Vec<SramGroup>,
+    free_groups: Vec<u32>,
+    /// Per-source-CN outstanding group slots, in arrival order.
+    by_src: Vec<Vec<u32>>,
+    arrival: u64,
     sram_used: usize,
     sram_capacity: usize,
     dram: Vec<LogRecord>,
+    /// Parallel to `dram`: previous (older) record index of the same
+    /// line, `NO_SLOT` at chain end.  Valid only while `index_ok`.
+    dram_prev: Vec<u32>,
+    /// `LineId -> newest dram record index` (`NO_SLOT` = none).
+    line_head: Vec<u32>,
+    /// The chain survives appends; a capacity overflow (oldest-entry
+    /// drop) shifts indices, so the index is abandoned until the next
+    /// dump clears the log.
+    index_ok: bool,
     dram_capacity: usize,
     /// Per-source next timestamp expected by the in-order DRAM push.
     next_ts: Vec<u64>,
@@ -104,10 +131,16 @@ impl LoggingUnit {
     pub fn new(cn: CnId, n_cns: usize, sram_entries: usize, dram_entries: usize) -> Self {
         LoggingUnit {
             cn,
-            sram: VecDeque::new(),
+            groups: Vec::new(),
+            free_groups: Vec::new(),
+            by_src: vec![Vec::new(); n_cns],
+            arrival: 0,
             sram_used: 0,
             sram_capacity: sram_entries,
             dram: Vec::new(),
+            dram_prev: Vec::new(),
+            line_head: Vec::new(),
+            index_ok: true,
             dram_capacity: dram_entries,
             next_ts: vec![1; n_cns],
             busy_until: 0,
@@ -147,69 +180,86 @@ impl LoggingUnit {
             cost += lu_cycles(8);
         }
         self.sram_used += n;
-        self.sram.push_back(SramGroup {
+        self.arrival += 1;
+        let g = SramGroup {
             req: p.req,
             line: p.line,
+            lid: p.lid,
             mask: p.mask,
             words: p.words,
             repl_seq: p.repl_seq,
             ts: None,
-        });
+            arrival: self.arrival,
+        };
+        let slot = match self.free_groups.pop() {
+            Some(s) => {
+                self.groups[s as usize] = g;
+                s
+            }
+            None => {
+                self.groups.push(g);
+                (self.groups.len() - 1) as u32
+            }
+        };
+        self.by_src[p.req.cn].push(slot);
         let done = self.busy_until.max(now) + cost;
         self.busy_until = done;
         done
     }
 
-    /// Feed a VAL; validates the matching group and drains everything that
-    /// is now in-order to the DRAM log.
+    /// Feed a VAL; validates the matching group and drains everything of
+    /// its source that is now in-order to the DRAM log.
     pub fn val(&mut self, _now: Ps, req: ReqId, line: Line, repl_seq: u64, ts: u64) {
-        if let Some(g) = self
-            .sram
-            .iter_mut()
-            .find(|g| g.req == req && g.line == line && g.repl_seq == repl_seq && g.ts.is_none())
-        {
-            g.ts = Some(ts);
+        let src = req.cn;
+        if src >= self.by_src.len() {
+            return;
         }
-        self.drain_in_order();
+        let hit = self.by_src[src].iter().copied().find(|&s| {
+            let g = &self.groups[s as usize];
+            g.req == req && g.line == line && g.repl_seq == repl_seq && g.ts.is_none()
+        });
+        if let Some(s) = hit {
+            self.groups[s as usize].ts = Some(ts);
+        }
+        self.drain_src(src);
     }
 
-    /// Move validated groups whose ts is next-in-order for their source CN
-    /// into the DRAM log (the paper's per-source in-order push,
-    /// section IV-C).
-    fn drain_in_order(&mut self) {
+    /// Move validated groups of `src` whose ts is next-in-order into the
+    /// DRAM log (the paper's per-source in-order push, section IV-C).
+    /// Only `src`'s chain can have become eligible: eligibility compares
+    /// a group's ts against its own source's `next_ts` and nothing else.
+    fn drain_src(&mut self, src: CnId) {
         loop {
-            let mut moved = false;
-            let mut i = 0;
-            while i < self.sram.len() {
-                let g = &self.sram[i];
-                if let Some(ts) = g.ts {
-                    if self.next_ts[g.req.cn] == ts {
-                        let g = self.sram.remove(i).unwrap();
-                        self.next_ts[g.req.cn] += 1;
-                        self.sram_used -= g.n_entries();
-                        self.push_dram(g);
-                        moved = true;
-                        continue;
-                    }
-                }
-                i += 1;
-            }
-            if !moved {
+            let want = self.next_ts[src];
+            let Some(pos) = self.by_src[src]
+                .iter()
+                .position(|&s| self.groups[s as usize].ts == Some(want))
+            else {
                 break;
-            }
+            };
+            let slot = self.by_src[src].remove(pos);
+            self.next_ts[src] += 1;
+            let g = self.groups[slot as usize].clone();
+            self.sram_used -= g.n_entries();
+            self.free_groups.push(slot);
+            self.push_dram(&g);
         }
     }
 
-    fn push_dram(&mut self, g: SramGroup) {
+    fn push_dram(&mut self, g: &SramGroup) {
         let ts = g.ts.unwrap_or(0);
         for w in 0..16u8 {
             if g.mask & (1 << w) != 0 {
                 if self.dram.len() >= self.dram_capacity {
                     // DRAM log full: drop oldest (the dump machinery should
                     // have run; counted so tests can assert it never
-                    // happens in sized runs)
+                    // happens in sized runs).  The shift invalidates the
+                    // per-line chain until the next dump resets it.
                     self.dram.remove(0);
+                    self.dram_prev.remove(0);
+                    self.index_ok = false;
                 }
+                let idx = self.dram.len() as u32;
                 self.dram.push(LogRecord {
                     req: g.req,
                     line: g.line,
@@ -219,13 +269,23 @@ impl LoggingUnit {
                     repl_seq: g.repl_seq,
                     valid: true,
                 });
+                if self.index_ok {
+                    if self.line_head.len() <= g.lid.idx() {
+                        self.line_head.resize(g.lid.idx() + 1, NO_SLOT);
+                    }
+                    self.dram_prev.push(self.line_head[g.lid.idx()]);
+                    self.line_head[g.lid.idx()] = idx;
+                } else {
+                    self.dram_prev.push(NO_SLOT);
+                }
             }
         }
         self.max_dram_bytes = self.max_dram_bytes.max(self.dram_bytes());
     }
 
     /// Section IV-E: extract the entries this unit is in charge of dumping
-    /// (per `recxl::dump_owner`), gzip them, and clear the whole log.
+    /// (per `recxl::dump_owner`), compress them (`logcomp` size model),
+    /// and clear the whole log.
     /// Returns (records per home MN, uncompressed bytes, compressed bytes).
     pub fn dump(
         &mut self,
@@ -242,14 +302,11 @@ impl LoggingUnit {
                 per_mn[rec.line.home_mn(n_mns)].push(*rec);
             }
         }
-        let compressed = if raw.is_empty() {
-            0
-        } else {
-            let mut enc = GzEncoder::new(Vec::new(), Compression::new(gzip_level));
-            enc.write_all(&raw).expect("gzip");
-            enc.finish().expect("gzip").len()
-        };
+        let compressed = super::logcomp::compressed_len(&raw, gzip_level);
         self.dram.clear();
+        self.dram_prev.clear();
+        self.line_head.fill(NO_SLOT);
+        self.index_ok = true;
         DumpResult {
             per_mn,
             in_bytes: raw.len() as u64,
@@ -257,37 +314,54 @@ impl LoggingUnit {
         }
     }
 
-    /// Algorithm 2 (section V-D): for each requested line, the logged
-    /// updates in this unit (DRAM log first, then still-pending SRAM
-    /// groups, i.e. latest last).  Unvalidated SRAM entries are included —
-    /// the directory's conflict rule ("latest in any log") needs them.
-    pub fn fetch_latest_vers(&self, lines: &[Line]) -> Vec<crate::recovery::VersionList> {
+    /// Algorithm 2 (section V-D): for each requested `(line, id)`, the
+    /// logged updates in this unit, **latest first**: still-pending SRAM
+    /// groups (newest arrival first, unvalidated entries included — the
+    /// directory's conflict rule "latest in any log" needs them), then
+    /// DRAM records via the line's newest-first chain.
+    pub fn fetch_latest_vers(&self, lines: &[(Line, LineId)]) -> Vec<crate::recovery::VersionList> {
         let mut out = Vec::with_capacity(lines.len());
-        for &l in lines {
-            let mut versions: Vec<LogRecord> = self
-                .dram
+        for &(l, lid) in lines {
+            let mut versions: Vec<LogRecord> = Vec::new();
+            // SRAM part: groups on this line, newest arrival first
+            let mut pending: Vec<&SramGroup> = self
+                .by_src
                 .iter()
-                .filter(|r| r.line == l)
-                .copied()
+                .flatten()
+                .map(|&s| &self.groups[s as usize])
+                .filter(|g| g.line == l)
                 .collect();
-            for g in &self.sram {
-                if g.line == l {
-                    for w in 0..16u8 {
-                        if g.mask & (1 << w) != 0 {
-                            versions.push(LogRecord {
-                                req: g.req,
-                                line: g.line,
-                                word: w,
-                                value: g.words[w as usize],
-                                ts: g.ts.unwrap_or(0),
-                                repl_seq: g.repl_seq,
-                                valid: g.ts.is_some(),
-                            });
-                        }
+            pending.sort_unstable_by_key(|g| std::cmp::Reverse(g.arrival));
+            for g in pending {
+                for w in (0..16u8).rev() {
+                    if g.mask & (1 << w) != 0 {
+                        versions.push(LogRecord {
+                            req: g.req,
+                            line: g.line,
+                            word: w,
+                            value: g.words[w as usize],
+                            ts: g.ts.unwrap_or(0),
+                            repl_seq: g.repl_seq,
+                            valid: g.ts.is_some(),
+                        });
                     }
                 }
             }
-            versions.reverse(); // latest first, per Algorithm 2
+            // DRAM part: walk the per-line chain (newest first)
+            if self.index_ok {
+                let mut i = self
+                    .line_head
+                    .get(lid.idx())
+                    .copied()
+                    .unwrap_or(NO_SLOT);
+                while i != NO_SLOT {
+                    versions.push(self.dram[i as usize]);
+                    i = self.dram_prev[i as usize];
+                }
+            } else {
+                // chain abandoned after a capacity overflow: linear scan
+                versions.extend(self.dram.iter().rev().filter(|r| r.line == l));
+            }
             out.push(crate::recovery::VersionList { line: l, versions });
         }
         out
@@ -318,10 +392,15 @@ mod tests {
         PendingRepl {
             req: req(cn),
             line: line(l),
+            lid: LineId(l),
             mask,
             words: [7; 16],
             repl_seq: seq,
         }
+    }
+
+    fn fetch1(u: &LoggingUnit, l: u32) -> crate::recovery::VersionList {
+        u.fetch_latest_vers(&[(line(l), LineId(l))]).remove(0)
     }
 
     fn unit() -> LoggingUnit {
@@ -352,7 +431,7 @@ mod tests {
         u.val(2, req(0), line(5), 1, 1);
         assert_eq!(u.dram_len(), 2);
         // and DRAM order is ts order
-        assert_eq!(u.fetch_latest_vers(&[line(5)])[0].versions.len(), 1);
+        assert_eq!(fetch1(&u, 5).versions.len(), 1);
         let all: Vec<u64> = (0..2).map(|i| u.dramx(i).ts).collect();
         assert_eq!(all, vec![1, 2]);
     }
@@ -403,6 +482,8 @@ mod tests {
         assert!(before > 0);
         let r = u.dump(16, 16, 3, 9);
         assert_eq!(u.dram_len(), 0);
+        // the per-line chain resets with the log
+        assert!(fetch1(&u, 0).versions.is_empty());
         let kept: usize = r.per_mn.iter().map(|v| v.len()).sum();
         assert!(kept <= before);
         if r.in_bytes > 0 {
@@ -424,12 +505,48 @@ mod tests {
         let mut p2 = mk_repl(0, 5, 1, 2);
         p2.words[0] = 99;
         u.repl(0, p2); // unvalidated, stays in SRAM
-        let v = u.fetch_latest_vers(&[line(5), line(77)]);
+        let v = u.fetch_latest_vers(&[(line(5), LineId(5)), (line(77), LineId(77))]);
         assert_eq!(v[0].versions.len(), 2);
         assert_eq!(v[0].versions[0].value, 99, "SRAM entry is latest");
         assert!(!v[0].versions[0].valid);
         assert!(v[0].versions[1].valid);
         assert!(v[1].versions.is_empty());
+    }
+
+    #[test]
+    fn dram_chain_walks_only_the_requested_line() {
+        let mut u = unit();
+        // interleave two lines' updates
+        for i in 0..10u64 {
+            let l = (i % 2) as u32;
+            let mut p = mk_repl(0, l, 1, i + 1);
+            p.words[0] = i as u32;
+            u.repl(0, p);
+            u.val(0, req(0), line(l), i + 1, i + 1);
+        }
+        let v = fetch1(&u, 0);
+        assert_eq!(v.versions.len(), 5);
+        // newest first: values 8, 6, 4, 2, 0
+        let vals: Vec<u32> = v.versions.iter().map(|r| r.value).collect();
+        assert_eq!(vals, vec![8, 6, 4, 2, 0]);
+    }
+
+    #[test]
+    fn capacity_overflow_drops_oldest_and_falls_back_to_scan() {
+        let mut u = LoggingUnit::new(1, 16, 341, 4);
+        for i in 0..6u64 {
+            let mut p = mk_repl(0, 9, 1, i + 1);
+            p.words[0] = i as u32;
+            u.repl(0, p);
+            u.val(0, req(0), line(9), i + 1, i + 1);
+        }
+        assert_eq!(u.dram_len(), 4, "capacity caps the log");
+        let v = fetch1(&u, 9);
+        let vals: Vec<u32> = v.versions.iter().map(|r| r.value).collect();
+        assert_eq!(vals, vec![5, 4, 3, 2], "newest first, oldest dropped");
+        // dump heals the index
+        u.dump(16, 16, 3, 9);
+        assert!(fetch1(&u, 9).versions.is_empty());
     }
 
     impl LoggingUnit {

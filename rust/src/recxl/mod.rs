@@ -5,6 +5,7 @@
 //! the line address, so all updates to a line land in (nearly) the same
 //! small set of Logging Units, and recovery knows exactly where to look.
 
+pub mod logcomp;
 pub mod logunit;
 
 use crate::config::CnId;

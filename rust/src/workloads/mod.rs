@@ -6,12 +6,100 @@
 //! be inserted at the same op index on every thread so arrival counts
 //! agree — a stateless per-op PRNG cannot guarantee that, so the kernel
 //! never emits barriers; see `python/compile/kernels/trace_gen.py`).
+//!
+//! §Perf — **trace memoization**: generation is a pure function of
+//! `(source, seed, base, params)`, and figure sweeps (`run_grid`) re-run
+//! the *same* trace once per protocol point — 5× redundant generation
+//! for Fig. 10 alone.  [`ThreadTrace`] therefore refills its block
+//! buffer through a process-wide, bounded, `Arc`-shared memo: the first
+//! run of a (app, ops, seed) point generates each block, every later
+//! protocol point replays it.  The cache only avoids recomputing
+//! deterministic data, so results are bit-identical with it hot, cold,
+//! or disabled (`RECXL_TRACE_CACHE=0`).
 
 pub mod profiles;
 pub mod tracegen;
 
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use rustc_hash::FxHashMap;
+
 pub use profiles::{all_apps, by_name, AppProfile};
 pub use tracegen::{RawOp, TraceOp, N_OPS, NUM_PARAMS};
+
+/// Cache key: everything block generation depends on.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct BlockKey {
+    src: &'static str,
+    seed: u32,
+    base: u32,
+    params: [i32; NUM_PARAMS],
+}
+
+/// Bound on resident cached blocks (4096 ops x 12 B each ≈ 48 KB per
+/// block; 2048 blocks ≈ 96 MB) — enough for a full default figure sweep
+/// of every app; beyond it the oldest blocks are evicted FIFO.
+const TRACE_CACHE_MAX_BLOCKS: usize = 2048;
+
+struct BlockCache {
+    map: FxHashMap<BlockKey, Arc<Vec<RawOp>>>,
+    order: VecDeque<BlockKey>,
+}
+
+fn trace_cache() -> Option<&'static Mutex<BlockCache>> {
+    static CACHE: OnceLock<Option<Mutex<BlockCache>>> = OnceLock::new();
+    CACHE
+        .get_or_init(|| {
+            let disabled = std::env::var("RECXL_TRACE_CACHE").is_ok_and(|v| v == "0");
+            (!disabled).then(|| {
+                Mutex::new(BlockCache {
+                    map: FxHashMap::default(),
+                    order: VecDeque::new(),
+                })
+            })
+        })
+        .as_ref()
+}
+
+/// Fetch (or generate and memoize) one trace block.  Generation runs
+/// outside the lock; a racing duplicate insert keeps the first copy
+/// (both are bit-identical, so either is correct).
+fn cached_block(
+    src: &mut dyn TraceSource,
+    seed: u32,
+    base: u32,
+    params: &[i32; NUM_PARAMS],
+) -> Arc<Vec<RawOp>> {
+    let Some(cache) = trace_cache() else {
+        return Arc::new(src.block(seed, base, params));
+    };
+    let key = BlockKey {
+        src: src.name(),
+        seed,
+        base,
+        params: *params,
+    };
+    if let Some(hit) = cache.lock().unwrap().map.get(&key) {
+        return hit.clone();
+    }
+    let blk = Arc::new(src.block(seed, base, params));
+    let mut c = cache.lock().unwrap();
+    if let Some(hit) = c.map.get(&key) {
+        return hit.clone();
+    }
+    while c.map.len() >= TRACE_CACHE_MAX_BLOCKS {
+        match c.order.pop_front() {
+            Some(old) => {
+                c.map.remove(&old);
+            }
+            None => break,
+        }
+    }
+    c.map.insert(key.clone(), blk.clone());
+    c.order.push_back(key);
+    blk
+}
 
 /// Source of raw trace blocks for one thread.
 pub trait TraceSource {
@@ -37,7 +125,8 @@ impl TraceSource for RustTraceSource {
 pub struct ThreadTrace {
     seed: u32,
     params: [i32; NUM_PARAMS],
-    buf: Vec<RawOp>,
+    /// Current block, shared with the process-wide trace memo.
+    buf: Arc<Vec<RawOp>>,
     buf_base: u64,
     /// Next global op index to hand out.
     next: u64,
@@ -53,7 +142,7 @@ impl ThreadTrace {
         ThreadTrace {
             seed,
             params: app.to_params(thread),
-            buf: Vec::new(),
+            buf: Arc::new(Vec::new()),
             buf_base: u64::MAX,
             next: 0,
             limit,
@@ -90,7 +179,7 @@ impl ThreadTrace {
         let blk = N_OPS as u64;
         let base = idx / blk * blk;
         if self.buf_base != base {
-            self.buf = src.block(self.seed, base as u32, &self.params);
+            self.buf = cached_block(src, self.seed, base as u32, &self.params);
             self.buf_base = base;
         }
         let op = self.buf[(idx - base) as usize].decode();
@@ -171,6 +260,28 @@ mod tests {
             pos
         };
         assert_eq!(positions(0), positions(5));
+    }
+
+    #[test]
+    fn cached_blocks_match_direct_generation() {
+        // the memo must be invisible: the stream equals uncached kernel
+        // output block for block, and a second pull (cache hit) agrees
+        let app = tiny_app(0);
+        let params = app.to_params(3);
+        let direct = tracegen::gen_block(7, 0, &params);
+        let pull = || -> Vec<RawOp> {
+            let mut src = RustTraceSource;
+            let mut t = ThreadTrace::new(7, &app, 3, 64);
+            let mut ops = Vec::new();
+            while t.next_op(&mut src).is_some() {
+                ops.push(t.buf[(t.next - 1) as usize]);
+            }
+            ops
+        };
+        let first = pull();
+        let second = pull();
+        assert_eq!(first, second, "cache hit must replay identically");
+        assert_eq!(&first[..], &direct[..64]);
     }
 
     #[test]

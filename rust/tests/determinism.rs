@@ -1,8 +1,14 @@
-//! Determinism under the hot-path overhaul (§Perf): the calendar event
-//! queue, the pooled zero-alloc message delivery, the per-line oracle,
-//! and the counter-array stats must leave the simulated schedule — and
-//! therefore every reported number — bit-identical run over run, on every
-//! named fault scenario, and across `run_grid` thread counts.
+//! Determinism under the hot-path overhauls (§Perf): the calendar event
+//! queue, the pooled zero-alloc message delivery, the line-interned slab
+//! state (PR 3: directory/cache/MSHR/oracle/log-unit slabs + ordered
+//! recovery broadcasts), the trace memo, and the counter-array stats
+//! must leave the simulated schedule — and therefore every reported
+//! number — bit-identical run over run, on every named fault scenario,
+//! and across `run_grid` thread counts.
+//!
+//! Note the rerun comparisons below also pin the trace memo: the first
+//! run generates every block cold, the second replays them from the
+//! process-wide cache — any divergence would change the fingerprint.
 
 use recxl::figures::run_grid;
 use recxl::prelude::*;

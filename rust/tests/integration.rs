@@ -74,7 +74,7 @@ fn fig2_shape_wt_much_slower_than_wb() {
 }
 
 #[test]
-#[ignore = "strict 4-way timing ordering encodes paper-shape expectations still being calibrated; run with --ignored"]
+#[ignore = "paper-shape threshold: the strict 4-way ordering needs one measured calibration pass against CI output; PRs 1-3 were authored without a local Rust toolchain (EXPERIMENTS.md tracks the recalibration protocol); run with --ignored"]
 fn fig10_shape_protocol_ordering() {
     // WB <= proactive < parallel <= ~baseline < WT on a write-heavy app
     let app = "ocean-cp";
@@ -113,7 +113,7 @@ fn baseline_sends_all_repls_at_head() {
 }
 
 #[test]
-#[ignore = "the <0.5 at-head fraction is a paper-shape threshold sensitive to SB-load constants; run with --ignored"]
+#[ignore = "paper-shape threshold: the <0.5 at-head fraction is sensitive to SB-load constants and needs one measured calibration pass against CI output (PRs 1-3 had no local toolchain); run with --ignored"]
 fn proactive_sends_most_repls_early() {
     // Fig. 6c / Fig. 11: under a loaded SB, most REPLs leave before the
     // store reaches the head
@@ -148,7 +148,10 @@ fn log_dump_compresses_and_stays_small() {
     let s = run_app(cfg, &by_name("ocean-ncp").unwrap());
     assert!(s.repl.dumps > 0, "dumps must have run");
     let cf = s.repl.compression_factor();
-    assert!(cf > 1.5, "gzip-9 on structured logs compresses (got {cf:.2}x)");
+    // the in-repo LZSS size model (recxl::logcomp) has no entropy coder,
+    // so it undershoots real gzip (paper: ~5.8x); structured logs must
+    // still compress clearly
+    assert!(cf > 1.2, "level-9 LZSS on structured logs compresses (got {cf:.2}x)");
     // Fig. 14: dump bandwidth is a small fraction of access bandwidth
     let access = s.class_gbps(MsgClass::CxlAccess);
     let dump = s.class_gbps(MsgClass::LogDump);

@@ -3,7 +3,10 @@
 //! This pins the whole L1 (Pallas) <-> L3 (Rust) contract.
 //!
 //! Requires `make artifacts` (skipped, loudly, when artifacts are absent —
-//! e.g. in a fresh checkout before the Python toolchain ran).
+//! e.g. in a fresh checkout before the Python toolchain ran) and a build
+//! with `--features pjrt` (the whole file is compiled out otherwise).
+
+#![cfg(feature = "pjrt")]
 
 use recxl::recovery::logquery;
 use recxl::runtime::Runtime;

@@ -4,7 +4,7 @@
 //! selection, and fabric FIFO-ness.
 
 use recxl::cpu::StoreBuffer;
-use recxl::mem::{Addr, Line};
+use recxl::mem::{Addr, Line, LineId};
 use recxl::proto::ReqId;
 use recxl::ptest::{check, knob};
 use recxl::recovery::{select_version, VersionList};
@@ -14,6 +14,10 @@ use recxl::sim::Pcg;
 
 fn line(i: u64) -> Line {
     Addr(0x8000_0000 | ((i as u32 & 0xFFFFF) << 6)).line()
+}
+
+fn lid(i: u64) -> LineId {
+    LineId(i as u32 & 0xFFFFF)
 }
 
 #[test]
@@ -69,7 +73,14 @@ fn prop_logical_ts_ordering_survives_reordering() {
             let l = line(i as u64);
             lu.repl(
                 0,
-                PendingRepl { req, line: l, mask: 1, words: [ts as u32; 16], repl_seq: ts },
+                PendingRepl {
+                    req,
+                    line: l,
+                    lid: lid(i as u64),
+                    mask: 1,
+                    words: [ts as u32; 16],
+                    repl_seq: ts,
+                },
             );
             vals.push((req, l, ts));
         }
@@ -87,7 +98,7 @@ fn prop_logical_ts_ordering_survives_reordering() {
         let mut per_src_last = vec![0u64; n_srcs];
         let mut total = 0;
         for i in 0..n {
-            let vl = &lu.fetch_latest_vers(&[line(i as u64)])[0];
+            let vl = &lu.fetch_latest_vers(&[(line(i as u64), lid(i as u64))])[0];
             total += vl.versions.len();
         }
         if total != n {
@@ -97,7 +108,7 @@ fn prop_logical_ts_ordering_survives_reordering() {
         // entry's ts must be >= everything earlier from the same src
         // (DRAM log is append-ordered; fetch preserves it)
         for i in 0..n {
-            let vl = &lu.fetch_latest_vers(&[line(i as u64)])[0];
+            let vl = &lu.fetch_latest_vers(&[(line(i as u64), lid(i as u64))])[0];
             let r = vl.versions[0];
             let src = r.req.cn;
             if r.ts < per_src_last[src] {
@@ -118,10 +129,11 @@ fn prop_sb_coalescing_invariants() {
         let mut deposits = 0;
         let mut last_write = std::collections::HashMap::new();
         for i in 0..n {
-            let l = line(rng.below(n_lines));
+            let li = rng.below(n_lines);
+            let l = line(li);
             let word = (rng.below(16)) as u8;
             let v = i as u32;
-            match sb.deposit(l, true, word, v, 0) {
+            match sb.deposit(l, lid(li), true, word, v, 0) {
                 recxl::cpu::Deposit::Full => break,
                 _ => {
                     deposits += 1;

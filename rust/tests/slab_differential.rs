@@ -1,0 +1,683 @@
+//! Differential tests for the dense line-interned state (§Perf, PR 3):
+//! the slab-backed directory, per-CN cache state, oracle, and Logging
+//! Unit must be observationally identical to the hash-map structures
+//! they replaced.  Each test drives the production implementation and a
+//! map-based reference model (the old semantics, re-implemented here)
+//! with the same randomized operation stream and compares every output
+//! and every observable piece of state at every step.
+
+use std::collections::HashMap;
+
+use recxl::cache::{CnCaches, LookupResult, Mesi};
+use recxl::cluster::Oracle;
+use recxl::coherence::{DirOut, Directory};
+use recxl::config::SimConfig;
+use recxl::mem::{Addr, Line, LineId, LineTable};
+use recxl::proto::{LineWords, MsgKind, ReqId};
+use recxl::ptest::{check, knob};
+use recxl::recxl::logunit::{LogRecord, LoggingUnit, PendingRepl};
+
+fn rline(i: u32) -> Line {
+    Addr(0x8000_0000 | (i << 6)).line()
+}
+
+// ---------------------------------------------------------------- oracle
+
+/// Reference oracle: the old per-(line, word) hash-map semantics.
+#[derive(Default)]
+struct RefOracle {
+    last: HashMap<(u32, u8), (u32, u8, u64)>, // (lid, word) -> (value, cn, seq)
+    committed: HashMap<(u32, usize), [u64; 16]>, // (lid, cn) -> per-word floor
+}
+
+impl RefOracle {
+    fn on_commit(&mut self, lid: u32, mask: u16, words: &LineWords, cn: usize, seq: u64) {
+        for w in 0..16u8 {
+            if mask & (1 << w) != 0 {
+                self.last.insert((lid, w), (words[w as usize], cn as u8, seq));
+                let e = self.committed.entry((lid, cn)).or_insert([0; 16]);
+                e[w as usize] = e[w as usize].max(seq);
+            }
+        }
+    }
+
+    fn applied(&mut self, lid: u32, w: u8, value: u32, cn: usize, seq: u64) {
+        self.last.insert((lid, w), (value, cn as u8, seq));
+        let e = self.committed.entry((lid, cn)).or_insert([0; 16]);
+        e[w as usize] = e[w as usize].max(seq);
+    }
+
+    fn verify(&self, lid: u32, w: u8, mem: u32, applied: Option<(usize, u64)>) -> bool {
+        match self.last.get(&(lid, w)) {
+            None => true,
+            Some(&(v, _, _)) => {
+                if mem == v {
+                    return true;
+                }
+                if let Some((acn, aseq)) = applied {
+                    let floor = self
+                        .committed
+                        .get(&(lid, acn))
+                        .map(|s| s[w as usize])
+                        .unwrap_or(0);
+                    return aseq > floor;
+                }
+                false
+            }
+        }
+    }
+
+    fn committed_value(&self, lid: u32, w: u8) -> Option<u32> {
+        self.last.get(&(lid, w)).map(|&(v, _, _)| v)
+    }
+}
+
+#[test]
+fn oracle_slab_matches_hashmap_reference() {
+    check("oracle-differential", 128, 0x07AC1E, |rng, knobs| {
+        let n_ops = knob(rng, knobs, 0, 1, 200) as usize;
+        let n_lines = knob(rng, knobs, 1, 1, 24) as u32;
+        let mut real = Oracle::default();
+        let mut reference = RefOracle::default();
+        for step in 0..n_ops {
+            let lid = rng.below(n_lines as u64) as u32;
+            let w = rng.below(16) as u8;
+            let cn = rng.below(4) as usize;
+            let seq = rng.below(40);
+            match rng.below(4) {
+                0 | 1 => {
+                    let mask = (rng.below(0xFFFF) as u16) | (1 << w);
+                    let mut words = [0u32; 16];
+                    for wd in words.iter_mut() {
+                        *wd = rng.below(1000) as u32;
+                    }
+                    real.on_commit(LineId(lid), mask, &words, cn, seq);
+                    reference.on_commit(lid, mask, &words, cn, seq);
+                }
+                2 => {
+                    let v = rng.below(1000) as u32;
+                    real.on_recovery_applied(LineId(lid), w, v, cn, seq);
+                    reference.applied(lid, w, v, cn, seq);
+                }
+                _ => {
+                    let mem = rng.below(1000) as u32;
+                    let applied = if rng.below(2) == 0 { Some((cn, seq)) } else { None };
+                    let a = real.verify_word(LineId(lid), w, mem, applied);
+                    let b = reference.verify(lid, w, mem, applied);
+                    if a != b {
+                        return Err(format!(
+                            "step {step}: verify({lid},{w},{mem},{applied:?}) real={a} ref={b}"
+                        ));
+                    }
+                }
+            }
+            let a = real.committed_value(LineId(lid), w);
+            let b = reference.committed_value(lid, w);
+            if a != b {
+                return Err(format!("step {step}: committed_value {a:?} != {b:?}"));
+            }
+        }
+        let tracked: usize = reference.last.len();
+        if real.words_tracked() != tracked {
+            return Err(format!(
+                "words_tracked {} != ref {}",
+                real.words_tracked(),
+                tracked
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- caches
+
+/// Reference tag array: the old (lid-free) LRU set-assoc model.
+#[derive(Clone)]
+struct RefSetAssoc {
+    sets: Vec<Vec<u32>>,
+    mask: u32,
+    assoc: usize,
+}
+
+impl RefSetAssoc {
+    fn new(n_sets: u32, assoc: u32) -> Self {
+        RefSetAssoc {
+            sets: vec![Vec::new(); n_sets as usize],
+            mask: n_sets - 1,
+            assoc: assoc as usize,
+        }
+    }
+    fn touch(&mut self, line: u32) -> bool {
+        let s = (line & self.mask) as usize;
+        if let Some(p) = self.sets[s].iter().position(|&t| t == line) {
+            let t = self.sets[s].remove(p);
+            self.sets[s].insert(0, t);
+            true
+        } else {
+            false
+        }
+    }
+    fn insert(&mut self, line: u32) -> Option<u32> {
+        let s = (line & self.mask) as usize;
+        if let Some(p) = self.sets[s].iter().position(|&t| t == line) {
+            let t = self.sets[s].remove(p);
+            self.sets[s].insert(0, t);
+            return None;
+        }
+        let victim = if self.sets[s].len() == self.assoc {
+            self.sets[s].pop()
+        } else {
+            None
+        };
+        self.sets[s].insert(0, line);
+        victim
+    }
+    fn remove(&mut self, line: u32) {
+        let s = (line & self.mask) as usize;
+        self.sets[s].retain(|&t| t != line);
+    }
+}
+
+/// Reference hierarchy: old `FxHashMap<Line, CnLineState>` semantics.
+struct RefCaches {
+    l1: Vec<RefSetAssoc>,
+    l2: Vec<RefSetAssoc>,
+    l3: RefSetAssoc,
+    lines: HashMap<u32, (Mesi, u16, LineWords)>,
+}
+
+impl RefCaches {
+    fn new(cfg: &SimConfig) -> Self {
+        RefCaches {
+            l1: (0..cfg.cores_per_cn)
+                .map(|_| RefSetAssoc::new(cfg.l1.sets(), cfg.l1.assoc))
+                .collect(),
+            l2: (0..cfg.cores_per_cn)
+                .map(|_| RefSetAssoc::new(cfg.l2.sets(), cfg.l2.assoc))
+                .collect(),
+            l3: RefSetAssoc::new(cfg.l3.sets(), cfg.l3.assoc),
+            lines: HashMap::new(),
+        }
+    }
+
+    fn lookup(&mut self, core: usize, line: u32) -> LookupResult {
+        if self.l1[core].touch(line) {
+            LookupResult::L1
+        } else if self.l2[core].touch(line) {
+            self.l1[core].insert(line);
+            LookupResult::L2
+        } else if self.l3.touch(line) {
+            self.l1[core].insert(line);
+            self.l2[core].insert(line);
+            LookupResult::L3
+        } else {
+            LookupResult::Miss
+        }
+    }
+
+    fn fill(&mut self, core: usize, line: u32, mesi: Mesi, words: LineWords) -> Option<(u32, u16, LineWords)> {
+        self.l1[core].insert(line);
+        self.l2[core].insert(line);
+        let victim = self.l3.insert(line);
+        self.lines.insert(line, (mesi, 0, words));
+        victim.and_then(|v| self.evict(v))
+    }
+
+    fn evict(&mut self, line: u32) -> Option<(u32, u16, LineWords)> {
+        for c in &mut self.l1 {
+            c.remove(line);
+        }
+        for c in &mut self.l2 {
+            c.remove(line);
+        }
+        self.l3.remove(line);
+        let (mesi, dirty, words) = self.lines.remove(&line)?;
+        if mesi == Mesi::Modified && Line(line).is_remote() && dirty != 0 {
+            Some((line, dirty, words))
+        } else {
+            None
+        }
+    }
+
+    fn downgrade(&mut self, line: u32) -> Option<(u32, u16, LineWords)> {
+        let st = self.lines.get_mut(&line)?;
+        let wb = if st.0 == Mesi::Modified && st.1 != 0 {
+            Some((line, st.1, st.2))
+        } else {
+            None
+        };
+        st.0 = Mesi::Shared;
+        st.1 = 0;
+        wb
+    }
+
+    fn write(&mut self, line: u32, mask: u16, values: &LineWords) {
+        let st = self.lines.get_mut(&line).unwrap();
+        st.0 = Mesi::Modified;
+        st.1 |= mask;
+        for w in 0..16 {
+            if mask & (1 << w) != 0 {
+                st.2[w] = values[w];
+            }
+        }
+    }
+
+    fn owns(&self, line: u32) -> bool {
+        matches!(
+            self.lines.get(&line).map(|s| s.0),
+            Some(Mesi::Modified) | Some(Mesi::Exclusive)
+        )
+    }
+}
+
+#[test]
+fn cache_slab_matches_hashmap_reference() {
+    check("cache-differential", 96, 0xCAC4E, |rng, knobs| {
+        let n_ops = knob(rng, knobs, 0, 1, 300) as usize;
+        let n_lines = knob(rng, knobs, 1, 1, 64) as u32;
+        // tiny L3 so capacity evictions actually happen
+        let cfg = SimConfig {
+            l3: recxl::config::CacheGeom {
+                size_bytes: 16 * 64,
+                assoc: 2,
+                latency_cycles: 36,
+            },
+            ..SimConfig::default()
+        };
+        let mut table = LineTable::new(12, 4, 4, 16);
+        let mut real = CnCaches::new(&cfg);
+        let mut reference = RefCaches::new(&cfg);
+        for step in 0..n_ops {
+            let l = rline(rng.below(n_lines as u64) as u32);
+            let lid = table.intern(l);
+            let core = rng.below(cfg.cores_per_cn as u64) as usize;
+            match rng.below(5) {
+                0 => {
+                    let a = real.lookup(core, l, lid);
+                    let b = reference.lookup(core, l.0);
+                    if a != b {
+                        return Err(format!("step {step}: lookup {a:?} != {b:?}"));
+                    }
+                }
+                1 => {
+                    let mesi = if rng.below(2) == 0 { Mesi::Exclusive } else { Mesi::Shared };
+                    let words = [rng.below(100) as u32; 16];
+                    let a = real.fill(core, l, lid, mesi, words);
+                    let b = reference.fill(core, l.0, mesi, words);
+                    let an = a.map(|wb| (wb.line.0, wb.mask, wb.words));
+                    if an != b {
+                        return Err(format!("step {step}: fill wb {an:?} != {b:?}"));
+                    }
+                }
+                2 => {
+                    if real.owns(lid) != reference.owns(l.0) {
+                        return Err(format!("step {step}: owns disagree"));
+                    }
+                    if real.owns(lid) {
+                        let mut vals = [0u32; 16];
+                        let mask = (rng.below(0xFFFF) as u16) | 1;
+                        for v in vals.iter_mut() {
+                            *v = rng.below(100) as u32;
+                        }
+                        real.write_words(lid, mask, &vals);
+                        reference.write(l.0, mask, &vals);
+                    }
+                }
+                3 => {
+                    let a = real.evict_line(l, lid).map(|wb| (wb.line.0, wb.mask, wb.words));
+                    let b = reference.evict(l.0);
+                    if a != b {
+                        return Err(format!("step {step}: evict wb {a:?} != {b:?}"));
+                    }
+                }
+                _ => {
+                    let a = real.downgrade(lid).map(|wb| (wb.line.0, wb.mask, wb.words));
+                    let b = reference.downgrade(l.0);
+                    if a != b {
+                        return Err(format!("step {step}: downgrade wb {a:?} != {b:?}"));
+                    }
+                }
+            }
+            // state parity for the touched line
+            let a = real.state(lid).map(|s| (s.mesi, s.dirty_mask, s.words));
+            let b = reference.lines.get(&l.0).map(|&(m, d, w)| (m, d, w));
+            if a != b {
+                return Err(format!("step {step}: state {a:?} != {b:?}"));
+            }
+        }
+        // census parity (remote lines only; both models see the same set)
+        let c = real.census();
+        let mut want = (0u64, 0u64, 0u64);
+        for (&l, &(m, _, _)) in &reference.lines {
+            if Line(l).is_remote() {
+                match m {
+                    Mesi::Modified => want.0 += 1,
+                    Mesi::Exclusive => want.1 += 1,
+                    Mesi::Shared => want.2 += 1,
+                }
+            }
+        }
+        if (c.dirty, c.exclusive, c.shared) != want {
+            return Err(format!("census {c:?} != {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- directory
+
+/// Drive the slot-indexed directory with a randomized request/ack stream
+/// and compare its memory state against a hash-map reference model
+/// replayed from the directory's own outputs: every WT store's words are
+/// applied to the reference exactly when its `WtAck` is emitted (the
+/// serialization point), and every emitted `Data` grant must carry the
+/// reference memory of that moment.
+#[test]
+fn directory_slab_matches_reference_memory_model() {
+    check("directory-differential", 96, 0xD1F00, |rng, knobs| {
+        let n_ops = knob(rng, knobs, 0, 1, 120) as usize;
+        let n_lines = knob(rng, knobs, 1, 1, 8) as u32;
+        let n_cns = 4usize;
+        let mut dir = Directory::new(0, 45_000, 500_000);
+        // reference memory per line (word 0 is the only word WT-stored)
+        let mut refmem: HashMap<u32, u32> = HashMap::new();
+        // WT stores issued but not yet acked, FIFO per line
+        let mut wt_queue: HashMap<u32, Vec<(ReqId, u32)>> = HashMap::new();
+        // outstanding (line, target, downgrade?) obligations from emitted
+        // Inv/Downgrade messages
+        let mut pending: Vec<(u32, usize, bool)> = Vec::new();
+
+        fn apply_out(
+            out: &DirOut,
+            pending: &mut Vec<(u32, usize, bool)>,
+            refmem: &mut HashMap<u32, u32>,
+            wt_queue: &mut HashMap<u32, Vec<(ReqId, u32)>>,
+        ) -> Result<(), String> {
+            for (_, m) in out {
+                match &m.kind {
+                    MsgKind::Inv { line } => {
+                        if let recxl::proto::NodeId::Cn(c) = m.dst {
+                            pending.push((line.0 & 0xFFFF, c, false));
+                        }
+                    }
+                    MsgKind::Downgrade { line } => {
+                        if let recxl::proto::NodeId::Cn(c) = m.dst {
+                            pending.push((line.0 & 0xFFFF, c, true));
+                        }
+                    }
+                    MsgKind::WtAck { line, req } => {
+                        // persistence point: replay the store's value into
+                        // the reference memory (FIFO per line, matched by
+                        // requester)
+                        let li = line.0 & 0xFFFF;
+                        let q = wt_queue.entry(li).or_default();
+                        let pos = q
+                            .iter()
+                            .position(|(r, _)| r == req)
+                            .ok_or_else(|| format!("WtAck for unknown store on line {li}"))?;
+                        let (_, v) = q.remove(pos);
+                        refmem.insert(li, v);
+                    }
+                    MsgKind::Data { line, words, .. } => {
+                        // grants must serve the reference memory of this
+                        // exact moment
+                        let li = line.0 & 0xFFFF;
+                        let want = refmem.get(&li).copied().unwrap_or(0);
+                        if words[0] != want {
+                            return Err(format!(
+                                "Data on line {li} carries {} but reference memory is {want}",
+                                words[0]
+                            ));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            Ok(())
+        }
+
+        for _ in 0..n_ops {
+            let li = rng.below(n_lines as u64) as u32;
+            let line = rline(li);
+            let slot = li; // dense per-test slot, like LineTable::mn_slot
+            let cn = rng.below(n_cns as u64) as usize;
+            let req = ReqId { cn, core: 0 };
+            let deliver_ack = !pending.is_empty() && rng.below(2) == 0;
+            let out = if deliver_ack {
+                let i = rng.below(pending.len() as u64) as usize;
+                let (l, target, downgrade) = pending.remove(i);
+                if downgrade {
+                    dir.on_downgrade_ack(rline(l), l, target, None)
+                } else {
+                    dir.on_inv_ack(rline(l), l, target, None)
+                }
+            } else {
+                match rng.below(3) {
+                    0 => dir.on_rds(line, slot, req),
+                    1 => dir.on_rdx(line, slot, req, false),
+                    _ => {
+                        let mut words = [0u32; 16];
+                        words[0] = rng.below(1000) as u32 + 1;
+                        wt_queue.entry(li).or_default().push((req, words[0]));
+                        dir.on_wt_store(line, slot, req, 1, words)
+                    }
+                }
+            };
+            apply_out(&out, &mut pending, &mut refmem, &mut wt_queue)?;
+        }
+        // drain every obligation so all transactions settle
+        while let Some((l, target, downgrade)) = pending.pop() {
+            let out = if downgrade {
+                dir.on_downgrade_ack(rline(l), l, target, None)
+            } else {
+                dir.on_inv_ack(rline(l), l, target, None)
+            };
+            apply_out(&out, &mut pending, &mut refmem, &mut wt_queue)?;
+        }
+        // settled: no WT store left unacked, and the slab memory equals
+        // the reference model word for word
+        if wt_queue.values().any(|q| !q.is_empty()) {
+            return Err("WT store never acked after drain".into());
+        }
+        for li in 0..n_lines {
+            let got = dir.mem_words(li)[0];
+            let want = refmem.get(&li).copied().unwrap_or(0);
+            if got != want {
+                return Err(format!("line {li}: memory {got} != reference {want}"));
+            }
+            let (owner, sharers) = dir.dir_state(li);
+            if let Some(o) = owner {
+                if sharers & (1 << o) != 0 {
+                    return Err(format!("line {li}: owner {o} also marked sharer"));
+                }
+            }
+            if sharers >> n_cns != 0 {
+                return Err(format!("line {li}: sharer bits beyond cluster"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------- logging unit
+
+/// Reference Logging Unit: the old linear-scan SRAM + fixpoint drain +
+/// filter/reverse fetch, re-implemented over simple collections.
+struct RefLu {
+    sram: Vec<(ReqId, Line, u16, LineWords, u64, Option<u64>)>,
+    dram: Vec<LogRecord>,
+    next_ts: Vec<u64>,
+}
+
+impl RefLu {
+    fn new(n_cns: usize) -> Self {
+        RefLu {
+            sram: Vec::new(),
+            dram: Vec::new(),
+            next_ts: vec![1; n_cns],
+        }
+    }
+
+    fn repl(&mut self, p: &PendingRepl) {
+        self.sram
+            .push((p.req, p.line, p.mask, p.words, p.repl_seq, None));
+    }
+
+    fn val(&mut self, req: ReqId, line: Line, repl_seq: u64, ts: u64) {
+        if let Some(g) = self
+            .sram
+            .iter_mut()
+            .find(|g| g.0 == req && g.1 == line && g.4 == repl_seq && g.5.is_none())
+        {
+            g.5 = Some(ts);
+        }
+        // fixpoint drain, scanning arrival order (the old algorithm)
+        loop {
+            let mut moved = false;
+            let mut i = 0;
+            while i < self.sram.len() {
+                let g = &self.sram[i];
+                if let Some(ts) = g.5 {
+                    if self.next_ts[g.0.cn] == ts {
+                        let g = self.sram.remove(i);
+                        self.next_ts[g.0.cn] += 1;
+                        for w in 0..16u8 {
+                            if g.2 & (1 << w) != 0 {
+                                self.dram.push(LogRecord {
+                                    req: g.0,
+                                    line: g.1,
+                                    word: w,
+                                    value: g.3[w as usize],
+                                    ts,
+                                    repl_seq: g.4,
+                                    valid: true,
+                                });
+                            }
+                        }
+                        moved = true;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            if !moved {
+                break;
+            }
+        }
+    }
+
+    fn fetch(&self, l: Line) -> Vec<LogRecord> {
+        let mut versions: Vec<LogRecord> =
+            self.dram.iter().filter(|r| r.line == l).copied().collect();
+        for g in &self.sram {
+            if g.1 == l {
+                for w in 0..16u8 {
+                    if g.2 & (1 << w) != 0 {
+                        versions.push(LogRecord {
+                            req: g.0,
+                            line: g.1,
+                            word: w,
+                            value: g.3[w as usize],
+                            ts: g.5.unwrap_or(0),
+                            repl_seq: g.4,
+                            valid: g.5.is_some(),
+                        });
+                    }
+                }
+            }
+        }
+        versions.reverse();
+        versions
+    }
+}
+
+#[test]
+fn logunit_slab_matches_reference_order() {
+    check("logunit-differential", 96, 0x106, |rng, knobs| {
+        let n = knob(rng, knobs, 0, 1, 40) as usize;
+        let n_srcs = knob(rng, knobs, 1, 1, 4) as usize;
+        let n_lines = knob(rng, knobs, 2, 1, 6) as u32;
+        let mut real = LoggingUnit::new(1, 16, 10_000, 100_000);
+        let mut reference = RefLu::new(16);
+        // per-source in-order repl_seq/ts issue, random multi-word masks
+        let mut seqs = vec![0u64; n_srcs];
+        let mut vals = Vec::new();
+        for i in 0..n {
+            let src = rng.below(n_srcs as u64) as usize;
+            let req = ReqId { cn: src, core: rng.below(2) as usize };
+            seqs[src] += 1;
+            let li = rng.below(n_lines as u64) as u32;
+            let mask = (rng.below(0xFFFF) as u16) | 1;
+            let mut words = [0u32; 16];
+            for w in words.iter_mut() {
+                *w = rng.below(500) as u32;
+            }
+            let p = PendingRepl {
+                req,
+                line: rline(li),
+                lid: LineId(li),
+                mask,
+                words,
+                repl_seq: seqs[src],
+            };
+            real.repl(i as u64, p.clone());
+            reference.repl(&p);
+            vals.push((req, rline(li), seqs[src]));
+        }
+        // adversarial VAL delivery order
+        let mut order: Vec<usize> = (0..vals.len()).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        for (step, &i) in order.iter().enumerate() {
+            let (req, l, seq) = vals[i];
+            real.val(0, req, l, seq, seq);
+            reference.val(req, l, seq, seq);
+            if real.dram_len() != reference.dram.len() {
+                return Err(format!(
+                    "step {step}: dram {} != ref {}",
+                    real.dram_len(),
+                    reference.dram.len()
+                ));
+            }
+            // fetch parity on every line after every val
+            for li in 0..n_lines {
+                let a = real.fetch_latest_vers(&[(rline(li), LineId(li))])[0]
+                    .versions
+                    .clone();
+                let b = reference.fetch(rline(li));
+                if a != b {
+                    return Err(format!("step {step} line {li}: fetch {a:?} != {b:?}"));
+                }
+            }
+        }
+        if real.sram_used() != 0 {
+            return Err(format!("{} sram entries left", real.sram_used()));
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------- end-to-end interning
+
+/// The interner + slabs must leave whole-run results identical across
+/// reruns (warm trace memo, recycled slabs) — the cheap in-file version
+/// of tests/determinism.rs, here so this suite stands alone.
+#[test]
+fn full_run_fingerprint_stable_with_interned_state() {
+    use recxl::prelude::*;
+    let cfg = SimConfig {
+        n_cns: 4,
+        n_mns: 4,
+        ops_per_thread: 2_000,
+        protocol: Protocol::ReCxlProactive,
+        ..SimConfig::default()
+    };
+    let app = by_name("ycsb").unwrap();
+    let a = run_app(cfg.clone(), &app);
+    let b = run_app(cfg, &app);
+    assert_eq!(a.exec_time_ps, b.exec_time_ps);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.repl.store_commits, b.repl.store_commits);
+}

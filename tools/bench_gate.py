@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Hot-path throughput regression gate (EXPERIMENTS.md §Perf).
+
+Compares a freshly produced BENCH_hotpath.json against the committed
+baseline (BENCH_baseline.json at the repo root) and fails when
+`full_sim_events_per_sec` regresses by more than the threshold.
+
+Usage:
+    python3 tools/bench_gate.py <fresh.json> <baseline.json> [--max-regress 0.20]
+
+Skips (exit 0, loudly) when:
+  * the baseline is missing or marked `pending_first_measurement` — the
+    gate arms itself the first time a measured baseline is committed;
+  * the quick-mode flags of the two reports differ (quick and full runs
+    must never be naively compared — §Perf rule 3).
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def metric(report, name):
+    return report.get("metrics", {}).get(name)
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    max_regress = 0.20
+    if "--max-regress" in argv:
+        max_regress = float(argv[argv.index("--max-regress") + 1])
+
+    fresh = load(argv[1])
+    base = load(argv[2])
+    if fresh is None:
+        print(f"gate: FAIL — fresh report {argv[1]} missing")
+        return 1
+    if base is None:
+        print(f"gate: SKIP — no committed baseline at {argv[2]}; "
+              "commit CI's BENCH_hotpath artifact as the baseline to arm the gate")
+        return 0
+    if metric(base, "pending_first_measurement"):
+        print("gate: SKIP — baseline is a placeholder awaiting the first "
+              "measured run (see EXPERIMENTS.md §Perf); commit a real "
+              "BENCH_hotpath.json to arm the gate")
+        return 0
+    if metric(fresh, "quick") != metric(base, "quick"):
+        print("gate: SKIP — quick-mode mismatch between fresh and baseline "
+              f"({metric(fresh, 'quick')} vs {metric(base, 'quick')}); "
+              "quick and full runs are not comparable")
+        return 0
+
+    name = "full_sim_events_per_sec"
+    f, b = metric(fresh, name), metric(base, name)
+    if not f or not b:
+        print(f"gate: FAIL — {name} missing (fresh={f}, baseline={b})")
+        return 1
+    ratio = f / b
+    verdict = "OK" if ratio >= 1.0 - max_regress else "FAIL"
+    print(f"gate: {verdict} — {name}: fresh {f:.3e} vs baseline {b:.3e} "
+          f"(ratio {ratio:.3f}, floor {1.0 - max_regress:.2f})")
+    return 0 if verdict == "OK" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
