@@ -145,7 +145,7 @@ fn main() {
             );
             lu.val(0, req, line, i + 1, i + 1);
         }
-        std::hint::black_box(lu.dump(16, 16, 3, 9));
+        std::hint::black_box(lu.dump(16, 16, 3, 9, &mut |l| l.home_mn(16)));
     }));
 
     // end-to-end simulator throughput: the §Perf headline metric

@@ -348,10 +348,13 @@ impl Cluster {
     }
 
     /// Send a dirty-eviction writeback home, if the fill displaced one.
+    /// The home comes from the line table, not the raw interleave — after
+    /// an MN failure the line's current home is a survivor MN.
     pub(crate) fn writeback(&mut self, cn: usize, wb: Option<crate::cache::Writeback>) {
         if let Some(wb) = wb {
             if wb.line.is_remote() {
-                let mn = wb.line.home_mn(self.cfg.n_mns);
+                let lid = self.lines.intern(wb.line);
+                let mn = self.lines.home_mn(lid);
                 let at = self.q.now();
                 self.send(
                     at,

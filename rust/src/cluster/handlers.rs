@@ -19,7 +19,12 @@ impl Cluster {
                 }
                 self.deliver_cn(cn, msg)
             }
-            NodeId::Mn(mn) => self.deliver_mn(mn, msg),
+            NodeId::Mn(mn) => {
+                if self.dead_mns[mn] {
+                    return; // crashed after the message left the switch
+                }
+                self.deliver_mn(mn, msg)
+            }
         }
     }
 
@@ -101,10 +106,11 @@ impl Cluster {
             // ---- recovery traffic (section V, Table I) ----
             MsgKind::ViralNotify { failed } => self.on_viral_notify(cn, failed),
             MsgKind::Msi { failed } => self.on_msi(cn, failed),
+            MsgKind::MsiMn { failed_mn } => self.on_msi_mn(cn, failed_mn),
             MsgKind::Interrupt { epoch } => self.on_interrupt(cn, epoch),
             MsgKind::InterruptResp { from, epoch } => self.on_interrupt_resp(cn, from, epoch),
-            MsgKind::FetchLatestVers { from_mn, lines, epoch } => {
-                self.on_fetch_latest_vers(cn, from_mn, lines, epoch)
+            MsgKind::FetchLatestVers { from_mn, lines, epoch, rebuild } => {
+                self.on_fetch_latest_vers(cn, from_mn, lines, epoch, rebuild)
             }
             MsgKind::InitRecovResp { from_mn, epoch } => {
                 self.on_init_recov_resp(cn, from_mn, epoch)
@@ -224,8 +230,12 @@ impl Cluster {
                 self.on_init_recov(mn, failed, epoch);
                 vec![]
             }
-            MsgKind::FetchLatestVersResp { from, results, epoch } => {
-                self.on_fetch_resp(mn, from, results, epoch);
+            MsgKind::RebuildHome { lines, epoch } => {
+                self.on_rebuild_home(mn, lines, epoch);
+                vec![]
+            }
+            MsgKind::FetchLatestVersResp { from, results, epoch, rebuild } => {
+                self.on_fetch_resp(mn, from, results, epoch, rebuild);
                 vec![]
             }
             MsgKind::ViralNotify { failed } => {
@@ -257,12 +267,15 @@ impl Cluster {
         }
         self.stats.repl.max_dram_log_bytes[cn] =
             self.stats.repl.max_dram_log_bytes[cn].max(self.logunits[cn].dram_bytes());
-        let res = self.logunits[cn].dump(
-            self.cfg.n_cns,
-            self.cfg.n_mns,
-            self.cfg.n_r,
-            self.cfg.gzip_level,
-        );
+        let res = {
+            // split borrow: the dump's home map lives in the line table,
+            // disjoint from the logging units
+            let Cluster { logunits, lines, cfg, .. } = self;
+            logunits[cn].dump(cfg.n_cns, cfg.n_mns, cfg.n_r, cfg.gzip_level, &mut |l| {
+                let lid = lines.intern(l);
+                lines.home_mn(lid)
+            })
+        };
         self.stats.repl.dump_in_bytes += res.in_bytes;
         self.stats.repl.dump_out_bytes += res.out_bytes;
         self.stats.repl.dumps += 1;

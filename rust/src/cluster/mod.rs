@@ -22,12 +22,12 @@ pub use oracle::Oracle;
 pub use recovery_impl::RecoveryCtrl;
 
 use rustc_hash::FxHashSet;
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
 use crate::cache::CnCaches;
 use crate::coherence::Directory;
-use crate::config::{CnId, CoreId, FaultKind, Protocol, SimConfig};
+use crate::config::{CnId, CoreId, FaultKind, MnId, Protocol, SimConfig};
 use crate::cpu::sync::{Barrier, LockTable};
 use crate::cpu::{Block, Core};
 use crate::fabric::{Delivery, Fabric};
@@ -64,10 +64,33 @@ pub enum Ev {
     Crash(CnId),
     /// Switch detects the failed CN (Viral_Status set, MSI fired).
     Detect(CnId),
+    /// Memory-node fail-stop: directory, memory and resident dumped logs
+    /// vanish.
+    CrashMn(MnId),
+    /// Switch detects the failed MN: port goes viral, lines re-home, the
+    /// CM runs a rebuild round.
+    DetectMn(MnId),
     /// Quiesce deadline during recovery, stamped with the round epoch
     /// that armed it (stale timers from aborted rounds must not cut the
     /// restarted round's drain window short — see recovery_impl).
     QuiesceTimeout(CnId, u64),
+}
+
+/// A coherence request that was in flight toward a now-dead MN when it
+/// fail-stopped (the switch dropped it).  Re-issued toward the line's new
+/// home when the rebuild round completes — re-sending earlier would be
+/// answered from not-yet-reconstructed memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Reissue {
+    /// An open MSHR (load miss) on this line.
+    Rds(Line),
+    /// An in-flight exclusive/ownership request on this line.
+    Rdx(Line),
+    /// A write-through store on this line parked at this core's SB head.
+    /// The line is part of the identity: if the original ack was still in
+    /// flight and the head moved on, the stale reissue must not re-send
+    /// the *new* head's store.
+    Wt(CoreId, Line),
 }
 
 /// One MSHR slab slot: per-local-core waiter counts for a line miss.
@@ -204,6 +227,8 @@ pub struct Cluster {
     pub locks: LockTable,
     pub barrier: Barrier,
     pub dead: Vec<bool>,
+    /// MNs that fail-stopped (directory/memory/dumped logs gone).
+    pub dead_mns: Vec<bool>,
     pub oracle: Oracle,
     pub recovery: Option<RecoveryCtrl>,
     pub stats: RunStats,
@@ -219,6 +244,15 @@ pub struct Cluster {
     /// Detected failures no completed recovery round has covered yet
     /// (ordered, so round membership is deterministic).
     pub(crate) unrecovered: BTreeSet<CnId>,
+    /// Detected MN failures not yet covered by a completed rebuild round.
+    pub(crate) unrecovered_mns: BTreeSet<MnId>,
+    /// Census of each dead MN's re-homed lines (first-touch order),
+    /// captured at detection; round restarts re-read it, completion
+    /// discards it.
+    pub(crate) mn_census: BTreeMap<MnId, Vec<Line>>,
+    /// Requests that were in flight toward a dead MN, re-issued per CN
+    /// when its round's `RecovEnd` arrives.
+    pub(crate) mn_reissue: BTreeMap<CnId, Vec<Reissue>>,
     /// Monotone recovery-round generation (stamped on round messages).
     pub(crate) recovery_epoch: u64,
     /// Failures covered by completed rounds.
@@ -228,6 +262,11 @@ pub struct Cluster {
     /// a line re-acquired by a survivor that later fails is a genuinely
     /// new repair and counts again.
     pub(crate) census_counted: FxHashSet<(Line, CnId)>,
+    /// Re-homed lines whose rebuilt_* stats were already counted: a round
+    /// restart re-rebuilds the same lines (count once), but a line that
+    /// re-homes *again* (cascading MN failures) is removed at detection
+    /// and counts anew.
+    pub(crate) rebuilt_counted: FxHashSet<Line>,
 }
 
 impl Cluster {
@@ -283,6 +322,7 @@ impl Cluster {
             locks: LockTable::default(),
             barrier: Barrier::new(n_threads),
             dead: vec![false; cfg.n_cns],
+            dead_mns: vec![false; cfg.n_mns],
             oracle: Oracle::default(),
             recovery: None,
             stats,
@@ -292,9 +332,13 @@ impl Cluster {
             last_progress_at: 0,
             prefinished_at_crash: vec![false; n_threads],
             unrecovered: BTreeSet::new(),
+            unrecovered_mns: BTreeSet::new(),
+            mn_census: BTreeMap::new(),
+            mn_reissue: BTreeMap::new(),
             recovery_epoch: 0,
             failures_recovered: 0,
             census_counted: FxHashSet::default(),
+            rebuilt_counted: FxHashSet::default(),
             cfg,
         }
     }
@@ -304,17 +348,23 @@ impl Cluster {
         eprintln!("--- stall diagnostic at {} ---", self.q.now());
         if let Some(r) = &self.recovery {
             eprintln!(
-                "recovery: failed={:?} epoch={} cm={} complete={} pending_cns={:?} pending_mns={:?} pending_end={:?} repairs={:?}",
+                "recovery: failed={:?} failed_mns={:?} epoch={} cm={} complete={} \
+                 pending_cns={:?} pending_mn_acks={} pending_end={:?} repairs={:?} rebuilds={:?}",
                 r.failed,
+                r.failed_mns,
                 r.epoch,
                 r.cm_cn,
                 r.complete,
                 r.pending_cns,
-                r.pending_mns,
+                r.pending_mn_acks,
                 r.pending_end,
                 r.repairs
                     .iter()
                     .map(|(mn, rep)| (*mn, rep.expected.len(), rep.responses.len()))
+                    .collect::<Vec<_>>(),
+                r.rebuilds
+                    .iter()
+                    .map(|(mn, rb)| (*mn, rb.expected.len(), rb.responses.len()))
                     .collect::<Vec<_>>(),
             );
         }
@@ -390,6 +440,10 @@ impl Cluster {
         (0..self.cfg.n_cns).filter(|&c| !self.dead[c])
     }
 
+    pub fn live_mns(&self) -> impl Iterator<Item = MnId> + '_ {
+        (0..self.cfg.n_mns).filter(|&m| !self.dead_mns[m])
+    }
+
     /// Mark a core finished if it just completed (trace consumed, SB
     /// drained); removes it from the barrier population.
     pub fn check_finished(&mut self, id: CoreId) {
@@ -432,6 +486,10 @@ impl Cluster {
         for f in self.cfg.faults.events().to_vec() {
             match f.kind {
                 FaultKind::CnCrash { cn } => self.q.push_at(f.at, Ev::Crash(cn)),
+                FaultKind::MnCrash { mn } => self.q.push_at(f.at, Ev::CrashMn(mn)),
+                // link degradation needs no event: the fabric carries the
+                // whole schedule from construction (deterministic timing)
+                FaultKind::LinkDegraded { .. } => {}
             }
         }
         let mut last_progress = (0usize, 0u64);
@@ -464,11 +522,13 @@ impl Cluster {
         self.finalize(wall)
     }
 
-    /// Every fault in the plan has been injected, detected, and covered by
-    /// a completed recovery round.  Until then the event loop keeps
-    /// running even after all live cores finish their traces.
+    /// Every *crash* in the plan has been injected, detected, and covered
+    /// by a completed recovery round.  Until then the event loop keeps
+    /// running even after all live cores finish their traces.  Link
+    /// degradations are timing faults with nothing to recover, so they
+    /// don't gate settlement.
     fn recovery_is_settled(&self) -> bool {
-        self.failures_recovered >= self.cfg.faults.len()
+        self.failures_recovered >= self.cfg.faults.crash_count()
     }
 
     fn dispatch(&mut self, ev: Ev) {
@@ -482,6 +542,8 @@ impl Cluster {
             Ev::DumpTick(cn) => self.dump_tick(cn),
             Ev::Crash(cn) => self.crash(cn),
             Ev::Detect(cn) => self.detect(cn),
+            Ev::CrashMn(mn) => self.crash_mn(mn),
+            Ev::DetectMn(mn) => self.detect_mn(mn),
             Ev::QuiesceTimeout(cn, epoch) => self.quiesce_timeout(cn, epoch),
         }
     }

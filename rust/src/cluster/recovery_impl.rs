@@ -35,12 +35,12 @@
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::collections::{BTreeMap, BTreeSet};
 
-use super::{Cluster, Ev};
+use super::{Cluster, Ev, Reissue};
 use crate::cache::Mesi;
-use crate::config::{CnId, MnId};
+use crate::config::{CnId, MnId, Protocol};
 use crate::cpu::Block;
 use crate::mem::Line;
-use crate::proto::{Message, MsgKind, NodeId};
+use crate::proto::{Message, MsgKind, NodeId, ReqId};
 use crate::recovery::{select_version, VersionList};
 use crate::recxl::replica_window;
 use crate::sim::time::lu_cycles;
@@ -59,19 +59,34 @@ pub struct MnRepair {
     pub responses: BTreeMap<CnId, FxHashMap<Line, VersionList>>,
 }
 
+/// Per-(new home) rebuild bookkeeping for lines re-homed off dead MNs
+/// whose only surviving copies live in replica Logging Units.
+pub struct MnRebuild {
+    /// Lines this MN must reconstruct from logs (census order).
+    pub lines: Vec<Line>,
+    pub expected: BTreeSet<CnId>,
+    pub responses: BTreeMap<CnId, FxHashMap<Line, VersionList>>,
+}
+
 /// The Configuration Manager's state machine for one recovery round.
 pub struct RecoveryCtrl {
-    /// Failures covered by this round (ascending CN order).
+    /// CN failures covered by this round (ascending CN order).
     pub failed: Vec<CnId>,
+    /// MN failures covered by this round (ascending MN order).
+    pub failed_mns: Vec<MnId>,
     pub cm_cn: CnId,
     /// Round generation; stamped on every message of the round.
     pub epoch: u64,
     /// Membership-only sets (never iterated — broadcast order comes from
     /// the ordered live-CN list).
     pub pending_cns: FxHashSet<CnId>,
-    pub pending_mns: FxHashSet<MnId>,
+    /// Outstanding MN-side acknowledgements (`InitRecovResp`): one per
+    /// `InitRecov` or `RebuildHome` sent this round.  A count, not a set —
+    /// a mixed round can owe one MN both kinds of work.
+    pub pending_mn_acks: u64,
     pub pending_end: FxHashSet<CnId>,
     pub repairs: FxHashMap<MnId, MnRepair>,
+    pub rebuilds: FxHashMap<MnId, MnRebuild>,
     pub complete: bool,
 }
 
@@ -150,7 +165,7 @@ impl Cluster {
                 },
             );
         }
-        for mn in 0..self.cfg.n_mns {
+        for mn in self.live_mns().collect::<Vec<_>>() {
             self.send(
                 now,
                 Message {
@@ -174,6 +189,108 @@ impl Cluster {
         );
     }
 
+    // ----------------------------------------------- MN fail-stop -------
+
+    /// Fail-stop of a memory node: its directory, memory and resident
+    /// dumped logs are gone from this instant (messages already queued to
+    /// it evaporate at delivery).  Detection follows after the switch's
+    /// detection delay, exactly like a CN failure.
+    pub(crate) fn crash_mn(&mut self, mn: MnId) {
+        if self.dead_mns[mn] {
+            return;
+        }
+        self.dead_mns[mn] = true;
+        let at = self.q.now() + self.cfg.detect_delay_ps;
+        self.q.push_at(at, Ev::DetectMn(mn));
+    }
+
+    /// The switch notices the dead MN: Viral_Status for its port, every
+    /// line it homed re-homes to a survivor MN (parked busy until the
+    /// rebuild round reconstructs it), requests that were in flight
+    /// toward it are remembered for re-issue, and the MSI elects the CM
+    /// to run a rebuild round.
+    pub(crate) fn detect_mn(&mut self, mn: MnId) {
+        let now = self.q.now();
+        self.fabric.set_viral_mn(mn);
+        self.unrecovered_mns.insert(mn);
+        if self.stats.recovery.detection_at == 0 {
+            self.stats.recovery.detection_at = now;
+        }
+        // census + re-home: dense per-MN slots on the survivor are
+        // assigned in first-touch order, so the census is deterministic
+        let moved = self.lines.kill_mn(mn);
+        self.stats.recovery.rehomed_lines += moved.len() as u64;
+        // a line that re-homes again is a genuinely new rebuild: its
+        // stats count anew (round restarts, by contrast, count once)
+        for &(line, _) in &moved {
+            self.rebuilt_counted.remove(&line);
+        }
+        let live: Vec<CnId> = self.live_cns().collect();
+        for &(line, lid) in &moved {
+            let new_home = self.lines.home_mn(lid);
+            let slot = self.lines.mn_slot(lid);
+            // park: requests racing ahead of the rebuild defer instead of
+            // being granted from zeroed memory
+            self.dirs[new_home].park_for_rebuild(line, slot);
+            // requests the dead MN swallowed: remember them per CN, to be
+            // re-sent at this round's RecovEnd (post-rebuild).  Dedup: a
+            // line can move twice under cascading MN failures, and a
+            // double re-send would leave the directory with a phantom
+            // sharer entry.
+            for &cn in &live {
+                if self.cns[cn].mshr_waiters(lid) > 0 {
+                    let e = self.mn_reissue.entry(cn).or_default();
+                    if !e.contains(&Reissue::Rds(line)) {
+                        e.push(Reissue::Rds(line));
+                    }
+                }
+                if self.cns[cn].rdx_contains(lid) {
+                    let e = self.mn_reissue.entry(cn).or_default();
+                    if !e.contains(&Reissue::Rdx(line)) {
+                        e.push(Reissue::Rdx(line));
+                    }
+                }
+            }
+        }
+        // write-through stores whose WtStore/WtAck died with the MN —
+        // only heads on *re-homed* lines: a head merely waiting on a live
+        // MN's ack must not be double-sent (the duplicate ack would mark
+        // the wrong head acked later)
+        if self.cfg.protocol == Protocol::WriteThrough {
+            let moved_lids: FxHashSet<crate::mem::LineId> =
+                moved.iter().map(|&(_, lid)| lid).collect();
+            for id in 0..self.cores.len() {
+                let cn = self.cores[id].cn;
+                if self.dead[cn] {
+                    continue;
+                }
+                let stuck_line = self.cores[id].sb.head().and_then(|h| {
+                    (h.remote && h.committing && !h.wt_acked && moved_lids.contains(&h.lid))
+                        .then_some(h.line)
+                });
+                if let Some(line) = stuck_line {
+                    let e = self.mn_reissue.entry(cn).or_default();
+                    if !e.contains(&Reissue::Wt(id, line)) {
+                        e.push(Reissue::Wt(id, line));
+                    }
+                }
+            }
+        }
+        self.mn_census
+            .insert(mn, moved.iter().map(|&(l, _)| l).collect());
+        // MSI to the Configuration Manager (same deterministic election
+        // rule as CN failures: lowest-indexed live CN)
+        let cm = live.first().copied().expect("no live CN to recover on");
+        self.send(
+            now,
+            Message {
+                src: NodeId::Mn(mn), // switch-originated; port of failed MN
+                dst: NodeId::Cn(cm),
+                kind: MsgKind::MsiMn { failed_mn: mn },
+            },
+        );
+    }
+
     pub(crate) fn on_viral_notify(&mut self, cn: CnId, failed: CnId) {
         for local in 0..self.cfg.cores_per_cn {
             let id = self.core_id(cn, local);
@@ -186,9 +303,20 @@ impl Cluster {
     // ----------------------------------------------- CM + interrupts ----
 
     pub(crate) fn on_msi(&mut self, cn: CnId, _failed: CnId) {
+        self.consider_round(cn);
+    }
+
+    /// MSI for a memory-node failure: same election + round machinery.
+    pub(crate) fn on_msi_mn(&mut self, cn: CnId, _failed_mn: MnId) {
+        self.consider_round(cn);
+    }
+
+    /// Common MSI handling: start (or restart) a round unless an active
+    /// round on a live CM already covers every unrecovered failure.
+    fn consider_round(&mut self, cn: CnId) {
         // Every failure this MSI could be about is already recovered (a
         // round triggered by an earlier failure covered it): nothing to do.
-        if self.unrecovered.is_empty() {
+        if self.unrecovered.is_empty() && self.unrecovered_mns.is_empty() {
             return;
         }
         // Duplicate MSI: an active round on a live CM already covers every
@@ -200,6 +328,10 @@ impl Cluster {
                 && r.cm_cn == cn
                 && !self.dead[r.cm_cn]
                 && self.unrecovered.iter().all(|f| r.failed.contains(f))
+                && self
+                    .unrecovered_mns
+                    .iter()
+                    .all(|m| r.failed_mns.contains(m))
             {
                 return;
             }
@@ -208,12 +340,13 @@ impl Cluster {
     }
 
     /// Start (or restart) a recovery round on CM `cm`, covering every
-    /// detected-but-unrecovered failure.
+    /// detected-but-unrecovered failure — CN and MN alike.
     fn start_recovery_round(&mut self, cm: CnId) {
         let now = self.q.now();
         self.recovery_epoch += 1;
         let epoch = self.recovery_epoch;
         let failed: Vec<CnId> = self.unrecovered.iter().copied().collect();
+        let failed_mns: Vec<MnId> = self.unrecovered_mns.iter().copied().collect();
         self.stats.recovery.count(RecoveryMsg::Msi);
         // broadcast in ascending CN order: these sends serialize on the
         // CM's uplink, so their order is part of the schedule — it must
@@ -232,12 +365,14 @@ impl Cluster {
         }
         self.recovery = Some(RecoveryCtrl {
             failed,
+            failed_mns,
             cm_cn: cm,
             epoch,
             pending_cns: live.into_iter().collect(),
-            pending_mns: FxHashSet::default(),
+            pending_mn_acks: 0,
             pending_end: FxHashSet::default(),
             repairs: FxHashMap::default(),
+            rebuilds: FxHashMap::default(),
             complete: false,
         });
     }
@@ -316,7 +451,7 @@ impl Cluster {
 
     pub(crate) fn on_interrupt_resp(&mut self, _cm_cn: CnId, from: CnId, epoch: u64) {
         let now = self.q.now();
-        let (all_in, cm_cn, failed) = {
+        let (all_in, cm_cn, failed, failed_mns) = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
             if ctrl.epoch != epoch || ctrl.complete {
                 return; // response from an aborted round
@@ -326,26 +461,65 @@ impl Cluster {
                 ctrl.pending_cns.is_empty(),
                 ctrl.cm_cn,
                 ctrl.failed.clone(),
+                ctrl.failed_mns.clone(),
             )
         };
         if !all_in {
             return;
         }
-        // phase 2: directory-level recovery on every MN
-        let mut pending = FxHashSet::default();
-        for mn in 0..self.cfg.n_mns {
-            pending.insert(mn);
-            self.stats.recovery.count(RecoveryMsg::InitRecov);
+        // phase 2, CN failures: directory-level recovery on every live MN
+        let mut acks = 0u64;
+        if !failed.is_empty() {
+            for mn in self.live_mns().collect::<Vec<_>>() {
+                acks += 1;
+                self.stats.recovery.count(RecoveryMsg::InitRecov);
+                self.send(
+                    now,
+                    Message {
+                        src: NodeId::Cn(cm_cn),
+                        dst: NodeId::Mn(mn),
+                        kind: MsgKind::InitRecov { failed: failed.clone(), epoch },
+                    },
+                );
+            }
+        }
+        // phase 2, MN failures: each dead MN's census lines grouped by
+        // their *new* home; the survivor rebuilds memory + directory
+        // (BTreeMap: deterministic send order).  Dedup across censuses: a
+        // cascading failure puts a line in two dead MNs' censuses, and a
+        // doubled entry would rebuild (and count) twice.
+        let mut per_home: BTreeMap<MnId, Vec<Line>> = BTreeMap::new();
+        let mut seen: FxHashSet<Line> = FxHashSet::default();
+        for dmn in &failed_mns {
+            if let Some(lines) = self.mn_census.get(dmn).cloned() {
+                for l in lines {
+                    if !seen.insert(l) {
+                        continue;
+                    }
+                    let lid = self.lines.intern(l);
+                    per_home.entry(self.lines.home_mn(lid)).or_default().push(l);
+                }
+            }
+        }
+        for (home, lines) in per_home {
+            acks += 1;
+            self.stats.recovery.count(RecoveryMsg::RebuildHome);
             self.send(
                 now,
                 Message {
                     src: NodeId::Cn(cm_cn),
-                    dst: NodeId::Mn(mn),
-                    kind: MsgKind::InitRecov { failed: failed.clone(), epoch },
+                    dst: NodeId::Mn(home),
+                    kind: MsgKind::RebuildHome { lines, epoch },
                 },
             );
         }
-        self.recovery.as_mut().unwrap().pending_mns = pending;
+        if acks == 0 {
+            // nothing homed on the dead MN(s) and no CN failures: no
+            // MN-side work — straight to the resume phase
+            self.broadcast_recov_end(cm_cn, epoch);
+            return;
+        }
+        self.recovery.as_mut().unwrap().pending_mn_acks = acks;
     }
 
     // ----------------------------------------------- directory repair ---
@@ -419,19 +593,215 @@ impl Cluster {
                 Message {
                     src: NodeId::Mn(mn),
                     dst: NodeId::Cn(cn),
-                    kind: MsgKind::FetchLatestVers { from_mn: mn, lines, epoch },
+                    kind: MsgKind::FetchLatestVers { from_mn: mn, lines, epoch, rebuild: false },
                 },
             );
         }
     }
 
-    /// A replica CN's Logging Unit runs Algorithm 2.
+    // ----------------------------------------------- dead-MN rebuild ----
+
+    /// A survivor MN learns it is now home to `lines` of a dead MN.  For
+    /// each line: if any live CN still caches it, MESI guarantees that
+    /// copy holds the latest committed words — memory and the directory
+    /// entry (owner/sharers) are reconstructed from the caches directly.
+    /// Otherwise the line's committed history exists only in the replica
+    /// Logging Units: query the replica window (Algorithm 2) and select a
+    /// version exactly like a dead-CN repair.
+    pub(crate) fn on_rebuild_home(&mut self, mn: MnId, lines: Vec<Line>, epoch: u64) {
+        let now = self.q.now();
+        if self.recovery.as_ref().map(|r| r.epoch) != Some(epoch) {
+            return; // aborted round
+        }
+        let live: Vec<CnId> = self.live_cns().collect();
+        let mut from_logs: Vec<Line> = Vec::new();
+        for &line in &lines {
+            let lid = self.lines.intern(line);
+            let slot = self.lines.mn_slot(lid);
+            // harvest: prefer the owner's copy (M/E), else any shared copy
+            let mut owner: Option<CnId> = None;
+            let mut sharers: u32 = 0;
+            let mut words: Option<crate::proto::LineWords> = None;
+            for &cn in &live {
+                if let Some(st) = self.caches[cn].state(lid) {
+                    match st.mesi {
+                        Mesi::Modified | Mesi::Exclusive => {
+                            owner = Some(cn);
+                            words = Some(st.words);
+                        }
+                        Mesi::Shared => {
+                            sharers |= 1 << cn;
+                            if words.is_none() {
+                                words = Some(st.words);
+                            }
+                        }
+                    }
+                }
+            }
+            match words {
+                Some(w) => {
+                    if self.rebuilt_counted.insert(line) {
+                        self.stats.recovery.rebuilt_from_caches += 1;
+                    }
+                    let out = self.dirs[mn].rebuild_entry(line, slot, owner, sharers, &w);
+                    for (d, m) in out {
+                        self.send(now + d, m);
+                    }
+                    // MESI invariant check against the oracle: a surviving
+                    // copy's words are the latest committed values
+                    for wd in 0..16u8 {
+                        if !self.oracle.verify_word(lid, wd, w[wd as usize], None) {
+                            self.stats.recovery.inconsistencies += 1;
+                        }
+                    }
+                }
+                None => from_logs.push(line),
+            }
+        }
+        if from_logs.is_empty() {
+            self.finish_mn_repair(mn, epoch);
+            return;
+        }
+        // no surviving cache copy: the replica Logging Units are the only
+        // source — group by replica-window CNs, like a dead-CN repair
+        let mut per_cn: BTreeMap<CnId, Vec<Line>> = Default::default();
+        for &l in &from_logs {
+            for c in replica_window(l, self.cfg.n_cns, self.cfg.n_r) {
+                if !self.dead[c] {
+                    per_cn.entry(c).or_default().push(l);
+                }
+            }
+        }
+        let expected: BTreeSet<CnId> = per_cn.keys().copied().collect();
+        let no_replicas = expected.is_empty();
+        let Some(ctrl) = self.recovery.as_mut() else { return };
+        ctrl.rebuilds.insert(
+            mn,
+            MnRebuild {
+                lines: from_logs,
+                expected,
+                responses: BTreeMap::new(),
+            },
+        );
+        if no_replicas {
+            self.rebuild_mn(mn);
+            self.finish_mn_repair(mn, epoch);
+            return;
+        }
+        for (cn, lines) in per_cn {
+            self.stats.recovery.count(RecoveryMsg::FetchLatestVers);
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Mn(mn),
+                    dst: NodeId::Cn(cn),
+                    kind: MsgKind::FetchLatestVers { from_mn: mn, lines, epoch, rebuild: true },
+                },
+            );
+        }
+    }
+
+    /// Apply log-selected versions to the rebuilt home: memory takes the
+    /// latest logged value per word, the directory entry comes up
+    /// unowned/unshared (no cache holds it — that is why the logs were
+    /// queried), and the oracle checks nothing committed was lost.
+    ///
+    /// Words no replica log still holds fall back to *this survivor's*
+    /// resident dumped log: the dead MN's own dumped records are gone,
+    /// but dumps fired after re-homing follow the line table and land
+    /// here — and anything still resident in a replica Logging Unit is
+    /// strictly newer than any dumped record (dumps clear the logs they
+    /// save), so the fallback only fills genuinely missing words.
+    fn rebuild_mn(&mut self, mn: MnId) {
+        let Some(ctrl) = self.recovery.as_ref() else { return };
+        let Some(rb) = ctrl.rebuilds.get(&mn) else { return };
+        let lines = rb.lines.clone();
+        let mut per_line: FxHashMap<Line, Vec<VersionList>> = FxHashMap::default();
+        for lists in rb.responses.values() {
+            for (l, v) in lists {
+                per_line.entry(*l).or_default().push(v.clone());
+            }
+        }
+        for line in lines {
+            let lid = self.lines.intern(line);
+            let slot = self.lines.mn_slot(lid);
+            let lists: Vec<&VersionList> = per_line
+                .get(&line)
+                .map(|v| v.iter().collect())
+                .unwrap_or_default();
+            // the `failed` argument only filters select_version's own
+            // fallback, which is empty here, so any CN id is inert
+            let selected = select_version(line, 0, &lists, &[]);
+            let mut mask = selected.as_ref().map(|rl| rl.mask).unwrap_or(0);
+            let mut words = selected.as_ref().map(|rl| rl.words).unwrap_or([0; 16]);
+            let mut provenance = selected
+                .as_ref()
+                .map(|rl| rl.provenance)
+                .unwrap_or([None; 16]);
+            // Survivor's dumped-log fallback, latest *arrival* first.
+            // Arrival order is exact for a single writer (one dump owner
+            // ⇒ one chunk stream in log order) and for writers whose
+            // commits straddle a dump tick; only different writers
+            // dumping within the same period can invert it — there is no
+            // protocol-visible total order across writers in dumped
+            // records (ts and repl_seq are per-writer counters), so the
+            // pick is deterministic and the oracle reports it if wrong.
+            let fallback = self.dirs[mn].mn_log_latest(line);
+            let mut used_mn_log = false;
+            for w in 0..16u8 {
+                if mask & (1 << w) == 0 {
+                    if let Some(r) = fallback.iter().find(|r| r.word == w) {
+                        mask |= 1 << w;
+                        words[w as usize] = r.value;
+                        provenance[w as usize] = Some((r.req.cn, r.repl_seq));
+                        used_mn_log = true;
+                    }
+                }
+            }
+            // one mutually-exclusive bucket per line (the scenario-sweep
+            // "recovered" column sums the buckets)
+            if self.rebuilt_counted.insert(line) {
+                if mask == 0 {
+                    // nothing logged anywhere: memory stays zeroed — only
+                    // consistent if nothing was ever committed to the line
+                    self.stats.recovery.rebuilt_empty += 1;
+                } else if selected.is_some() {
+                    self.stats.recovery.rebuilt_from_logs += 1;
+                } else {
+                    debug_assert!(used_mn_log);
+                    self.stats.recovery.recovered_from_mn_logs += 1;
+                }
+            }
+            let out = self.dirs[mn].recovery_apply(line, slot, mask, &words);
+            let now = self.q.now();
+            for (d, m) in out {
+                self.send(now + d, m);
+            }
+            let mem = self.dirs[mn].mem_words(slot);
+            for w in 0..16u8 {
+                let ok =
+                    self.oracle
+                        .verify_word(lid, w, mem[w as usize], provenance[w as usize]);
+                if !ok {
+                    self.stats.recovery.inconsistencies += 1;
+                } else if let Some((acn, aseq)) = provenance[w as usize] {
+                    self.oracle
+                        .on_recovery_applied(lid, w, mem[w as usize], acn, aseq);
+                }
+            }
+        }
+    }
+
+    /// A replica CN's Logging Unit runs Algorithm 2.  `rebuild` rides
+    /// along so the answering MN can route the response to the right
+    /// bookkeeping (a mixed round has both repairs and rebuilds open).
     pub(crate) fn on_fetch_latest_vers(
         &mut self,
         cn: CnId,
         from_mn: MnId,
         lines: Vec<Line>,
         epoch: u64,
+        rebuild: bool,
     ) {
         let now = self.q.now();
         let pairs: Vec<(Line, crate::mem::LineId)> = lines
@@ -447,7 +817,7 @@ impl Cluster {
             Message {
                 src: NodeId::Cn(cn),
                 dst: NodeId::Mn(from_mn),
-                kind: MsgKind::FetchLatestVersResp { from: cn, results, epoch },
+                kind: MsgKind::FetchLatestVersResp { from: cn, results, epoch, rebuild },
             },
         );
     }
@@ -458,20 +828,31 @@ impl Cluster {
         from: CnId,
         results: Vec<VersionList>,
         epoch: u64,
+        rebuild: bool,
     ) {
         let done = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
             if ctrl.epoch != epoch {
                 return; // aborted round
             }
-            let Some(rep) = ctrl.repairs.get_mut(&mn) else { return };
             let map: FxHashMap<Line, VersionList> =
                 results.into_iter().map(|v| (v.line, v)).collect();
-            rep.responses.insert(from, map);
-            rep.responses.len() >= rep.expected.len()
+            if rebuild {
+                let Some(rb) = ctrl.rebuilds.get_mut(&mn) else { return };
+                rb.responses.insert(from, map);
+                rb.responses.len() >= rb.expected.len()
+            } else {
+                let Some(rep) = ctrl.repairs.get_mut(&mn) else { return };
+                rep.responses.insert(from, map);
+                rep.responses.len() >= rep.expected.len()
+            }
         };
         if done {
-            self.repair_mn(mn);
+            if rebuild {
+                self.rebuild_mn(mn);
+            } else {
+                self.repair_mn(mn);
+            }
             self.finish_mn_repair(mn, epoch);
         }
     }
@@ -567,20 +948,26 @@ impl Cluster {
         );
     }
 
-    pub(crate) fn on_init_recov_resp(&mut self, _cm_cn: CnId, from_mn: MnId, epoch: u64) {
-        let now = self.q.now();
+    // ack identity (`_from_mn`) is implicit in the 1:1 req/resp pairing
+    pub(crate) fn on_init_recov_resp(&mut self, _cm_cn: CnId, _from_mn: MnId, epoch: u64) {
         let (all_in, cm_cn) = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
             if ctrl.epoch != epoch || ctrl.complete {
                 return;
             }
-            ctrl.pending_mns.remove(&from_mn);
-            (ctrl.pending_mns.is_empty(), ctrl.cm_cn)
+            ctrl.pending_mn_acks = ctrl.pending_mn_acks.saturating_sub(1);
+            (ctrl.pending_mn_acks == 0, ctrl.cm_cn)
         };
         if !all_in {
             return;
         }
-        // ascending CN order (see start_recovery_round)
+        self.broadcast_recov_end(cm_cn, epoch);
+    }
+
+    /// Phase 3: every MN finished its repair/rebuild work — tell the CNs
+    /// to resume (ascending CN order, see start_recovery_round).
+    fn broadcast_recov_end(&mut self, cm_cn: CnId, epoch: u64) {
+        let now = self.q.now();
         let live: Vec<CnId> = self.live_cns().collect();
         for &c in &live {
             self.stats.recovery.count(RecoveryMsg::RecovEnd);
@@ -608,6 +995,10 @@ impl Cluster {
         let now = self.q.now();
         self.cns[cn].paused = false;
         self.cns[cn].quiescing = false;
+        // re-issue the requests a dead MN swallowed: the lines re-homed
+        // and their rebuild completed with this round, so the new home can
+        // answer now (re-sending earlier would read unrebuilt memory)
+        self.flush_mn_reissues(cn);
         for local in 0..self.cfg.cores_per_cn {
             let id = self.core_id(cn, local);
             if self.cores[id].block == Block::Paused {
@@ -632,7 +1023,7 @@ impl Cluster {
 
     pub(crate) fn on_recov_end_resp(&mut self, _cm_cn: CnId, from: CnId, epoch: u64) {
         let now = self.q.now();
-        let covered = {
+        let (covered, covered_mns) = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
             if ctrl.epoch != epoch || ctrl.complete {
                 return;
@@ -642,16 +1033,101 @@ impl Cluster {
                 return;
             }
             ctrl.complete = true;
-            ctrl.failed.clone()
+            (ctrl.failed.clone(), ctrl.failed_mns.clone())
         };
         for f in &covered {
             self.unrecovered.remove(f);
         }
-        self.failures_recovered += covered.len();
+        for m in &covered_mns {
+            self.unrecovered_mns.remove(m);
+            self.mn_census.remove(m);
+        }
+        self.failures_recovered += covered.len() + covered_mns.len();
         self.stats.recovery.failed_cns.extend(covered);
+        self.stats.recovery.failed_mns.extend(covered_mns);
         self.stats.recovery.rounds += 1;
         self.stats.recovery.happened = true;
         self.stats.recovery.completed_at = now;
         self.stats.recovery.consistent = self.stats.recovery.inconsistencies == 0;
+    }
+
+    /// Re-send the coherence requests a dead MN swallowed for `cn`, now
+    /// that the round's rebuild has completed.  Only requests that are
+    /// still genuinely open re-issue (the line may have been granted by
+    /// other means since — e.g. a queued request the rebuild released).
+    fn flush_mn_reissues(&mut self, cn: CnId) {
+        let Some(items) = self.mn_reissue.remove(&cn) else { return };
+        let now = self.q.now();
+        for r in items {
+            match r {
+                Reissue::Rds(line) => {
+                    let lid = self.lines.intern(line);
+                    if self.cns[cn].mshr_waiters(lid) == 0 {
+                        continue;
+                    }
+                    let mn = self.lines.home_mn(lid);
+                    self.send(
+                        now,
+                        Message {
+                            src: NodeId::Cn(cn),
+                            dst: NodeId::Mn(mn),
+                            kind: MsgKind::RdS {
+                                line,
+                                req: ReqId { cn, core: 0 },
+                            },
+                        },
+                    );
+                }
+                Reissue::Rdx(line) => {
+                    let lid = self.lines.intern(line);
+                    if !self.cns[cn].rdx_contains(lid) || self.caches[cn].owns(lid) {
+                        continue;
+                    }
+                    let mn = self.lines.home_mn(lid);
+                    self.send(
+                        now,
+                        Message {
+                            src: NodeId::Cn(cn),
+                            dst: NodeId::Mn(mn),
+                            kind: MsgKind::RdX {
+                                line,
+                                req: ReqId { cn, core: 0 },
+                                prefetch: false,
+                            },
+                        },
+                    );
+                }
+                Reissue::Wt(id, rec_line) => {
+                    let (line, mask, words, still_stuck) = {
+                        let Some(h) = self.cores[id].sb.head() else { continue };
+                        (
+                            h.line,
+                            h.mask,
+                            h.words,
+                            h.line == rec_line && h.remote && h.committing && !h.wt_acked,
+                        )
+                    };
+                    if !still_stuck {
+                        continue;
+                    }
+                    let lid = self.lines.intern(line);
+                    let mn = self.lines.home_mn(lid);
+                    let local = id % self.cfg.cores_per_cn;
+                    self.send(
+                        now,
+                        Message {
+                            src: NodeId::Cn(cn),
+                            dst: NodeId::Mn(mn),
+                            kind: MsgKind::WtStore {
+                                line,
+                                req: ReqId { cn, core: local },
+                                mask,
+                                words,
+                            },
+                        },
+                    );
+                }
+            }
+        }
     }
 }

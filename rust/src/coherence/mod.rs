@@ -489,6 +489,34 @@ impl Directory {
         self.pop_pending(line, slot)
     }
 
+    /// A line just re-homed here from a dead MN: park it so requests that
+    /// race ahead of the rebuild queue behind `AwaitRecovery` instead of
+    /// being granted from zeroed, not-yet-reconstructed memory.
+    pub fn park_for_rebuild(&mut self, line: Line, slot: u32) {
+        self.ensure(slot, line);
+        self.entries[slot as usize].busy = Some(Txn::AwaitRecovery);
+    }
+
+    /// Reconstruct a re-homed line's directory entry + memory from a
+    /// surviving cache copy: `owner`/`sharers` mirror the live CNs'
+    /// cached states, `words` is the copy's full line image.  Unparks the
+    /// line; deferred requests restart, so the output must be routed.
+    pub fn rebuild_entry(
+        &mut self,
+        line: Line,
+        slot: u32,
+        owner: Option<CnId>,
+        sharers: u32,
+        words: &LineWords,
+    ) -> DirOut {
+        self.write_mem(slot, line, 0xFFFF, words);
+        let e = &mut self.entries[slot as usize];
+        e.owner = owner;
+        e.sharers = sharers;
+        e.busy = None;
+        self.pop_pending(line, slot)
+    }
+
     /// Unblock transactions stuck waiting on acks from the failed CN.
     ///
     /// Two cases, with very different semantics:
@@ -744,6 +772,32 @@ mod tests {
         // repair releases both queued requests in FIFO order
         let out = d.recovery_apply(line(5), slot(5), 1, &[9; 16]);
         assert!(out.iter().any(|(_, m)| m.dst == NodeId::Cn(1)));
+    }
+
+    #[test]
+    fn parked_rebuild_lines_defer_until_rebuilt() {
+        let mut d = dir();
+        d.park_for_rebuild(line(4), slot(4));
+        // requests racing ahead of the rebuild must not be served from
+        // zeroed memory
+        assert!(d.on_rds(line(4), slot(4), req(1)).is_empty(), "deferred");
+        assert!(d.on_rdx(line(4), slot(4), req(2), false).is_empty(), "deferred");
+        // rebuild from a surviving cache copy: CN 3 owned it in M
+        let out = d.rebuild_entry(line(4), slot(4), Some(3), 0, &[42; 16]);
+        assert_eq!(d.mem_words(slot(4))[0], 42);
+        // the deferred RdS restarts against the reconstructed owner
+        assert!(out
+            .iter()
+            .any(|(_, m)| matches!(m.kind, MsgKind::Downgrade { .. }) && m.dst == NodeId::Cn(3)));
+    }
+
+    #[test]
+    fn rebuild_entry_reconstructs_sharers() {
+        let mut d = dir();
+        d.park_for_rebuild(line(6), slot(6));
+        d.rebuild_entry(line(6), slot(6), None, 0b101, &[7; 16]);
+        assert_eq!(d.dir_state(slot(6)), (None, 0b101));
+        assert_eq!(d.mem_words(slot(6))[15], 7);
     }
 
     #[test]

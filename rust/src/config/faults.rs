@@ -8,22 +8,60 @@
 //! replication factor `N_r` is exactly a claim about how many such
 //! failures the system survives).
 //!
+//! Three fault kinds are modeled (section V's failure model plus the
+//! fabric behaviours of the CXL Introduction paper):
+//! * `cn<N>@<time>` — fail-stop crash of a compute node;
+//! * `mn<N>@<time>` — fail-stop crash of a memory node: its directory,
+//!   memory, and resident dumped logs vanish; survivors re-home its lines
+//!   and rebuild state from the replica Logging Units;
+//! * `link:<node>@<from>*<factor>x..<until>` — one port's bandwidth and
+//!   hop latency degrade by `factor` for the window `[from, until)` — no
+//!   node dies, but quiesce timeouts and replication jitter tolerance are
+//!   stressed.
+//!
 //! Plans come from three places, all producing the same structure:
-//! * CLI / config file: `faults = cn0@12.5ms, cn3@20us` (bare numbers are
-//!   microseconds);
+//! * CLI / config file: `faults = cn0@12.5ms, mn2@5ms,
+//!   link:cn3@10us*4x..50us` (bare numbers are microseconds);
 //! * the scenario registry (`crate::scenarios`);
-//! * code, via [`FaultPlan::single_crash`] / [`FaultPlan::push_crash`].
+//! * code, via [`FaultPlan::single_crash`] / [`FaultPlan::push_crash`] /
+//!   [`FaultPlan::push_mn_crash`] / [`FaultPlan::push_link_degraded`].
 
-use super::CnId;
+use super::{CnId, MnId};
 use crate::sim::time::{fmt_ps, Ps};
 
-/// What fails.  CN fail-stop crashes are the only kind the simulator
-/// injects today; the enum is the extension point for MN and link faults
-/// (parse rejects them explicitly until they are modeled).
+/// A port of the fabric: one compute node or one memory node.  Kept in
+/// `config` (rather than reusing `proto::NodeId`) so the config layer
+/// stays dependency-free; the fabric maps it onto its port space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultNode {
+    Cn(CnId),
+    Mn(MnId),
+}
+
+impl FaultNode {
+    fn render(self) -> String {
+        match self {
+            FaultNode::Cn(c) => format!("cn{c}"),
+            FaultNode::Mn(m) => format!("mn{m}"),
+        }
+    }
+}
+
+/// What fails.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultKind {
     /// Fail-stop crash of a compute node (section V's failure model).
     CnCrash { cn: CnId },
+    /// Fail-stop crash of a memory node: directory + DRAM log chains
+    /// vanish; lines re-home and rebuild from replica Logging Units.
+    MnCrash { mn: MnId },
+    /// One port's bandwidth/latency degrade by `factor` from the event
+    /// time until `until` (fabric-level fault; nothing dies).
+    LinkDegraded {
+        node: FaultNode,
+        factor: u64,
+        until: Ps,
+    },
 }
 
 /// One timed fault.
@@ -63,6 +101,22 @@ impl FaultPlan {
         });
     }
 
+    /// Append an MN crash.
+    pub fn push_mn_crash(&mut self, mn: MnId, at: Ps) {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::MnCrash { mn },
+        });
+    }
+
+    /// Append a link-degradation window `[at, until)` on `node`'s port.
+    pub fn push_link_degraded(&mut self, node: FaultNode, at: Ps, factor: u64, until: Ps) {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::LinkDegraded { node, factor, until },
+        });
+    }
+
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -79,38 +133,76 @@ impl FaultPlan {
     pub fn crashed_cns(&self) -> Vec<CnId> {
         self.events
             .iter()
-            .map(|e| match e.kind {
-                FaultKind::CnCrash { cn } => cn,
+            .filter_map(|e| match e.kind {
+                FaultKind::CnCrash { cn } => Some(cn),
+                _ => None,
             })
             .collect()
     }
 
-    /// First event, if any, as `(cn, at)` — the legacy single-crash view.
+    /// MNs crashed anywhere in the plan, in event order.
+    pub fn crashed_mns(&self) -> Vec<MnId> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::MnCrash { mn } => Some(mn),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Number of fail-stop crash events (CN + MN) — the failures the
+    /// recovery machinery must cover before a run settles.  Link
+    /// degradations are timing faults: nothing to recover.
+    pub fn crash_count(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.kind,
+                    FaultKind::CnCrash { .. } | FaultKind::MnCrash { .. }
+                )
+            })
+            .count()
+    }
+
+    /// First CN crash, if any, as `(cn, at)` — the legacy single-crash
+    /// view.
     pub fn first_crash(&self) -> Option<(CnId, Ps)> {
-        self.events.first().map(|e| match e.kind {
-            FaultKind::CnCrash { cn } => (cn, e.at),
+        self.events.iter().find_map(|e| match e.kind {
+            FaultKind::CnCrash { cn } => Some((cn, e.at)),
+            _ => None,
         })
     }
 
-    /// Legacy `crash_cn=N` override: retarget the first event (creating it
-    /// at the paper's default 12.5 ms if the plan is empty).
+    /// Legacy `crash_cn=N` override: retarget the first CN crash (creating
+    /// it at the paper's default 12.5 ms if the plan has none).
     pub fn set_first_cn(&mut self, cn: CnId) {
-        match self.events.first_mut() {
+        match self
+            .events
+            .iter_mut()
+            .find(|e| matches!(e.kind, FaultKind::CnCrash { .. }))
+        {
             Some(e) => e.kind = FaultKind::CnCrash { cn },
             None => self.push_crash(cn, DEFAULT_CRASH_AT),
         }
     }
 
-    /// Legacy `crash_at_us=T` override: retime the first event (creating a
-    /// CN0 crash if the plan is empty).
+    /// Legacy `crash_at_us=T` override: retime the first CN crash
+    /// (creating a CN0 crash if the plan has none).
     pub fn set_first_at(&mut self, at: Ps) {
-        match self.events.first_mut() {
+        match self
+            .events
+            .iter_mut()
+            .find(|e| matches!(e.kind, FaultKind::CnCrash { .. }))
+        {
             Some(e) => e.at = at,
             None => self.push_crash(0, at),
         }
     }
 
-    /// Parse `cn0@12.5ms,cn3@20us` (bare times are microseconds).
+    /// Parse `cn0@12.5ms, mn2@5ms, link:cn3@10us*4x..50us` (bare times
+    /// are microseconds).
     pub fn parse(s: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for tok in s.split(',') {
@@ -118,54 +210,129 @@ impl FaultPlan {
             if tok.is_empty() {
                 continue;
             }
+            if let Some(rest) = tok.strip_prefix("link:") {
+                let (node, spec) = rest
+                    .split_once('@')
+                    .ok_or_else(|| format!("fault '{tok}': expected link:<node>@<from>*<f>x..<until>"))?;
+                let node = parse_node(node.trim())
+                    .ok_or_else(|| format!("fault '{tok}': bad link node (cn<N> or mn<N>)"))?;
+                let (from, rest) = spec
+                    .split_once('*')
+                    .ok_or_else(|| format!("fault '{tok}': expected <from>*<f>x..<until>"))?;
+                let (factor, until) = rest
+                    .split_once("x..")
+                    .ok_or_else(|| format!("fault '{tok}': expected <f>x..<until>"))?;
+                let factor: u64 = factor
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("fault '{tok}': bad degradation factor"))?;
+                plan.push_link_degraded(node, parse_time(from)?, factor, parse_time(until)?);
+                continue;
+            }
             let (node, at) = tok
                 .split_once('@')
-                .ok_or_else(|| format!("fault '{tok}': expected cn<N>@<time>"))?;
-            let node = node.trim().to_ascii_lowercase();
-            let Some(id) = node.strip_prefix("cn") else {
-                return Err(format!(
-                    "fault '{tok}': only CN crashes are supported (cn<N>@<time>)"
-                ));
-            };
-            let cn: CnId = id
-                .trim()
-                .parse()
-                .map_err(|_| format!("fault '{tok}': bad CN index"))?;
-            plan.push_crash(cn, parse_time(at)?);
+                .ok_or_else(|| format!("fault '{tok}': expected <node>@<time>"))?;
+            match parse_node(node.trim()) {
+                Some(FaultNode::Cn(cn)) => plan.push_crash(cn, parse_time(at)?),
+                Some(FaultNode::Mn(mn)) => plan.push_mn_crash(mn, parse_time(at)?),
+                None => {
+                    return Err(format!(
+                        "fault '{tok}': expected cn<N>@<time>, mn<N>@<time>, or \
+                         link:<node>@<from>*<f>x..<until>"
+                    ))
+                }
+            }
         }
         Ok(plan)
     }
 
-    /// Check the plan against a cluster size: every CN in range, times
-    /// non-decreasing, no CN crashing twice, and at least one survivor.
-    pub fn validate(&self, n_cns: usize) -> Result<(), String> {
+    /// Check the plan against a cluster shape: every node in range, times
+    /// non-decreasing, no node crashing twice, link windows sane and
+    /// non-overlapping per port, and at least one survivor *per kind* —
+    /// the old check compared the total event count against `n_cns`,
+    /// which is wrong the moment non-CN events exist.
+    pub fn validate(&self, n_cns: usize, n_mns: usize) -> Result<(), String> {
         let mut last: Ps = 0;
-        let mut seen = vec![false; n_cns];
+        let mut seen_cn = vec![false; n_cns];
+        let mut seen_mn = vec![false; n_mns];
+        let mut cn_crashes = 0usize;
+        let mut mn_crashes = 0usize;
+        // link windows per node, for the overlap check
+        let mut windows: Vec<(FaultNode, Ps, Ps)> = Vec::new();
         for e in &self.events {
-            let FaultKind::CnCrash { cn } = e.kind;
-            if cn >= n_cns {
-                return Err(format!("fault cn {cn} out of range (n_cns = {n_cns})"));
+            match e.kind {
+                FaultKind::CnCrash { cn } => {
+                    if cn >= n_cns {
+                        return Err(format!("fault cn {cn} out of range (n_cns = {n_cns})"));
+                    }
+                    if seen_cn[cn] {
+                        return Err(format!("cn {cn} crashes twice in the fault plan"));
+                    }
+                    seen_cn[cn] = true;
+                    cn_crashes += 1;
+                }
+                FaultKind::MnCrash { mn } => {
+                    if mn >= n_mns {
+                        return Err(format!("fault mn {mn} out of range (n_mns = {n_mns})"));
+                    }
+                    if seen_mn[mn] {
+                        return Err(format!("mn {mn} crashes twice in the fault plan"));
+                    }
+                    seen_mn[mn] = true;
+                    mn_crashes += 1;
+                }
+                FaultKind::LinkDegraded { node, factor, until } => {
+                    match node {
+                        FaultNode::Cn(c) if c >= n_cns => {
+                            return Err(format!("link fault cn {c} out of range (n_cns = {n_cns})"))
+                        }
+                        FaultNode::Mn(m) if m >= n_mns => {
+                            return Err(format!("link fault mn {m} out of range (n_mns = {n_mns})"))
+                        }
+                        _ => {}
+                    }
+                    if factor == 0 {
+                        return Err("link degradation factor must be >= 1".into());
+                    }
+                    if until <= e.at {
+                        return Err(format!(
+                            "link window on {} must end after it starts ({} ..= {})",
+                            node.render(),
+                            fmt_ps(e.at),
+                            fmt_ps(until)
+                        ));
+                    }
+                    for &(n, f, u) in &windows {
+                        if n == node && e.at < u && f < until {
+                            return Err(format!(
+                                "overlapping link windows on {}",
+                                node.render()
+                            ));
+                        }
+                    }
+                    windows.push((node, e.at, until));
+                }
             }
-            if seen[cn] {
-                return Err(format!("cn {cn} crashes twice in the fault plan"));
-            }
-            seen[cn] = true;
             if e.at < last {
                 return Err(format!(
-                    "fault plan times must be non-decreasing (cn {cn} at {} after {})",
+                    "fault plan times must be non-decreasing ({} after {})",
                     fmt_ps(e.at),
                     fmt_ps(last)
                 ));
             }
             last = e.at;
         }
-        if !self.events.is_empty() && self.events.len() >= n_cns {
+        if cn_crashes > 0 && cn_crashes >= n_cns {
             return Err("fault plan must leave at least one CN alive".into());
+        }
+        if mn_crashes > 0 && mn_crashes >= n_mns {
+            return Err("fault plan must leave at least one MN alive".into());
         }
         Ok(())
     }
 
-    /// Human-readable one-liner, e.g. `cn0@12.500 ms, cn3@20.000 us`.
+    /// Human-readable one-liner that round-trips through [`Self::parse`],
+    /// e.g. `cn0@12.500 ms, mn2@5.000 ms, link:cn3@10.000 us*4x..50.000 us`.
     pub fn summary(&self) -> String {
         if self.events.is_empty() {
             return "none".to_string();
@@ -174,10 +341,29 @@ impl FaultPlan {
             .iter()
             .map(|e| match e.kind {
                 FaultKind::CnCrash { cn } => format!("cn{cn}@{}", fmt_ps(e.at)),
+                FaultKind::MnCrash { mn } => format!("mn{mn}@{}", fmt_ps(e.at)),
+                FaultKind::LinkDegraded { node, factor, until } => format!(
+                    "link:{}@{}*{factor}x..{}",
+                    node.render(),
+                    fmt_ps(e.at),
+                    fmt_ps(until)
+                ),
             })
             .collect::<Vec<_>>()
             .join(", ")
     }
+}
+
+/// Parse a `cn<N>` / `mn<N>` node name.
+fn parse_node(s: &str) -> Option<FaultNode> {
+    let s = s.to_ascii_lowercase();
+    if let Some(id) = s.strip_prefix("cn") {
+        return id.trim().parse().ok().map(FaultNode::Cn);
+    }
+    if let Some(id) = s.strip_prefix("mn") {
+        return id.trim().parse().ok().map(FaultNode::Mn);
+    }
+    None
 }
 
 /// Parse a time with an optional `ms`/`us`/`ns`/`ps` suffix (bare numbers
@@ -217,7 +403,7 @@ mod tests {
         assert_eq!(p.crashed_cns(), vec![0, 3]);
         assert_eq!(p.events()[0].at, ms(12) + us(500));
         assert_eq!(p.events()[1].at, ms(20));
-        assert!(p.validate(16).is_ok());
+        assert!(p.validate(16, 16).is_ok());
     }
 
     #[test]
@@ -230,34 +416,114 @@ mod tests {
     }
 
     #[test]
+    fn parses_mn_crashes() {
+        let p = FaultPlan::parse("mn2@5ms").unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.crashed_mns(), vec![2]);
+        assert_eq!(p.crashed_cns(), Vec::<usize>::new());
+        assert_eq!(p.crash_count(), 1);
+        assert_eq!(p.events()[0].at, ms(5));
+        assert!(p.validate(16, 16).is_ok());
+    }
+
+    #[test]
+    fn parses_link_degradation_windows() {
+        let p = FaultPlan::parse("link:cn3@10us*4x..50us").unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.crash_count(), 0, "link faults are not crashes");
+        match p.events()[0].kind {
+            FaultKind::LinkDegraded { node, factor, until } => {
+                assert_eq!(node, FaultNode::Cn(3));
+                assert_eq!(factor, 4);
+                assert_eq!(until, us(50));
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        assert_eq!(p.events()[0].at, us(10));
+        assert!(p.validate(16, 16).is_ok());
+        // MN ports degrade too
+        let q = FaultPlan::parse("link:mn1@5us*2x..9us").unwrap();
+        assert!(matches!(
+            q.events()[0].kind,
+            FaultKind::LinkDegraded { node: FaultNode::Mn(1), factor: 2, .. }
+        ));
+    }
+
+    #[test]
+    fn mixed_kind_plans_parse_in_order() {
+        let p = FaultPlan::parse("cn0@10us, mn3@20us, link:cn1@25us*8x..90us").unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.crash_count(), 2);
+        assert_eq!(p.crashed_cns(), vec![0]);
+        assert_eq!(p.crashed_mns(), vec![3]);
+        assert!(p.validate(16, 16).is_ok());
+    }
+
+    #[test]
     fn rejects_malformed_tokens() {
         assert!(FaultPlan::parse("cn0").is_err(), "missing @time");
-        assert!(FaultPlan::parse("mn0@5us").is_err(), "MN faults not modeled");
+        assert!(FaultPlan::parse("gpu0@5us").is_err(), "unknown node kind");
         assert!(FaultPlan::parse("cnx@5us").is_err(), "bad CN index");
+        assert!(FaultPlan::parse("mnx@5us").is_err(), "bad MN index");
         assert!(FaultPlan::parse("cn0@fast").is_err(), "bad time");
         assert!(FaultPlan::parse("cn0@-5us").is_err(), "negative time");
+        assert!(FaultPlan::parse("link:cn0@5us").is_err(), "missing window");
+        assert!(FaultPlan::parse("link:cn0@5us*x..9us").is_err(), "bad factor");
+        assert!(FaultPlan::parse("link:zz0@5us*2x..9us").is_err(), "bad node");
     }
 
     #[test]
     fn validate_rejects_out_of_range_and_unsorted_and_dup() {
         let p = FaultPlan::parse("cn9@5us").unwrap();
-        assert!(p.validate(8).is_err(), "cn out of range");
+        assert!(p.validate(8, 8).is_err(), "cn out of range");
+        let p = FaultPlan::parse("mn9@5us").unwrap();
+        assert!(p.validate(16, 8).is_err(), "mn out of range");
         let p = FaultPlan::parse("cn0@50us,cn1@20us").unwrap();
-        assert!(p.validate(8).is_err(), "unsorted times");
+        assert!(p.validate(8, 8).is_err(), "unsorted times");
         let p = FaultPlan::parse("cn0@20us,cn0@50us").unwrap();
-        assert!(p.validate(8).is_err(), "same CN twice");
+        assert!(p.validate(8, 8).is_err(), "same CN twice");
+        let p = FaultPlan::parse("mn0@20us,mn0@50us").unwrap();
+        assert!(p.validate(8, 8).is_err(), "same MN twice");
         let p = FaultPlan::parse("cn0@1us,cn1@2us").unwrap();
-        assert!(p.validate(2).is_err(), "no survivor left");
-        assert!(p.validate(3).is_ok());
+        assert!(p.validate(2, 8).is_err(), "no CN survivor left");
+        assert!(p.validate(3, 8).is_ok());
+    }
+
+    #[test]
+    fn survivor_check_counts_only_crashes_of_each_kind() {
+        // the old check compared total event count against n_cns: two CN
+        // crashes + two non-CN events on a 4-CN cluster must still be valid
+        let p =
+            FaultPlan::parse("cn0@1us,cn1@2us,mn0@3us,link:cn2@4us*2x..9us").unwrap();
+        assert_eq!(p.len(), 4);
+        assert!(p.validate(4, 4).is_ok(), "{:?}", p.validate(4, 4));
+        // and MN survivors are checked against n_mns, not n_cns
+        let p = FaultPlan::parse("mn0@1us,mn1@2us").unwrap();
+        assert!(p.validate(16, 2).is_err(), "no MN survivor left");
+        assert!(p.validate(16, 3).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_link_windows() {
+        let p = FaultPlan::parse("link:cn0@50us*2x..10us").unwrap();
+        assert!(p.validate(8, 8).is_err(), "window ends before it starts");
+        let mut p = FaultPlan::default();
+        p.push_link_degraded(FaultNode::Cn(0), us(10), 0, us(20));
+        assert!(p.validate(8, 8).is_err(), "zero factor");
+        let p = FaultPlan::parse("link:cn0@10us*2x..30us,link:cn0@20us*4x..40us").unwrap();
+        assert!(p.validate(8, 8).is_err(), "overlapping windows on one port");
+        let p = FaultPlan::parse("link:cn0@10us*2x..30us,link:cn1@20us*4x..40us").unwrap();
+        assert!(p.validate(8, 8).is_ok(), "different ports may overlap");
     }
 
     #[test]
     fn empty_plan_is_valid_and_empty() {
         let p = FaultPlan::parse("").unwrap();
         assert!(p.is_empty());
-        assert!(p.validate(4).is_ok());
+        assert!(p.validate(4, 4).is_ok());
         assert_eq!(p.summary(), "none");
         assert_eq!(p.first_crash(), None);
+        assert_eq!(p.crash_count(), 0);
     }
 
     #[test]
@@ -270,11 +536,20 @@ mod tests {
         let mut q = FaultPlan::default();
         q.set_first_at(us(7));
         assert_eq!(q.first_crash(), Some((0, us(7))));
+        // the legacy keys target the first *CN* crash, skipping MN events
+        let mut r = FaultPlan::parse("mn1@5us,cn2@9us").unwrap();
+        r.set_first_cn(4);
+        assert_eq!(r.first_crash(), Some((4, us(9))));
+        assert_eq!(r.crashed_mns(), vec![1]);
     }
 
     #[test]
     fn summary_round_trips_through_parse() {
         let p = FaultPlan::parse("cn2@30us,cn5@1.5ms").unwrap();
+        let q = FaultPlan::parse(&p.summary()).unwrap();
+        assert_eq!(p, q);
+        // the new kinds round-trip too
+        let p = FaultPlan::parse("cn0@10us,mn2@5ms,link:cn3@10us*4x..50us").unwrap();
         let q = FaultPlan::parse(&p.summary()).unwrap();
         assert_eq!(p, q);
     }

@@ -4,7 +4,7 @@
 pub mod faults;
 pub mod parse;
 
-pub use faults::{FaultEvent, FaultKind, FaultPlan};
+pub use faults::{FaultEvent, FaultKind, FaultNode, FaultPlan};
 pub use parse::{apply_file, apply_override};
 
 use crate::sim::time::{self, Ps};
@@ -246,7 +246,7 @@ impl SimConfig {
         if self.link_bw_gbps == 0 {
             return Err("link bandwidth must be nonzero".into());
         }
-        self.faults.validate(self.n_cns)?;
+        self.faults.validate(self.n_cns, self.n_mns)?;
         Ok(())
     }
 }

@@ -10,11 +10,22 @@
 //! (section II-A), and ReCXL's logical timestamps must cope (section IV-C).
 //!
 //! The switch also owns the failure-detection state ReCXL adds: one
-//! `Viral_Status` bit per connected CN (section V-A).  Once a CN's bit is
-//! set the switch drops traffic to it and never responds on its behalf —
-//! ReCXL's goal is correct execution, not just isolation.
+//! `Viral_Status` bit per connected port — CN *and* MN (section V-A; the
+//! CXL Introduction paper's viral containment is a fabric property, not a
+//! CPU one).  Once a port's bit is set the switch drops traffic to it and
+//! never responds on its behalf — ReCXL's goal is correct execution, not
+//! just isolation.
+//!
+//! The switch also carries a **per-port degradation schedule**
+//! (`FaultKind::LinkDegraded`): within a window `[from, until)` one
+//! port's serialization *and* hop latency stretch by an integer factor —
+//! the partial-fabric-failure mode that "CXL Shared Memory Programming"
+//! reports as the common case.  Nothing dies; the timing machinery
+//! (quiesce deadlines, replication jitter tolerance) must absorb it.
+//! Schedules are installed from the validated fault plan at construction,
+//! so degradation is deterministic and needs no events.
 
-use crate::config::{CnId, SimConfig};
+use crate::config::{CnId, FaultKind, FaultNode, MnId, SimConfig};
 use crate::proto::{Message, NodeId};
 use crate::sim::rng::mix32;
 use crate::sim::time::Ps;
@@ -27,6 +38,14 @@ struct Link {
     bytes: u64,
 }
 
+/// One degradation window on a port: `[from, until)` at `factor`x.
+#[derive(Debug, Clone, Copy)]
+struct Degrade {
+    from: Ps,
+    until: Ps,
+    factor: u64,
+}
+
 /// The switch + links of the cluster.
 pub struct Fabric {
     up: Vec<Link>,   // node -> switch, indexed by port
@@ -36,8 +55,11 @@ pub struct Fabric {
     bw_gbps: u64,
     jitter: Ps,
     jitter_salt: u32,
+    /// Viral_Status per port (CN ports first, then MN ports).
     viral: Vec<bool>,
-    /// Messages dropped because the destination CN is marked viral.
+    /// Degradation windows per port (tiny: scanned linearly).
+    degrade: Vec<Vec<Degrade>>,
+    /// Messages dropped because the destination port is marked viral.
     pub dropped_to_dead: u64,
 }
 
@@ -51,6 +73,20 @@ pub enum Delivery {
 impl Fabric {
     pub fn new(cfg: &SimConfig) -> Self {
         let ports = cfg.n_cns + cfg.n_mns;
+        let mut degrade: Vec<Vec<Degrade>> = vec![Vec::new(); ports];
+        for e in cfg.faults.events() {
+            if let FaultKind::LinkDegraded { node, factor, until } = e.kind {
+                let port = match node {
+                    FaultNode::Cn(c) => c,
+                    FaultNode::Mn(m) => cfg.n_cns + m,
+                };
+                degrade[port].push(Degrade {
+                    from: e.at,
+                    until,
+                    factor,
+                });
+            }
+        }
         Fabric {
             up: vec![Link::default(); ports],
             down: vec![Link::default(); ports],
@@ -59,7 +95,8 @@ impl Fabric {
             bw_gbps: cfg.link_bw_gbps,
             jitter: cfg.repl_jitter_ps,
             jitter_salt: cfg.seed as u32,
-            viral: vec![false; cfg.n_cns],
+            viral: vec![false; ports],
+            degrade,
             dropped_to_dead: 0,
         }
     }
@@ -75,42 +112,64 @@ impl Fabric {
         (bytes as u64 * 1_000).div_ceil(self.bw_gbps)
     }
 
+    /// Degradation factor in force on `port` at time `t` (1 = healthy).
+    #[inline]
+    fn factor(&self, port: usize, t: Ps) -> u64 {
+        for w in &self.degrade[port] {
+            if t >= w.from && t < w.until {
+                return w.factor;
+            }
+        }
+        1
+    }
+
     /// Set the Viral_Status bit for a CN (switch detected it unresponsive).
     pub fn set_viral(&mut self, cn: CnId) {
         self.viral[cn] = true;
+    }
+
+    /// Set the Viral_Status bit for an MN port (the memory node
+    /// fail-stopped; the switch stops routing to it).
+    pub fn set_viral_mn(&mut self, mn: MnId) {
+        let p = self.n_cns + mn;
+        self.viral[p] = true;
     }
 
     pub fn is_viral(&self, cn: CnId) -> bool {
         self.viral[cn]
     }
 
+    pub fn is_viral_mn(&self, mn: MnId) -> bool {
+        self.viral[self.n_cns + mn]
+    }
+
     /// Route `msg` at time `now`; returns its delivery time at `dst` and
-    /// records traffic, or `Dropped` if the destination is a dead CN.
+    /// records traffic, or `Dropped` if the destination port is dead.
     pub fn send(&mut self, now: Ps, msg: &Message, traffic: &mut TrafficStats) -> Delivery {
-        if let NodeId::Cn(c) = msg.dst {
-            if self.viral[c] {
-                self.dropped_to_dead += 1;
-                return Delivery::Dropped;
-            }
+        let src_port = self.port(msg.src);
+        let dst_port = self.port(msg.dst);
+        if self.viral[dst_port] {
+            self.dropped_to_dead += 1;
+            return Delivery::Dropped;
         }
         let bytes = msg.kind.wire_bytes();
         let s = self.ser(bytes);
-        let src_port = self.port(msg.src);
-        let dst_port = self.port(msg.dst);
 
+        let f_src = self.factor(src_port, now);
         let up = &mut self.up[src_port];
-        let up_done = up.busy_until.max(now) + s;
+        let up_done = up.busy_until.max(now) + s * f_src;
         up.busy_until = up_done;
         up.bytes += bytes as u64;
 
-        let at_switch = up_done + self.one_way;
+        let at_switch = up_done + self.one_way * f_src;
 
+        let f_dst = self.factor(dst_port, at_switch);
         let down = &mut self.down[dst_port];
-        let down_done = down.busy_until.max(at_switch) + s;
+        let down_done = down.busy_until.max(at_switch) + s * f_dst;
         down.busy_until = down_done;
         down.bytes += bytes as u64;
 
-        let mut arrive = down_done + self.one_way;
+        let mut arrive = down_done + self.one_way * f_dst;
         if self.jitter > 0 && msg.kind.reorderable() {
             // Deterministic per-message jitter: hash of (salt, src, dst,
             // payload size, time) — reproducible across runs.  The full
@@ -257,6 +316,65 @@ mod tests {
             (1..=3).any(|hi| jitter_at(base + ((hi as Ps) << 32)) != j0),
             "high timestamp bits must reach the jitter hash"
         );
+    }
+
+    #[test]
+    fn viral_mn_port_drops_traffic_but_other_mns_reachable() {
+        let c = cfg();
+        let mut f = Fabric::new(&c);
+        let mut t = TrafficStats::default();
+        f.set_viral_mn(2);
+        assert!(f.is_viral_mn(2));
+        assert!(!f.is_viral(2), "CN 2's port is distinct from MN 2's");
+        assert_eq!(f.send(0, &rds(0, 2), &mut t), Delivery::Dropped);
+        assert_eq!(f.dropped_to_dead, 1);
+        assert!(matches!(f.send(0, &rds(0, 3), &mut t), Delivery::At(_)));
+    }
+
+    #[test]
+    fn degraded_port_stretches_only_its_window() {
+        use crate::config::FaultPlan;
+        use crate::sim::time::us;
+        let mut c = cfg();
+        c.faults = FaultPlan::parse("link:cn0@10us*4x..20us").unwrap();
+        // 16 B @160 GB/s = 100 ps serialization, 100 ns one-way per hop
+        let latency = |t: Ps| {
+            let mut f = Fabric::new(&c);
+            let mut tr = TrafficStats::default();
+            let Delivery::At(a) = f.send(t, &rds(0, 0), &mut tr) else {
+                panic!()
+            };
+            a - t
+        };
+        let healthy = 100 + 100_000 + 100 + 100_000;
+        assert_eq!(latency(0), healthy, "before the window");
+        assert_eq!(
+            latency(us(15)),
+            4 * 100 + 4 * 100_000 + 100 + 100_000,
+            "inside the window the source hop pays 4x"
+        );
+        assert_eq!(latency(us(20)), healthy, "window end is exclusive");
+        assert_eq!(latency(us(25)), healthy, "after the window");
+    }
+
+    #[test]
+    fn degraded_destination_port_charges_the_down_hop() {
+        use crate::config::FaultPlan;
+        use crate::sim::time::us;
+        let mut c = cfg();
+        c.faults = FaultPlan::parse("link:mn0@10us*2x..1ms").unwrap();
+        let mut f = Fabric::new(&c);
+        let mut tr = TrafficStats::default();
+        let t = us(15);
+        let Delivery::At(a) = f.send(t, &rds(0, 0), &mut tr) else {
+            panic!()
+        };
+        assert_eq!(a - t, 100 + 100_000 + 2 * 100 + 2 * 100_000);
+        // a different MN's port is untouched
+        let Delivery::At(b) = f.send(t, &rds(1, 1), &mut tr) else {
+            panic!()
+        };
+        assert_eq!(b - t, 100 + 100_000 + 100 + 100_000);
     }
 
     #[test]

@@ -611,10 +611,13 @@ pub fn scenario_sweep(base: &SimConfig, parallel: bool, app_name: &str) -> Figur
         t.push(
             sc.name,
             vec![
-                r.recovery.failed_cns.len() as f64,
+                (r.recovery.failed_cns.len() + r.recovery.failed_mns.len()) as f64,
                 r.recovery.rounds as f64,
-                r.recovery.owned_lines as f64,
-                (r.recovery.recovered_from_logs + r.recovery.recovered_from_mn_logs) as f64,
+                (r.recovery.owned_lines + r.recovery.rehomed_lines) as f64,
+                (r.recovery.recovered_from_logs
+                    + r.recovery.recovered_from_mn_logs
+                    + r.recovery.rebuilt_from_caches
+                    + r.recovery.rebuilt_from_logs) as f64,
                 window,
                 if r.recovery.consistent || !r.recovery.happened { 1.0 } else { 0.0 },
             ],

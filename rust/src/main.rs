@@ -3,7 +3,7 @@
 //! ```text
 //! recxl run   [--app NAME] [--protocol P] [--set k=v ...] [--config FILE]
 //! recxl figure <2|10..18>  [--ops N] [--no-parallel]
-//! recxl recover [--app NAME] [--crash-at-us T] [--set faults=cn0@30us,cn3@45us ...]
+//! recxl recover [--app NAME] [--crash-at-us T] [--set faults=cn0@30us,mn2@45us,link:cn3@10us*4x..50us ...]
 //! recxl scenarios [NAME|all] [--app NAME] [--ops N] [--set k=v ...]
 //! recxl apps
 //! recxl trace-check        # PJRT artifact vs Rust generator parity
@@ -66,7 +66,8 @@ fn print_help() {
          commands:\n  \
          run      [--app NAME] [--protocol P] [--set k=v]... [--config FILE]\n  \
          figure   <2|10|11|12|13|14|15|16|17|18> [--ops N] [--no-parallel]\n  \
-         recover  [--app NAME] [--set faults=cn0@30us,cn3@45us]...   crash + recovery demo\n  \
+         recover  [--app NAME] [--set faults=cn0@30us,mn2@45us,link:cn3@10us*4x..50us]...\n           \
+         crash + recovery demo (cn/mn fail-stop, link degradation windows)\n  \
          scenarios [NAME|all] [--app NAME] [--ops N] [--set k=v]...\n           \
          (bare `scenarios` lists the registry)\n  \
          apps     list workload profiles\n  \
@@ -180,9 +181,18 @@ fn print_run(s: &RunStats) {
     if s.recovery.happened {
         println!("--- recovery ---");
         println!(
-            "failures recovered : {:?} over {} round(s)",
-            s.recovery.failed_cns, s.recovery.rounds
+            "failures recovered : CNs {:?}, MNs {:?} over {} round(s)",
+            s.recovery.failed_cns, s.recovery.failed_mns, s.recovery.rounds
         );
+        if s.recovery.rehomed_lines > 0 {
+            println!(
+                "re-homed lines     : {} (rebuilt: {} from caches, {} from logs, {} empty)",
+                s.recovery.rehomed_lines,
+                s.recovery.rebuilt_from_caches,
+                s.recovery.rebuilt_from_logs,
+                s.recovery.rebuilt_empty
+            );
+        }
         println!(
             "owned lines        : {} (dirty {}, exclusive {})",
             s.recovery.owned_lines, s.recovery.dirty_lines, s.recovery.exclusive_lines

@@ -72,6 +72,10 @@ pub struct LineTable {
     slot: Vec<u32>,
     /// Next free slot per MN.
     mn_next: Vec<u32>,
+    /// MNs that fail-stopped: no line homes there any more.  Homing
+    /// probes the next live MN deterministically, so interning stays a
+    /// pure function of the fault history (`kill_mn` call order).
+    dead_mns: Vec<bool>,
 }
 
 impl LineTable {
@@ -98,6 +102,7 @@ impl LineTable {
             home: Vec::new(),
             slot: Vec::new(),
             mn_next: vec![0; n_mns.max(1)],
+            dead_mns: vec![false; n_mns.max(1)],
         }
     }
 
@@ -140,12 +145,27 @@ impl LineTable {
         None
     }
 
+    /// Home MN of `line`, skipping dead MNs: the natural interleave slot,
+    /// or the next live MN after it.  Deterministic given the same fault
+    /// history; validation guarantees at least one live MN.
+    #[inline]
+    fn live_home(&self, line: Line) -> usize {
+        let mut mn = line.home_mn(self.n_mns);
+        for _ in 0..self.n_mns {
+            if !self.dead_mns[mn] {
+                return mn;
+            }
+            mn = (mn + 1) % self.n_mns;
+        }
+        panic!("no live MN to home lines on");
+    }
+
     #[inline]
     fn push_meta(&mut self, line: Line) -> LineId {
         let id = self.lines.len() as u32;
         self.lines.push(line);
         if line.is_remote() {
-            let mn = line.home_mn(self.n_mns);
+            let mn = self.live_home(line);
             self.home.push(mn as u32);
             self.slot.push(self.mn_next[mn]);
             self.mn_next[mn] += 1;
@@ -154,6 +174,30 @@ impl LineTable {
             self.slot.push(NO_SLOT);
         }
         LineId(id)
+    }
+
+    /// A memory node fail-stopped: re-home every interned line it hosted
+    /// onto the next live MN (fresh dense slots there, in first-touch
+    /// order) and steer future interns away from it.  Returns the moved
+    /// lines — the recovery census the rebuild round works from.
+    pub fn kill_mn(&mut self, mn: usize) -> Vec<(Line, LineId)> {
+        self.dead_mns[mn] = true;
+        let mut moved = Vec::new();
+        for id in 0..self.lines.len() {
+            if self.home[id] == mn as u32 {
+                let line = self.lines[id];
+                let new = self.live_home(line);
+                self.home[id] = new as u32;
+                self.slot[id] = self.mn_next[new];
+                self.mn_next[new] += 1;
+                moved.push((line, LineId(id as u32)));
+            }
+        }
+        moved
+    }
+
+    pub fn is_mn_dead(&self, mn: usize) -> bool {
+        self.dead_mns[mn]
     }
 
     /// Intern `line`, assigning a dense id on first touch.  O(1): one
@@ -322,6 +366,64 @@ mod tests {
             seq.iter().map(|&l| t.intern(l).0).collect()
         };
         assert_eq!(ids(table()), ids(table()));
+    }
+
+    #[test]
+    fn kill_mn_rehomes_resident_lines_and_future_interns() {
+        let mut t = table(); // 4 MNs
+        let mut homed_at_1: Vec<Line> = Vec::new();
+        for i in 0..32 {
+            let l = rline(i);
+            t.intern(l);
+            if l.home_mn(4) == 1 {
+                homed_at_1.push(l);
+            }
+        }
+        let before_next: Vec<u32> = (0..4).map(|m| t.mn_lines(m)).collect();
+        let moved = t.kill_mn(1);
+        assert!(t.is_mn_dead(1));
+        assert_eq!(
+            moved.iter().map(|&(l, _)| l).collect::<Vec<_>>(),
+            homed_at_1,
+            "census covers exactly the dead MN's lines, in first-touch order"
+        );
+        // every moved line now lives on MN 2 (next live after 1) with a
+        // fresh dense slot there
+        let mut expect_slot = before_next[2];
+        for &(l, id) in &moved {
+            assert_eq!(t.home_mn(id), 2);
+            assert_eq!(t.mn_slot(id), expect_slot);
+            assert_eq!(t.line(id), l);
+            expect_slot += 1;
+        }
+        // ids are stable across the re-home
+        for i in 0..32 {
+            assert_eq!(t.lookup(rline(i)), Some(LineId(i)));
+        }
+        // a fresh line whose natural home is the dead MN probes onward
+        let fresh = rline(1 + 32 * 4); // home_mn(4) == 1
+        assert_eq!(fresh.home_mn(4), 1);
+        let fid = t.intern(fresh);
+        assert_eq!(t.home_mn(fid), 2);
+    }
+
+    #[test]
+    fn kill_mn_cascades_to_the_next_live_mn() {
+        let mut t = table();
+        for i in 0..16 {
+            t.intern(rline(i));
+        }
+        t.kill_mn(1);
+        t.kill_mn(2);
+        // everything that was on 1 or 2 (including the first re-home's
+        // targets) now lives on MN 3
+        for i in 0..16 {
+            let id = t.lookup(rline(i)).unwrap();
+            let natural = rline(i).home_mn(4);
+            if natural == 1 || natural == 2 {
+                assert_eq!(t.home_mn(id), 3, "line {i}");
+            }
+        }
     }
 
     #[test]

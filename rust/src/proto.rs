@@ -116,6 +116,11 @@ pub enum MsgKind {
     // round are discarded by epoch mismatch.
     /// Switch-originated MSI electing the Configuration Manager.
     Msi { failed: CnId },
+    /// Switch-originated MSI for a *memory-node* failure: the port's
+    /// Viral_Status is set and the CM must run a rebuild round — its
+    /// lines re-home and their memory/directory state is reconstructed
+    /// on survivor MNs (DESIGN.md section "MN failures").
+    MsiMn { failed_mn: MnId },
     /// Switch broadcast: Viral_Status set for `failed` (live CNs discount
     /// dead replicas; see DESIGN.md section "Failures").
     ViralNotify { failed: CnId },
@@ -125,11 +130,23 @@ pub enum MsgKind {
     /// CM tells MN directory controllers to run Algorithm 1 over every
     /// failure covered by this round.
     InitRecov { failed: Vec<CnId>, epoch: u64 },
+    /// CM tells a survivor MN it is now home to `lines` of a dead MN:
+    /// rebuild their memory + directory entries (from live caches where a
+    /// copy survives, else from replica Logging Units) and answer with
+    /// `InitRecovResp`.
+    RebuildHome { lines: Vec<Line>, epoch: u64 },
     /// Directory controller asks a replica's Logging Unit for the latest
     /// logged versions of `lines` (Algorithm 1 -> Algorithm 2).
-    FetchLatestVers { from_mn: MnId, lines: Vec<Line>, epoch: u64 },
+    /// `rebuild` distinguishes a dead-MN rebuild query from a dead-CN
+    /// repair query — a mixed round can have both outstanding at one MN.
+    FetchLatestVers { from_mn: MnId, lines: Vec<Line>, epoch: u64, rebuild: bool },
     /// Sorted (latest-first) logged updates per requested line.
-    FetchLatestVersResp { from: CnId, results: Vec<crate::recovery::VersionList>, epoch: u64 },
+    FetchLatestVersResp {
+        from: CnId,
+        results: Vec<crate::recovery::VersionList>,
+        epoch: u64,
+        rebuild: bool,
+    },
     InitRecovResp { from_mn: MnId, epoch: u64 },
     RecovEnd { epoch: u64 },
     RecovEndResp { from: CnId, epoch: u64 },
@@ -236,10 +253,13 @@ impl MsgKind {
             Val { .. } => HDR,
             DumpChunk { bytes, .. } => (*bytes).max(64),
             DumpSyncAck { .. } => HDR,
-            Msi { .. } | ViralNotify { .. } | Interrupt { .. } | InterruptResp { .. } => HDR,
+            Msi { .. } | MsiMn { .. } | ViralNotify { .. } | Interrupt { .. }
+            | InterruptResp { .. } => HDR,
             InitRecovResp { .. } | RecovEnd { .. } | RecovEndResp { .. } => HDR,
             // one byte per covered failure, rounded into the flit header
             InitRecov { .. } => HDR,
+            // 44-bit line addresses, rounded to 6 B each
+            RebuildHome { lines, .. } => HDR + 6 * lines.len() as u32,
             FetchLatestVers { lines, .. } => HDR + 6 * lines.len() as u32,
             FetchLatestVersResp { results, .. } => {
                 HDR + results
@@ -256,8 +276,9 @@ impl MsgKind {
         match self {
             Repl { .. } | ReplAck { .. } | Val { .. } => MsgClass::Replication,
             DumpChunk { .. } | DumpSyncAck { .. } => MsgClass::LogDump,
-            Msi { .. } | ViralNotify { .. } | Interrupt { .. } | InterruptResp { .. }
-            | InitRecov { .. } | InitRecovResp { .. } | RecovEnd { .. } | RecovEndResp { .. }
+            Msi { .. } | MsiMn { .. } | ViralNotify { .. } | Interrupt { .. }
+            | InterruptResp { .. } | InitRecov { .. } | InitRecovResp { .. }
+            | RecovEnd { .. } | RecovEndResp { .. } | RebuildHome { .. }
             | FetchLatestVers { .. } | FetchLatestVersResp { .. } => MsgClass::Recovery,
             _ => MsgClass::CxlAccess,
         }

@@ -285,7 +285,10 @@ impl LoggingUnit {
 
     /// Section IV-E: extract the entries this unit is in charge of dumping
     /// (per `recxl::dump_owner`), compress them (`logcomp` size model),
-    /// and clear the whole log.
+    /// and clear the whole log.  `home_of` maps each line to its *current*
+    /// home MN — after an MN failure the cluster's `LineTable` re-homes
+    /// lines, and chunks must follow (a raw `home_mn` interleave would
+    /// ship them to a dead port).
     /// Returns (records per home MN, uncompressed bytes, compressed bytes).
     pub fn dump(
         &mut self,
@@ -293,13 +296,14 @@ impl LoggingUnit {
         n_mns: usize,
         n_r: usize,
         gzip_level: u32,
+        home_of: &mut dyn FnMut(Line) -> usize,
     ) -> DumpResult {
         let mut per_mn: Vec<Vec<LogRecord>> = vec![Vec::new(); n_mns];
         let mut raw = Vec::new();
         for rec in &self.dram {
             if super::dump_owner(rec.line, rec.req.cn, n_cns, n_r) == self.cn {
                 raw.extend_from_slice(&rec.pack());
-                per_mn[rec.line.home_mn(n_mns)].push(*rec);
+                per_mn[home_of(rec.line)].push(*rec);
             }
         }
         let compressed = super::logcomp::compressed_len(&raw, gzip_level);
@@ -480,7 +484,7 @@ mod tests {
         }
         let before = u.dram_len();
         assert!(before > 0);
-        let r = u.dump(16, 16, 3, 9);
+        let r = u.dump(16, 16, 3, 9, &mut |l| l.home_mn(16));
         assert_eq!(u.dram_len(), 0);
         // the per-line chain resets with the log
         assert!(fetch1(&u, 0).versions.is_empty());
@@ -495,6 +499,25 @@ mod tests {
                 r.out_bytes
             );
         }
+    }
+
+    #[test]
+    fn dump_routes_by_the_supplied_home_map() {
+        // after an MN failure the cluster re-homes lines; chunks must
+        // follow the supplied map, not the raw interleave
+        let mut u = unit();
+        for i in 0..64u64 {
+            u.repl(0, mk_repl(0, (i % 8) as u32, 1, i + 1));
+            u.val(0, req(0), line((i % 8) as u32), i + 1, i + 1);
+        }
+        let r = u.dump(16, 16, 3, 9, &mut |_l| 5);
+        let kept: usize = r.per_mn.iter().map(|v| v.len()).sum();
+        for (mn, v) in r.per_mn.iter().enumerate() {
+            if mn != 5 {
+                assert!(v.is_empty(), "bucket {mn} must be empty");
+            }
+        }
+        assert_eq!(r.per_mn[5].len(), kept);
     }
 
     #[test]
@@ -545,7 +568,7 @@ mod tests {
         let vals: Vec<u32> = v.versions.iter().map(|r| r.value).collect();
         assert_eq!(vals, vec![5, 4, 3, 2], "newest first, oldest dropped");
         // dump heals the index
-        u.dump(16, 16, 3, 9);
+        u.dump(16, 16, 3, 9, &mut |l| l.home_mn(16));
         assert!(fetch1(&u, 9).versions.is_empty());
     }
 

@@ -13,7 +13,7 @@
 //! round.
 
 use crate::cluster::run_app;
-use crate::config::{CnId, FaultPlan, SimConfig};
+use crate::config::{CnId, FaultNode, FaultPlan, SimConfig};
 use crate::sim::time::us;
 use crate::stats::RunStats;
 use crate::workloads::AppProfile;
@@ -99,6 +99,43 @@ pub fn all() -> Vec<Scenario> {
                 p
             },
         },
+        Scenario {
+            name: "mn-crash",
+            about: "a memory node fail-stops: its lines re-home to \
+                    survivors and memory/directory state rebuilds from \
+                    caches and replica Logging Units",
+            builder: |cfg| {
+                let mut p = FaultPlan::default();
+                p.push_mn_crash(cfg.n_mns / 2, us(40));
+                p
+            },
+        },
+        Scenario {
+            name: "link-degraded",
+            about: "one CN port degrades 4x mid-run — nothing dies, but \
+                    quiesce/replication timing must absorb the skew",
+            builder: |cfg| {
+                let mut p = FaultPlan::default();
+                p.push_link_degraded(
+                    FaultNode::Cn(other_cn(cfg.n_cns, 0)),
+                    us(20),
+                    4,
+                    us(120),
+                );
+                p
+            },
+        },
+        Scenario {
+            name: "mn-crash-during-cn-recovery",
+            about: "a memory node dies while a CN-failure round is \
+                    quiescing; the round restarts covering both kinds",
+            builder: |cfg| {
+                let mut p = FaultPlan::single_crash(0, us(30));
+                // CN0's detection fires at 40 us; the MN dies mid-round
+                p.push_mn_crash(cfg.n_mns / 2, us(45));
+                p
+            },
+        },
     ]
 }
 
@@ -113,14 +150,15 @@ pub fn run_scenario(sc: &Scenario, mut cfg: SimConfig, app: &AppProfile) -> RunS
     run_app(cfg, app)
 }
 
-/// Did the run uphold the scenario's contract?  Fault-free scenarios must
-/// not trigger recovery; faulty ones must recover every injected failure
-/// and pass the consistency oracle.
+/// Did the run uphold the scenario's contract?  Crash-free scenarios
+/// (including pure link-degradation plans — timing faults, nothing to
+/// recover) must not trigger recovery; crashy ones must recover every
+/// injected CN *and* MN failure and pass the consistency oracle.
 pub fn verdict(sc: &Scenario, cfg: &SimConfig, stats: &RunStats) -> Result<(), String> {
-    let planned = sc.plan(cfg).len();
+    let planned = sc.plan(cfg).crash_count();
     if planned == 0 {
         return if stats.recovery.happened {
-            Err("fault-free scenario triggered recovery".into())
+            Err("crash-free scenario triggered recovery".into())
         } else {
             Ok(())
         };
@@ -128,10 +166,10 @@ pub fn verdict(sc: &Scenario, cfg: &SimConfig, stats: &RunStats) -> Result<(), S
     if !stats.recovery.happened {
         return Err("no recovery round completed".into());
     }
-    if stats.recovery.failed_cns.len() != planned {
+    let recovered = stats.recovery.failed_cns.len() + stats.recovery.failed_mns.len();
+    if recovered != planned {
         return Err(format!(
-            "recovered {} of {planned} injected failures",
-            stats.recovery.failed_cns.len()
+            "recovered {recovered} of {planned} injected failures"
         ));
     }
     if !stats.recovery.consistent {
@@ -150,7 +188,7 @@ mod tests {
     #[test]
     fn registry_has_the_required_scenarios() {
         let names: Vec<&str> = all().iter().map(|s| s.name).collect();
-        assert!(names.len() >= 6, "need >= 6 named scenarios, got {names:?}");
+        assert!(names.len() >= 9, "need >= 9 named scenarios, got {names:?}");
         for required in [
             "no-crash",
             "single-crash",
@@ -158,6 +196,9 @@ mod tests {
             "crash-during-recovery",
             "cm-crash",
             "nr-failures",
+            "mn-crash",
+            "link-degraded",
+            "mn-crash-during-cn-recovery",
         ] {
             assert!(names.contains(&required), "missing scenario {required}");
         }
@@ -180,7 +221,7 @@ mod tests {
         ] {
             for sc in all() {
                 let plan = sc.plan(&cfg);
-                plan.validate(cfg.n_cns)
+                plan.validate(cfg.n_cns, cfg.n_mns)
                     .unwrap_or_else(|e| panic!("{} on {} CNs: {e}", sc.name, cfg.n_cns));
             }
         }
@@ -203,5 +244,15 @@ mod tests {
         // cm-crash: second failure is CN0 — the CM elected after the first
         let cm = by_name("cm-crash").unwrap().plan(&cfg);
         assert_eq!(cm.crashed_cns(), vec![1, 0]);
+        // the MN scenarios inject MN crashes, the link scenario none
+        let mc = by_name("mn-crash").unwrap().plan(&cfg);
+        assert_eq!(mc.crashed_mns(), vec![cfg.n_mns / 2]);
+        assert_eq!(mc.crash_count(), 1);
+        let ld = by_name("link-degraded").unwrap().plan(&cfg);
+        assert_eq!(ld.len(), 1);
+        assert_eq!(ld.crash_count(), 0, "link faults are not crashes");
+        let mixed = by_name("mn-crash-during-cn-recovery").unwrap().plan(&cfg);
+        assert_eq!(mixed.crashed_cns(), vec![0]);
+        assert_eq!(mixed.crashed_mns(), vec![cfg.n_mns / 2]);
     }
 }

@@ -8,7 +8,7 @@
 //! Fig. 14 time-series), not just averaged over the run.
 
 use crate::cache::LineCensus;
-use crate::config::CnId;
+use crate::config::{CnId, MnId};
 use crate::proto::MsgClass;
 use crate::sim::time::{self, Ps};
 
@@ -149,6 +149,7 @@ pub enum RecoveryMsg {
     Interrupt,
     InterruptResp,
     InitRecov,
+    RebuildHome,
     InitRecovResp,
     FetchLatestVers,
     FetchLatestVersResp,
@@ -157,13 +158,14 @@ pub enum RecoveryMsg {
 }
 
 impl RecoveryMsg {
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 10;
 
     pub const ALL: [RecoveryMsg; RecoveryMsg::COUNT] = [
         RecoveryMsg::Msi,
         RecoveryMsg::Interrupt,
         RecoveryMsg::InterruptResp,
         RecoveryMsg::InitRecov,
+        RecoveryMsg::RebuildHome,
         RecoveryMsg::InitRecovResp,
         RecoveryMsg::FetchLatestVers,
         RecoveryMsg::FetchLatestVersResp,
@@ -177,6 +179,7 @@ impl RecoveryMsg {
             RecoveryMsg::Interrupt => "Interrupt",
             RecoveryMsg::InterruptResp => "InterruptResp",
             RecoveryMsg::InitRecov => "InitRecov",
+            RecoveryMsg::RebuildHome => "RebuildHome",
             RecoveryMsg::InitRecovResp => "InitRecovResp",
             RecoveryMsg::FetchLatestVers => "FetchLatestVers",
             RecoveryMsg::FetchLatestVersResp => "FetchLatestVersResp",
@@ -238,6 +241,19 @@ pub struct RecoveryStats {
     pub rounds: u64,
     /// CNs covered by completed rounds, in recovery order.
     pub failed_cns: Vec<CnId>,
+    /// MNs covered by completed rebuild rounds, in recovery order.
+    pub failed_mns: Vec<MnId>,
+    /// Lines that changed home because their MN fail-stopped.
+    pub rehomed_lines: u64,
+    /// Re-homed lines whose memory/directory state was reconstructed from
+    /// a surviving CN cache copy.
+    pub rebuilt_from_caches: u64,
+    /// Re-homed lines reconstructed from replica Logging-Unit logs
+    /// (`FetchLatestVers` against the replica window).
+    pub rebuilt_from_logs: u64,
+    /// Re-homed lines with no surviving copy anywhere (memory left
+    /// zeroed; only consistent if nothing was ever committed there).
+    pub rebuilt_empty: u64,
     /// First failure detection (Viral_Status set).
     pub detection_at: Ps,
     /// Completion of the last recovery round.

@@ -31,7 +31,19 @@ fn scen_cfg(ops: u64) -> SimConfig {
 /// time, event count, per-class traffic (totals + the 50 us timeline),
 /// commits, and the recovery outcome.
 #[allow(clippy::type_complexity)]
-fn fingerprint(s: &RunStats) -> (Ps, u64, Vec<u64>, Vec<u64>, Vec<Vec<u64>>, u64, Vec<usize>) {
+fn fingerprint(
+    s: &RunStats,
+) -> (
+    Ps,
+    u64,
+    Vec<u64>,
+    Vec<u64>,
+    Vec<Vec<u64>>,
+    u64,
+    Vec<usize>,
+    Vec<usize>,
+    u64,
+) {
     (
         s.exec_time_ps,
         s.events,
@@ -46,6 +58,8 @@ fn fingerprint(s: &RunStats) -> (Ps, u64, Vec<u64>, Vec<u64>, Vec<Vec<u64>>, u64
             .collect(),
         s.repl.store_commits,
         s.recovery.failed_cns.clone(),
+        s.recovery.failed_mns.clone(),
+        s.recovery.rehomed_lines,
     )
 }
 
@@ -70,7 +84,7 @@ fn fixed_seed_is_bit_identical_on_every_named_scenario() {
 fn run_grid_is_identical_across_thread_counts() {
     let app = by_name("ycsb").unwrap();
     let mut points = Vec::new();
-    for name in ["no-crash", "double-crash"] {
+    for name in ["no-crash", "double-crash", "mn-crash", "link-degraded"] {
         let sc = recxl::scenarios::by_name(name).unwrap();
         let mut cfg = scen_cfg(4_000);
         cfg.faults = sc.plan(&cfg);

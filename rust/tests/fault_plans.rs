@@ -26,14 +26,63 @@ fn faults_override_parses_into_the_plan() {
 fn bad_fault_plans_are_rejected() {
     let mut cfg = SimConfig::default();
     assert!(apply_override(&mut cfg, "faults", "cn0").is_err(), "no time");
-    assert!(apply_override(&mut cfg, "faults", "mn2@5us").is_err(), "MN faults unsupported");
-    // out-of-range CN and unsorted times parse, then fail validation
+    assert!(apply_override(&mut cfg, "faults", "gpu2@5us").is_err(), "unknown node kind");
+    assert!(
+        apply_override(&mut cfg, "faults", "link:cn0@5us").is_err(),
+        "link window incomplete"
+    );
+    // out-of-range nodes and unsorted times parse, then fail validation
     apply_override(&mut cfg, "faults", "cn99@5us").unwrap();
     assert!(cfg.validate().is_err(), "out-of-range CN");
+    apply_override(&mut cfg, "faults", "mn99@5us").unwrap();
+    assert!(cfg.validate().is_err(), "out-of-range MN");
     apply_override(&mut cfg, "faults", "cn0@50us,cn1@20us").unwrap();
     assert!(cfg.validate().is_err(), "unsorted times");
     apply_override(&mut cfg, "faults", "cn0@20us,cn0@50us").unwrap();
     assert!(cfg.validate().is_err(), "duplicate CN");
+    apply_override(&mut cfg, "faults", "link:cn0@50us*4x..20us").unwrap();
+    assert!(cfg.validate().is_err(), "inverted link window");
+}
+
+#[test]
+fn mn_and_link_tokens_round_trip_through_the_config_surface() {
+    // the new grammar: MN fail-stop and link-degradation windows flow
+    // through --set / config files exactly like CN crashes
+    let mut cfg = SimConfig::default();
+    apply_override(&mut cfg, "faults", "cn0@10us, mn2@5ms, link:cn3@10us*4x..50us").unwrap();
+    assert_eq!(cfg.faults.len(), 3);
+    assert_eq!(cfg.faults.crashed_cns(), vec![0]);
+    assert_eq!(cfg.faults.crashed_mns(), vec![2]);
+    assert_eq!(cfg.faults.crash_count(), 2, "link windows are not crashes");
+    assert!(cfg.validate().is_ok());
+    // summary -> parse -> summary is a fixpoint for every kind
+    let reparsed = FaultPlan::parse(&cfg.faults.summary()).unwrap();
+    assert_eq!(reparsed, cfg.faults);
+    assert_eq!(reparsed.summary(), cfg.faults.summary());
+    // link node may be an MN port too
+    apply_override(&mut cfg, "faults", "link:mn1@5us*2x..9us").unwrap();
+    assert!(cfg.validate().is_ok());
+}
+
+#[test]
+fn survivor_validation_counts_each_kind_separately() {
+    // regression for the old `events.len() >= n_cns` check: non-CN events
+    // must not count against the CN survivor rule
+    let mut cfg = SimConfig {
+        n_cns: 3,
+        n_mns: 3,
+        n_r: 2,
+        ..SimConfig::default()
+    };
+    apply_override(&mut cfg, "faults", "cn0@1us,cn1@2us,mn0@3us,link:cn2@4us*2x..9us")
+        .unwrap();
+    assert_eq!(cfg.faults.len(), 4, "more events than CNs");
+    assert!(cfg.validate().is_ok(), "{:?}", cfg.validate());
+    // but each kind's own survivor rule still bites
+    apply_override(&mut cfg, "faults", "cn0@1us,cn1@2us,cn2@3us").unwrap();
+    assert!(cfg.validate().is_err(), "no CN survivor");
+    apply_override(&mut cfg, "faults", "mn0@1us,mn1@2us,mn2@3us").unwrap();
+    assert!(cfg.validate().is_err(), "no MN survivor");
 }
 
 // ------------------------------------------------------------ integration
@@ -72,6 +121,9 @@ fn named_scenarios_run_to_completion_with_oracle_passing() {
         "crash-during-recovery",
         "cm-crash",
         "nr-failures",
+        "mn-crash",
+        "link-degraded",
+        "mn-crash-during-cn-recovery",
     ] {
         let sc = scenarios::by_name(name).unwrap();
         let cfg = SimConfig {
@@ -114,7 +166,8 @@ fn prop_random_fault_plans_recover_when_failures_le_nr() {
             t_us += 3 + draw(rng, knobs, 0, 40);
         }
         let seed = draw(rng, knobs, 0, u32::MAX as u64);
-        plan.validate(n_cns).map_err(|e| format!("generated plan invalid: {e}"))?;
+        plan.validate(n_cns, 4)
+            .map_err(|e| format!("generated plan invalid: {e}"))?;
         let cfg = SimConfig {
             protocol: Protocol::ReCxlProactive,
             n_cns,

@@ -204,6 +204,92 @@ fn nr_staggered_failures_stay_consistent() {
     );
 }
 
+// ---- MN fail-stop: re-homing + memory/directory reconstruction ----
+
+fn mn_cfg(faults: &str, ops: u64) -> SimConfig {
+    SimConfig {
+        protocol: Protocol::ReCxlProactive,
+        ops_per_thread: ops,
+        faults: FaultPlan::parse(faults).unwrap(),
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn mn_crash_recovers_with_state_rebuilt_from_replica_logs() {
+    let s = run_app(mn_cfg("mn8@40us", 6_000), &by_name("ycsb").unwrap());
+    assert!(s.recovery.happened, "MN failure must trigger a round");
+    assert_eq!(s.recovery.failed_mns, vec![8]);
+    assert!(s.recovery.failed_cns.is_empty());
+    assert!(
+        s.recovery.rehomed_lines > 0,
+        "lines homed on MN 8 must re-home"
+    );
+    // the reconstruction direction no CN-crash scenario reaches: memory
+    // rebuilt at the new home from replica Logging Units (plus surviving
+    // cache copies where one exists)
+    assert!(
+        s.recovery.rebuilt_from_caches + s.recovery.rebuilt_from_logs > 0,
+        "some re-homed line must be reconstructed"
+    );
+    assert!(
+        s.recovery.consistent,
+        "{} violations",
+        s.recovery.inconsistencies
+    );
+    // survivors finish their full traces against the re-homed lines
+    assert_eq!(s.total_ops(), 64 * 6_000);
+}
+
+#[test]
+fn mn_crash_recovery_is_consistent_across_apps_and_times() {
+    for (app, at) in [("ycsb", 30u64), ("ocean-cp", 50), ("canneal", 40)] {
+        let s = run_app(
+            mn_cfg(&format!("mn3@{at}us"), 5_000),
+            &by_name(app).unwrap(),
+        );
+        assert!(s.recovery.happened, "{app}@{at}us");
+        assert!(
+            s.recovery.consistent,
+            "{app}@{at}us: {} violations",
+            s.recovery.inconsistencies
+        );
+    }
+}
+
+#[test]
+fn mn_crash_during_cn_recovery_restarts_and_covers_both() {
+    // CN0 dies at 30 us (detected at 40 us); MN 8 dies 5 us into the
+    // round — the restarted round must repair the dead CN's lines AND
+    // rebuild the dead MN's, in one epoch
+    let s = run_app(mn_cfg("cn0@30us,mn8@45us", 6_000), &by_name("ycsb").unwrap());
+    assert!(s.recovery.happened);
+    assert_eq!(s.recovery.failed_cns, vec![0]);
+    assert_eq!(s.recovery.failed_mns, vec![8]);
+    assert!(
+        s.recovery.consistent,
+        "{} violations",
+        s.recovery.inconsistencies
+    );
+}
+
+#[test]
+fn link_degradation_slows_but_never_triggers_recovery() {
+    let healthy = run_app(mn_cfg("", 5_000), &by_name("ycsb").unwrap());
+    let degraded = run_app(
+        mn_cfg("link:cn3@20us*8x..400us", 5_000),
+        &by_name("ycsb").unwrap(),
+    );
+    assert!(!degraded.recovery.happened, "nothing died");
+    assert_eq!(degraded.total_ops(), 64 * 5_000);
+    assert!(
+        degraded.exec_time_ps > healthy.exec_time_ps,
+        "an 8x-degraded port must cost time: {} vs {}",
+        degraded.exec_time_ps,
+        healthy.exec_time_ps
+    );
+}
+
 #[test]
 fn survivors_complete_their_traces_after_a_double_crash() {
     let s = run_app(multi_cfg("cn0@25us,cn5@40us", 6_000), &by_name("ycsb").unwrap());
