@@ -113,7 +113,7 @@ fn main() {
     report.push(bench("traffic record 100k msgs", warm, samp, || {
         let mut t = TrafficStats::default();
         for i in 0..100_000u64 {
-            let class = MsgClass::ALL[(i % 4) as usize];
+            let class = MsgClass::ALL[(i % MsgClass::COUNT as u64) as usize];
             t.record(i * 1_000, class, 16 + (i % 64) as u32);
         }
         std::hint::black_box(t.total_messages());

@@ -214,16 +214,28 @@ impl Cluster {
                 let slot = self.mn_slot_of(line);
                 self.dirs[mn].on_downgrade_ack(line, slot, from, dirty)
             }
-            MsgKind::DumpChunk { from, entries, .. } => {
-                self.dirs[mn].mn_log.extend(entries);
-                self.send(
-                    now,
-                    Message {
-                        src: NodeId::Mn(mn),
-                        dst: NodeId::Cn(from),
-                        kind: MsgKind::DumpSyncAck { to: from },
-                    },
-                );
+            MsgKind::DumpChunk { from, entries, replica, partner, .. } => {
+                self.on_dump_chunk(mn, from, entries, replica, partner);
+                vec![]
+            }
+            MsgKind::RedumpChunk { from_mn, entries } => {
+                // re-replication after an MN death: this MN becomes the
+                // new secondary holder of the sender's primary records
+                for rec in entries {
+                    self.dirs[mn].dump_dir.push_secondary(rec, from_mn);
+                }
+                vec![]
+            }
+            MsgKind::MnViralNotify { failed_mn } => {
+                self.on_mn_viral_notify(mn, failed_mn);
+                vec![]
+            }
+            MsgKind::FetchDumpChunk { from_mn, lines, epoch } => {
+                self.on_fetch_dump_chunk(mn, from_mn, lines, epoch);
+                vec![]
+            }
+            MsgKind::DumpChunkVers { from_mn, results, epoch } => {
+                self.on_dump_chunk_vers(mn, from_mn, results, epoch);
                 vec![]
             }
             MsgKind::InitRecov { failed, epoch } => {
@@ -254,6 +266,67 @@ impl Cluster {
 
     // ------------------------------------------------- log dumping ------
 
+    /// A dump chunk landed: file it in the MN's dump directory under the
+    /// *send-time* partner the chunk carries (the secondary its replica
+    /// shipped to for primary chunks, the primary MN for replica
+    /// chunks).  If the replica's MN died while the chunk was in flight
+    /// — the copy evaporated at its viral port — the primary re-mirrors
+    /// immediately to the current secondary, so the chunk still lands
+    /// 2-copy.  Both kinds are acked (Logging Units synchronize through
+    /// the MNs before clearing their logs).
+    fn on_dump_chunk(
+        &mut self,
+        mn: usize,
+        from: usize,
+        entries: Vec<crate::recxl::logunit::LogRecord>,
+        replica: bool,
+        partner: Option<usize>,
+    ) {
+        let now = self.q.now();
+        if replica {
+            if let Some(partner) = partner {
+                for rec in entries {
+                    self.dirs[mn].dump_dir.push_secondary(rec, partner);
+                }
+            }
+        } else {
+            let partner = match partner {
+                Some(p) if self.dead_mns[p] => {
+                    // the replica died with its MN mid-flight: this is
+                    // now the only copy — restore the invariant here
+                    let sec = self.lines.secondary_mn(mn);
+                    if let Some(sec) = sec {
+                        self.stats.recovery.rereplicated_chunks += 1;
+                        self.send(
+                            now,
+                            Message {
+                                src: NodeId::Mn(mn),
+                                dst: NodeId::Mn(sec),
+                                kind: MsgKind::RedumpChunk {
+                                    from_mn: mn,
+                                    entries: entries.clone(),
+                                },
+                            },
+                        );
+                    }
+                    sec
+                }
+                other => other,
+            };
+            for rec in entries {
+                self.dirs[mn].dump_dir.push_primary(rec, partner);
+            }
+        }
+        self.send(
+            now,
+            Message {
+                src: NodeId::Mn(mn),
+                dst: NodeId::Cn(from),
+                kind: MsgKind::DumpSyncAck { to: from },
+            },
+        );
+    }
+
     /// Periodic Logging-Unit dump (section IV-E).
     pub(crate) fn dump_tick(&mut self, cn: usize) {
         let now = self.q.now();
@@ -279,7 +352,12 @@ impl Cluster {
         self.stats.repl.dump_in_bytes += res.in_bytes;
         self.stats.repl.dump_out_bytes += res.out_bytes;
         self.stats.repl.dumps += 1;
-        // ship each MN's share; compressed bytes split pro rata
+        // ship each MN's share; compressed bytes split pro rata.  Under
+        // `dump_repl` every chunk additionally ships to the bucket's
+        // deterministic secondary MN (next live in interleave order) —
+        // the replication-before-dump guarantee extended to the dump
+        // tier: no single MN fail-stop can hold the only copy of a
+        // dumped record.
         let total: usize = res.per_mn.iter().map(|v| v.len()).sum();
         if total > 0 {
             for (mn, entries) in res.per_mn.into_iter().enumerate() {
@@ -288,14 +366,41 @@ impl Cluster {
                 }
                 let bytes =
                     ((res.out_bytes as u128 * entries.len() as u128) / total as u128) as u32;
+                let secondary = if self.cfg.dump_repl {
+                    self.lines.secondary_mn(mn).map(|sec| (sec, entries.clone()))
+                } else {
+                    None
+                };
                 self.send(
                     now,
                     Message {
                         src: NodeId::Cn(cn),
                         dst: NodeId::Mn(mn),
-                        kind: MsgKind::DumpChunk { from: cn, bytes, entries },
+                        kind: MsgKind::DumpChunk {
+                            from: cn,
+                            bytes,
+                            entries,
+                            replica: false,
+                            partner: secondary.as_ref().map(|&(sec, _)| sec),
+                        },
                     },
                 );
+                if let Some((sec, entries)) = secondary {
+                    self.send(
+                        now,
+                        Message {
+                            src: NodeId::Cn(cn),
+                            dst: NodeId::Mn(sec),
+                            kind: MsgKind::DumpChunk {
+                                from: cn,
+                                bytes,
+                                entries,
+                                replica: true,
+                                partner: Some(mn),
+                            },
+                        },
+                    );
+                }
             }
         }
         self.q.push_at(now + self.cfg.dump_period_ps, Ev::DumpTick(cn));

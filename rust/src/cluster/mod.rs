@@ -364,7 +364,15 @@ impl Cluster {
                     .collect::<Vec<_>>(),
                 r.rebuilds
                     .iter()
-                    .map(|(mn, rb)| (*mn, rb.expected.len(), rb.responses.len()))
+                    .map(|(mn, rb)| {
+                        (
+                            *mn,
+                            rb.expected.len(),
+                            rb.responses.len(),
+                            rb.dump_expected.len(),
+                            rb.dump_responses.len(),
+                        )
+                    })
                     .collect::<Vec<_>>(),
             );
         }

@@ -42,6 +42,7 @@ use crate::cpu::Block;
 use crate::mem::Line;
 use crate::proto::{Message, MsgKind, NodeId, ReqId};
 use crate::recovery::{select_version, VersionList};
+use crate::recxl::logunit::LogRecord;
 use crate::recxl::replica_window;
 use crate::sim::time::lu_cycles;
 use crate::stats::RecoveryMsg;
@@ -60,12 +61,28 @@ pub struct MnRepair {
 }
 
 /// Per-(new home) rebuild bookkeeping for lines re-homed off dead MNs
-/// whose only surviving copies live in replica Logging Units.
+/// whose only surviving copies live in replica Logging Units — or, for
+/// records already dumped off those units, in cross-MN secondary dump
+/// copies (`dump_repl`).
 pub struct MnRebuild {
     /// Lines this MN must reconstruct from logs (census order).
     pub lines: Vec<Line>,
     pub expected: BTreeSet<CnId>,
     pub responses: BTreeMap<CnId, FxHashMap<Line, VersionList>>,
+    /// MNs queried for surviving dump-chunk copies (`FetchDumpChunk`);
+    /// empty when `dump_repl` is off.
+    pub dump_expected: BTreeSet<MnId>,
+    /// `DumpChunkVers` payloads, keyed by responder (BTreeMap: the
+    /// fallback merge order must be a function of MN ids).
+    pub dump_responses: BTreeMap<MnId, Vec<LogRecord>>,
+}
+
+impl MnRebuild {
+    /// Both response sets are in: the rebuild can select versions.
+    fn complete(&self) -> bool {
+        self.responses.len() >= self.expected.len()
+            && self.dump_responses.len() >= self.dump_expected.len()
+    }
 }
 
 /// The Configuration Manager's state machine for one recovery round.
@@ -278,6 +295,23 @@ impl Cluster {
         }
         self.mn_census
             .insert(mn, moved.iter().map(|&(l, _)| l).collect());
+        // dump replication: tell the surviving MNs the port went viral,
+        // so primaries whose secondary copy lived on the dead MN can
+        // re-replicate to a new partner (re-dump-on-death; broadcast in
+        // ascending MN order — the sends serialize on the dead port's
+        // switch path and their order is part of the schedule)
+        if self.cfg.dump_repl && self.cfg.protocol.is_recxl() {
+            for m in self.live_mns().collect::<Vec<_>>() {
+                self.send(
+                    now,
+                    Message {
+                        src: NodeId::Mn(mn), // switch-originated; port of failed MN
+                        dst: NodeId::Mn(m),
+                        kind: MsgKind::MnViralNotify { failed_mn: mn },
+                    },
+                );
+            }
+        }
         // MSI to the Configuration Manager (same deterministic election
         // rule as CN failures: lowest-indexed live CN)
         let cm = live.first().copied().expect("no live CN to recover on");
@@ -662,8 +696,11 @@ impl Cluster {
             self.finish_mn_repair(mn, epoch);
             return;
         }
-        // no surviving cache copy: the replica Logging Units are the only
-        // source — group by replica-window CNs, like a dead-CN repair
+        // no surviving cache copy: query the replica Logging Units
+        // (grouped by replica-window CNs, like a dead-CN repair) — and,
+        // under `dump_repl`, every other live MN for surviving secondary
+        // copies of the dead MN's dumped chunks: records already dumped
+        // off the Logging Units exist nowhere else
         let mut per_cn: BTreeMap<CnId, Vec<Line>> = Default::default();
         for &l in &from_logs {
             for c in replica_window(l, self.cfg.n_cns, self.cfg.n_r) {
@@ -673,7 +710,18 @@ impl Cluster {
             }
         }
         let expected: BTreeSet<CnId> = per_cn.keys().copied().collect();
-        let no_replicas = expected.is_empty();
+        // broadcast rather than recompute the dead MN's placement
+        // history: cascading failures can strand the surviving copy
+        // anywhere, and residency is what actually answers
+        let dump_expected: BTreeSet<MnId> =
+            if self.cfg.dump_repl && self.cfg.protocol.is_recxl() {
+                self.live_mns().filter(|&m| m != mn).collect()
+            } else {
+                BTreeSet::new()
+            };
+        let fetch_lines = from_logs.clone();
+        let nothing_to_query = expected.is_empty() && dump_expected.is_empty();
+        let dump_targets = dump_expected.clone();
         let Some(ctrl) = self.recovery.as_mut() else { return };
         ctrl.rebuilds.insert(
             mn,
@@ -681,9 +729,11 @@ impl Cluster {
                 lines: from_logs,
                 expected,
                 responses: BTreeMap::new(),
+                dump_expected,
+                dump_responses: BTreeMap::new(),
             },
         );
-        if no_replicas {
+        if nothing_to_query {
             self.rebuild_mn(mn);
             self.finish_mn_repair(mn, epoch);
             return;
@@ -699,6 +749,99 @@ impl Cluster {
                 },
             );
         }
+        for m in dump_targets {
+            self.stats.recovery.count(RecoveryMsg::FetchDumpChunk);
+            self.send(
+                now,
+                Message {
+                    src: NodeId::Mn(mn),
+                    dst: NodeId::Mn(m),
+                    kind: MsgKind::FetchDumpChunk {
+                        from_mn: mn,
+                        lines: fetch_lines.clone(),
+                        epoch,
+                    },
+                },
+            );
+        }
+    }
+
+    /// A survivor MN answers a rebuilding home's `FetchDumpChunk` with
+    /// every resident dumped record (primary or secondary copy) of the
+    /// requested lines.  Like the CN-side Algorithm 2 handler, the
+    /// response is sent unconditionally — the receiver drops stale
+    /// epochs.
+    pub(crate) fn on_fetch_dump_chunk(
+        &mut self,
+        mn: MnId,
+        from_mn: MnId,
+        lines: Vec<Line>,
+        epoch: u64,
+    ) {
+        let now = self.q.now();
+        let want: FxHashSet<Line> = lines.into_iter().collect();
+        let results = self.dirs[mn].dump_dir.lookup_for_rebuild(&want);
+        self.stats.recovery.count(RecoveryMsg::DumpChunkVers);
+        // one DRAM-resident log scan on the responding MN
+        let cost = self.cfg.mn_dram_ps;
+        self.send(
+            now + cost,
+            Message {
+                src: NodeId::Mn(mn),
+                dst: NodeId::Mn(from_mn),
+                kind: MsgKind::DumpChunkVers { from_mn: mn, results, epoch },
+            },
+        );
+    }
+
+    /// A `DumpChunkVers` response reached the rebuilding home.  The
+    /// rebuild proceeds once *both* response sets (replica Logging Units
+    /// and dump-chunk holders) are complete.
+    pub(crate) fn on_dump_chunk_vers(
+        &mut self,
+        mn: MnId,
+        from: MnId,
+        results: Vec<LogRecord>,
+        epoch: u64,
+    ) {
+        let done = {
+            let Some(ctrl) = self.recovery.as_mut() else { return };
+            if ctrl.epoch != epoch {
+                return; // aborted round
+            }
+            let Some(rb) = ctrl.rebuilds.get_mut(&mn) else { return };
+            rb.dump_responses.insert(from, results);
+            rb.complete()
+        };
+        if done {
+            self.rebuild_mn(mn);
+            self.finish_mn_repair(mn, epoch);
+        }
+    }
+
+    /// The switch told this MN that `failed_mn`'s port went viral: any
+    /// primary dump records whose secondary copy lived there are now
+    /// single-copy — retarget them to the next live MN and mirror them
+    /// over (re-dump-on-death, restoring the 2-copy invariant).
+    pub(crate) fn on_mn_viral_notify(&mut self, mn: MnId, failed_mn: MnId) {
+        let now = self.q.now();
+        let new_partner = self.lines.secondary_mn(mn);
+        let moved = self.dirs[mn]
+            .dump_dir
+            .retarget_secondary(failed_mn, new_partner);
+        if moved.is_empty() {
+            return;
+        }
+        let Some(sec) = new_partner else { return };
+        self.stats.recovery.rereplicated_chunks += 1;
+        self.send(
+            now,
+            Message {
+                src: NodeId::Mn(mn),
+                dst: NodeId::Mn(sec),
+                kind: MsgKind::RedumpChunk { from_mn: mn, entries: moved },
+            },
+        );
     }
 
     /// Apply log-selected versions to the rebuilt home: memory takes the
@@ -706,12 +849,18 @@ impl Cluster {
     /// unowned/unshared (no cache holds it — that is why the logs were
     /// queried), and the oracle checks nothing committed was lost.
     ///
-    /// Words no replica log still holds fall back to *this survivor's*
-    /// resident dumped log: the dead MN's own dumped records are gone,
-    /// but dumps fired after re-homing follow the line table and land
-    /// here — and anything still resident in a replica Logging Unit is
-    /// strictly newer than any dumped record (dumps clear the logs they
-    /// save), so the fallback only fills genuinely missing words.
+    /// Words no replica log still holds fall back to dumped records, in
+    /// freshness order: first *this survivor's* resident dumped log
+    /// (dumps fired after re-homing follow the line table and land here,
+    /// so they are the newest dumped era), then the surviving secondary
+    /// copies of the dead MN's chunks fetched via `FetchDumpChunk` —
+    /// the records that were honest losses before `dump_repl`.
+    /// Anything still resident in a replica Logging Unit is strictly
+    /// newer than any dumped record (dumps clear the logs they save),
+    /// so the fallbacks only fill genuinely missing words.  Fetched
+    /// records are finally re-seeded into this home's dump directory
+    /// and re-replicated to its current secondary, restoring the
+    /// 2-copy invariant for the rebuilt lines.
     fn rebuild_mn(&mut self, mn: MnId) {
         let Some(ctrl) = self.recovery.as_ref() else { return };
         let Some(rb) = ctrl.rebuilds.get(&mn) else { return };
@@ -722,6 +871,43 @@ impl Cluster {
                 per_line.entry(*l).or_default().push(v.clone());
             }
         }
+        // Surviving dump copies per line.  First this home's *own*
+        // secondary holdings — re-homing sends a dead MN's lines to the
+        // next live MN, which is exactly where `dump_repl` placed their
+        // secondary chunks, so the surviving copy is usually already
+        // local; the records are *drained* (they re-enter as primary
+        // below, so the store never holds duplicate residents) — then
+        // the `FetchDumpChunk` responses, responders in ascending MN
+        // order (BTreeMap), each holder's records latest-arrival first;
+        // identical records dedup (broadcast + past re-replications can
+        // surface the same copy several times).
+        let mut fetched: FxHashMap<Line, Vec<LogRecord>> = FxHashMap::default();
+        let mut seen_rec: FxHashSet<(ReqId, u64, u8)> = FxHashSet::default();
+        let taken: Vec<LogRecord> = if self.cfg.dump_repl {
+            let want: FxHashSet<Line> = rb.lines.iter().copied().collect();
+            self.dirs[mn].dump_dir.take_secondary_for(&want)
+        } else {
+            Vec::new()
+        };
+        for r in taken.iter().rev() {
+            if seen_rec.insert((r.req, r.repl_seq, r.word)) {
+                fetched.entry(r.line).or_default().push(*r);
+            }
+        }
+        // remote copies, kept apart from `taken`: adopted local records
+        // re-install unconditionally (dropping them would lose data),
+        // remote ones only for freshly-rebuilt lines (a round restart
+        // re-fetches and must not install twice)
+        let mut remote_fetched: FxHashMap<Line, Vec<LogRecord>> = FxHashMap::default();
+        for recs in rb.dump_responses.values() {
+            for r in recs.iter().rev() {
+                if seen_rec.insert((r.req, r.repl_seq, r.word)) {
+                    fetched.entry(r.line).or_default().push(*r);
+                    remote_fetched.entry(r.line).or_default().push(*r);
+                }
+            }
+        }
+        let mut to_install: Vec<LogRecord> = taken;
         for line in lines {
             let lid = self.lines.intern(line);
             let slot = self.lines.mn_slot(lid);
@@ -738,16 +924,21 @@ impl Cluster {
                 .as_ref()
                 .map(|rl| rl.provenance)
                 .unwrap_or([None; 16]);
-            // Survivor's dumped-log fallback, latest *arrival* first.
-            // Arrival order is exact for a single writer (one dump owner
-            // ⇒ one chunk stream in log order) and for writers whose
-            // commits straddle a dump tick; only different writers
-            // dumping within the same period can invert it — there is no
+            // Dumped-record fallback, latest *arrival* first: the
+            // survivor's own post-re-homing dumps, then the fetched
+            // secondary copies of the dead MN's chunks.  Arrival order
+            // is exact for a single writer (one dump owner ⇒ one chunk
+            // stream in log order) and for writers whose commits
+            // straddle a dump tick; only different writers dumping
+            // within the same period can invert it — there is no
             // protocol-visible total order across writers in dumped
             // records (ts and repl_seq are per-writer counters), so the
             // pick is deterministic and the oracle reports it if wrong.
             let fallback = self.dirs[mn].mn_log_latest(line);
+            let fetched_fb: &[LogRecord] =
+                fetched.get(&line).map(|v| v.as_slice()).unwrap_or(&[]);
             let mut used_mn_log = false;
+            let mut used_fetched = false;
             for w in 0..16u8 {
                 if mask & (1 << w) == 0 {
                     if let Some(r) = fallback.iter().find(|r| r.word == w) {
@@ -755,6 +946,11 @@ impl Cluster {
                         words[w as usize] = r.value;
                         provenance[w as usize] = Some((r.req.cn, r.repl_seq));
                         used_mn_log = true;
+                    } else if let Some(r) = fetched_fb.iter().find(|r| r.word == w) {
+                        mask |= 1 << w;
+                        words[w as usize] = r.value;
+                        provenance[w as usize] = Some((r.req.cn, r.repl_seq));
+                        used_fetched = true;
                     }
                 }
             }
@@ -767,9 +963,20 @@ impl Cluster {
                     self.stats.recovery.rebuilt_empty += 1;
                 } else if selected.is_some() {
                     self.stats.recovery.rebuilt_from_logs += 1;
+                } else if used_fetched {
+                    self.stats.recovery.rebuilt_dumps += 1;
                 } else {
                     debug_assert!(used_mn_log);
                     self.stats.recovery.recovered_from_mn_logs += 1;
+                }
+                // remotely-fetched copies of a freshly-rebuilt line are
+                // for a line now homed here: re-seed them as primary
+                // residents (and re-replicate below) regardless of which
+                // source won the words — dropping them would shrink the
+                // line's durable history.  (`taken` locals are already
+                // in `to_install`, unconditionally.)
+                if let Some(recs) = remote_fetched.get(&line) {
+                    to_install.extend_from_slice(recs);
                 }
             }
             let out = self.dirs[mn].recovery_apply(line, slot, mask, &words);
@@ -788,6 +995,28 @@ impl Cluster {
                     self.oracle
                         .on_recovery_applied(lid, w, mem[w as usize], acn, aseq);
                 }
+            }
+        }
+        // re-dump-on-death, new-home side: adopt the fetched copies as
+        // primary residents of this (now) home and mirror them to its
+        // current secondary — the rebuilt lines leave the round with two
+        // live dump copies again
+        if !to_install.is_empty() && self.cfg.dump_repl {
+            let now = self.q.now();
+            let sec = self.lines.secondary_mn(mn);
+            for rec in &to_install {
+                self.dirs[mn].dump_dir.push_primary(*rec, sec);
+            }
+            if let Some(sec) = sec {
+                self.stats.recovery.rereplicated_chunks += 1;
+                self.send(
+                    now,
+                    Message {
+                        src: NodeId::Mn(mn),
+                        dst: NodeId::Mn(sec),
+                        kind: MsgKind::RedumpChunk { from_mn: mn, entries: to_install },
+                    },
+                );
             }
         }
     }
@@ -840,7 +1069,7 @@ impl Cluster {
             if rebuild {
                 let Some(rb) = ctrl.rebuilds.get_mut(&mn) else { return };
                 rb.responses.insert(from, map);
-                rb.responses.len() >= rb.expected.len()
+                rb.complete()
             } else {
                 let Some(rep) = ctrl.repairs.get_mut(&mn) else { return };
                 rep.responses.insert(from, map);

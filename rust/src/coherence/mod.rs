@@ -61,6 +61,131 @@ struct DirEntry {
 /// through the fabric).
 pub type DirOut = Vec<(Ps, Message)>;
 
+/// Dumped-log residency at one MN (cross-MN dump replication,
+/// DESIGN.md "Dump replication").
+///
+/// Two stores, both in arrival order:
+/// * **primary** — this MN is the chunk's home; repairs and the
+///   `select_version` fallback read these, exactly like the old flat
+///   `mn_log`.  Each record remembers the partner MN holding its
+///   secondary copy (`None` when `dump_repl` is off or no other MN was
+///   alive), so a partner's death can trigger re-replication.
+/// * **secondary** — cold replica copies mirrored from a partner
+///   (primary) MN.  Never consulted by normal repair — they exist so a
+///   single MN fail-stop can never take the only copy of a dumped
+///   record; rebuild fetches them via `FetchDumpChunk`.
+#[derive(Debug, Default)]
+pub struct DumpDirectory {
+    primary: Vec<(LogRecord, Option<MnId>)>,
+    secondary: Vec<(LogRecord, MnId)>,
+}
+
+impl DumpDirectory {
+    pub fn push_primary(&mut self, rec: LogRecord, partner: Option<MnId>) {
+        self.primary.push((rec, partner));
+    }
+
+    pub fn push_secondary(&mut self, rec: LogRecord, partner: MnId) {
+        self.secondary.push((rec, partner));
+    }
+
+    /// Primary records for `line`, latest-arrival first (the repair
+    /// fallback order; dumps append in log order, so reverse scan =
+    /// latest first).
+    pub fn latest(&self, line: Line) -> Vec<LogRecord> {
+        self.primary
+            .iter()
+            .rev()
+            .filter(|(r, _)| r.line == line)
+            .map(|(r, _)| *r)
+            .collect()
+    }
+
+    /// Every resident record (primary *and* secondary copies) on any of
+    /// `lines`, in arrival order per store — the `FetchDumpChunk`
+    /// response payload for a dead MN's rebuild.
+    pub fn lookup_for_rebuild(
+        &self,
+        lines: &rustc_hash::FxHashSet<Line>,
+    ) -> Vec<LogRecord> {
+        let mut out: Vec<LogRecord> = self
+            .primary
+            .iter()
+            .filter(|(r, _)| lines.contains(&r.line))
+            .map(|(r, _)| *r)
+            .collect();
+        out.extend(
+            self.secondary
+                .iter()
+                .filter(|(r, _)| lines.contains(&r.line))
+                .map(|(r, _)| *r),
+        );
+        out
+    }
+
+    /// Remove and return the secondary-resident records on any of
+    /// `lines` — the rebuilding home's *own* holdings, which it adopts
+    /// as primary residents.  This is the common case, not a corner: a
+    /// line's new home after re-homing is the next live MN after the
+    /// dead one, which is exactly where the dead MN's secondary copies
+    /// were placed — the surviving copy is usually already local.
+    /// Draining (rather than copying) keeps the store duplicate-free
+    /// across cascading failures: the records re-enter as primary.
+    pub fn take_secondary_for(&mut self, lines: &rustc_hash::FxHashSet<Line>) -> Vec<LogRecord> {
+        let mut taken = Vec::new();
+        self.secondary.retain(|(r, _)| {
+            if lines.contains(&r.line) {
+                taken.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        taken
+    }
+
+    /// A partner MN died: retarget every primary record whose secondary
+    /// copy lived there to `new`, returning copies of the retargeted
+    /// records so the caller can re-replicate them (re-dump-on-death).
+    /// With `new = None` (no other live MN) the records become
+    /// single-copy and nothing is returned.
+    pub fn retarget_secondary(&mut self, dead: MnId, new: Option<MnId>) -> Vec<LogRecord> {
+        let mut moved = Vec::new();
+        for (rec, partner) in &mut self.primary {
+            if *partner == Some(dead) {
+                *partner = new;
+                if new.is_some() {
+                    moved.push(*rec);
+                }
+            }
+        }
+        moved
+    }
+
+    /// Resident record counts `(primary, secondary)` — tests and the
+    /// 2-copy-invariant checks.
+    pub fn counts(&self) -> (usize, usize) {
+        (self.primary.len(), self.secondary.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.primary.is_empty() && self.secondary.is_empty()
+    }
+
+    /// Secondary records mirrored from `partner` (tests).
+    pub fn secondary_of(&self, partner: MnId) -> usize {
+        self.secondary.iter().filter(|(_, p)| *p == partner).count()
+    }
+
+    /// Primary records whose secondary copy lives at `partner` (tests).
+    pub fn primary_partnered_with(&self, partner: MnId) -> usize {
+        self.primary
+            .iter()
+            .filter(|(_, p)| *p == Some(partner))
+            .count()
+    }
+}
+
 /// One MN's directory controller + memory + resident dumped log.
 pub struct Directory {
     pub mn: MnId,
@@ -70,8 +195,9 @@ pub struct Directory {
     memory: Vec<LineWords>,
     /// Per-slot reverse translation (census / unblock iteration).
     slot_line: Vec<Line>,
-    /// Dumped log records, in arrival order (recovery's fallback search).
-    pub mn_log: Vec<LogRecord>,
+    /// Dumped-log residency: primary records (recovery's fallback
+    /// search) plus cross-MN secondary copies (`dump_repl`).
+    pub dump_dir: DumpDirectory,
     /// CNs whose Viral_Status is set (requests involving them are deferred
     /// or have their invalidations skipped — their caches are gone).
     dead_mask: u32,
@@ -88,7 +214,7 @@ impl Directory {
             entries: Vec::new(),
             memory: Vec::new(),
             slot_line: Vec::new(),
-            mn_log: Vec::new(),
+            dump_dir: DumpDirectory::default(),
             dead_mask: 0,
             dram_ps,
             pmem_ps,
@@ -561,15 +687,11 @@ impl Directory {
     }
 
     /// MN-log entries for `line`, latest-first (recovery's fallback when no
-    /// replica log has a word, Algorithm 1).  Dumps append in log order, so
-    /// reverse scan = latest first.
+    /// replica log has a word, Algorithm 1).  Only primary-resident
+    /// records are consulted — secondary copies belong to another MN's
+    /// dump stream and are only read by a rebuild after that MN dies.
     pub fn mn_log_latest(&self, line: Line) -> Vec<LogRecord> {
-        self.mn_log
-            .iter()
-            .rev()
-            .filter(|r| r.line == line)
-            .copied()
-            .collect()
+        self.dump_dir.latest(line)
     }
 }
 
@@ -807,25 +929,85 @@ mod tests {
         assert_eq!(d.mem_words(slot(40)), [0; 16]);
     }
 
-    #[test]
-    fn mn_log_latest_is_reverse_log_order() {
-        let mut d = dir();
-        let mk = |seq: u64, word: u8, value: u32| LogRecord {
-            req: req(3),
-            line: line(9),
+    fn mk_rec(cn: usize, l: u32, seq: u64, word: u8, value: u32) -> LogRecord {
+        LogRecord {
+            req: req(cn),
+            line: line(l),
             word,
             value,
             ts: seq,
             repl_seq: seq,
             valid: true,
-        };
-        d.mn_log.push(mk(1, 0, 10));
-        d.mn_log.push(mk(5, 0, 50));
-        d.mn_log.push(mk(3, 1, 30));
+        }
+    }
+
+    #[test]
+    fn mn_log_latest_is_reverse_log_order() {
+        let mut d = dir();
+        d.dump_dir.push_primary(mk_rec(3, 9, 1, 0, 10), None);
+        d.dump_dir.push_primary(mk_rec(3, 9, 5, 0, 50), None);
+        d.dump_dir.push_primary(mk_rec(3, 9, 3, 1, 30), None);
         let latest = d.mn_log_latest(line(9));
         assert_eq!(latest.len(), 3);
         assert_eq!(latest[0].value, 30, "last appended comes first");
         assert_eq!(latest[1].value, 50);
         assert!(d.mn_log_latest(line(8)).is_empty());
+    }
+
+    #[test]
+    fn secondary_copies_are_invisible_to_normal_repair() {
+        let mut d = dir();
+        d.dump_dir.push_secondary(mk_rec(3, 9, 1, 0, 10), 7);
+        assert!(
+            d.mn_log_latest(line(9)).is_empty(),
+            "secondary copies belong to MN 7's dump stream"
+        );
+        assert_eq!(d.dump_dir.counts(), (0, 1));
+        assert_eq!(d.dump_dir.secondary_of(7), 1);
+    }
+
+    #[test]
+    fn lookup_for_rebuild_returns_both_residencies() {
+        let mut d = dir();
+        d.dump_dir.push_primary(mk_rec(0, 4, 1, 0, 11), Some(2));
+        d.dump_dir.push_secondary(mk_rec(1, 9, 2, 0, 22), 7);
+        d.dump_dir.push_secondary(mk_rec(1, 5, 3, 0, 33), 7);
+        let mut want = rustc_hash::FxHashSet::default();
+        want.insert(line(9));
+        want.insert(line(4));
+        let got = d.dump_dir.lookup_for_rebuild(&want);
+        let values: Vec<u32> = got.iter().map(|r| r.value).collect();
+        assert_eq!(values, vec![11, 22], "line 5 was not requested");
+        // take_secondary_for: only the replica copies (a rebuilding home
+        // adopts its own secondaries; its primaries come via
+        // mn_log_latest), and the taken records leave the store — no
+        // duplicate residents across cascading failures
+        let sec: Vec<u32> = d
+            .dump_dir
+            .take_secondary_for(&want)
+            .iter()
+            .map(|r| r.value)
+            .collect();
+        assert_eq!(sec, vec![22]);
+        assert_eq!(d.dump_dir.counts(), (1, 1), "line 9's copy drained; line 5's stays");
+        assert!(d.dump_dir.take_secondary_for(&want).is_empty(), "second take is empty");
+    }
+
+    #[test]
+    fn retarget_secondary_moves_partnerships_and_returns_copies() {
+        let mut d = dir();
+        d.dump_dir.push_primary(mk_rec(0, 1, 1, 0, 10), Some(3));
+        d.dump_dir.push_primary(mk_rec(0, 2, 2, 0, 20), Some(5));
+        // MN 3 died; the new partner is MN 4
+        let moved = d.dump_dir.retarget_secondary(3, Some(4));
+        assert_eq!(moved.len(), 1);
+        assert_eq!(moved[0].value, 10);
+        assert_eq!(d.dump_dir.primary_partnered_with(4), 1);
+        assert_eq!(d.dump_dir.primary_partnered_with(5), 1, "untouched");
+        assert_eq!(d.dump_dir.primary_partnered_with(3), 0);
+        // no other live MN: records go single-copy, nothing to re-send
+        let moved = d.dump_dir.retarget_secondary(5, None);
+        assert!(moved.is_empty());
+        assert_eq!(d.dump_dir.primary_partnered_with(5), 0);
     }
 }

@@ -134,6 +134,13 @@ pub struct SimConfig {
     pub dump_period_ps: Ps,
     /// gzip level for log dumping (paper: 9).
     pub gzip_level: u32,
+    /// Cross-MN dump replication (`--set dump_repl={0,1}`): ship every
+    /// dump chunk to its home MN *and* a deterministic secondary MN so a
+    /// single MN fail-stop can never take the only copy of a dumped
+    /// record with it.  `0` recovers the paper-faithful baseline — and
+    /// its documented dump-durability loss window (DESIGN.md
+    /// "MN failures").
+    pub dump_repl: bool,
 
     // --- workload ---
     pub ops_per_thread: u64,
@@ -191,6 +198,7 @@ impl Default for SimConfig {
             dram_log_bytes: 18 * 1024 * 1024,
             dump_period_ps: time::us(2500),
             gzip_level: 9,
+            dump_repl: true,
             ops_per_thread: 100_000,
             barrier_period: 20_000,
             seed: 0xCE_C5_1,
@@ -276,6 +284,7 @@ mod tests {
         assert_eq!(c.sram_log_bytes, 4 * 1024);
         assert_eq!(c.dram_log_bytes, 18 * 1024 * 1024);
         assert_eq!(c.dump_period_ps, time::ms(2) + time::us(500));
+        assert!(c.dump_repl, "dump replication is the default; dump_repl=0 is the paper-faithful baseline");
         assert!(c.validate().is_ok());
     }
 

@@ -34,6 +34,7 @@ pub fn apply_override(cfg: &mut SimConfig, key: &str, value: &str) -> Result<(),
         "dram_log_bytes" => cfg.dram_log_bytes = num!(),
         "dump_period_us" => cfg.dump_period_ps = time::us(num!()),
         "gzip_level" => cfg.gzip_level = num!(),
+        "dump_repl" => cfg.dump_repl = parse_bool(value).ok_or_else(|| bad("bool"))?,
         "ops_per_thread" | "ops" => cfg.ops_per_thread = num!(),
         "barrier_period" => cfg.barrier_period = num!(),
         "seed" => cfg.seed = num!(),
@@ -121,6 +122,17 @@ mod tests {
         assert_eq!(c.faults.len(), 2);
         assert_eq!(c.faults.crashed_cns(), vec![1, 2]);
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn dump_repl_toggles_and_rejects_garbage() {
+        let mut c = SimConfig::default();
+        assert!(c.dump_repl, "replication on by default");
+        apply_override(&mut c, "dump_repl", "0").unwrap();
+        assert!(!c.dump_repl);
+        apply_override(&mut c, "dump_repl", "on").unwrap();
+        assert!(c.dump_repl);
+        assert!(apply_override(&mut c, "dump_repl", "2").is_err());
     }
 
     #[test]

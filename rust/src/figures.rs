@@ -585,7 +585,7 @@ pub fn scenario_sweep(base: &SimConfig, parallel: bool, app_name: &str) -> Figur
                 protocol: Protocol::ReCxlProactive,
                 ..base.clone()
             };
-            cfg.faults = sc.plan(&cfg);
+            sc.prepare(&mut cfg);
             (cfg, app.clone())
         })
         .collect();
@@ -617,7 +617,8 @@ pub fn scenario_sweep(base: &SimConfig, parallel: bool, app_name: &str) -> Figur
                 (r.recovery.recovered_from_logs
                     + r.recovery.recovered_from_mn_logs
                     + r.recovery.rebuilt_from_caches
-                    + r.recovery.rebuilt_from_logs) as f64,
+                    + r.recovery.rebuilt_from_logs
+                    + r.recovery.rebuilt_dumps) as f64,
                 window,
                 if r.recovery.consistent || !r.recovery.happened { 1.0 } else { 0.0 },
             ],

@@ -144,10 +144,11 @@ fn print_run(s: &RunStats) {
         s.repl.repls_sent, s.repl.stores_coalesced
     );
     println!(
-        "CXL bandwidth      : access {:.2} GB/s, repl {:.2} GB/s, dump {:.3} GB/s",
+        "CXL bandwidth      : access {:.2} GB/s, repl {:.2} GB/s, dump {:.3} GB/s, dump-repl {:.3} GB/s",
         s.class_gbps(MsgClass::CxlAccess),
         s.class_gbps(MsgClass::Replication),
-        s.class_gbps(MsgClass::LogDump)
+        s.class_gbps(MsgClass::LogDump),
+        s.class_gbps(MsgClass::DumpRepl)
     );
     if s.repl.dumps > 0 {
         println!(
@@ -186,11 +187,18 @@ fn print_run(s: &RunStats) {
         );
         if s.recovery.rehomed_lines > 0 {
             println!(
-                "re-homed lines     : {} (rebuilt: {} from caches, {} from logs, {} empty)",
+                "re-homed lines     : {} (rebuilt: {} from caches, {} from logs, {} from dump replicas, {} empty)",
                 s.recovery.rehomed_lines,
                 s.recovery.rebuilt_from_caches,
                 s.recovery.rebuilt_from_logs,
+                s.recovery.rebuilt_dumps,
                 s.recovery.rebuilt_empty
+            );
+        }
+        if s.recovery.rereplicated_chunks > 0 {
+            println!(
+                "re-dump-on-death   : {} chunk(s) re-replicated to restore the 2-copy invariant",
+                s.recovery.rereplicated_chunks
             );
         }
         println!(

@@ -200,6 +200,25 @@ impl LineTable {
         self.dead_mns[mn]
     }
 
+    /// Deterministic secondary MN for dump chunks whose primary home is
+    /// `primary`: the next live MN in interleave order, never `primary`
+    /// itself, skipping dead MNs; `None` when no *other* live MN exists.
+    /// Going through the line table (rather than a raw `(mn + 1) % n`)
+    /// means re-homing composes: after [`Self::kill_mn`] moves a line's
+    /// home, the secondary of its new dump bucket is computed against the
+    /// same fault history that moved it.
+    #[inline]
+    pub fn secondary_mn(&self, primary: usize) -> Option<usize> {
+        let mut mn = (primary + 1) % self.n_mns;
+        while mn != primary {
+            if !self.dead_mns[mn] {
+                return Some(mn);
+            }
+            mn = (mn + 1) % self.n_mns;
+        }
+        None
+    }
+
     /// Intern `line`, assigning a dense id on first touch.  O(1): one
     /// array probe for in-universe lines, a hash probe otherwise.
     #[inline]
@@ -424,6 +443,37 @@ mod tests {
                 assert_eq!(t.home_mn(id), 3, "line {i}");
             }
         }
+    }
+
+    #[test]
+    fn secondary_mn_is_next_live_and_never_primary() {
+        let mut t = table(); // 4 MNs, all live
+        assert_eq!(t.secondary_mn(0), Some(1));
+        assert_eq!(t.secondary_mn(3), Some(0), "wraps around");
+        t.kill_mn(2);
+        assert_eq!(t.secondary_mn(1), Some(3), "skips the dead MN");
+        t.kill_mn(3);
+        assert_eq!(t.secondary_mn(1), Some(0));
+        assert_eq!(t.secondary_mn(0), Some(1));
+        t.kill_mn(0);
+        assert_eq!(t.secondary_mn(1), None, "no other live MN left");
+    }
+
+    #[test]
+    fn secondary_follows_the_rehomed_primary() {
+        // a line homed on MN 1 re-homes to 2 when 1 dies; its dump bucket
+        // moves with it, and the bucket's secondary is computed against
+        // the *new* primary — the 2-copy placement survives the cascade
+        let mut t = table();
+        let l = rline(1); // home_mn(4) == 1
+        let id = t.intern(l);
+        assert_eq!(t.home_mn(id), 1);
+        assert_eq!(t.secondary_mn(t.home_mn(id)), Some(2));
+        t.kill_mn(1);
+        assert_eq!(t.home_mn(id), 2);
+        assert_eq!(t.secondary_mn(t.home_mn(id)), Some(3));
+        t.kill_mn(3);
+        assert_eq!(t.secondary_mn(t.home_mn(id)), Some(0));
     }
 
     #[test]

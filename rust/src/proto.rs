@@ -32,20 +32,26 @@ pub enum MsgClass {
     CxlAccess,
     /// REPL / REPL_ACK / VAL replication traffic.
     Replication,
-    /// Periodic compressed log dumping.
+    /// Periodic compressed log dumping (the primary copy).
     LogDump,
+    /// Cross-MN dump replication: the secondary copy of each dump chunk
+    /// plus re-replication after an MN death — accounted separately so
+    /// the durability feature's bandwidth cost stays measurable against
+    /// the paper's dump numbers.
+    DumpRepl,
     /// Recovery protocol traffic.
     Recovery,
 }
 
 impl MsgClass {
     /// Number of classes (sizes the fixed counter arrays in `stats`).
-    pub const COUNT: usize = 4;
+    pub const COUNT: usize = 5;
 
     pub const ALL: [MsgClass; MsgClass::COUNT] = [
         MsgClass::CxlAccess,
         MsgClass::Replication,
         MsgClass::LogDump,
+        MsgClass::DumpRepl,
         MsgClass::Recovery,
     ];
 
@@ -102,11 +108,32 @@ pub enum MsgKind {
     /// train of 64 B messages (section IV-E); the simulator models the
     /// train as one message of `bytes` total so the fabric charges the
     /// same serialization without one event per chunk.  `entries` rides
-    /// along for simulation state transfer.
-    DumpChunk { from: CnId, bytes: u32, entries: Vec<crate::recxl::logunit::LogRecord> },
+    /// along for simulation state transfer.  `replica` marks the
+    /// cross-MN secondary copy of the chunk (`dump_repl`): same payload,
+    /// shipped to the bucket's deterministic secondary MN and accounted
+    /// under [`MsgClass::DumpRepl`].  `partner` is the *send-time*
+    /// other-copy holder — the secondary the replica shipped to (primary
+    /// chunks; `None` = unreplicated) or the primary MN (replica
+    /// chunks).  Send-time, not recomputed at arrival: an MN dying with
+    /// chunks in flight would otherwise let the receiver tag a partner
+    /// that never received a copy.
+    DumpChunk {
+        from: CnId,
+        bytes: u32,
+        entries: Vec<crate::recxl::logunit::LogRecord>,
+        replica: bool,
+        partner: Option<MnId>,
+    },
     /// MN ack of a completed dump segment (Logging Units synchronize
     /// through the MNs before clearing their logs).
     DumpSyncAck { to: CnId },
+    /// MN-to-MN re-replication of dumped records after an MN death
+    /// (re-dump-on-death): the sender holds the only surviving copy and
+    /// restores the 2-copy invariant by mirroring it to a new partner.
+    RedumpChunk {
+        from_mn: MnId,
+        entries: Vec<crate::recxl::logunit::LogRecord>,
+    },
 
     // ---- failure handling & recovery (section V, Table I) ----
     //
@@ -124,6 +151,10 @@ pub enum MsgKind {
     /// Switch broadcast: Viral_Status set for `failed` (live CNs discount
     /// dead replicas; see DESIGN.md section "Failures").
     ViralNotify { failed: CnId },
+    /// Switch broadcast to live MNs: `failed_mn`'s port went viral.
+    /// Survivors holding dump chunks whose secondary copy lived there
+    /// re-replicate them to a new partner (`dump_repl` only).
+    MnViralNotify { failed_mn: MnId },
     /// CM tells CNs/Logging Units to finish outstanding work and pause.
     Interrupt { epoch: u64 },
     InterruptResp { from: CnId, epoch: u64 },
@@ -146,6 +177,18 @@ pub enum MsgKind {
         results: Vec<crate::recovery::VersionList>,
         epoch: u64,
         rebuild: bool,
+    },
+    /// A rebuilding MN asks a survivor MN for any resident dumped
+    /// records of `lines` (primary or secondary copies) — the rebuild
+    /// source that closes the dumped-log durability window: the dead
+    /// MN's own dumps are gone, but their `dump_repl` secondary copies
+    /// survive on other MNs.
+    FetchDumpChunk { from_mn: MnId, lines: Vec<Line>, epoch: u64 },
+    /// Response: the resident dumped records, in this MN's arrival order.
+    DumpChunkVers {
+        from_mn: MnId,
+        results: Vec<crate::recxl::logunit::LogRecord>,
+        epoch: u64,
     },
     InitRecovResp { from_mn: MnId, epoch: u64 },
     RecovEnd { epoch: u64 },
@@ -253,19 +296,28 @@ impl MsgKind {
             Val { .. } => HDR,
             DumpChunk { bytes, .. } => (*bytes).max(64),
             DumpSyncAck { .. } => HDR,
-            Msi { .. } | MsiMn { .. } | ViralNotify { .. } | Interrupt { .. }
-            | InterruptResp { .. } => HDR,
+            // re-replication ships stored 12 B records uncompressed (the
+            // holder has records, not the original compressed stream)
+            RedumpChunk { entries, .. } => {
+                (entries.len() as u32 * crate::recxl::logunit::LOG_ENTRY_BYTES as u32).max(64)
+            }
+            Msi { .. } | MsiMn { .. } | ViralNotify { .. } | MnViralNotify { .. }
+            | Interrupt { .. } | InterruptResp { .. } => HDR,
             InitRecovResp { .. } | RecovEnd { .. } | RecovEndResp { .. } => HDR,
             // one byte per covered failure, rounded into the flit header
             InitRecov { .. } => HDR,
             // 44-bit line addresses, rounded to 6 B each
             RebuildHome { lines, .. } => HDR + 6 * lines.len() as u32,
             FetchLatestVers { lines, .. } => HDR + 6 * lines.len() as u32,
+            FetchDumpChunk { lines, .. } => HDR + 6 * lines.len() as u32,
             FetchLatestVersResp { results, .. } => {
                 HDR + results
                     .iter()
                     .map(|r| 6 + 12 * r.versions.len() as u32)
                     .sum::<u32>()
+            }
+            DumpChunkVers { results, .. } => {
+                HDR + results.len() as u32 * crate::recxl::logunit::LOG_ENTRY_BYTES as u32
             }
         }
     }
@@ -275,11 +327,13 @@ impl MsgKind {
         use MsgKind::*;
         match self {
             Repl { .. } | ReplAck { .. } | Val { .. } => MsgClass::Replication,
+            DumpChunk { replica: true, .. } | RedumpChunk { .. } => MsgClass::DumpRepl,
             DumpChunk { .. } | DumpSyncAck { .. } => MsgClass::LogDump,
-            Msi { .. } | MsiMn { .. } | ViralNotify { .. } | Interrupt { .. }
-            | InterruptResp { .. } | InitRecov { .. } | InitRecovResp { .. }
-            | RecovEnd { .. } | RecovEndResp { .. } | RebuildHome { .. }
-            | FetchLatestVers { .. } | FetchLatestVersResp { .. } => MsgClass::Recovery,
+            Msi { .. } | MsiMn { .. } | ViralNotify { .. } | MnViralNotify { .. }
+            | Interrupt { .. } | InterruptResp { .. } | InitRecov { .. }
+            | InitRecovResp { .. } | RecovEnd { .. } | RecovEndResp { .. }
+            | RebuildHome { .. } | FetchLatestVers { .. } | FetchLatestVersResp { .. }
+            | FetchDumpChunk { .. } | DumpChunkVers { .. } => MsgClass::Recovery,
             _ => MsgClass::CxlAccess,
         }
     }
@@ -342,10 +396,36 @@ mod tests {
             MsgKind::DumpChunk {
                 from: 0,
                 bytes: 64,
-                entries: vec![]
+                entries: vec![],
+                replica: false,
+                partner: Some(1)
             }
             .class(),
             MsgClass::LogDump
+        );
+        // the secondary copy of the same chunk is dump-replication traffic
+        assert_eq!(
+            MsgKind::DumpChunk {
+                from: 0,
+                bytes: 64,
+                entries: vec![],
+                replica: true,
+                partner: Some(0)
+            }
+            .class(),
+            MsgClass::DumpRepl
+        );
+        assert_eq!(
+            MsgKind::RedumpChunk { from_mn: 2, entries: vec![] }.class(),
+            MsgClass::DumpRepl
+        );
+        assert_eq!(
+            MsgKind::FetchDumpChunk { from_mn: 1, lines: vec![], epoch: 3 }.class(),
+            MsgClass::Recovery
+        );
+        assert_eq!(
+            MsgKind::MnViralNotify { failed_mn: 4 }.class(),
+            MsgClass::Recovery
         );
         assert_eq!(MsgKind::Interrupt { epoch: 1 }.class(), MsgClass::Recovery);
         assert_eq!(
@@ -407,13 +487,36 @@ mod tests {
             from: 3,
             bytes: 10,
             entries: vec![],
+            replica: false,
+            partner: None,
         };
         assert_eq!(c.wire_bytes(), 64);
         let big = MsgKind::DumpChunk {
             from: 3,
             bytes: 4096,
             entries: vec![],
+            replica: true,
+            partner: Some(2),
         };
         assert_eq!(big.wire_bytes(), 4096);
+    }
+
+    #[test]
+    fn redump_chunk_charges_uncompressed_records() {
+        let rec = crate::recxl::logunit::LogRecord {
+            req: ReqId { cn: 0, core: 0 },
+            line: line(),
+            word: 0,
+            value: 7,
+            ts: 1,
+            repl_seq: 1,
+            valid: true,
+        };
+        let small = MsgKind::RedumpChunk { from_mn: 0, entries: vec![rec; 2] };
+        assert_eq!(small.wire_bytes(), 64, "rounds up to one 64 B chunk");
+        let big = MsgKind::RedumpChunk { from_mn: 0, entries: vec![rec; 100] };
+        assert_eq!(big.wire_bytes(), 1200, "12 B per record");
+        let vers = MsgKind::DumpChunkVers { from_mn: 0, results: vec![rec; 3], epoch: 1 };
+        assert_eq!(vers.wire_bytes(), HDR + 36);
     }
 }

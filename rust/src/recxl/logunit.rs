@@ -290,6 +290,13 @@ impl LoggingUnit {
     /// lines, and chunks must follow (a raw `home_mn` interleave would
     /// ship them to a dead port).
     /// Returns (records per home MN, uncompressed bytes, compressed bytes).
+    ///
+    /// Note the clear: after this call the dumped records exist *only*
+    /// where the chunks land.  Under `dump_repl` the cluster ships each
+    /// per-MN bucket to its home MN **and** a deterministic secondary
+    /// (`LineTable::secondary_mn`), so a single MN fail-stop can never
+    /// take the last copy — the durability window DESIGN.md "Dump
+    /// replication" closes.
     pub fn dump(
         &mut self,
         n_cns: usize,

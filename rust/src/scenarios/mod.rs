@@ -13,22 +13,51 @@
 //! round.
 
 use crate::cluster::run_app;
-use crate::config::{CnId, FaultNode, FaultPlan, SimConfig};
+use crate::config::{CacheGeom, CnId, FaultNode, FaultPlan, SimConfig};
 use crate::sim::time::us;
 use crate::stats::RunStats;
 use crate::workloads::AppProfile;
+
+/// No-op configuration tweak (most scenarios run the stock config).
+fn no_tweak(_: &mut SimConfig) {}
+
+/// Default loss contract: no scenario expects committed data to be lost.
+fn never_loses(_: &SimConfig) -> bool {
+    false
+}
 
 /// A named, self-describing fault scenario.
 pub struct Scenario {
     pub name: &'static str,
     pub about: &'static str,
     builder: fn(&SimConfig) -> FaultPlan,
+    /// Configuration the scenario depends on beyond the fault plan
+    /// (e.g. a dump period short enough that dump cycles land before
+    /// the crash).  Applied by [`Self::prepare`] before the plan.
+    tweak: fn(&mut SimConfig),
+    /// Whether the scenario is *expected* to report committed-data loss
+    /// under `cfg` — the documented dump-durability window that
+    /// `dump_repl=0` regression-pins.
+    expects_loss: fn(&SimConfig) -> bool,
 }
 
 impl Scenario {
     /// Materialize the fault plan for a concrete configuration.
     pub fn plan(&self, cfg: &SimConfig) -> FaultPlan {
         (self.builder)(cfg)
+    }
+
+    /// Apply the scenario's configuration tweaks and install its plan.
+    pub fn prepare(&self, cfg: &mut SimConfig) {
+        (self.tweak)(cfg);
+        cfg.faults = self.plan(cfg);
+    }
+
+    /// Is this run *supposed* to lose committed data (oracle reports
+    /// inconsistencies)?  True only for the loss-window scenario with
+    /// `dump_repl=0`.
+    pub fn expects_loss(&self, cfg: &SimConfig) -> bool {
+        (self.expects_loss)(cfg)
     }
 }
 
@@ -45,11 +74,15 @@ pub fn all() -> Vec<Scenario> {
             name: "no-crash",
             about: "fault-free baseline; recovery machinery stays idle",
             builder: |_| FaultPlan::default(),
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "single-crash",
             about: "the paper's Fig. 15 shape: one CN fails mid-run",
             builder: |_| FaultPlan::single_crash(0, us(40)),
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "double-crash",
@@ -59,6 +92,8 @@ pub fn all() -> Vec<Scenario> {
                 p.push_crash(other_cn(cfg.n_cns, 0), us(150));
                 p
             },
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "crash-during-recovery",
@@ -70,6 +105,8 @@ pub fn all() -> Vec<Scenario> {
                 p.push_crash(other_cn(cfg.n_cns, 0), us(45));
                 p
             },
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "cm-crash",
@@ -84,6 +121,8 @@ pub fn all() -> Vec<Scenario> {
                 }
                 p
             },
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "nr-failures",
@@ -98,6 +137,8 @@ pub fn all() -> Vec<Scenario> {
                 }
                 p
             },
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "mn-crash",
@@ -109,6 +150,8 @@ pub fn all() -> Vec<Scenario> {
                 p.push_mn_crash(cfg.n_mns / 2, us(40));
                 p
             },
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "link-degraded",
@@ -124,6 +167,8 @@ pub fn all() -> Vec<Scenario> {
                 );
                 p
             },
+            tweak: no_tweak,
+            expects_loss: never_loses,
         },
         Scenario {
             name: "mn-crash-during-cn-recovery",
@@ -135,6 +180,43 @@ pub fn all() -> Vec<Scenario> {
                 p.push_mn_crash(cfg.n_mns / 2, us(45));
                 p
             },
+            tweak: no_tweak,
+            expects_loss: never_loses,
+        },
+        Scenario {
+            name: "mn-crash-after-dump",
+            about: "an MN dies after several dump cycles landed dumped-only \
+                    records on it; dump_repl=1 rebuilds them from the \
+                    cross-MN secondary copies, dump_repl=0 reproduces the \
+                    documented loss window",
+            builder: |cfg| {
+                // late enough that many dump cycles complete first and
+                // early-written, since-evicted lines sit dump-only
+                let mut p = FaultPlan::default();
+                p.push_mn_crash(cfg.n_mns / 2, us(90));
+                p
+            },
+            tweak: |cfg| {
+                // several dump cycles must land before the crash (the
+                // Logging Units clear on every dump), and the caches
+                // must be small enough that early-written lines leave
+                // every cache — the exact recipe for records whose only
+                // copies are the dumped chunks on the dead MN
+                cfg.dump_period_ps = us(12);
+                cfg.l1 = CacheGeom {
+                    size_bytes: 12 * 1024,
+                    ..cfg.l1
+                };
+                cfg.l2 = CacheGeom {
+                    size_bytes: 32 * 1024,
+                    ..cfg.l2
+                };
+                cfg.l3 = CacheGeom {
+                    size_bytes: 128 * 1024,
+                    ..cfg.l3
+                };
+            },
+            expects_loss: |cfg| !cfg.dump_repl,
         },
     ]
 }
@@ -144,16 +226,21 @@ pub fn by_name(name: &str) -> Option<Scenario> {
     all().into_iter().find(|s| s.name == name)
 }
 
-/// Install the scenario's fault plan into `cfg` and run it.
+/// Install the scenario's configuration tweaks + fault plan into `cfg`
+/// and run it.
 pub fn run_scenario(sc: &Scenario, mut cfg: SimConfig, app: &AppProfile) -> RunStats {
-    cfg.faults = sc.plan(&cfg);
+    sc.prepare(&mut cfg);
     run_app(cfg, app)
 }
 
 /// Did the run uphold the scenario's contract?  Crash-free scenarios
 /// (including pure link-degradation plans — timing faults, nothing to
 /// recover) must not trigger recovery; crashy ones must recover every
-/// injected CN *and* MN failure and pass the consistency oracle.
+/// injected CN *and* MN failure and pass the consistency oracle — except
+/// when the scenario *documents* a loss window for `cfg` (the
+/// `mn-crash-after-dump` × `dump_repl=0` baseline), where the oracle
+/// must report the loss: a silently "clean" run would mean the
+/// regression pin stopped pinning anything.
 pub fn verdict(sc: &Scenario, cfg: &SimConfig, stats: &RunStats) -> Result<(), String> {
     let planned = sc.plan(cfg).crash_count();
     if planned == 0 {
@@ -172,6 +259,15 @@ pub fn verdict(sc: &Scenario, cfg: &SimConfig, stats: &RunStats) -> Result<(), S
             "recovered {recovered} of {planned} injected failures"
         ));
     }
+    if sc.expects_loss(cfg) {
+        return if stats.recovery.consistent {
+            Err("expected the documented dump-loss window to reproduce, \
+                 but the oracle reported zero lost words"
+                .into())
+        } else {
+            Ok(())
+        };
+    }
     if !stats.recovery.consistent {
         return Err(format!(
             "oracle found {} inconsistencies",
@@ -188,7 +284,7 @@ mod tests {
     #[test]
     fn registry_has_the_required_scenarios() {
         let names: Vec<&str> = all().iter().map(|s| s.name).collect();
-        assert!(names.len() >= 9, "need >= 9 named scenarios, got {names:?}");
+        assert!(names.len() >= 10, "need >= 10 named scenarios, got {names:?}");
         for required in [
             "no-crash",
             "single-crash",
@@ -199,6 +295,7 @@ mod tests {
             "mn-crash",
             "link-degraded",
             "mn-crash-during-cn-recovery",
+            "mn-crash-after-dump",
         ] {
             assert!(names.contains(&required), "missing scenario {required}");
         }
@@ -254,5 +351,37 @@ mod tests {
         let mixed = by_name("mn-crash-during-cn-recovery").unwrap().plan(&cfg);
         assert_eq!(mixed.crashed_cns(), vec![0]);
         assert_eq!(mixed.crashed_mns(), vec![cfg.n_mns / 2]);
+        let after_dump = by_name("mn-crash-after-dump").unwrap().plan(&cfg);
+        assert_eq!(after_dump.crashed_mns(), vec![cfg.n_mns / 2]);
+        assert_eq!(after_dump.crash_count(), 1);
+    }
+
+    #[test]
+    fn after_dump_tweak_shrinks_caches_and_dump_period() {
+        let sc = by_name("mn-crash-after-dump").unwrap();
+        let mut cfg = SimConfig::default();
+        sc.prepare(&mut cfg);
+        assert_eq!(cfg.dump_period_ps, crate::sim::time::us(12));
+        assert!(cfg.l3.size_bytes < SimConfig::default().l3.size_bytes);
+        // geometry invariants survive the shrink (whole sets per level)
+        for g in [cfg.l1, cfg.l2, cfg.l3] {
+            assert!(g.lines() % g.assoc == 0, "{g:?} must keep whole sets");
+        }
+        assert_eq!(cfg.faults.crashed_mns(), vec![cfg.n_mns / 2]);
+        // crash lands after several dump periods
+        assert!(cfg.faults.events()[0].at > 5 * cfg.dump_period_ps);
+    }
+
+    #[test]
+    fn loss_contract_follows_dump_repl() {
+        let sc = by_name("mn-crash-after-dump").unwrap();
+        let mut cfg = SimConfig::default();
+        assert!(!sc.expects_loss(&cfg), "dump_repl=1 must be loss-free");
+        cfg.dump_repl = false;
+        assert!(sc.expects_loss(&cfg), "the paper-faithful baseline loses");
+        // every other scenario never expects loss, either way
+        for other in all().into_iter().filter(|s| s.name != sc.name) {
+            assert!(!other.expects_loss(&cfg), "{}", other.name);
+        }
     }
 }

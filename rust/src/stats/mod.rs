@@ -153,12 +153,14 @@ pub enum RecoveryMsg {
     InitRecovResp,
     FetchLatestVers,
     FetchLatestVersResp,
+    FetchDumpChunk,
+    DumpChunkVers,
     RecovEnd,
     RecovEndResp,
 }
 
 impl RecoveryMsg {
-    pub const COUNT: usize = 10;
+    pub const COUNT: usize = 12;
 
     pub const ALL: [RecoveryMsg; RecoveryMsg::COUNT] = [
         RecoveryMsg::Msi,
@@ -169,6 +171,8 @@ impl RecoveryMsg {
         RecoveryMsg::InitRecovResp,
         RecoveryMsg::FetchLatestVers,
         RecoveryMsg::FetchLatestVersResp,
+        RecoveryMsg::FetchDumpChunk,
+        RecoveryMsg::DumpChunkVers,
         RecoveryMsg::RecovEnd,
         RecoveryMsg::RecovEndResp,
     ];
@@ -183,6 +187,8 @@ impl RecoveryMsg {
             RecoveryMsg::InitRecovResp => "InitRecovResp",
             RecoveryMsg::FetchLatestVers => "FetchLatestVers",
             RecoveryMsg::FetchLatestVersResp => "FetchLatestVersResp",
+            RecoveryMsg::FetchDumpChunk => "FetchDumpChunk",
+            RecoveryMsg::DumpChunkVers => "DumpChunkVers",
             RecoveryMsg::RecovEnd => "RecovEnd",
             RecoveryMsg::RecovEndResp => "RecovEndResp",
         }
@@ -251,6 +257,14 @@ pub struct RecoveryStats {
     /// Re-homed lines reconstructed from replica Logging-Unit logs
     /// (`FetchLatestVers` against the replica window).
     pub rebuilt_from_logs: u64,
+    /// Re-homed lines whose only surviving data was a cross-MN secondary
+    /// dump copy (`FetchDumpChunk` — the durability window `dump_repl`
+    /// closes; these lines were honest losses before).
+    pub rebuilt_dumps: u64,
+    /// Dump-chunk re-replication messages sent to restore the 2-copy
+    /// invariant after an MN death (re-dump-on-death): both surviving
+    /// primaries re-mirroring, and rebuilt homes re-seeding.
+    pub rereplicated_chunks: u64,
     /// Re-homed lines with no surviving copy anywhere (memory left
     /// zeroed; only consistent if nothing was ever committed there).
     pub rebuilt_empty: u64,

@@ -28,8 +28,10 @@ fn scen_cfg(ops: u64) -> SimConfig {
 }
 
 /// Everything that must match bit-for-bit between two runs: simulated
-/// time, event count, per-class traffic (totals + the 50 us timeline),
-/// commits, and the recovery outcome.
+/// time, event count, per-class traffic (totals + the 50 us timeline —
+/// `MsgClass::ALL` now includes the dump-replication class), commits,
+/// and the recovery outcome including the dump-durability counters
+/// (`rebuilt_dumps`, `rereplicated_chunks`).
 #[allow(clippy::type_complexity)]
 fn fingerprint(
     s: &RunStats,
@@ -42,7 +44,7 @@ fn fingerprint(
     u64,
     Vec<usize>,
     Vec<usize>,
-    u64,
+    (u64, u64, u64),
 ) {
     (
         s.exec_time_ps,
@@ -59,7 +61,11 @@ fn fingerprint(
         s.repl.store_commits,
         s.recovery.failed_cns.clone(),
         s.recovery.failed_mns.clone(),
-        s.recovery.rehomed_lines,
+        (
+            s.recovery.rehomed_lines,
+            s.recovery.rebuilt_dumps,
+            s.recovery.rereplicated_chunks,
+        ),
     )
 }
 
@@ -68,7 +74,7 @@ fn fixed_seed_is_bit_identical_on_every_named_scenario() {
     let app = by_name("ycsb").unwrap();
     for sc in recxl::scenarios::all() {
         let mut cfg = scen_cfg(6_000);
-        cfg.faults = sc.plan(&cfg);
+        sc.prepare(&mut cfg);
         let a = run_app(cfg.clone(), &app);
         let b = run_app(cfg, &app);
         assert_eq!(
@@ -84,10 +90,16 @@ fn fixed_seed_is_bit_identical_on_every_named_scenario() {
 fn run_grid_is_identical_across_thread_counts() {
     let app = by_name("ycsb").unwrap();
     let mut points = Vec::new();
-    for name in ["no-crash", "double-crash", "mn-crash", "link-degraded"] {
+    for name in [
+        "no-crash",
+        "double-crash",
+        "mn-crash",
+        "link-degraded",
+        "mn-crash-after-dump",
+    ] {
         let sc = recxl::scenarios::by_name(name).unwrap();
         let mut cfg = scen_cfg(4_000);
-        cfg.faults = sc.plan(&cfg);
+        sc.prepare(&mut cfg);
         points.push((cfg, app.clone()));
     }
     let seq = run_grid(points.clone(), false);
