@@ -57,7 +57,7 @@ impl Cluster {
                     let head = self.cores[id].sb.head_mut().unwrap();
                     if head.wt_acked {
                         let e = self.cores[id].sb.pop_head().unwrap();
-                        self.oracle.on_commit(e.lid, e.mask, &e.words, cn, 0);
+                        self.commit_oracle(e.lid, e.mask, &e.words, cn, 0);
                         self.stats.repl.store_commits += 1;
                         continue;
                     }
@@ -131,7 +131,7 @@ impl Cluster {
         if self.caches[cn].owns(lid) {
             let e = self.cores[id].sb.pop_head().unwrap();
             self.caches[cn].write_words(lid, e.mask, &e.words);
-            self.oracle.on_commit(lid, e.mask, &e.words, cn, 0);
+            self.commit_oracle(lid, e.mask, &e.words, cn, 0);
             self.stats.repl.store_commits += 1;
             // NOTE: commits never advance the core's front-end clock —
             // stores are asynchronous after retirement; the core only
@@ -195,7 +195,7 @@ impl Cluster {
             self.stats.repl.vals_sent += 1;
         }
         self.caches[cn].write_words(lid, e.mask, &e.words);
-        self.oracle.on_commit(lid, e.mask, &e.words, cn, e.repl_seq);
+        self.commit_oracle(lid, e.mask, &e.words, cn, e.repl_seq);
         self.stats.repl.store_commits += 1;
         true
     }

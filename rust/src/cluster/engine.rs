@@ -1,0 +1,600 @@
+//! The sharded execution engine: conservative-lookahead parallel
+//! discrete-event simulation over per-partition shards.
+//!
+//! The cluster is partitioned by node: CN `c` and its cores belong to
+//! shard `c % shards`, MN `m` to shard `m % shards`.  Each shard owns a
+//! calendar [`EventQueue`](crate::sim::EventQueue) plus the per-node slab
+//! state of its nodes (cores, caches, CN port state, Logging Units,
+//! directories, fabric uplinks), and drains its queue *unsynchronized*
+//! inside a time window.  Windows are derived from the fabric's minimum
+//! cross-node message latency Δ (`Fabric::min_message_latency_ps`): a
+//! message sent inside window `[kΔ, (k+1)Δ)` cannot arrive before
+//! `(k+1)Δ`, so shards never need to see each other's state mid-window —
+//! the classic bounded-lag / null-message-free conservative PDES
+//! argument.  Cross-shard effects are buffered (message outboxes, the
+//! lock/barrier ledger, oracle commits) and exchanged at window barriers
+//! in deterministic sorted orders, which makes the full schedule a
+//! function of the configuration alone — bit-identical for every shard
+//! count, including 1 (see `tests/determinism.rs` and DESIGN.md
+//! "Sharded execution").
+//!
+//! Faults and recovery do not parallelize: recovery rounds mutate global
+//! state (lock purges, line re-homing, the oracle) with message chains
+//! shorter than Δ-windows are worth.  The engine therefore *merges* all
+//! shards back into the base cluster before injecting a fault and runs
+//! the exact serial event loop until the recovery machinery quiesces
+//! (`Cluster::serial_quiesced`), then re-splits.  A run with no faults
+//! spends its whole life in windowed mode; a `shards=1` run executes the
+//! same windows inline on the calling thread with no worker threads.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::{Cluster, Ev, SyncOp};
+use crate::config::FaultKind;
+use crate::proto::NodeId;
+use crate::sim::time::{ms, Ps};
+use crate::stats::RunStats;
+use crate::workloads::RustTraceSource;
+
+/// End of the lookahead window containing time `t`.
+#[inline]
+fn window_end(t: Ps, delta: Ps) -> Ps {
+    (t / delta + 1) * delta
+}
+
+/// Node key: CNs are `0..n_cns`, MNs are `n_cns..n_cns+n_mns`.  Used
+/// both for shard assignment and as the deterministic tiebreaker when
+/// shard queues merge.
+#[inline]
+fn shard_of_key(key: usize, n_cns: usize, shards: usize) -> usize {
+    if key < n_cns {
+        key % shards
+    } else {
+        (key - n_cns) % shards
+    }
+}
+
+/// The node an event belongs to (every event targets exactly one node).
+fn ev_node_key(ev: &Ev, cores_per_cn: usize, n_cns: usize) -> usize {
+    match ev {
+        Ev::Run(id) | Ev::Commit(id) | Ev::LoadDone(id) => id / cores_per_cn,
+        Ev::GrantLock { core, .. } | Ev::GrantLockAt { core, .. } => core / cores_per_cn,
+        Ev::BarrierGo(core) | Ev::BarrierGoAt { core, .. } => core / cores_per_cn,
+        Ev::DumpTick(cn) | Ev::Crash(cn) | Ev::Detect(cn) | Ev::QuiesceTimeout(cn, _) => *cn,
+        Ev::CrashMn(mn) | Ev::DetectMn(mn) => n_cns + mn,
+        Ev::Deliver(b) => match b.dst {
+            NodeId::Cn(c) => c,
+            NodeId::Mn(m) => n_cns + m,
+        },
+    }
+}
+
+fn shard_cluster<'a>(
+    base: &'a mut Cluster,
+    shells: &'a mut [Cluster],
+    s: usize,
+) -> &'a mut Cluster {
+    if s == 0 {
+        base
+    } else {
+        &mut shells[s - 1]
+    }
+}
+
+/// Worker pool driving the shard shells.  Plain `std::thread` workers
+/// with one job/done channel pair each: shard `s` is always processed by
+/// worker `s-1` and results are received in shard order, so the engine's
+/// control flow is deterministic regardless of which worker finishes
+/// first.  `shards=1` uses no threads at all.
+enum WorkerPool {
+    Inline,
+    Threads {
+        jobs: Vec<mpsc::Sender<(Cluster, Ps)>>,
+        done: Vec<mpsc::Receiver<Cluster>>,
+        handles: Vec<Option<JoinHandle<()>>>,
+    },
+}
+
+fn join_dead_worker(handles: &mut [Option<JoinHandle<()>>], i: usize) -> ! {
+    if let Some(h) = handles[i].take() {
+        if let Err(p) = h.join() {
+            std::panic::resume_unwind(p);
+        }
+    }
+    panic!("shard worker {i} exited unexpectedly");
+}
+
+impl WorkerPool {
+    fn start(shards: usize) -> WorkerPool {
+        if shards <= 1 {
+            return WorkerPool::Inline;
+        }
+        let mut jobs = Vec::with_capacity(shards - 1);
+        let mut done = Vec::with_capacity(shards - 1);
+        let mut handles = Vec::with_capacity(shards - 1);
+        for _ in 1..shards {
+            let (jtx, jrx) = mpsc::channel::<(Cluster, Ps)>();
+            let (dtx, drx) = mpsc::channel::<Cluster>();
+            let h = std::thread::spawn(move || {
+                for (mut cl, w_end) in jrx {
+                    cl.run_window(w_end);
+                    if dtx.send(cl).is_err() {
+                        break;
+                    }
+                }
+            });
+            jobs.push(jtx);
+            done.push(drx);
+            handles.push(Some(h));
+        }
+        WorkerPool::Threads { jobs, done, handles }
+    }
+
+    /// Run one window on every shard: shells on the workers, the base
+    /// shard inline on the calling thread.
+    fn run_window(&mut self, base: &mut Cluster, shells: &mut Vec<Cluster>, w_end: Ps) {
+        match self {
+            WorkerPool::Inline => {
+                base.run_window(w_end);
+                for sh in shells.iter_mut() {
+                    sh.run_window(w_end);
+                }
+            }
+            WorkerPool::Threads { jobs, done, handles } => {
+                for (i, sh) in shells.drain(..).enumerate() {
+                    if jobs[i].send((sh, w_end)).is_err() {
+                        join_dead_worker(handles, i);
+                    }
+                }
+                base.run_window(w_end);
+                for (i, drx) in done.iter().enumerate() {
+                    match drx.recv() {
+                        Ok(sh) => shells.push(sh),
+                        Err(_) => join_dead_worker(handles, i),
+                    }
+                }
+            }
+        }
+    }
+
+    fn shutdown(self) {
+        if let WorkerPool::Threads { jobs, done, mut handles } = self {
+            drop(jobs);
+            drop(done);
+            for slot in handles.iter_mut() {
+                if let Some(h) = slot.take() {
+                    if let Err(p) = h.join() {
+                        std::panic::resume_unwind(p);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run the cluster to completion under the windowed engine.
+pub(super) fn run(mut base: Cluster) -> RunStats {
+    let wall = Instant::now();
+    let delta = base.fabric.min_message_latency_ps();
+    let shards = base.cfg.shards;
+
+    // seed: every core starts at t=0; ReCXL arms the periodic dumps
+    for id in 0..base.cores.len() {
+        base.q.push_at(0, Ev::Run(id));
+    }
+    if base.cfg.protocol.is_recxl() {
+        for cn in 0..base.cfg.n_cns {
+            base.q.push_at(base.cfg.dump_period_ps, Ev::DumpTick(cn));
+        }
+    }
+    // Faults are held back by the engine (not pre-seeded into the queue)
+    // so windowed execution can stop at the window boundary *before* a
+    // fault and inject it into the serial phase.  Link degradations need
+    // no event: the fabric carries the whole schedule from construction.
+    let mut faults: VecDeque<(Ps, Ev)> = base
+        .cfg
+        .faults
+        .events()
+        .iter()
+        .filter_map(|f| match f.kind {
+            FaultKind::CnCrash { cn } => Some((f.at, Ev::Crash(cn))),
+            FaultKind::MnCrash { mn } => Some((f.at, Ev::CrashMn(mn))),
+            FaultKind::LinkDegraded { .. } => None,
+        })
+        .collect();
+
+    // shard shells: same shape as the base, no pre-intern scan (they
+    // adopt the base's finished line table), state swapped in at split
+    let mut shells: Vec<Cluster> = (1..shards)
+        .map(|_| {
+            let mut sh = Cluster::build(
+                base.cfg.clone(),
+                &base.app,
+                Box::new(RustTraceSource),
+                false,
+            );
+            sh.lines = base.lines.clone();
+            sh
+        })
+        .collect();
+    let mut workers = WorkerPool::start(shards);
+
+    loop {
+        run_serial(&mut base, &mut faults, delta);
+        let done = faults.is_empty()
+            && ((base.finished >= base.cores.len() && base.recovery_is_settled())
+                || base.q.peek_time().is_none());
+        if done {
+            break;
+        }
+        split(&mut base, &mut shells);
+        run_windowed(&mut base, &mut shells, &faults, delta, &mut workers);
+        merge(&mut base, &mut shells);
+    }
+
+    // fold the shard-local monotone counters in exactly once
+    for sh in &shells {
+        base.stats.absorb_shard(&sh.stats);
+        base.events_accum += sh.q.events_processed();
+        base.pool.allocated += sh.pool.allocated;
+        base.pool.recycled += sh.pool.recycled;
+        base.fabric.dropped_to_dead += sh.fabric.dropped_to_dead;
+        base.sim_now_max = base.sim_now_max.max(sh.q.now());
+    }
+    workers.shutdown();
+    base.finalize(wall)
+}
+
+/// The serial phase: the exact pre-sharding event loop on the merged
+/// base cluster.  Returns when the fault/recovery machinery has
+/// quiesced and no fault lands inside the next window (hand off to
+/// windowed execution), or when the run is complete.
+fn run_serial(base: &mut Cluster, faults: &mut VecDeque<(Ps, Ev)>, delta: Ps) {
+    let mut last_progress = (base.finished, base.stats.repl.store_commits);
+    let mut last_progress_at = base.q.now();
+    loop {
+        if base.serial_quiesced() {
+            let Some(t_min) = base.q.peek_time() else {
+                // queue exhausted: jump the clock to the next fault
+                match faults.pop_front() {
+                    Some((at, ev)) => {
+                        let at = at.max(base.q.now());
+                        base.push_ctrl(at, ev);
+                        continue;
+                    }
+                    None => return,
+                }
+            };
+            let w_end = window_end(t_min, delta);
+            match faults.front() {
+                Some(&(at, _)) if at < w_end => {
+                    let (at, ev) = faults.pop_front().unwrap();
+                    let at = at.max(base.q.now());
+                    base.push_ctrl(at, ev);
+                    continue;
+                }
+                _ => return, // hand off to windowed execution
+            }
+        }
+        // keep the fault plan ahead of the clock: inject any fault due
+        // before the next event
+        if let Some(&(at, _)) = faults.front() {
+            let due = match base.q.peek_time() {
+                Some(t) => at <= t,
+                None => true,
+            };
+            if due {
+                let (at, ev) = faults.pop_front().unwrap();
+                let at = at.max(base.q.now());
+                base.push_ctrl(at, ev);
+                continue;
+            }
+        }
+        let Some((_, ev)) = base.q.pop() else { return };
+        base.dispatch(ev);
+        if base.finished >= base.cores.len() && base.recovery_is_settled() && faults.is_empty() {
+            return;
+        }
+        // stall watchdog: if nothing but housekeeping events fire for a
+        // long stretch of simulated time, the protocol livelocked — dump
+        // the blocked cores and abort loudly instead of spinning.
+        // Progress means commits or finishes, deliberately NOT message
+        // traffic: a coherence livelock ping-pongs messages forever, and
+        // counting them would keep resetting the watchdog.
+        let progress = (base.finished, base.stats.repl.store_commits);
+        if progress != last_progress {
+            last_progress = progress;
+            last_progress_at = base.q.now();
+        } else if base.q.now().saturating_sub(last_progress_at) > ms(50) {
+            base.dump_stall_diagnostic();
+            panic!(
+                "simulation stalled: no progress for 50 ms of simulated time \
+                 (finished {}/{})",
+                base.finished,
+                base.cores.len(),
+            );
+        }
+    }
+}
+
+/// Cores finished across all shards (each core's flag is authoritative
+/// on its owner shard while split).
+fn finished_total(base: &Cluster, shells: &[Cluster]) -> usize {
+    let cpc = base.cfg.cores_per_cn;
+    let shards = base.cfg.shards;
+    (0..base.cores.len())
+        .filter(|&id| {
+            let s = (id / cpc) % shards;
+            if s == 0 {
+                base.finished_flag[id]
+            } else {
+                shells[s - 1].finished_flag[id]
+            }
+        })
+        .count()
+}
+
+fn progress_snapshot(base: &Cluster, shells: &[Cluster]) -> (usize, u64) {
+    let commits = base.stats.repl.store_commits
+        + shells.iter().map(|s| s.stats.repl.store_commits).sum::<u64>();
+    (finished_total(base, shells), commits)
+}
+
+fn max_now(base: &Cluster, shells: &[Cluster]) -> Ps {
+    shells.iter().map(|s| s.q.now()).fold(base.q.now(), Ps::max)
+}
+
+/// The windowed phase: run lookahead windows across all shards until the
+/// queues drain, the next fault comes due, or the run completes.
+fn run_windowed(
+    base: &mut Cluster,
+    shells: &mut Vec<Cluster>,
+    faults: &VecDeque<(Ps, Ev)>,
+    delta: Ps,
+    workers: &mut WorkerPool,
+) {
+    let n_cores = base.cores.len();
+    let mut last_progress = progress_snapshot(base, shells);
+    let mut last_progress_at = max_now(base, shells);
+    loop {
+        // global minimum next-event time picks the window; empty windows
+        // are skipped entirely
+        let mut t_min = base.q.peek_time();
+        for sh in shells.iter_mut() {
+            t_min = match (t_min, sh.q.peek_time()) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        let Some(t_min) = t_min else { return };
+        let w_end = window_end(t_min, delta);
+        if let Some(&(at, _)) = faults.front() {
+            if at < w_end {
+                return; // merge and inject serially before this window
+            }
+        }
+        workers.run_window(base, shells, w_end);
+        window_barrier(base, shells, w_end);
+        if finished_total(base, shells) == n_cores
+            && base.recovery_is_settled()
+            && faults.is_empty()
+        {
+            return;
+        }
+        // engine-level stall watchdog (same policy as the serial loop,
+        // taken across all shards)
+        let progress = progress_snapshot(base, shells);
+        let now = max_now(base, shells);
+        if progress != last_progress {
+            last_progress = progress;
+            last_progress_at = now;
+        } else if now.saturating_sub(last_progress_at) > ms(50) {
+            let finished = finished_total(base, shells);
+            merge(base, shells);
+            base.dump_stall_diagnostic();
+            panic!(
+                "simulation stalled: no progress for 50 ms of simulated time \
+                 (finished {finished}/{n_cores})",
+            );
+        }
+    }
+}
+
+/// Exchange all cross-shard effects buffered during the window that just
+/// ended.  Every pass processes its items in a deterministic sorted
+/// order, which is what makes the schedule shard-count-invariant.
+fn window_barrier(base: &mut Cluster, shells: &mut [Cluster], w_end: Ps) {
+    let n_cns = base.cfg.n_cns;
+    let shards = base.cfg.shards;
+    let rtt = base.cfg.net_rtt_ps;
+    let ow = base.cfg.one_way_ps();
+
+    // 1. route staged messages over the shared downlinks.  Arbitration
+    // order: switch-arrival time, then source port (stable sort, so
+    // same-port messages keep their uplink order — each port belongs to
+    // exactly one shard, making the order shard-count-invariant).
+    let mut staged = std::mem::take(&mut base.outbox);
+    for sh in shells.iter_mut() {
+        staged.append(&mut sh.outbox);
+    }
+    staged.sort_by_key(|(s, _)| (s.at_switch, s.src_port));
+    for (s, msg) in staged {
+        let arrive = base.fabric.route_downlink(s, &msg);
+        debug_assert!(arrive >= w_end, "a message outran the lookahead window");
+        let key = match msg.dst {
+            NodeId::Cn(c) => c,
+            NodeId::Mn(m) => n_cns + m,
+        };
+        let cl = shard_cluster(base, shells, shard_of_key(key, n_cns, shards));
+        let boxed = cl.pool.boxed(msg);
+        cl.q.push_at(arrive, Ev::Deliver(boxed));
+    }
+
+    // 2. resolve the lock/barrier ledger against the global tables on
+    // the base, in (time, core) order.  Grant times use the serial
+    // arithmetic (acquire: +net RTT; handoff/departure: +one-way); the
+    // grant *event* lands no earlier than the window boundary, but it
+    // carries the true grant time, so wait accounting and core clocks
+    // are independent of the window grid.
+    let mut ops = std::mem::take(&mut base.sync_ledger);
+    for sh in shells.iter_mut() {
+        ops.append(&mut sh.sync_ledger);
+    }
+    ops.sort_by_key(|op| op.key());
+    for op in ops {
+        match op {
+            SyncOp::LockAcq { t, core, lock } => {
+                if base.locks.acquire(lock, core) {
+                    push_grant(base, shells, core, lock, t + rtt, w_end);
+                }
+            }
+            SyncOp::LockRel { t, core, lock } => {
+                if let Some(next) = base.locks.release(lock, core) {
+                    push_grant(base, shells, next, lock, t + ow, w_end);
+                }
+            }
+            SyncOp::BarArrive { t, core } => {
+                if let Some(waiters) = base.barrier.arrive(core) {
+                    for w in waiters {
+                        push_barrier_go(base, shells, w, t + rtt, w_end);
+                    }
+                }
+            }
+            SyncOp::BarDepart { t, core } => {
+                if let Some(waiters) = base.barrier.remove_participant(core) {
+                    for w in waiters {
+                        push_barrier_go(base, shells, w, t + ow, w_end);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn push_grant(
+    base: &mut Cluster,
+    shells: &mut [Cluster],
+    core: usize,
+    lock: u8,
+    at: Ps,
+    w_end: Ps,
+) {
+    let s = shard_of_key(core / base.cfg.cores_per_cn, base.cfg.n_cns, base.cfg.shards);
+    let cl = shard_cluster(base, shells, s);
+    cl.q.push_at(at.max(w_end), Ev::GrantLockAt { core, lock, at });
+}
+
+fn push_barrier_go(base: &mut Cluster, shells: &mut [Cluster], core: usize, at: Ps, w_end: Ps) {
+    let s = shard_of_key(core / base.cfg.cores_per_cn, base.cfg.n_cns, base.cfg.shards);
+    let cl = shard_cluster(base, shells, s);
+    cl.q.push_at(at.max(w_end), Ev::BarrierGoAt { core, at });
+}
+
+/// Distribute the merged base cluster into shard shells for windowed
+/// execution: swap each shell's owned per-node state in, replicate the
+/// read-only global state, and route every pending event to its owner
+/// shard's queue.
+fn split(base: &mut Cluster, shells: &mut [Cluster]) {
+    let n_cns = base.cfg.n_cns;
+    let n_mns = base.cfg.n_mns;
+    let cpc = base.cfg.cores_per_cn;
+    let shards = base.cfg.shards;
+    for (idx, shell) in shells.iter_mut().enumerate() {
+        let s = idx + 1;
+        shell.windowed = true;
+        shell.dead.copy_from_slice(&base.dead);
+        shell.dead_mns.copy_from_slice(&base.dead_mns);
+        shell.fabric.copy_viral_from(&base.fabric);
+        shell.finished_flag.copy_from_slice(&base.finished_flag);
+        shell.finished = base.finished;
+        shell.lines = base.lines.clone();
+        for c in (s..n_cns).step_by(shards) {
+            for l in 0..cpc {
+                let id = c * cpc + l;
+                std::mem::swap(&mut base.cores[id], &mut shell.cores[id]);
+            }
+            std::mem::swap(&mut base.caches[c], &mut shell.caches[c]);
+            std::mem::swap(&mut base.cns[c], &mut shell.cns[c]);
+            std::mem::swap(&mut base.logunits[c], &mut shell.logunits[c]);
+            base.fabric.swap_uplink(&mut shell.fabric, c);
+        }
+        for m in (s..n_mns).step_by(shards) {
+            std::mem::swap(&mut base.dirs[m], &mut shell.dirs[m]);
+            base.fabric.swap_uplink(&mut shell.fabric, n_cns + m);
+        }
+    }
+    base.windowed = true;
+    for (t, _, ev) in base.q.drain_events() {
+        let key = ev_node_key(&ev, cpc, n_cns);
+        let s = shard_of_key(key, n_cns, shards);
+        shard_cluster(base, shells, s).q.push_at(t, ev);
+    }
+}
+
+/// Collapse the shards back into the base cluster: swap owned per-node
+/// state back, merge the shard queues in `(time, node)` order, and flush
+/// the buffered oracle commits in `(time, cn)` order.
+fn merge(base: &mut Cluster, shells: &mut [Cluster]) {
+    let n_cns = base.cfg.n_cns;
+    let n_mns = base.cfg.n_mns;
+    let cpc = base.cfg.cores_per_cn;
+    let shards = base.cfg.shards;
+    for (idx, shell) in shells.iter_mut().enumerate() {
+        let s = idx + 1;
+        debug_assert!(shell.outbox.is_empty() && shell.sync_ledger.is_empty());
+        for c in (s..n_cns).step_by(shards) {
+            for l in 0..cpc {
+                let id = c * cpc + l;
+                std::mem::swap(&mut base.cores[id], &mut shell.cores[id]);
+                base.finished_flag[id] = shell.finished_flag[id];
+            }
+            std::mem::swap(&mut base.caches[c], &mut shell.caches[c]);
+            std::mem::swap(&mut base.cns[c], &mut shell.cns[c]);
+            std::mem::swap(&mut base.logunits[c], &mut shell.logunits[c]);
+            base.fabric.swap_uplink(&mut shell.fabric, c);
+        }
+        for m in (s..n_mns).step_by(shards) {
+            std::mem::swap(&mut base.dirs[m], &mut shell.dirs[m]);
+            base.fabric.swap_uplink(&mut shell.fabric, n_cns + m);
+        }
+        shell.windowed = false;
+    }
+    base.finished = base.finished_flag.iter().filter(|&&f| f).count();
+    base.windowed = false;
+    debug_assert!(base.outbox.is_empty() && base.sync_ledger.is_empty());
+
+    // re-queue every pending event into the base calendar in (time,
+    // owner node) order.  Events for one node live only on its owner
+    // shard and drain in that shard's schedule order, so the merged
+    // order is shard-count-invariant.
+    let mut evs: Vec<(Ps, usize, Ev)> = Vec::new();
+    for (t, _, ev) in base.q.drain_events() {
+        let key = ev_node_key(&ev, cpc, n_cns);
+        evs.push((t, key, ev));
+    }
+    for shell in shells.iter_mut() {
+        for (t, _, ev) in shell.q.drain_events() {
+            let key = ev_node_key(&ev, cpc, n_cns);
+            evs.push((t, key, ev));
+        }
+    }
+    evs.sort_by_key(|e| (e.0, e.1));
+    for (t, _, ev) in evs {
+        base.q.push_at(t, ev);
+    }
+
+    // the oracle is last-writer-wins in call order: apply the buffered
+    // windowed commits in (time, cn) order, matching what the serial
+    // schedule normalizes to
+    let mut commits = std::mem::take(&mut base.oracle_buf);
+    for shell in shells.iter_mut() {
+        commits.append(&mut shell.oracle_buf);
+    }
+    commits.sort_by_key(|&(at, _, _, _, cn, _)| (at, cn));
+    for (_, lid, mask, words, cn, repl_seq) in commits {
+        base.oracle.on_commit(lid, mask, &words, cn, repl_seq);
+    }
+}

@@ -6,7 +6,7 @@
 //! bounds how far a core may run ahead of global time, keeping causality
 //! skew under ~100 ns — below the fabric RTT (DESIGN.md "Timing model").
 
-use super::{Cluster, Ev};
+use super::{Cluster, Ev, SyncOp};
 use crate::cache::{LookupResult, Mesi};
 use crate::cpu::{Block, Deposit};
 use crate::mem::Addr;
@@ -53,7 +53,15 @@ impl Cluster {
                 if self.cores[id].cs_remaining == 0 {
                     if let Some(l) = self.cores[id].held_lock.take() {
                         let at = self.cores[id].clock;
-                        if let Some(next) = self.locks.release(l, id) {
+                        if self.windowed {
+                            // the lock table is global: ledger the
+                            // release for the window-barrier coordinator
+                            self.sync_ledger.push(SyncOp::LockRel {
+                                t: at.max(now),
+                                core: id,
+                                lock: l,
+                            });
+                        } else if let Some(next) = self.locks.release(l, id) {
                             let ow = self.cfg.one_way_ps();
                             self.q.push_at(
                                 at.max(now) + ow,
@@ -130,6 +138,21 @@ impl Cluster {
                     self.cores[id].clock += PS_PER_CPU_CYCLE;
                     return true;
                 }
+                if self.windowed {
+                    // global lock table: block and ledger the acquire;
+                    // the coordinator resolves it at the window barrier
+                    // (an uncontended grant arrives one net RTT later,
+                    // matching the serial inline-acquire cost)
+                    let core = &mut self.cores[id];
+                    core.pending_cs = cs_len.max(1) as u64;
+                    core.block = Block::Lock(lock);
+                    self.sync_ledger.push(SyncOp::LockAcq {
+                        t: clock,
+                        core: id,
+                        lock,
+                    });
+                    return false;
+                }
                 if self.locks.acquire(lock, id) {
                     let core = &mut self.cores[id];
                     core.held_lock = Some(lock);
@@ -146,6 +169,13 @@ impl Cluster {
             TraceOp::Barrier => {
                 let clock = self.cores[id].clock;
                 self.cores[id].block = Block::Barrier;
+                if self.windowed {
+                    self.sync_ledger.push(SyncOp::BarArrive {
+                        t: clock.max(now),
+                        core: id,
+                    });
+                    return false;
+                }
                 if let Some(waiters) = self.barrier.arrive(id) {
                     let at = clock.max(now) + self.cfg.net_rtt_ps;
                     for w in waiters {
@@ -184,8 +214,9 @@ impl Cluster {
         }
 
         // workload boundary: one arithmetic translation, then every
-        // downstream structure probes by dense id
-        let lid = self.lines.intern(line);
+        // downstream structure probes by dense id (pre-interned at
+        // construction, so this is a read-only lookup)
+        let lid = self.intern(line);
         let res = self.caches[cn].lookup(local, line, lid);
         self.cores[id].clock += PS_PER_CPU_CYCLE; // issue slot
         match res {
@@ -277,7 +308,7 @@ impl Cluster {
         if remote {
             self.cores[id].stats.remote_stores += 1;
         }
-        let lid = self.lines.intern(line);
+        let lid = self.intern(line);
         let dep = self.cores[id].sb.deposit(line, lid, remote, word, value, clock);
         match dep {
             Deposit::Full => {
@@ -353,7 +384,7 @@ impl Cluster {
     pub(crate) fn writeback(&mut self, cn: usize, wb: Option<crate::cache::Writeback>) {
         if let Some(wb) = wb {
             if wb.line.is_remote() {
-                let lid = self.lines.intern(wb.line);
+                let lid = self.intern(wb.line);
                 let mn = self.lines.home_mn(lid);
                 let at = self.q.now();
                 self.send(

@@ -12,6 +12,12 @@ impl Cluster {
     /// the message pool first, so the next `send` reuses its allocation.
     pub(crate) fn deliver(&mut self, boxed: Box<Message>) {
         let msg = self.pool.reclaim(boxed);
+        if msg.kind.class() == crate::proto::MsgClass::Recovery {
+            // balanced against the increment in `send`; dead-drop or not,
+            // the message is no longer in flight
+            debug_assert!(self.recovery_msgs_inflight > 0);
+            self.recovery_msgs_inflight = self.recovery_msgs_inflight.saturating_sub(1);
+        }
         match msg.dst {
             NodeId::Cn(cn) => {
                 if self.dead[cn] {
@@ -34,11 +40,11 @@ impl Cluster {
         let now = self.q.now();
         match msg.kind {
             MsgKind::Data { line, req, exclusive, words } => {
-                let lid = self.lines.intern(line);
+                let lid = self.intern(line);
                 self.on_data(cn, line, lid, req, exclusive, words);
             }
             MsgKind::Inv { line } => {
-                let lid = self.lines.intern(line);
+                let lid = self.intern(line);
                 let dirty = self
                     .caches[cn]
                     .evict_line(line, lid)
@@ -55,7 +61,7 @@ impl Cluster {
                 self.ownership_lost(cn, line);
             }
             MsgKind::Downgrade { line } => {
-                let lid = self.lines.intern(line);
+                let lid = self.intern(line);
                 let dirty = self.caches[cn].downgrade(lid).map(|wb| (wb.mask, wb.words));
                 let mn = self.lines.home_mn(lid);
                 self.send(
@@ -76,7 +82,7 @@ impl Cluster {
                 self.commit_check(id);
             }
             MsgKind::Repl { req, line, mask, words, repl_seq } => {
-                let lid = self.lines.intern(line);
+                let lid = self.intern(line);
                 let ack_at = self.logunits[cn].repl(
                     now,
                     PendingRepl { req, line, lid, mask, words, repl_seq },
@@ -345,7 +351,7 @@ impl Cluster {
             // disjoint from the logging units
             let Cluster { logunits, lines, cfg, .. } = self;
             logunits[cn].dump(cfg.n_cns, cfg.n_mns, cfg.n_r, cfg.gzip_level, &mut |l| {
-                let lid = lines.intern(l);
+                let lid = lines.lookup(l).expect("dumped line not pre-interned");
                 lines.home_mn(lid)
             })
         };

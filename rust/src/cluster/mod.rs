@@ -13,6 +13,7 @@
 //!   against.
 
 mod commit;
+mod engine;
 mod exec;
 mod handlers;
 mod oracle;
@@ -23,21 +24,22 @@ pub use recovery_impl::RecoveryCtrl;
 
 use rustc_hash::FxHashSet;
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cache::CnCaches;
 use crate::coherence::Directory;
-use crate::config::{CnId, CoreId, FaultKind, MnId, Protocol, SimConfig};
+use crate::config::{CnId, CoreId, MnId, Protocol, SimConfig};
 use crate::cpu::sync::{Barrier, LockTable};
 use crate::cpu::{Block, Core};
-use crate::fabric::{Delivery, Fabric};
-use crate::mem::{Line, LineId, LineTable, NO_SLOT};
-use crate::proto::{Message, MsgPool};
+use crate::fabric::{Delivery, Fabric, StagedSend};
+use crate::mem::{Addr, Line, LineId, LineTable, NO_SLOT};
+use crate::proto::{LineWords, Message, MsgClass, MsgPool};
 use crate::recxl::logunit::LoggingUnit;
 use crate::sim::time::Ps;
 use crate::sim::EventQueue;
 use crate::stats::RunStats;
-use crate::workloads::{AppProfile, RustTraceSource, ThreadTrace, TraceSource};
+use crate::workloads::{AppProfile, RustTraceSource, ThreadTrace, TraceOp, TraceSource};
 
 /// Event payloads of the cluster simulation.
 #[derive(Debug)]
@@ -58,6 +60,14 @@ pub enum Ev {
     GrantLock { core: CoreId, lock: u8 },
     /// Barrier release broadcast.
     BarrierGo(CoreId),
+    /// Lock grant resolved at a shard-window barrier.  Carries the true
+    /// grant time `at`: the event may only be *delivered* at the next
+    /// window boundary, but lock-wait accounting and the core clock use
+    /// `at` so timing is independent of the window grid.
+    GrantLockAt { core: CoreId, lock: u8, at: Ps },
+    /// Barrier release resolved at a shard-window barrier (see
+    /// [`Ev::GrantLockAt`] for the carried-time convention).
+    BarrierGoAt { core: CoreId, at: Ps },
     /// Periodic Logging-Unit dump (section IV-E).
     DumpTick(CnId),
     /// Failure injection (fail-stop).
@@ -97,6 +107,35 @@ pub(crate) enum Reissue {
 #[derive(Debug, Default, Clone)]
 struct MshrEntry {
     counts: Vec<u32>,
+}
+
+/// One lock/barrier operation recorded by a shard during a window.
+///
+/// Locks and the barrier are *global* state, so sharded execution never
+/// touches them mid-window: each shard appends its operations to a
+/// ledger, and the coordinator resolves the concatenated ledgers at the
+/// window barrier in `(t, core)` order against the base cluster's
+/// `LockTable`/`Barrier` (DESIGN.md "Sharded execution").  `t` is the
+/// operation's core-clock time, which is what the serial path uses for
+/// grant arithmetic.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum SyncOp {
+    LockAcq { t: Ps, core: CoreId, lock: u8 },
+    LockRel { t: Ps, core: CoreId, lock: u8 },
+    BarArrive { t: Ps, core: CoreId },
+    BarDepart { t: Ps, core: CoreId },
+}
+
+impl SyncOp {
+    /// Resolution order at the window barrier.
+    pub(crate) fn key(&self) -> (Ps, CoreId) {
+        match *self {
+            SyncOp::LockAcq { t, core, .. }
+            | SyncOp::LockRel { t, core, .. }
+            | SyncOp::BarArrive { t, core }
+            | SyncOp::BarDepart { t, core } => (t, core),
+        }
+    }
 }
 
 /// Per-CN shared state (CXL port side).
@@ -213,10 +252,14 @@ pub struct Cluster {
     pub cfg: SimConfig,
     pub q: EventQueue<Ev>,
     pub fabric: Fabric,
-    /// Line interner: dense ids for every touched line, assigned at the
-    /// workload/trace boundary; all per-line state below is slab-indexed
-    /// by them (§Perf — see `mem::interner`).
-    pub lines: LineTable,
+    /// Line interner: dense ids for the workload's whole footprint,
+    /// assigned by a deterministic pre-run trace scan so ids are
+    /// identical for every shard count; all per-line state below is
+    /// slab-indexed by them (§Perf — see `mem::interner`).  `Arc`: the
+    /// table is shared read-only across shards; the one post-crash
+    /// mutation (`kill_mn`) happens in the serial phase via
+    /// `Arc::make_mut`, after which the shards re-clone.
+    pub lines: Arc<LineTable>,
     /// Recycled `Ev::Deliver` boxes (§Perf: zero-alloc steady state).
     pub(crate) pool: MsgPool,
     pub cores: Vec<Core>,
@@ -232,12 +275,39 @@ pub struct Cluster {
     pub oracle: Oracle,
     pub recovery: Option<RecoveryCtrl>,
     pub stats: RunStats,
-    trace_src: Box<dyn TraceSource>,
+    /// The app profile the cluster was built for (the sharded engine
+    /// constructs shard shells from it).
+    pub(crate) app: AppProfile,
+    trace_src: Box<dyn TraceSource + Send>,
+    /// True while this cluster executes as one shard of a window (the
+    /// engine toggles it at split/merge).  Windowed execution defers all
+    /// cross-node effects — sends, lock/barrier ops, oracle commits — to
+    /// the window barrier.
+    pub(crate) windowed: bool,
+    /// Windowed mode: uplink-staged messages awaiting downlink routing at
+    /// the next window barrier.
+    pub(crate) outbox: Vec<(StagedSend, Message)>,
+    /// Windowed mode: lock/barrier operations awaiting resolution.
+    pub(crate) sync_ledger: Vec<SyncOp>,
+    /// Windowed mode: oracle commits buffered as `(at, lid, mask, words,
+    /// cn, repl_seq)`; flushed to the base oracle in `(at, cn)` order at
+    /// merge so the last-writer bookkeeping is shard-invariant.
+    pub(crate) oracle_buf: Vec<(Ps, LineId, u16, LineWords, CnId, u64)>,
+    /// Recovery-class messages currently in flight (serial phases only;
+    /// the engine must not go windowed while any remain).
+    pub(crate) recovery_msgs_inflight: usize,
+    /// Control events (crash/detect/quiesce-timeout) queued but not yet
+    /// dispatched; same serial-phase gate as above.
+    pub(crate) ctrl_events_pending: usize,
+    /// Events processed on shard shells, folded in by the engine before
+    /// finalize so `stats.events` covers every queue.
+    pub(crate) events_accum: u64,
+    /// Max `q.now()` across all shard queues at engine finish (`finalize`
+    /// takes the max with the base queue's own clock).
+    pub(crate) sim_now_max: Ps,
     /// Cores that have fully finished (trace + SB).
     finished: usize,
     finished_flag: Vec<bool>,
-    /// Stall watchdog bookkeeping.
-    last_progress_at: Ps,
     /// Which cores had already finished *before* the crash (detection
     /// must purge only genuinely-running dead cores from sync state).
     prefinished_at_crash: Vec<bool>,
@@ -274,7 +344,23 @@ impl Cluster {
         Self::with_source(cfg, app, Box::new(RustTraceSource))
     }
 
-    pub fn with_source(cfg: SimConfig, app: &AppProfile, trace_src: Box<dyn TraceSource>) -> Self {
+    pub fn with_source(
+        cfg: SimConfig,
+        app: &AppProfile,
+        trace_src: Box<dyn TraceSource + Send>,
+    ) -> Self {
+        Self::build(cfg, app, trace_src, true)
+    }
+
+    /// Full constructor.  `pre_intern` runs the deterministic footprint
+    /// scan (below); shard shells skip it and adopt the base cluster's
+    /// finished `LineTable` instead.
+    pub(crate) fn build(
+        cfg: SimConfig,
+        app: &AppProfile,
+        trace_src: Box<dyn TraceSource + Send>,
+        pre_intern: bool,
+    ) -> Self {
         cfg.validate().expect("invalid config");
         let n_threads = cfg.n_threads();
         let mut cores = Vec::with_capacity(n_threads);
@@ -309,10 +395,30 @@ impl Cluster {
         let mut stats = RunStats::default();
         stats.cores = vec![Default::default(); n_threads];
         stats.repl.max_dram_log_bytes = vec![0; cfg.n_cns];
+        let mut lines = LineTable::for_app(app, n_threads, cfg.n_mns);
+        if pre_intern {
+            // Pre-intern the whole footprint: replay every thread's trace
+            // (thread 0 first) and intern each touched line.  Ids depend
+            // only on (app, seed, ops), never on the runtime interleaving
+            // of cores — the property sharded execution needs to share
+            // one immutable table.  The replay uses the pure-Rust
+            // generator, which is bit-identical to the Pallas kernel, and
+            // the process-wide block memo keeps the second consumption of
+            // the same trace cheap.
+            let mut scan_src = RustTraceSource;
+            for t in 0..n_threads {
+                let mut trace = ThreadTrace::new(cfg.seed as u32, app, t, cfg.ops_per_thread);
+                while let Some(op) = trace.next_op(&mut scan_src) {
+                    if let TraceOp::Load { addr } | TraceOp::Store { addr } = op {
+                        lines.intern(Addr(addr).line());
+                    }
+                }
+            }
+        }
         Cluster {
             fabric: Fabric::new(&cfg),
             q: EventQueue::new(),
-            lines: LineTable::for_app(app, n_threads, cfg.n_mns),
+            lines: Arc::new(lines),
             pool: MsgPool::new(),
             cores,
             caches,
@@ -326,10 +432,18 @@ impl Cluster {
             oracle: Oracle::default(),
             recovery: None,
             stats,
+            app: app.clone(),
             trace_src,
+            windowed: false,
+            outbox: Vec::new(),
+            sync_ledger: Vec::new(),
+            oracle_buf: Vec::new(),
+            recovery_msgs_inflight: 0,
+            ctrl_events_pending: 0,
+            events_accum: 0,
+            sim_now_max: 0,
             finished: 0,
             finished_flag: vec![false; n_threads],
-            last_progress_at: 0,
             prefinished_at_crash: vec![false; n_threads],
             unrecovered: BTreeSet::new(),
             unrecovered_mns: BTreeSet::new(),
@@ -421,10 +535,29 @@ impl Cluster {
     /// Route a message through the fabric at time `at`, scheduling its
     /// delivery.  Messages to dead CNs evaporate (the switch never
     /// responds on behalf of a failed CN — section V-A).
+    ///
+    /// Windowed (sharded) execution splits the route in two: the uplink
+    /// is charged here on the shard's own port, and the message is
+    /// staged in the outbox; the coordinator routes the shared downlink
+    /// and schedules delivery at the window barrier.  Every message's
+    /// minimum latency is at least the lookahead window, so a message
+    /// staged in window `k` always arrives at or after the end of
+    /// window `k+1` — no delivery can be late.
     pub fn send(&mut self, at: Ps, msg: Message) {
         let at = at.max(self.q.now());
+        if self.windowed {
+            if let Some(staged) = self.fabric.send_uplink(at, &msg, &mut self.stats.traffic) {
+                self.outbox.push((staged, msg));
+            }
+            return;
+        }
         match self.fabric.send(at, &msg, &mut self.stats.traffic) {
             Delivery::At(t) => {
+                if msg.kind.class() == MsgClass::Recovery {
+                    // gate: the engine must not go windowed while the
+                    // recovery protocol has messages in flight
+                    self.recovery_msgs_inflight += 1;
+                }
                 let boxed = self.pool.boxed(msg);
                 self.q.push_at(t, Ev::Deliver(boxed));
             }
@@ -436,12 +569,79 @@ impl Cluster {
         cn * self.cfg.cores_per_cn + local
     }
 
-    /// Intern a remote `line` and return its home directory's dense slot
-    /// (delivery-side translation; O(1), no hashing for in-footprint
-    /// lines).
-    pub(crate) fn mn_slot_of(&mut self, line: Line) -> u32 {
-        let lid = self.lines.intern(line);
+    /// Dense id of a pre-interned line.  The whole footprint is interned
+    /// at construction, so this is a read-only probe — the property that
+    /// lets shards share one `LineTable`.
+    #[inline]
+    pub(crate) fn intern(&self, line: Line) -> LineId {
+        match self.lines.lookup(line) {
+            Some(lid) => lid,
+            None => panic!("line {:x} outside the pre-interned footprint", line.0),
+        }
+    }
+
+    /// Dense home-directory slot of a remote `line` (delivery-side
+    /// translation; O(1), no hashing for in-footprint lines).
+    pub(crate) fn mn_slot_of(&self, line: Line) -> u32 {
+        let lid = self.intern(line);
         self.lines.mn_slot(lid)
+    }
+
+    /// Record a committed store with the consistency oracle.  The oracle
+    /// is global state, so windowed execution buffers the commit and the
+    /// engine applies the concatenated buffers in `(time, cn)` order at
+    /// merge; serial execution applies it directly.
+    pub(crate) fn commit_oracle(
+        &mut self,
+        lid: LineId,
+        mask: u16,
+        words: &LineWords,
+        cn: CnId,
+        repl_seq: u64,
+    ) {
+        if self.windowed {
+            self.oracle_buf
+                .push((self.q.now(), lid, mask, *words, cn, repl_seq));
+        } else {
+            self.oracle.on_commit(lid, mask, words, cn, repl_seq);
+        }
+    }
+
+    /// Queue a control event (crash/detect/quiesce-timeout), tracking it
+    /// so the engine keeps the cluster in the serial phase until every
+    /// queued control event has dispatched.
+    pub(crate) fn push_ctrl(&mut self, at: Ps, ev: Ev) {
+        self.ctrl_events_pending += 1;
+        self.q.push_at(at, ev);
+    }
+
+    fn ctrl_done(&mut self) {
+        self.ctrl_events_pending = self.ctrl_events_pending.saturating_sub(1);
+    }
+
+    /// No fault/recovery machinery is active or pending: the engine may
+    /// leave the serial phase and execute windows in parallel.
+    pub(crate) fn serial_quiesced(&self) -> bool {
+        let recovery_done = match &self.recovery {
+            Some(r) => r.complete,
+            None => true,
+        };
+        recovery_done
+            && self.unrecovered.is_empty()
+            && self.unrecovered_mns.is_empty()
+            && self.recovery_msgs_inflight == 0
+            && self.ctrl_events_pending == 0
+    }
+
+    /// Drain this shard's queue up to (strictly before) `w_end`.
+    pub(crate) fn run_window(&mut self, w_end: Ps) {
+        while let Some(t) = self.q.peek_time() {
+            if t >= w_end {
+                break;
+            }
+            let (_, ev) = self.q.pop().expect("peeked event vanished");
+            self.dispatch(ev);
+        }
     }
 
     pub fn live_cns(&self) -> impl Iterator<Item = CnId> + '_ {
@@ -464,6 +664,19 @@ impl Cluster {
             self.finished_flag[id] = true;
             self.finished += 1;
             core.stats.finished_at = core.clock.max(now);
+            if self.windowed {
+                // locks/barrier are global: ledger the release and the
+                // departure for the window-barrier coordinator
+                if let Some(l) = core.held_lock.take() {
+                    self.sync_ledger.push(SyncOp::LockRel {
+                        t: now,
+                        core: id,
+                        lock: l,
+                    });
+                }
+                self.sync_ledger.push(SyncOp::BarDepart { t: now, core: id });
+                return;
+            }
             if let Some(l) = core.held_lock.take() {
                 if let Some(next) = self.locks.release(l, id) {
                     let ow = self.cfg.one_way_ps();
@@ -480,54 +693,11 @@ impl Cluster {
         }
     }
 
-    /// Build initial events and run to completion.  Returns the stats.
-    pub fn run(mut self) -> RunStats {
-        let wall = Instant::now();
-        for id in 0..self.cores.len() {
-            self.q.push_at(0, Ev::Run(id));
-        }
-        if self.cfg.protocol.is_recxl() {
-            for cn in 0..self.cfg.n_cns {
-                self.q.push_at(self.cfg.dump_period_ps, Ev::DumpTick(cn));
-            }
-        }
-        for f in self.cfg.faults.events().to_vec() {
-            match f.kind {
-                FaultKind::CnCrash { cn } => self.q.push_at(f.at, Ev::Crash(cn)),
-                FaultKind::MnCrash { mn } => self.q.push_at(f.at, Ev::CrashMn(mn)),
-                // link degradation needs no event: the fabric carries the
-                // whole schedule from construction (deterministic timing)
-                FaultKind::LinkDegraded { .. } => {}
-            }
-        }
-        let mut last_progress = (0usize, 0u64);
-        while let Some((_, ev)) = self.q.pop() {
-            self.dispatch(ev);
-            if self.finished >= self.cores.len() && self.recovery_is_settled() {
-                break;
-            }
-            // stall watchdog: if nothing but housekeeping events fire for
-            // a long stretch of simulated time, the protocol livelocked —
-            // dump the blocked cores and abort loudly instead of spinning.
-            // Progress means commits or finishes, deliberately NOT message
-            // traffic: a coherence livelock ping-pongs messages forever,
-            // and counting them would keep resetting the watchdog.
-            let commits = self.stats.repl.store_commits;
-            if self.finished != last_progress.0 || commits != last_progress.1 {
-                last_progress = (self.finished, commits);
-                self.last_progress_at = self.q.now();
-            } else if self.q.now().saturating_sub(self.last_progress_at) > crate::sim::time::ms(50)
-            {
-                self.dump_stall_diagnostic();
-                panic!(
-                    "simulation stalled: no progress for 50 ms of simulated time \
-                     (finished {}/{})",
-                    self.finished,
-                    self.cores.len()
-                );
-            }
-        }
-        self.finalize(wall)
+    /// Run to completion.  Returns the stats.  All shard counts —
+    /// including 1 — go through the windowed engine, so the schedule is
+    /// a function of the configuration alone, never of `shards`.
+    pub fn run(self) -> RunStats {
+        engine::run(self)
     }
 
     /// Every *crash* in the plan has been injected, detected, and covered
@@ -535,7 +705,7 @@ impl Cluster {
     /// running even after all live cores finish their traces.  Link
     /// degradations are timing faults with nothing to recover, so they
     /// don't gate settlement.
-    fn recovery_is_settled(&self) -> bool {
+    pub(crate) fn recovery_is_settled(&self) -> bool {
         self.failures_recovered >= self.cfg.faults.crash_count()
     }
 
@@ -547,12 +717,29 @@ impl Cluster {
             Ev::LoadDone(id) => self.load_done(id, 1),
             Ev::GrantLock { core, lock } => self.grant_lock(core, lock),
             Ev::BarrierGo(id) => self.barrier_go(id),
+            Ev::GrantLockAt { core, lock, at } => self.grant_lock_at(core, lock, at),
+            Ev::BarrierGoAt { core, at } => self.barrier_go_at(core, at),
             Ev::DumpTick(cn) => self.dump_tick(cn),
-            Ev::Crash(cn) => self.crash(cn),
-            Ev::Detect(cn) => self.detect(cn),
-            Ev::CrashMn(mn) => self.crash_mn(mn),
-            Ev::DetectMn(mn) => self.detect_mn(mn),
-            Ev::QuiesceTimeout(cn, epoch) => self.quiesce_timeout(cn, epoch),
+            Ev::Crash(cn) => {
+                self.ctrl_done();
+                self.crash(cn);
+            }
+            Ev::Detect(cn) => {
+                self.ctrl_done();
+                self.detect(cn);
+            }
+            Ev::CrashMn(mn) => {
+                self.ctrl_done();
+                self.crash_mn(mn);
+            }
+            Ev::DetectMn(mn) => {
+                self.ctrl_done();
+                self.detect_mn(mn);
+            }
+            Ev::QuiesceTimeout(cn, epoch) => {
+                self.ctrl_done();
+                self.quiesce_timeout(cn, epoch);
+            }
         }
     }
 
@@ -565,16 +752,17 @@ impl Cluster {
             .map(|(_, c)| c.stats.finished_at.max(c.clock))
             .max()
             .unwrap_or(self.q.now());
-        self.stats.exec_time_ps = exec.max(self.q.now());
+        self.stats.exec_time_ps = exec.max(self.q.now()).max(self.sim_now_max);
         for (i, c) in self.cores.iter().enumerate() {
             self.stats.cores[i] = c.stats.clone();
         }
         for (cn, lu) in self.logunits.iter().enumerate() {
-            self.stats.repl.max_dram_log_bytes[cn] = lu.max_dram_bytes;
+            self.stats.repl.max_dram_log_bytes[cn] =
+                self.stats.repl.max_dram_log_bytes[cn].max(lu.max_dram_bytes);
             self.stats.repl.sram_backpressure += lu.backpressure_events;
         }
         self.stats.host_wall_s = wall.elapsed().as_secs_f64();
-        self.stats.events = self.q.events_processed();
+        self.stats.events = self.q.events_processed() + self.events_accum;
         self.stats.msg_pool_allocated = self.pool.allocated;
         self.stats.msg_pool_recycled = self.pool.recycled;
         self.stats
@@ -583,29 +771,43 @@ impl Cluster {
     // --- small handlers shared across submodules ---
 
     pub(crate) fn grant_lock(&mut self, id: CoreId, lock: u8) {
+        self.grant_lock_at(id, lock, self.q.now());
+    }
+
+    /// Grant `lock` to core `id` as of time `at`.  `at` is the true grant
+    /// time (serial: the delivering event's time; windowed: the time the
+    /// coordinator computed — the delivery itself may be quantized to a
+    /// window boundary).
+    pub(crate) fn grant_lock_at(&mut self, id: CoreId, lock: u8, at: Ps) {
         let core = &mut self.cores[id];
         if !matches!(core.block, Block::Lock(l) if l == lock) {
             return; // stale grant (e.g. purged during recovery)
         }
-        let now = self.q.now();
-        core.stats.lock_wait_ps += now.saturating_sub(core.clock);
-        core.clock = core.clock.max(now);
+        core.stats.lock_wait_ps += at.saturating_sub(core.clock);
+        core.clock = core.clock.max(at);
         core.block = Block::None;
         core.held_lock = Some(lock);
         core.cs_remaining = core.pending_cs;
-        self.q.push_at(core.clock, Ev::Run(id));
+        let run_at = core.clock.max(self.q.now());
+        self.q.push_at(run_at, Ev::Run(id));
     }
 
     pub(crate) fn barrier_go(&mut self, id: CoreId) {
+        self.barrier_go_at(id, self.q.now());
+    }
+
+    /// Release core `id` from the barrier as of time `at` (see
+    /// [`Self::grant_lock_at`] for the carried-time convention).
+    pub(crate) fn barrier_go_at(&mut self, id: CoreId, at: Ps) {
         let core = &mut self.cores[id];
         if core.block != Block::Barrier {
             return;
         }
-        let now = self.q.now();
-        core.stats.barrier_wait_ps += now.saturating_sub(core.clock);
-        core.clock = core.clock.max(now);
+        core.stats.barrier_wait_ps += at.saturating_sub(core.clock);
+        core.clock = core.clock.max(at);
         core.block = Block::None;
-        self.q.push_at(core.clock, Ev::Run(id));
+        let run_at = core.clock.max(self.q.now());
+        self.q.push_at(run_at, Ev::Run(id));
     }
 }
 

@@ -141,7 +141,7 @@ impl Cluster {
             }
         }
         let at = self.q.now() + self.cfg.detect_delay_ps;
-        self.q.push_at(at, Ev::Detect(cn));
+        self.push_ctrl(at, Ev::Detect(cn));
     }
 
     pub(crate) fn detect(&mut self, failed: CnId) {
@@ -218,7 +218,7 @@ impl Cluster {
         }
         self.dead_mns[mn] = true;
         let at = self.q.now() + self.cfg.detect_delay_ps;
-        self.q.push_at(at, Ev::DetectMn(mn));
+        self.push_ctrl(at, Ev::DetectMn(mn));
     }
 
     /// The switch notices the dead MN: Viral_Status for its port, every
@@ -234,8 +234,11 @@ impl Cluster {
             self.stats.recovery.detection_at = now;
         }
         // census + re-home: dense per-MN slots on the survivor are
-        // assigned in first-touch order, so the census is deterministic
-        let moved = self.lines.kill_mn(mn);
+        // assigned in first-touch order, so the census is deterministic.
+        // make_mut: the table is Arc-shared with shard shells; this
+        // serial-phase mutation copies once, and the shells re-clone the
+        // updated table at the next split
+        let moved = std::sync::Arc::make_mut(&mut self.lines).kill_mn(mn);
         self.stats.recovery.rehomed_lines += moved.len() as u64;
         // a line that re-homes again is a genuinely new rebuild: its
         // stats count anew (round restarts, by contrast, count once)
@@ -427,8 +430,8 @@ impl Cluster {
         // the directory until repair — which waits for this CN's
         // InterruptResp.  The timeout breaks the cycle: whatever is still
         // outstanding then is exactly the deferred set.
-        self.q
-            .push_in(crate::sim::time::us(25), Ev::QuiesceTimeout(cn, epoch));
+        let deadline = self.q.now() + crate::sim::time::us(25);
+        self.push_ctrl(deadline, Ev::QuiesceTimeout(cn, epoch));
         self.try_quiesce(cn);
     }
 
@@ -530,7 +533,7 @@ impl Cluster {
                     if !seen.insert(l) {
                         continue;
                     }
-                    let lid = self.lines.intern(l);
+                    let lid = self.intern(l);
                     per_home.entry(self.lines.home_mn(lid)).or_default().push(l);
                 }
             }
@@ -579,7 +582,7 @@ impl Cluster {
                 // count each (line, dead owner) repair once
                 if self.census_counted.insert((l, f)) {
                     self.stats.recovery.owned_lines += 1;
-                    let lid = self.lines.intern(l);
+                    let lid = self.intern(l);
                     match self.caches[f].state(lid).map(|s| s.mesi) {
                         Some(Mesi::Modified) => self.stats.recovery.dirty_lines += 1,
                         _ => self.stats.recovery.exclusive_lines += 1,
@@ -650,7 +653,7 @@ impl Cluster {
         let live: Vec<CnId> = self.live_cns().collect();
         let mut from_logs: Vec<Line> = Vec::new();
         for &line in &lines {
-            let lid = self.lines.intern(line);
+            let lid = self.intern(line);
             let slot = self.lines.mn_slot(lid);
             // harvest: prefer the owner's copy (M/E), else any shared copy
             let mut owner: Option<CnId> = None;
@@ -909,7 +912,7 @@ impl Cluster {
         }
         let mut to_install: Vec<LogRecord> = taken;
         for line in lines {
-            let lid = self.lines.intern(line);
+            let lid = self.intern(line);
             let slot = self.lines.mn_slot(lid);
             let lists: Vec<&VersionList> = per_line
                 .get(&line)
@@ -1035,7 +1038,7 @@ impl Cluster {
         let now = self.q.now();
         let pairs: Vec<(Line, crate::mem::LineId)> = lines
             .iter()
-            .map(|&l| (l, self.lines.intern(l)))
+            .map(|&l| (l, self.intern(l)))
             .collect();
         let results = self.logunits[cn].fetch_latest_vers(&pairs);
         // software handler cost: proportional to a log traversal
@@ -1102,7 +1105,7 @@ impl Cluster {
             }
         }
         for (line, owner) in owned {
-            let lid = self.lines.intern(line);
+            let lid = self.intern(line);
             let slot = self.lines.mn_slot(lid);
             let lists: Vec<&VersionList> = per_line
                 .get(&line)
@@ -1290,7 +1293,7 @@ impl Cluster {
         for r in items {
             match r {
                 Reissue::Rds(line) => {
-                    let lid = self.lines.intern(line);
+                    let lid = self.intern(line);
                     if self.cns[cn].mshr_waiters(lid) == 0 {
                         continue;
                     }
@@ -1308,7 +1311,7 @@ impl Cluster {
                     );
                 }
                 Reissue::Rdx(line) => {
-                    let lid = self.lines.intern(line);
+                    let lid = self.intern(line);
                     if !self.cns[cn].rdx_contains(lid) || self.caches[cn].owns(lid) {
                         continue;
                     }
@@ -1339,7 +1342,7 @@ impl Cluster {
                     if !still_stuck {
                         continue;
                     }
-                    let lid = self.lines.intern(line);
+                    let lid = self.intern(line);
                     let mn = self.lines.home_mn(lid);
                     let local = id % self.cfg.cores_per_cn;
                     self.send(

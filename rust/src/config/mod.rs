@@ -142,6 +142,13 @@ pub struct SimConfig {
     /// "MN failures").
     pub dump_repl: bool,
 
+    // --- execution (host-side, must not change results) ---
+    /// Simulation shards for the conservative-lookahead parallel engine
+    /// (`--set shards=N`).  Nodes partition round-robin across shards;
+    /// results are bit-identical for every shard count (DESIGN.md
+    /// "Sharded execution").  1 = windowed engine, single thread.
+    pub shards: usize,
+
     // --- workload ---
     pub ops_per_thread: u64,
     /// Deterministic barrier insertion period, in ops (0 = no barriers).
@@ -199,6 +206,7 @@ impl Default for SimConfig {
             dump_period_ps: time::us(2500),
             gzip_level: 9,
             dump_repl: true,
+            shards: 1,
             ops_per_thread: 100_000,
             barrier_period: 20_000,
             seed: 0xCE_C5_1,
@@ -253,6 +261,12 @@ impl SimConfig {
         }
         if self.link_bw_gbps == 0 {
             return Err("link bandwidth must be nonzero".into());
+        }
+        if self.shards == 0 || self.shards > self.n_cns {
+            return Err(format!(
+                "shards must be in 1..={} (one shard needs at least one CN), got {}",
+                self.n_cns, self.shards
+            ));
         }
         self.faults.validate(self.n_cns, self.n_mns)?;
         Ok(())
@@ -323,6 +337,24 @@ mod tests {
         assert!(c.validate().is_err());
         c.faults = FaultPlan::parse("cn0@50us,cn1@20us").unwrap();
         assert!(c.validate().is_err(), "unsorted plans rejected at config level");
+    }
+
+    #[test]
+    fn shards_bounds_are_validated() {
+        let mut c = SimConfig {
+            n_cns: 4,
+            n_mns: 4,
+            ..Default::default()
+        };
+        assert_eq!(c.shards, 1, "serial remains the default");
+        for s in 1..=4 {
+            c.shards = s;
+            assert!(c.validate().is_ok(), "shards={s}");
+        }
+        c.shards = 0;
+        assert!(c.validate().is_err());
+        c.shards = 5; // more shards than CNs would leave one empty
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub fn apply_override(cfg: &mut SimConfig, key: &str, value: &str) -> Result<(),
         "dump_period_us" => cfg.dump_period_ps = time::us(num!()),
         "gzip_level" => cfg.gzip_level = num!(),
         "dump_repl" => cfg.dump_repl = parse_bool(value).ok_or_else(|| bad("bool"))?,
+        "shards" => cfg.shards = num!(),
         "ops_per_thread" | "ops" => cfg.ops_per_thread = num!(),
         "barrier_period" => cfg.barrier_period = num!(),
         "seed" => cfg.seed = num!(),
@@ -133,6 +134,17 @@ mod tests {
         apply_override(&mut c, "dump_repl", "on").unwrap();
         assert!(c.dump_repl);
         assert!(apply_override(&mut c, "dump_repl", "2").is_err());
+    }
+
+    #[test]
+    fn shards_key_applies_and_validates() {
+        let mut c = SimConfig::default();
+        apply_override(&mut c, "shards", "4").unwrap();
+        assert_eq!(c.shards, 4);
+        assert!(c.validate().is_ok());
+        assert!(apply_override(&mut c, "shards", "many").is_err());
+        apply_override(&mut c, "shards", "99").unwrap();
+        assert!(c.validate().is_err(), "more shards than CNs is rejected");
     }
 
     #[test]

@@ -70,6 +70,21 @@ pub enum Delivery {
     Dropped,
 }
 
+/// A message that has crossed its source uplink (phase one of the
+/// sharded engine's split send) and awaits downlink routing on the
+/// barrier-side fabric.  Carries exactly the inputs phase two needs to
+/// reproduce the serial `send` arithmetic bit for bit.
+#[derive(Debug, Clone, Copy)]
+pub struct StagedSend {
+    /// When the message reaches the switch (uplink done + source hop).
+    pub at_switch: Ps,
+    pub src_port: usize,
+    /// Original send time — the jitter hash input, so windowed jitter is
+    /// identical to the serial path's.
+    pub sent_at: Ps,
+    pub bytes: u32,
+}
+
 impl Fabric {
     pub fn new(cfg: &SimConfig) -> Self {
         let ports = cfg.n_cns + cfg.n_mns;
@@ -192,6 +207,90 @@ impl Fabric {
     /// Total bytes that crossed any CN port (Fig. 14 numerator).
     pub fn cn_port_bytes(&self) -> u64 {
         (0..self.n_cns).map(|p| self.up[p].bytes + self.down[p].bytes).sum()
+    }
+
+    /// Conservative lookahead bound: the minimum time any message needs
+    /// to reach another node — the smallest wire size ([`crate::proto::HDR`])
+    /// serialized onto two healthy links plus both hops.  Degradation
+    /// factors are validated `>= 1` and only stretch a path; uplink
+    /// queueing, downlink queueing, and jitter only add — so no message
+    /// sent at `t` can arrive anywhere before `t + min`.  This is the
+    /// window width of the sharded engine (DESIGN.md §Sharded execution).
+    pub fn min_message_latency_ps(&self) -> Ps {
+        2 * (self.ser(crate::proto::HDR) + self.one_way)
+    }
+
+    /// Phase one of the sharded split send: viral check, charge the
+    /// source uplink, record traffic.  Returns `None` (and counts the
+    /// drop) when the destination port is viral.  Identical arithmetic to
+    /// the uplink half of [`Self::send`].
+    pub fn send_uplink(
+        &mut self,
+        now: Ps,
+        msg: &Message,
+        traffic: &mut TrafficStats,
+    ) -> Option<StagedSend> {
+        let src_port = self.port(msg.src);
+        let dst_port = self.port(msg.dst);
+        if self.viral[dst_port] {
+            self.dropped_to_dead += 1;
+            return None;
+        }
+        let bytes = msg.kind.wire_bytes();
+        let s = self.ser(bytes);
+        let f_src = self.factor(src_port, now);
+        let up = &mut self.up[src_port];
+        let up_done = up.busy_until.max(now) + s * f_src;
+        up.busy_until = up_done;
+        up.bytes += bytes as u64;
+        traffic.record(now, msg.kind.class(), bytes);
+        Some(StagedSend {
+            at_switch: up_done + self.one_way * f_src,
+            src_port,
+            sent_at: now,
+            bytes,
+        })
+    }
+
+    /// Phase two: charge the destination downlink and compute the arrival
+    /// time.  Callers must route staged sends in ascending
+    /// `(at_switch, src_port, uplink-FIFO counter)` order — that is the
+    /// order the serial path would have presented them to the downlink,
+    /// making the split send bit-identical to [`Self::send`].
+    pub fn route_downlink(&mut self, staged: StagedSend, msg: &Message) -> Ps {
+        let dst_port = self.port(msg.dst);
+        let s = self.ser(staged.bytes);
+        let f_dst = self.factor(dst_port, staged.at_switch);
+        let down = &mut self.down[dst_port];
+        let down_done = down.busy_until.max(staged.at_switch) + s * f_dst;
+        down.busy_until = down_done;
+        down.bytes += staged.bytes as u64;
+        let mut arrive = down_done + self.one_way * f_dst;
+        if self.jitter > 0 && msg.kind.reorderable() {
+            let h = mix32(
+                self.jitter_salt
+                    ^ ((staged.src_port as u32) << 8)
+                    ^ ((dst_port as u32) << 16)
+                    ^ staged.bytes
+                    ^ ((staged.sent_at ^ (staged.sent_at >> 32)) as u32),
+            );
+            arrive += (h as u64) % self.jitter;
+        }
+        arrive
+    }
+
+    /// Swap one port's uplink occupancy with `other`'s.  The sharded
+    /// engine moves uplink state with node ownership at merge/split;
+    /// downlink state always lives in the barrier-side (base) fabric.
+    pub fn swap_uplink(&mut self, other: &mut Fabric, port: usize) {
+        std::mem::swap(&mut self.up[port], &mut other.up[port]);
+    }
+
+    /// Overwrite the viral bits with `other`'s.  Shard fabrics carry
+    /// read-only replicas of the base fabric's failure-detection state
+    /// (viral bits only change during serial recovery phases).
+    pub fn copy_viral_from(&mut self, other: &Fabric) {
+        self.viral.copy_from_slice(&other.viral);
     }
 }
 
@@ -375,6 +474,98 @@ mod tests {
             panic!()
         };
         assert_eq!(b - t, 100 + 100_000 + 100 + 100_000);
+    }
+
+    #[test]
+    fn min_latency_is_the_healthy_header_path() {
+        let c = cfg();
+        let f = Fabric::new(&c);
+        // 16 B header @160 GB/s = 100 ps serialized twice + 2 x 100 ns
+        assert_eq!(f.min_message_latency_ps(), 2 * (100 + 100_000));
+        // and it equals the measured latency of a header-sized message on
+        // an idle healthy fabric (RdS is header-only)
+        let mut f = Fabric::new(&c);
+        let mut t = TrafficStats::default();
+        let Delivery::At(a) = f.send(0, &rds(0, 0), &mut t) else {
+            panic!()
+        };
+        assert_eq!(a, f.min_message_latency_ps());
+    }
+
+    #[test]
+    fn no_send_beats_the_lookahead_even_under_degradation() {
+        use crate::config::FaultPlan;
+        use crate::sim::time::us;
+        let mut c = cfg();
+        c.faults = FaultPlan::parse("link:cn0@10us*4x..20us").unwrap();
+        let mut f = Fabric::new(&c);
+        let min = f.min_message_latency_ps();
+        let mut t = TrafficStats::default();
+        // inside and outside the degradation window, across ports
+        for (at, m) in [
+            (0, rds(0, 0)),
+            (us(15), rds(0, 1)), // degraded source hop
+            (us(15), rds(1, 2)),
+            (us(25), rds(0, 3)),
+        ] {
+            let Delivery::At(a) = f.send(at, &m, &mut t) else {
+                panic!()
+            };
+            assert!(a - at >= min, "send at {at} arrived after {} < {min}", a - at);
+        }
+    }
+
+    #[test]
+    fn split_send_matches_serial_send_bit_for_bit() {
+        use crate::config::FaultPlan;
+        use crate::sim::time::us;
+        // degradation + jitter + uplink queueing + shared downlink — the
+        // full serial arithmetic must survive the two-phase split
+        let mut c = cfg();
+        c.repl_jitter_ps = 40_000;
+        c.faults = FaultPlan::parse("link:mn1@0us*3x..1ms").unwrap();
+        let repl = |srcn: usize, dst: usize| Message {
+            src: NodeId::Cn(srcn),
+            dst: NodeId::Mn(dst),
+            kind: MsgKind::Repl {
+                req: ReqId { cn: srcn, core: 0 },
+                line: Addr(0x8000_0040).line(),
+                mask: 1,
+                words: [0; 16],
+                repl_seq: 1,
+            },
+        };
+        let sends = [
+            (0, rds(0, 1)),
+            (0, rds(0, 1)), // queues behind the first on CN0's uplink
+            (50, repl(1, 1)),
+            (us(1), rds(2, 0)),
+            (us(1), repl(0, 1)),
+        ];
+        let mut serial = Fabric::new(&c);
+        let mut ts = TrafficStats::default();
+        let want: Vec<Ps> = sends
+            .iter()
+            .map(|(at, m)| match serial.send(*at, m, &mut ts) {
+                Delivery::At(a) => a,
+                Delivery::Dropped => panic!(),
+            })
+            .collect();
+        let mut split = Fabric::new(&c);
+        let mut tt = TrafficStats::default();
+        let staged: Vec<StagedSend> = sends
+            .iter()
+            .map(|(at, m)| split.send_uplink(*at, m, &mut tt).unwrap())
+            .collect();
+        // sends are already in (at_switch, src_port, per-port seq) order
+        // here; route phase two in that order
+        let got: Vec<Ps> = staged
+            .iter()
+            .zip(&sends)
+            .map(|(st, (_, m))| split.route_downlink(*st, m))
+            .collect();
+        assert_eq!(got, want);
+        assert_eq!(split.cn_port_bytes(), serial.cn_port_bytes());
     }
 
     #[test]

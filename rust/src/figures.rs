@@ -59,6 +59,11 @@ impl FigOpts {
 /// host threads when asked.  Each index has exactly one writer (workers
 /// claim disjoint indices off an atomic counter), so results land in
 /// per-slot `OnceLock`s — no shared lock on the hot completion path.
+///
+/// Each point may itself run sharded (`cfg.shards` worker threads), so
+/// grid workers are capped at `available_parallelism / max(shards over
+/// the grid)`: the product of grid fan-out and per-run fan-out never
+/// oversubscribes the host.
 pub fn run_grid(points: Vec<(SimConfig, AppProfile)>, parallel: bool) -> Vec<RunStats> {
     if !parallel || points.len() == 1 {
         return points.into_iter().map(|(c, a)| run_app(c, &a)).collect();
@@ -66,10 +71,11 @@ pub fn run_grid(points: Vec<(SimConfig, AppProfile)>, parallel: bool) -> Vec<Run
     let n = points.len();
     let results: Vec<OnceLock<RunStats>> = (0..n).map(|_| OnceLock::new()).collect();
     let next = AtomicUsize::new(0);
-    let workers = std::thread::available_parallelism()
+    let max_shards = points.iter().map(|(c, _)| c.shards).max().unwrap_or(1);
+    let host = std::thread::available_parallelism()
         .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n);
+        .unwrap_or(4);
+    let workers = (host / max_shards.max(1)).max(1).min(n);
     let points_ref = &points;
     let results_ref = &results;
     std::thread::scope(|s| {

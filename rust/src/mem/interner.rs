@@ -53,7 +53,10 @@ impl LineId {
 /// entirely.  The default apps top out at ~2.2 M entries (ycsb).
 const UNIVERSE_CAP: usize = 1 << 23;
 
-/// The line interner shared by one cluster.
+/// The line interner shared by one cluster.  `Clone` exists for the
+/// sharded engine's copy-on-write sharing (`Arc::make_mut` on the rare
+/// `kill_mn` mutation); the hot path never clones.
+#[derive(Clone)]
 pub struct LineTable {
     shared_size: u32,
     priv_size: u32,

@@ -272,7 +272,10 @@ impl MsgPool {
     }
 }
 
-const HDR: u32 = 16;
+/// CXL flit header approximation — the smallest wire size any message can
+/// have (every `wire_bytes` arm is `HDR` or larger).  Public because the
+/// fabric derives its conservative lookahead bound from it.
+pub const HDR: u32 = 16;
 
 impl MsgKind {
     /// Wire size in bytes (drives serialization delay + Fig. 14).

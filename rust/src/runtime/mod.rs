@@ -181,6 +181,14 @@ impl PjrtTraceSource {
     }
 }
 
+// SAFETY: the sharded engine requires `TraceSource + Send` because shard
+// shells (always `RustTraceSource`) move to worker threads; the base
+// cluster — the only holder of a `PjrtTraceSource` — runs on the calling
+// thread, so this impl only ever asserts *transferability*, never
+// concurrent use.  The PJRT CPU client behind `Runtime` owns its state
+// and is usable from whichever single thread holds it.
+unsafe impl Send for PjrtTraceSource {}
+
 impl TraceSource for PjrtTraceSource {
     fn block(&mut self, seed: u32, base: u32, params: &[i32; NUM_PARAMS]) -> Vec<RawOp> {
         self.blocks_generated += 1;

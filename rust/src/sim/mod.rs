@@ -230,6 +230,67 @@ impl<E> EventQueue<E> {
     pub fn events_processed(&self) -> u64 {
         self.popped
     }
+
+    /// Timestamp of the next event without popping it (`None` if empty).
+    ///
+    /// Mirrors `pop`'s two-tier scan.  It may advance the calendar cursor
+    /// over empty windows, which is invisible to callers: `now`, the
+    /// counters, and the eventual pop order are untouched.  The sharded
+    /// engine uses this at window barriers to pick the next window without
+    /// disturbing any shard's schedule.
+    pub fn peek_time(&mut self) -> Option<Ps> {
+        if self.n_near == 0 {
+            return self.overflow.peek().map(|top| top.key.0 .0);
+        }
+        loop {
+            let mut best: Option<(Ps, u64)> = None;
+            for it in &self.buckets[self.cur] {
+                let better = match best {
+                    None => true,
+                    Some((bt, bs)) => (it.0, it.1) < (bt, bs),
+                };
+                if better {
+                    best = Some((it.0, it.1));
+                }
+            }
+            let wend = self.bucket_start + WIDTH;
+            if let Some((bt, _)) = best {
+                let over = self.overflow.peek().map(|top| top.key.0 .0);
+                return Some(match over {
+                    Some(ot) if ot < bt => ot,
+                    _ => bt,
+                });
+            }
+            if let Some(top) = self.overflow.peek() {
+                if top.key.0 .0 < wend {
+                    return Some(top.key.0 .0);
+                }
+            }
+            // advance to the next window; n_near > 0 guarantees an
+            // occupied bucket within one DAY of the cursor
+            self.cur = (self.cur + 1) & (N_BUCKETS - 1);
+            self.bucket_start = wend;
+        }
+    }
+
+    /// Remove every pending event, returned in exact `(time, seq)` pop
+    /// order, without touching `now` or the processed counter.  The queue
+    /// stays usable afterwards — the sharded engine drains shard queues at
+    /// serial merge points and re-pushes the survivors into one queue,
+    /// then resumes pushing into the (now empty) originals on re-split.
+    pub fn drain_events(&mut self) -> Vec<(Ps, u64, E)> {
+        let mut out: Vec<(Ps, u64, E)> = Vec::with_capacity(self.len());
+        for b in &mut self.buckets {
+            out.append(b);
+        }
+        self.n_near = 0;
+        while let Some(sch) = self.overflow.pop() {
+            let (t, s) = sch.key.0;
+            out.push((t, s, sch.payload));
+        }
+        out.sort_by_key(|&(t, s, _)| (t, s));
+        out
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +423,64 @@ mod tests {
             assert_eq!(Some(got), want);
         }
         assert!(reference.is_empty());
+    }
+
+    #[test]
+    fn peek_time_matches_next_pop() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push_at(2 * DAY + 7, "far");
+        q.push_at(30, "near");
+        q.push_at(WIDTH + 3, "next-bucket");
+        for _ in 0..3 {
+            let t = q.peek_time().unwrap();
+            // peeking must not consume or reorder anything
+            assert_eq!(q.peek_time(), Some(t));
+            let (pt, _) = q.pop().unwrap();
+            assert_eq!(pt, t);
+        }
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn peek_time_sees_overflow_before_bucket() {
+        // overfill a window so later same-window pushes spill to the heap,
+        // then peek: the earliest event lives in the overflow tier
+        let mut q = EventQueue::new();
+        for i in 0..(BUCKET_CAP as u32) {
+            q.push_at(500, i);
+        }
+        q.push_at(200, 7_777u32); // spills (bucket full), but is earliest
+        assert_eq!(q.peek_time(), Some(200));
+        assert_eq!(q.pop(), Some((200, 7_777)));
+    }
+
+    #[test]
+    fn drain_returns_pop_order_and_preserves_counters() {
+        let mut q = EventQueue::new();
+        q.push_at(10, 0u32);
+        q.pop();
+        q.push_at(3 * DAY, 1u32);
+        for i in 0..(BUCKET_CAP as u32 + 10) {
+            q.push_at(40, 10 + i);
+        }
+        q.push_at(25, 2u32);
+        let drained = q.drain_events();
+        // exact (time, seq) order across both tiers
+        let mut sorted = drained.clone();
+        sorted.sort_by_key(|&(t, s, _)| (t, s));
+        assert_eq!(drained, sorted);
+        assert_eq!(drained.first().map(|&(t, _, p)| (t, p)), Some((25, 2)));
+        assert_eq!(
+            drained.last().map(|&(t, _, p)| (t, p)),
+            Some((3 * DAY, 1))
+        );
+        assert!(q.is_empty());
+        // now and popped survive the drain; the queue stays usable
+        assert_eq!(q.now(), 10);
+        assert_eq!(q.events_processed(), 1);
+        q.push_at(50, 9u32);
+        assert_eq!(q.pop(), Some((50, 9)));
     }
 
     #[test]

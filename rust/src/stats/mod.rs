@@ -77,6 +77,25 @@ impl TrafficStats {
             .map(|b| b[class.idx()] as f64 / TRAFFIC_BUCKET_PS as f64 * 1_000.0)
             .collect()
     }
+
+    /// Fold another counter set into this one.  The sharded engine keeps
+    /// per-shard `TrafficStats` (each shard records the traffic it
+    /// *sends*) and merges them exactly once when the run finishes, so
+    /// the totals and timeline are independent of the shard count.
+    pub fn absorb(&mut self, other: &TrafficStats) {
+        for c in 0..MsgClass::COUNT {
+            self.bytes[c] += other.bytes[c];
+            self.messages[c] += other.messages[c];
+        }
+        if self.timeline.len() < other.timeline.len() {
+            self.timeline.resize(other.timeline.len(), [0; MsgClass::COUNT]);
+        }
+        for (dst, src) in self.timeline.iter_mut().zip(&other.timeline) {
+            for c in 0..MsgClass::COUNT {
+                dst[c] += src[c];
+            }
+        }
+    }
 }
 
 /// Per-core execution accounting.
@@ -124,6 +143,34 @@ pub struct ReplStats {
 }
 
 impl ReplStats {
+    /// Fold a shard shell's replication counters into the base run's.
+    /// Scalar counters sum; `max_dram_log_bytes` takes the elementwise
+    /// max (each shard observes its own CNs' log occupancy highs).
+    /// `sram_backpressure` is *not* summed: `Cluster::finalize` derives
+    /// it from the merged Logging Units, which travel back to the base
+    /// at the last merge.
+    pub fn absorb_shard(&mut self, other: &ReplStats) {
+        self.repls_sent += other.repls_sent;
+        self.repls_at_head += other.repls_at_head;
+        self.stores_coalesced += other.stores_coalesced;
+        self.store_commits += other.store_commits;
+        self.vals_sent += other.vals_sent;
+        self.dump_in_bytes += other.dump_in_bytes;
+        self.dump_out_bytes += other.dump_out_bytes;
+        self.dumps += other.dumps;
+        if self.max_dram_log_bytes.len() < other.max_dram_log_bytes.len() {
+            self.max_dram_log_bytes
+                .resize(other.max_dram_log_bytes.len(), 0);
+        }
+        for (dst, src) in self
+            .max_dram_log_bytes
+            .iter_mut()
+            .zip(&other.max_dram_log_bytes)
+        {
+            *dst = (*dst).max(*src);
+        }
+    }
+
     pub fn compression_factor(&self) -> f64 {
         if self.dump_out_bytes == 0 {
             0.0
@@ -320,6 +367,20 @@ pub struct RunStats {
 }
 
 impl RunStats {
+    /// Fold a shard shell's monotonically accumulated counters into the
+    /// base run's stats.  Called exactly once per shell when the sharded
+    /// engine finishes; everything not listed here either travels back
+    /// to the base with the per-node state at merge time (core stats,
+    /// Logging Units) or only ever happens on the base (recovery rounds
+    /// run in the serial phase).
+    pub fn absorb_shard(&mut self, other: &RunStats) {
+        self.traffic.absorb(&other.traffic);
+        self.repl.absorb_shard(&other.repl);
+        // the one recovery counter reachable in windowed execution:
+        // post-recovery dump re-mirroring rides ordinary DumpChunks
+        self.recovery.rereplicated_chunks += other.recovery.rereplicated_chunks;
+    }
+
     pub fn total_ops(&self) -> u64 {
         self.cores.iter().map(|c| c.ops).sum()
     }
@@ -399,6 +460,40 @@ mod tests {
         assert_eq!(tl.len(), TIMELINE_MAX_BUCKETS);
         assert_eq!(tl[TIMELINE_MAX_BUCKETS - 1], 128);
         assert_eq!(t.bytes_of(MsgClass::LogDump), 128);
+    }
+
+    #[test]
+    fn absorb_merges_counters_and_timeline() {
+        let mut a = TrafficStats::default();
+        a.record(0, MsgClass::CxlAccess, 10);
+        let mut b = TrafficStats::default();
+        b.record(0, MsgClass::CxlAccess, 5);
+        b.record(TRAFFIC_BUCKET_PS * 2, MsgClass::Replication, 100);
+        a.absorb(&b);
+        assert_eq!(a.bytes_of(MsgClass::CxlAccess), 15);
+        assert_eq!(a.messages_of(MsgClass::CxlAccess), 2);
+        assert_eq!(a.bytes_of(MsgClass::Replication), 100);
+        assert_eq!(a.timeline_bytes(MsgClass::CxlAccess), vec![15, 0, 0]);
+        assert_eq!(a.timeline_bytes(MsgClass::Replication), vec![0, 0, 100]);
+    }
+
+    #[test]
+    fn absorb_shard_sums_scalars_and_maxes_log_highs() {
+        let mut base = RunStats::default();
+        base.repl.store_commits = 10;
+        base.repl.max_dram_log_bytes = vec![100, 5];
+        let mut shell = RunStats::default();
+        shell.repl.store_commits = 3;
+        shell.repl.stores_coalesced = 2;
+        shell.repl.max_dram_log_bytes = vec![7, 900];
+        shell.recovery.rereplicated_chunks = 4;
+        shell.traffic.record(0, MsgClass::LogDump, 64);
+        base.absorb_shard(&shell);
+        assert_eq!(base.repl.store_commits, 13);
+        assert_eq!(base.repl.stores_coalesced, 2);
+        assert_eq!(base.repl.max_dram_log_bytes, vec![100, 900]);
+        assert_eq!(base.recovery.rereplicated_chunks, 4);
+        assert_eq!(base.traffic.bytes_of(MsgClass::LogDump), 64);
     }
 
     #[test]

@@ -114,6 +114,84 @@ fn run_grid_is_identical_across_thread_counts() {
 }
 
 #[test]
+fn shard_counts_share_one_schedule_on_every_named_scenario() {
+    // The windowed engine runs every shard count — including 1 — through
+    // the same conservative-lookahead schedule, so the fingerprint must
+    // not depend on `shards` for any registered fault scenario.
+    let app = by_name("ycsb").unwrap();
+    for sc in recxl::scenarios::all() {
+        let mut cfg = scen_cfg(4_000);
+        sc.prepare(&mut cfg);
+        let base = run_app(cfg.clone(), &app);
+        for shards in [2, 4] {
+            let mut c = cfg.clone();
+            c.shards = shards;
+            let s = run_app(c, &app);
+            assert_eq!(
+                fingerprint(&base),
+                fingerprint(&s),
+                "scenario {} must be bit-identical at shards={shards}",
+                sc.name
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_counts_agree_on_dumped_log_durability_paths() {
+    // mn-crash-after-dump exercises the dumped-log rebuild; both the
+    // replicated and unreplicated dump paths must be shard-invariant
+    // (the rebuild itself runs in the serial phase, but the dumps and
+    // re-mirrors it depends on run windowed).
+    let app = by_name("ycsb").unwrap();
+    let sc = recxl::scenarios::by_name("mn-crash-after-dump").unwrap();
+    for dump_repl in [true, false] {
+        let mut cfg = scen_cfg(4_000);
+        sc.prepare(&mut cfg);
+        cfg.dump_repl = dump_repl;
+        let base = run_app(cfg.clone(), &app);
+        for shards in [2, 4] {
+            let mut c = cfg.clone();
+            c.shards = shards;
+            let s = run_app(c, &app);
+            assert_eq!(
+                fingerprint(&base),
+                fingerprint(&s),
+                "mn-crash-after-dump (dump_repl={dump_repl}) must be \
+                 bit-identical at shards={shards}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_grid_points_match_their_serial_twins() {
+    // run_grid caps its own fan-out by the widest point's shard count;
+    // mixing shard widths in one parallel grid must not perturb results.
+    let app = by_name("ycsb").unwrap();
+    let mut points = Vec::new();
+    for shards in [1, 2, 4] {
+        let mut cfg = scen_cfg(3_000);
+        cfg.shards = shards;
+        points.push((cfg, app.clone()));
+    }
+    let seq = run_grid(points.clone(), false);
+    let par = run_grid(points, true);
+    for (i, (s, p)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(
+            fingerprint(s),
+            fingerprint(p),
+            "sharded grid point {i} must not depend on host parallelism"
+        );
+        assert_eq!(
+            fingerprint(s),
+            fingerprint(&seq[0]),
+            "grid point {i} must match the shards=1 twin"
+        );
+    }
+}
+
+#[test]
 fn message_pool_recycles_in_steady_state() {
     let s = run_app(scen_cfg(6_000), &by_name("ycsb").unwrap());
     assert!(
