@@ -84,6 +84,33 @@ fn shard_cluster<'a>(
     }
 }
 
+/// A shard shell in transit to or from a worker thread.
+///
+/// SAFETY: `Cluster` is `!Send` only because `trace_src` is an untagged
+/// `Box<dyn TraceSource>` that *could* hold a thread-bound source (the
+/// PJRT runtime); every other field is plain owned data.  Shells never
+/// hold one: `run` constructs every shell with `RustTraceSource` (a
+/// `Send` unit type), `split`/`merge` exchange per-node state but never
+/// the source slot, and `new` re-checks the invariant at the only point
+/// a cluster enters a channel.  Keeping the `unsafe` here — instead of a
+/// blanket `unsafe impl Send` on the PJRT source — means a Pjrt-sourced
+/// cluster cannot be moved across threads by any other code path: the
+/// compiler rejects it.
+struct ShellTransit(Cluster);
+
+unsafe impl Send for ShellTransit {}
+
+impl ShellTransit {
+    fn new(cl: Cluster) -> Self {
+        assert_eq!(
+            cl.trace_src.name(),
+            "rust",
+            "only Rust-sourced shard shells may cross threads"
+        );
+        ShellTransit(cl)
+    }
+}
+
 /// Worker pool driving the shard shells.  Plain `std::thread` workers
 /// with one job/done channel pair each: shard `s` is always processed by
 /// worker `s-1` and results are received in shard order, so the engine's
@@ -92,8 +119,8 @@ fn shard_cluster<'a>(
 enum WorkerPool {
     Inline,
     Threads {
-        jobs: Vec<mpsc::Sender<(Cluster, Ps)>>,
-        done: Vec<mpsc::Receiver<Cluster>>,
+        jobs: Vec<mpsc::Sender<(ShellTransit, Ps)>>,
+        done: Vec<mpsc::Receiver<ShellTransit>>,
         handles: Vec<Option<JoinHandle<()>>>,
     },
 }
@@ -116,12 +143,12 @@ impl WorkerPool {
         let mut done = Vec::with_capacity(shards - 1);
         let mut handles = Vec::with_capacity(shards - 1);
         for _ in 1..shards {
-            let (jtx, jrx) = mpsc::channel::<(Cluster, Ps)>();
-            let (dtx, drx) = mpsc::channel::<Cluster>();
+            let (jtx, jrx) = mpsc::channel::<(ShellTransit, Ps)>();
+            let (dtx, drx) = mpsc::channel::<ShellTransit>();
             let h = std::thread::spawn(move || {
-                for (mut cl, w_end) in jrx {
+                for (ShellTransit(mut cl), w_end) in jrx {
                     cl.run_window(w_end);
-                    if dtx.send(cl).is_err() {
+                    if dtx.send(ShellTransit(cl)).is_err() {
                         break;
                     }
                 }
@@ -145,14 +172,14 @@ impl WorkerPool {
             }
             WorkerPool::Threads { jobs, done, handles } => {
                 for (i, sh) in shells.drain(..).enumerate() {
-                    if jobs[i].send((sh, w_end)).is_err() {
+                    if jobs[i].send((ShellTransit::new(sh), w_end)).is_err() {
                         join_dead_worker(handles, i);
                     }
                 }
                 base.run_window(w_end);
                 for (i, drx) in done.iter().enumerate() {
                     match drx.recv() {
-                        Ok(sh) => shells.push(sh),
+                        Ok(ShellTransit(sh)) => shells.push(sh),
                         Err(_) => join_dead_worker(handles, i),
                     }
                 }
@@ -180,6 +207,19 @@ pub(super) fn run(mut base: Cluster) -> RunStats {
     let wall = Instant::now();
     let delta = base.fabric.min_message_latency_ps();
     let shards = base.cfg.shards;
+    // Sharded runs require the Rust trace source: shard shells regenerate
+    // their nodes' traces locally with `RustTraceSource`, so any other
+    // base source would silently serve only shard 0.  Reject up front
+    // with a clear error instead of letting a diverging source surface as
+    // an interner panic mid-run.
+    assert!(
+        shards <= 1 || base.trace_src.name() == "rust",
+        "shards={} requires the Rust trace source, got '{}': shard shells \
+         regenerate traces with RustTraceSource; run with shards=1 or the \
+         default source",
+        shards,
+        base.trace_src.name(),
+    );
 
     // seed: every core starts at t=0; ReCXL arms the periodic dumps
     for id in 0..base.cores.len() {
@@ -363,7 +403,7 @@ fn run_windowed(
         // global minimum next-event time picks the window; empty windows
         // are skipped entirely
         let mut t_min = base.q.peek_time();
-        for sh in shells.iter_mut() {
+        for sh in shells.iter() {
             t_min = match (t_min, sh.q.peek_time()) {
                 (Some(a), Some(b)) => Some(a.min(b)),
                 (a, b) => a.or(b),

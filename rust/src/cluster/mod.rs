@@ -278,7 +278,14 @@ pub struct Cluster {
     /// The app profile the cluster was built for (the sharded engine
     /// constructs shard shells from it).
     pub(crate) app: AppProfile,
-    trace_src: Box<dyn TraceSource + Send>,
+    /// The trace generator.  Deliberately *not* `+ Send`: a source may be
+    /// thread-bound (the PJRT runtime), which makes `Cluster` `!Send` and
+    /// lets the compiler stop anyone from moving an arbitrary cluster
+    /// across threads.  The engine's shard shells — the only clusters
+    /// that do cross threads — always hold `RustTraceSource` and travel
+    /// in `engine::ShellTransit`, whose `unsafe impl Send` carries the
+    /// localized safety argument.
+    trace_src: Box<dyn TraceSource>,
     /// True while this cluster executes as one shard of a window (the
     /// engine toggles it at split/merge).  Windowed execution defers all
     /// cross-node effects — sends, lock/barrier ops, oracle commits — to
@@ -344,10 +351,16 @@ impl Cluster {
         Self::with_source(cfg, app, Box::new(RustTraceSource))
     }
 
+    /// Build a cluster around a custom trace source.  The footprint
+    /// pre-intern scan always uses the Rust generator (sources are
+    /// required to be bit-identical to it — `tests/pjrt_roundtrip.rs`
+    /// asserts this for PJRT), and sharded runs (`shards > 1`) require
+    /// the Rust source outright: shard shells regenerate their traces
+    /// locally, so the engine rejects other sources at `run`.
     pub fn with_source(
         cfg: SimConfig,
         app: &AppProfile,
-        trace_src: Box<dyn TraceSource + Send>,
+        trace_src: Box<dyn TraceSource>,
     ) -> Self {
         Self::build(cfg, app, trace_src, true)
     }
@@ -358,7 +371,7 @@ impl Cluster {
     pub(crate) fn build(
         cfg: SimConfig,
         app: &AppProfile,
-        trace_src: Box<dyn TraceSource + Send>,
+        trace_src: Box<dyn TraceSource>,
         pre_intern: bool,
     ) -> Self {
         cfg.validate().expect("invalid config");
@@ -576,7 +589,13 @@ impl Cluster {
     pub(crate) fn intern(&self, line: Line) -> LineId {
         match self.lines.lookup(line) {
             Some(lid) => lid,
-            None => panic!("line {:x} outside the pre-interned footprint", line.0),
+            None => panic!(
+                "line {:x} outside the pre-interned footprint (the footprint \
+                 is scanned with the Rust trace generator at construction; a \
+                 '{}' trace source that diverges from it would cause this)",
+                line.0,
+                self.trace_src.name(),
+            ),
         }
     }
 

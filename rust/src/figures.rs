@@ -61,36 +61,56 @@ impl FigOpts {
 /// per-slot `OnceLock`s — no shared lock on the hot completion path.
 ///
 /// Each point may itself run sharded (`cfg.shards` worker threads), so
-/// grid workers are capped at `available_parallelism / max(shards over
-/// the grid)`: the product of grid fan-out and per-run fan-out never
-/// oversubscribes the host.
+/// grid fan-out and per-run fan-out must compose without oversubscribing
+/// the host.  The rule, with `host = available_parallelism`:
+///
+/// * per-point `shards` is clamped to `host` — determinism fingerprints
+///   are shard-count-invariant (`tests/determinism.rs`), so the clamp
+///   changes thread count, never results;
+/// * narrow points (`shards <= 1`) run first, fanned across all `host`
+///   threads — a mostly-serial grid is never throttled by one wide point;
+/// * wide points run in a second phase with `workers = host / max_shards`
+///   (≥ 1), so `workers × shards ≤ host` holds exactly.
 pub fn run_grid(points: Vec<(SimConfig, AppProfile)>, parallel: bool) -> Vec<RunStats> {
     if !parallel || points.len() == 1 {
         return points.into_iter().map(|(c, a)| run_app(c, &a)).collect();
     }
     let n = points.len();
     let results: Vec<OnceLock<RunStats>> = (0..n).map(|_| OnceLock::new()).collect();
-    let next = AtomicUsize::new(0);
-    let max_shards = points.iter().map(|(c, _)| c.shards).max().unwrap_or(1);
     let host = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(4);
-    let workers = (host / max_shards.max(1)).max(1).min(n);
-    let points_ref = &points;
-    let results_ref = &results;
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let (cfg, app) = points_ref[i].clone();
-                let r = run_app(cfg, &app);
-                let _ = results_ref[i].set(r);
-            });
+    let run_phase = |indices: &[usize], workers: usize| {
+        if indices.is_empty() {
+            return;
         }
-    });
+        let next = AtomicUsize::new(0);
+        let workers = workers.max(1).min(indices.len());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= indices.len() {
+                        break;
+                    }
+                    let i = indices[k];
+                    let (mut cfg, app) = points[i].clone();
+                    cfg.shards = cfg.shards.clamp(1, host);
+                    let r = run_app(cfg, &app);
+                    let _ = results[i].set(r);
+                });
+            }
+        });
+    };
+    let narrow: Vec<usize> = (0..n).filter(|&i| points[i].0.shards <= 1).collect();
+    let wide: Vec<usize> = (0..n).filter(|&i| points[i].0.shards > 1).collect();
+    run_phase(&narrow, host);
+    let max_shards = wide
+        .iter()
+        .map(|&i| points[i].0.shards.clamp(1, host))
+        .max()
+        .unwrap_or(1);
+    run_phase(&wide, host / max_shards);
     results
         .into_iter()
         .map(|slot| slot.into_inner().expect("worker died"))

@@ -181,13 +181,13 @@ impl PjrtTraceSource {
     }
 }
 
-// SAFETY: the sharded engine requires `TraceSource + Send` because shard
-// shells (always `RustTraceSource`) move to worker threads; the base
-// cluster — the only holder of a `PjrtTraceSource` — runs on the calling
-// thread, so this impl only ever asserts *transferability*, never
-// concurrent use.  The PJRT CPU client behind `Runtime` owns its state
-// and is usable from whichever single thread holds it.
-unsafe impl Send for PjrtTraceSource {}
+// Deliberately `!Send`: the PJRT CPU client may hold thread-local state,
+// so a Pjrt-sourced `Cluster` must stay on the thread that built it.  The
+// cluster's `trace_src` slot is `Box<dyn TraceSource>` (no `Send` bound),
+// which makes such a cluster `!Send` and lets the compiler enforce this;
+// the sharded engine's worker threads only ever receive Rust-sourced
+// shard shells (see `cluster::engine::ShellTransit`), and reject any
+// other source at `Cluster::run` when `shards > 1`.
 
 impl TraceSource for PjrtTraceSource {
     fn block(&mut self, seed: u32, base: u32, params: &[i32; NUM_PARAMS]) -> Vec<RawOp> {

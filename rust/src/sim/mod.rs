@@ -132,7 +132,11 @@ impl<E> EventQueue<E> {
         let s = self.seq;
         self.seq += 1;
         self.pushed += 1;
-        if at < self.bucket_start + DAY {
+        // Only the calendar window `[bucket_start, bucket_start + DAY)` may
+        // use the near tier; anything behind the cursor goes to the heap,
+        // whose top `pop` always compares, so order survives even if a
+        // caller ever pushes behind the cursor.
+        if at >= self.bucket_start && at < self.bucket_start + DAY {
             let idx = ((at >> WIDTH_SHIFT) as usize) & (N_BUCKETS - 1);
             let b = &mut self.buckets[idx];
             if b.len() < BUCKET_CAP {
@@ -233,18 +237,24 @@ impl<E> EventQueue<E> {
 
     /// Timestamp of the next event without popping it (`None` if empty).
     ///
-    /// Mirrors `pop`'s two-tier scan.  It may advance the calendar cursor
-    /// over empty windows, which is invisible to callers: `now`, the
-    /// counters, and the eventual pop order are untouched.  The sharded
-    /// engine uses this at window barriers to pick the next window without
-    /// disturbing any shard's schedule.
-    pub fn peek_time(&mut self) -> Option<Ps> {
+    /// Mirrors `pop`'s two-tier scan but is strictly side-effect-free: the
+    /// walk over empty windows uses *local* cursor copies, never the
+    /// queue's own `cur`/`bucket_start`.  That matters for correctness,
+    /// not just hygiene — the sharded engine peeks far ahead at window
+    /// barriers and then pushes events between `now` and the peeked time
+    /// (barrier grants, held-back fault injections, merge re-pushes); had
+    /// the peek persisted its cursor advance, those pushes would land in
+    /// buckets behind the cursor and pop out of order a calendar-DAY
+    /// later (see `push_after_far_peek_stays_ordered`).
+    pub fn peek_time(&self) -> Option<Ps> {
         if self.n_near == 0 {
             return self.overflow.peek().map(|top| top.key.0 .0);
         }
+        let mut cur = self.cur;
+        let mut bucket_start = self.bucket_start;
         loop {
             let mut best: Option<(Ps, u64)> = None;
-            for it in &self.buckets[self.cur] {
+            for it in &self.buckets[cur] {
                 let better = match best {
                     None => true,
                     Some((bt, bs)) => (it.0, it.1) < (bt, bs),
@@ -253,7 +263,7 @@ impl<E> EventQueue<E> {
                     best = Some((it.0, it.1));
                 }
             }
-            let wend = self.bucket_start + WIDTH;
+            let wend = bucket_start + WIDTH;
             if let Some((bt, _)) = best {
                 let over = self.overflow.peek().map(|top| top.key.0 .0);
                 return Some(match over {
@@ -268,8 +278,8 @@ impl<E> EventQueue<E> {
             }
             // advance to the next window; n_near > 0 guarantees an
             // occupied bucket within one DAY of the cursor
-            self.cur = (self.cur + 1) & (N_BUCKETS - 1);
-            self.bucket_start = wend;
+            cur = (cur + 1) & (N_BUCKETS - 1);
+            bucket_start = wend;
         }
     }
 
@@ -440,6 +450,31 @@ mod tests {
             assert_eq!(pt, t);
         }
         assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn push_after_far_peek_stays_ordered() {
+        // regression: peek_time must not persist its empty-window walk.
+        // The sharded engine peeks several windows ahead to pick the next
+        // lookahead window, then pushes events *between* `now` and the
+        // peeked time (window-barrier grants, held-back faults, merge
+        // re-pushes).  A peek that advanced the calendar cursor would
+        // strand those pushes behind it: invisible until the calendar
+        // wraps a full DAY, then popped out of time order.
+        let mut q = EventQueue::new();
+        q.push_at(10 * WIDTH, 0u32); // near tier, several windows out
+        assert_eq!(q.peek_time(), Some(10 * WIDTH));
+        q.push_at(5, 1u32); // now <= 5 < the peeked window
+        assert_eq!(q.pop(), Some((5, 1)));
+        assert_eq!(q.pop(), Some((10 * WIDTH, 0)));
+        assert_eq!(q.pop(), None);
+        // same shape through the overflow tier: peek a far event, then
+        // backfill the gap
+        q.push_at(10 * WIDTH + 2 * DAY, 2u32);
+        assert_eq!(q.peek_time(), Some(10 * WIDTH + 2 * DAY));
+        q.push_at(10 * WIDTH + 7, 3u32);
+        assert_eq!(q.pop(), Some((10 * WIDTH + 7, 3)));
+        assert_eq!(q.pop(), Some((10 * WIDTH + 2 * DAY, 2)));
     }
 
     #[test]

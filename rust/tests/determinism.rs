@@ -166,8 +166,11 @@ fn shard_counts_agree_on_dumped_log_durability_paths() {
 
 #[test]
 fn sharded_grid_points_match_their_serial_twins() {
-    // run_grid caps its own fan-out by the widest point's shard count;
-    // mixing shard widths in one parallel grid must not perturb results.
+    // run_grid schedules narrow and wide points in separate phases and
+    // clamps per-point shards to host parallelism; neither the phase
+    // split nor the clamp may perturb results (fingerprints are
+    // shard-count-invariant), so mixing shard widths in one parallel
+    // grid must match the sequential twins.
     let app = by_name("ycsb").unwrap();
     let mut points = Vec::new();
     for shards in [1, 2, 4] {
