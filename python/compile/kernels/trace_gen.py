@@ -33,7 +33,12 @@ Parameter vector layout (int32[16]) — kept in sync with
     10 p_hot      16-bit: probability a random access hits the hot subset
     11 hot_lines_log2      hot-subset size, in lines
     12 cs_len     critical-section length carried in lock ops' ``extra``
-    13..15 reserved
+    13 p_near     16-bit: probability a remote access is steered to the
+       thread's affine memory-node target (0 = no steering, the historical
+       stream)
+    14 near_lo    low-6-bit line residue the steered accesses pin — after
+       the line-interleave this residue selects the home memory node
+    15 reserved
 
 Op codes: 0 = compute, 1 = load, 2 = store, 3 = lock-acquire
 (``extra = lock_id << 8 | cs_len``; the core model releases the lock after
@@ -108,10 +113,22 @@ def gen_fields(g, seed, params):
     # structure the SB sees (ReCXL section IV-D.5).
     seq = ((r1 >> _U(16)) & _U(0xFFFF)) < p[8]
     g_run = g >> p[9].astype(jnp.uint32)
-    line_seq = mix32(g_run * _U(0x9E3779B1) + t * _U(0x632BE59B)) & shared_mask
+    ls_full = mix32(g_run * _U(0x9E3779B1) + t * _U(0x632BE59B))
+    line_seq = ls_full & shared_mask
     hot = (r2 >> _U(16)) < p[10]
     line_rand = jnp.where(hot, r2 & hot_mask, r2 & shared_mask)
     line_sh = jnp.where(seq, line_seq, line_rand)
+    # Near-memory steering (p[13]/p[14]): a steered access pins the line's
+    # low 6 bits — and with them its home memory node after interleave —
+    # to p[14].  Sequential accesses draw per *run* (from the run hash, so
+    # a run never splits across lines); random accesses draw per op from
+    # r3's free high bits.  p[13] = 0 keeps the stream bit-identical to
+    # the pre-steering generator.
+    near_seq = (mix32(ls_full ^ _U(0x27D4EB2F)) >> _U(16)) < p[13]
+    near_rand = (r3 >> _U(16)) < p[13]
+    near = jnp.where(seq, near_seq, near_rand)
+    steered = ((line_sh & ~_U(63)) | (p[14] & _U(63))) & shared_mask
+    line_sh = jnp.where(near, steered, line_sh)
     word = jnp.where(seq, g & _U(15), r3 & _U(15))
     raddr = _U(0x80000000) | (line_sh << _U(6)) | (word << _U(2))
 

@@ -90,7 +90,7 @@ fn main() {
         }
     }));
 
-    let params = recxl::workloads::profiles::ycsb().to_params(0);
+    let params = recxl::workloads::profiles::ycsb().to_params(0, 4);
     report.push(bench("trace_gen 4096-op block (rust)", warm, samp, || {
         std::hint::black_box(tracegen::gen_block(42, 0, &params));
     }));

@@ -1,0 +1,83 @@
+//! Partition-policy benchmark: throughput and measured cross-shard
+//! traffic of the windowed engine under `partition` = rr vs locality at
+//! `shards` = 1, 2, 4 (EXPERIMENTS.md §Perf, "shard scaling").  The
+//! schedule is partition-invariant, so the policies may differ only in
+//! wall time and in the cross-shard ledger counters — the envelope
+//! counts are the direct measure of how much window-barrier exchange
+//! the locality partitioner removes.
+//!
+//! Emits `BENCH_shard_partition.json` (override with `RECXL_BENCH_OUT`).
+//! `RECXL_BENCH_QUICK=1` shrinks the run for the CI smoke job.
+
+use recxl::benchkit::{bench, header, Report};
+use recxl::cluster::run_app;
+use recxl::config::SimConfig;
+use recxl::prelude::*;
+
+fn main() {
+    let quick = std::env::var("RECXL_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (ops, ops_label): (u64, &str) = if quick { (500, "500") } else { (4_000, "4k") };
+    let samples = if quick { 2 } else { 3 };
+    let mut report = Report::new();
+    header();
+
+    let app = by_name("ycsb").unwrap();
+    let mut baseline_events = 0u64;
+    for partition in PartitionPolicy::ALL {
+        for shards in [1usize, 2, 4] {
+            let cfg = SimConfig {
+                ops_per_thread: ops,
+                shards,
+                partition,
+                ..SimConfig::default()
+            };
+            let mut events_per_sec = 0.0;
+            let mut events = 0u64;
+            let mut cross = 0u64;
+            let pname = partition.name();
+            let name = format!(
+                "full sim: ycsb proactive {ops_label} ops/thread \
+                 partition={pname} shards={shards}"
+            );
+            let s = bench(&name, 1, samples, || {
+                let stats = run_app(cfg.clone(), &app);
+                events_per_sec = stats.events_per_sec();
+                events = stats.events;
+                cross = stats.sharding.total_envelopes();
+            });
+            report.push(s.clone());
+            println!(
+                "partition={pname} shards={shards}: {:.2} M events/s \
+                 (sample mean {:.2} ms, {events} events, {cross} cross-shard envelopes)",
+                events_per_sec / 1e6,
+                s.mean_s * 1e3,
+            );
+            report.metric(
+                &format!("events_per_sec_{pname}_shards{shards}"),
+                events_per_sec,
+            );
+            report.metric(
+                &format!("cross_shard_envelopes_{pname}_shards{shards}"),
+                cross as f64,
+            );
+            if baseline_events == 0 {
+                baseline_events = events;
+            } else {
+                assert_eq!(
+                    events, baseline_events,
+                    "every partition x shard point must process the same schedule"
+                );
+            }
+        }
+    }
+    report.metric("full_sim_events", baseline_events as f64);
+    report.metric("full_sim_ops_per_thread", ops as f64);
+    report.metric("quick", if quick { 1.0 } else { 0.0 });
+
+    let out =
+        std::env::var("RECXL_BENCH_OUT").unwrap_or_else(|_| "BENCH_shard_partition.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+}

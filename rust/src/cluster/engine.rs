@@ -1,8 +1,9 @@
 //! The sharded execution engine: conservative-lookahead parallel
 //! discrete-event simulation over per-partition shards.
 //!
-//! The cluster is partitioned by node: CN `c` and its cores belong to
-//! shard `c % shards`, MN `m` to shard `m % shards`.  Each shard owns a
+//! The cluster is partitioned by node under a `NodeAssignment`
+//! (round-robin by default; `partition=locality` places each CN with the
+//! MNs homing its hot lines — see `cluster::partition`).  Each shard owns a
 //! calendar [`EventQueue`](crate::sim::EventQueue) plus the per-node slab
 //! state of its nodes (cores, caches, CN port state, Logging Units,
 //! directories, fabric uplinks), and drains its queue *unsynchronized*
@@ -45,19 +46,11 @@ fn window_end(t: Ps, delta: Ps) -> Ps {
     (t / delta + 1) * delta
 }
 
-/// Node key: CNs are `0..n_cns`, MNs are `n_cns..n_cns+n_mns`.  Used
-/// both for shard assignment and as the deterministic tiebreaker when
-/// shard queues merge.
-#[inline]
-fn shard_of_key(key: usize, n_cns: usize, shards: usize) -> usize {
-    if key < n_cns {
-        key % shards
-    } else {
-        (key - n_cns) % shards
-    }
-}
-
 /// The node an event belongs to (every event targets exactly one node).
+/// Node keys — CNs `0..n_cns`, MNs `n_cns..n_cns+n_mns` — index the
+/// `NodeAssignment` for shard placement and double as the deterministic
+/// tiebreaker when shard queues merge (the tiebreaker is the *key*, not
+/// the shard, so merge order is partition-invariant).
 fn ev_node_key(ev: &Ev, cores_per_cn: usize, n_cns: usize) -> usize {
     match ev {
         Ev::Run(id) | Ev::Commit(id) | Ev::LoadDone(id) => id / cores_per_cn,
@@ -257,6 +250,7 @@ pub(super) fn run(mut base: Cluster) -> RunStats {
                 false,
             );
             sh.lines = base.lines.clone();
+            sh.partition = base.partition.clone();
             sh
         })
         .collect();
@@ -364,10 +358,9 @@ fn run_serial(base: &mut Cluster, faults: &mut VecDeque<(Ps, Ev)>, delta: Ps) {
 /// on its owner shard while split).
 fn finished_total(base: &Cluster, shells: &[Cluster]) -> usize {
     let cpc = base.cfg.cores_per_cn;
-    let shards = base.cfg.shards;
     (0..base.cores.len())
         .filter(|&id| {
-            let s = (id / cpc) % shards;
+            let s = base.partition.cn_shard(id / cpc);
             if s == 0 {
                 base.finished_flag[id]
             } else {
@@ -448,7 +441,6 @@ fn run_windowed(
 /// order, which is what makes the schedule shard-count-invariant.
 fn window_barrier(base: &mut Cluster, shells: &mut [Cluster], w_end: Ps) {
     let n_cns = base.cfg.n_cns;
-    let shards = base.cfg.shards;
     let rtt = base.cfg.net_rtt_ps;
     let ow = base.cfg.one_way_ps();
 
@@ -468,7 +460,8 @@ fn window_barrier(base: &mut Cluster, shells: &mut [Cluster], w_end: Ps) {
             NodeId::Cn(c) => c,
             NodeId::Mn(m) => n_cns + m,
         };
-        let cl = shard_cluster(base, shells, shard_of_key(key, n_cns, shards));
+        let s = base.partition.key_shard(key);
+        let cl = shard_cluster(base, shells, s);
         let boxed = cl.pool.boxed(msg);
         cl.q.push_at(arrive, Ev::Deliver(boxed));
     }
@@ -522,13 +515,13 @@ fn push_grant(
     at: Ps,
     w_end: Ps,
 ) {
-    let s = shard_of_key(core / base.cfg.cores_per_cn, base.cfg.n_cns, base.cfg.shards);
+    let s = base.partition.cn_shard(core / base.cfg.cores_per_cn);
     let cl = shard_cluster(base, shells, s);
     cl.q.push_at(at.max(w_end), Ev::GrantLockAt { core, lock, at });
 }
 
 fn push_barrier_go(base: &mut Cluster, shells: &mut [Cluster], core: usize, at: Ps, w_end: Ps) {
-    let s = shard_of_key(core / base.cfg.cores_per_cn, base.cfg.n_cns, base.cfg.shards);
+    let s = base.partition.cn_shard(core / base.cfg.cores_per_cn);
     let cl = shard_cluster(base, shells, s);
     cl.q.push_at(at.max(w_end), Ev::BarrierGoAt { core, at });
 }
@@ -541,7 +534,7 @@ fn split(base: &mut Cluster, shells: &mut [Cluster]) {
     let n_cns = base.cfg.n_cns;
     let n_mns = base.cfg.n_mns;
     let cpc = base.cfg.cores_per_cn;
-    let shards = base.cfg.shards;
+    let assignment = base.partition.clone();
     for (idx, shell) in shells.iter_mut().enumerate() {
         let s = idx + 1;
         shell.windowed = true;
@@ -551,7 +544,8 @@ fn split(base: &mut Cluster, shells: &mut [Cluster]) {
         shell.finished_flag.copy_from_slice(&base.finished_flag);
         shell.finished = base.finished;
         shell.lines = base.lines.clone();
-        for c in (s..n_cns).step_by(shards) {
+        shell.partition = assignment.clone();
+        for c in (0..n_cns).filter(|&c| assignment.cn_shard(c) == s) {
             for l in 0..cpc {
                 let id = c * cpc + l;
                 std::mem::swap(&mut base.cores[id], &mut shell.cores[id]);
@@ -561,7 +555,7 @@ fn split(base: &mut Cluster, shells: &mut [Cluster]) {
             std::mem::swap(&mut base.logunits[c], &mut shell.logunits[c]);
             base.fabric.swap_uplink(&mut shell.fabric, c);
         }
-        for m in (s..n_mns).step_by(shards) {
+        for m in (0..n_mns).filter(|&m| assignment.mn_shard(m) == s) {
             std::mem::swap(&mut base.dirs[m], &mut shell.dirs[m]);
             base.fabric.swap_uplink(&mut shell.fabric, n_cns + m);
         }
@@ -569,7 +563,7 @@ fn split(base: &mut Cluster, shells: &mut [Cluster]) {
     base.windowed = true;
     for (t, _, ev) in base.q.drain_events() {
         let key = ev_node_key(&ev, cpc, n_cns);
-        let s = shard_of_key(key, n_cns, shards);
+        let s = assignment.key_shard(key);
         shard_cluster(base, shells, s).q.push_at(t, ev);
     }
 }
@@ -581,11 +575,11 @@ fn merge(base: &mut Cluster, shells: &mut [Cluster]) {
     let n_cns = base.cfg.n_cns;
     let n_mns = base.cfg.n_mns;
     let cpc = base.cfg.cores_per_cn;
-    let shards = base.cfg.shards;
+    let assignment = base.partition.clone();
     for (idx, shell) in shells.iter_mut().enumerate() {
         let s = idx + 1;
         debug_assert!(shell.outbox.is_empty() && shell.sync_ledger.is_empty());
-        for c in (s..n_cns).step_by(shards) {
+        for c in (0..n_cns).filter(|&c| assignment.cn_shard(c) == s) {
             for l in 0..cpc {
                 let id = c * cpc + l;
                 std::mem::swap(&mut base.cores[id], &mut shell.cores[id]);
@@ -596,7 +590,7 @@ fn merge(base: &mut Cluster, shells: &mut [Cluster]) {
             std::mem::swap(&mut base.logunits[c], &mut shell.logunits[c]);
             base.fabric.swap_uplink(&mut shell.fabric, c);
         }
-        for m in (s..n_mns).step_by(shards) {
+        for m in (0..n_mns).filter(|&m| assignment.mn_shard(m) == s) {
             std::mem::swap(&mut base.dirs[m], &mut shell.dirs[m]);
             base.fabric.swap_uplink(&mut shell.fabric, n_cns + m);
         }

@@ -56,7 +56,7 @@ impl Cluster {
                         if self.windowed {
                             // the lock table is global: ledger the
                             // release for the window-barrier coordinator
-                            self.sync_ledger.push(SyncOp::LockRel {
+                            self.ledger_sync(SyncOp::LockRel {
                                 t: at.max(now),
                                 core: id,
                                 lock: l,
@@ -146,7 +146,7 @@ impl Cluster {
                     let core = &mut self.cores[id];
                     core.pending_cs = cs_len.max(1) as u64;
                     core.block = Block::Lock(lock);
-                    self.sync_ledger.push(SyncOp::LockAcq {
+                    self.ledger_sync(SyncOp::LockAcq {
                         t: clock,
                         core: id,
                         lock,
@@ -170,7 +170,7 @@ impl Cluster {
                 let clock = self.cores[id].clock;
                 self.cores[id].block = Block::Barrier;
                 if self.windowed {
-                    self.sync_ledger.push(SyncOp::BarArrive {
+                    self.ledger_sync(SyncOp::BarArrive {
                         t: clock.max(now),
                         core: id,
                     });

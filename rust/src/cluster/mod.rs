@@ -17,9 +17,11 @@ mod engine;
 mod exec;
 mod handlers;
 mod oracle;
+pub mod partition;
 mod recovery_impl;
 
 pub use oracle::Oracle;
+pub use partition::{AffinityMatrix, NodeAssignment};
 pub use recovery_impl::RecoveryCtrl;
 
 use rustc_hash::FxHashSet;
@@ -29,7 +31,7 @@ use std::time::Instant;
 
 use crate::cache::CnCaches;
 use crate::coherence::Directory;
-use crate::config::{CnId, CoreId, MnId, Protocol, SimConfig};
+use crate::config::{CnId, CoreId, MnId, PartitionPolicy, Protocol, SimConfig};
 use crate::cpu::sync::{Barrier, LockTable};
 use crate::cpu::{Block, Core};
 use crate::fabric::{Delivery, Fabric, StagedSend};
@@ -260,6 +262,13 @@ pub struct Cluster {
     /// mutation (`kill_mn`) happens in the serial phase via
     /// `Arc::make_mut`, after which the shards re-clone.
     pub lines: Arc<LineTable>,
+    /// Node→shard placement for sharded execution, computed once at build
+    /// from [`SimConfig::partition`] (locality uses the affinity matrix
+    /// the pre-intern scan accumulates).  Host-side only: it decides
+    /// which worker hosts a node and which buffered effects count as
+    /// cross-shard, never the schedule.  Shard shells adopt the base
+    /// cluster's copy.
+    pub partition: NodeAssignment,
     /// Recycled `Ev::Deliver` boxes (§Perf: zero-alloc steady state).
     pub(crate) pool: MsgPool,
     pub cores: Vec<Core>,
@@ -380,7 +389,8 @@ impl Cluster {
         for t in 0..n_threads {
             let cn = t / cfg.cores_per_cn;
             let local = t % cfg.cores_per_cn;
-            let trace = ThreadTrace::new(cfg.seed as u32, app, t, cfg.ops_per_thread);
+            let trace =
+                ThreadTrace::new(cfg.seed as u32, app, t, cfg.cores_per_cn, cfg.ops_per_thread);
             cores.push(Core::new(
                 cn,
                 local,
@@ -409,6 +419,7 @@ impl Cluster {
         stats.cores = vec![Default::default(); n_threads];
         stats.repl.max_dram_log_bytes = vec![0; cfg.n_cns];
         let mut lines = LineTable::for_app(app, n_threads, cfg.n_mns);
+        let mut partition = NodeAssignment::round_robin(cfg.n_cns, cfg.n_mns, cfg.shards);
         if pre_intern {
             // Pre-intern the whole footprint: replay every thread's trace
             // (thread 0 first) and intern each touched line.  Ids depend
@@ -418,20 +429,40 @@ impl Cluster {
             // generator, which is bit-identical to the Pallas kernel, and
             // the process-wide block memo keeps the second consumption of
             // the same trace cheap.
+            //
+            // The same pass accumulates the CN×MN affinity matrix (remote
+            // accesses per CN, bucketed by the touched line's home MN
+            // post-interleave) that the locality partitioner consumes.
+            let mut aff = AffinityMatrix::new(cfg.n_cns, cfg.n_mns);
             let mut scan_src = RustTraceSource;
             for t in 0..n_threads {
-                let mut trace = ThreadTrace::new(cfg.seed as u32, app, t, cfg.ops_per_thread);
+                let cn = t / cfg.cores_per_cn;
+                let mut trace = ThreadTrace::new(
+                    cfg.seed as u32,
+                    app,
+                    t,
+                    cfg.cores_per_cn,
+                    cfg.ops_per_thread,
+                );
                 while let Some(op) = trace.next_op(&mut scan_src) {
                     if let TraceOp::Load { addr } | TraceOp::Store { addr } = op {
-                        lines.intern(Addr(addr).line());
+                        let line = Addr(addr).line();
+                        let lid = lines.intern(line);
+                        if line.is_remote() {
+                            aff.record(cn, lines.home_mn(lid));
+                        }
                     }
                 }
+            }
+            if cfg.partition == PartitionPolicy::Locality {
+                partition = NodeAssignment::locality(&aff, cfg.shards);
             }
         }
         Cluster {
             fabric: Fabric::new(&cfg),
             q: EventQueue::new(),
             lines: Arc::new(lines),
+            partition,
             pool: MsgPool::new(),
             cores,
             caches,
@@ -560,6 +591,11 @@ impl Cluster {
         let at = at.max(self.q.now());
         if self.windowed {
             if let Some(staged) = self.fabric.send_uplink(at, &msg, &mut self.stats.traffic) {
+                // cross-shard ledger: this envelope leaves the hosting
+                // shard and must be exchanged at the window barrier
+                if self.partition.shard_of(msg.src) != self.partition.shard_of(msg.dst) {
+                    self.stats.sharding.cross_shard_envelopes[msg.kind.class().idx()] += 1;
+                }
                 self.outbox.push((staged, msg));
             }
             return;
@@ -619,11 +655,29 @@ impl Cluster {
         repl_seq: u64,
     ) {
         if self.windowed {
+            // the buffered commit is replayed on the base (shard 0) at
+            // merge; count it as cross-shard when it originated elsewhere
+            if self.partition.cn_shard(cn) != 0 {
+                self.stats.sharding.cross_shard_oracle_commits += 1;
+            }
             self.oracle_buf
                 .push((self.q.now(), lid, mask, *words, cn, repl_seq));
         } else {
             self.oracle.on_commit(lid, mask, words, cn, repl_seq);
         }
+    }
+
+    /// Append a lock/barrier operation to the window's sync ledger (the
+    /// coordinator resolves concatenated ledgers in `(t, core)` order at
+    /// the window barrier).  Ledger resolution happens on the base
+    /// (shard 0), so an op issued by a core hosted elsewhere is a
+    /// cross-shard sync op in the [`crate::stats::ShardingStats`] ledger.
+    pub(crate) fn ledger_sync(&mut self, op: SyncOp) {
+        let (_, core) = op.key();
+        if self.partition.cn_shard(core / self.cfg.cores_per_cn) != 0 {
+            self.stats.sharding.cross_shard_sync_ops += 1;
+        }
+        self.sync_ledger.push(op);
     }
 
     /// Queue a control event (crash/detect/quiesce-timeout), tracking it
@@ -687,13 +741,13 @@ impl Cluster {
                 // locks/barrier are global: ledger the release and the
                 // departure for the window-barrier coordinator
                 if let Some(l) = core.held_lock.take() {
-                    self.sync_ledger.push(SyncOp::LockRel {
+                    self.ledger_sync(SyncOp::LockRel {
                         t: now,
                         core: id,
                         lock: l,
                     });
                 }
-                self.sync_ledger.push(SyncOp::BarDepart { t: now, core: id });
+                self.ledger_sync(SyncOp::BarDepart { t: now, core: id });
                 return;
             }
             if let Some(l) = core.held_lock.take() {

@@ -1,0 +1,432 @@
+//! Node→shard placement for the sharded engine.
+//!
+//! PR 6's engine hard-wired a round-robin partition (`CN c → shard c%S`),
+//! which ignores line homing: a CN whose hot lines are homed on an MN in
+//! another shard pays a window-barrier envelope for every coherence
+//! message.  This module makes placement a first-class, *measured*
+//! decision: the pre-run trace scan accumulates a CN×MN [`AffinityMatrix`]
+//! (remote accesses by each CN to lines homed on each MN, post-interleave)
+//! and a deterministic greedy partitioner co-locates each CN with the MNs
+//! homing its hot lines, balanced to within one node per shard.
+//!
+//! **The partition never touches the schedule.**  Every ordering the
+//! windowed engine resolves at a barrier is keyed by partition-independent
+//! quantities (switch arrival + source port, ledger time + core id,
+//! commit time + CN id, event time + node key), so the assignment decides
+//! only *which worker thread hosts a node* — fingerprints are bit-identical
+//! across `partition ∈ {rr, locality} × shards` (pinned in
+//! `tests/determinism.rs`).  What it does change is how many buffered
+//! effects cross a shard boundary, counted by `stats::ShardingStats`.
+
+use crate::proto::NodeId;
+
+/// CN×MN access-affinity matrix accumulated by the pre-run trace scan.
+#[derive(Debug, Clone)]
+pub struct AffinityMatrix {
+    n_cns: usize,
+    n_mns: usize,
+    /// `counts[c * n_mns + m]` = remote accesses by CN `c` to lines homed
+    /// on MN `m`.
+    counts: Vec<u64>,
+}
+
+impl AffinityMatrix {
+    pub fn new(n_cns: usize, n_mns: usize) -> Self {
+        AffinityMatrix {
+            n_cns,
+            n_mns,
+            counts: vec![0; n_cns * n_mns],
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, cn: usize, mn: usize) {
+        self.counts[cn * self.n_mns + mn] += 1;
+    }
+
+    pub fn get(&self, cn: usize, mn: usize) -> u64 {
+        self.counts[cn * self.n_mns + mn]
+    }
+
+    pub fn n_cns(&self) -> usize {
+        self.n_cns
+    }
+
+    pub fn n_mns(&self) -> usize {
+        self.n_mns
+    }
+
+    /// Total accesses by CN `c` (its load weight).
+    pub fn row_weight(&self, cn: usize) -> u64 {
+        self.counts[cn * self.n_mns..(cn + 1) * self.n_mns].iter().sum()
+    }
+
+    /// Total accesses homed on MN `m`.
+    pub fn col_weight(&self, mn: usize) -> u64 {
+        (0..self.n_cns).map(|c| self.get(c, mn)).sum()
+    }
+
+    fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Centered affinity: `aff·total − row·col`, the matrix with the
+    /// rank-one "uniform background" removed (the modularity trick).  Two
+    /// CNs whose streams concentrate on the same MNs get a positive dot
+    /// product; CNs with merely *uniform* overlap get ~0 — without the
+    /// centering, the all-positive background pulls every CN toward
+    /// whichever shard fills first.
+    fn centered(&self) -> Vec<i64> {
+        let total = self.total() as i64;
+        let rows: Vec<i64> = (0..self.n_cns).map(|c| self.row_weight(c) as i64).collect();
+        let cols: Vec<i64> = (0..self.n_mns).map(|m| self.col_weight(m) as i64).collect();
+        let mut out = vec![0i64; self.n_cns * self.n_mns];
+        for c in 0..self.n_cns {
+            for m in 0..self.n_mns {
+                out[c * self.n_mns + m] = self.get(c, m) as i64 * total - rows[c] * cols[m];
+            }
+        }
+        out
+    }
+}
+
+/// The node→shard map threaded through shard construction, the window
+/// barrier, and the split/merge mirrors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeAssignment {
+    pub shards: usize,
+    n_cns: usize,
+    cn: Vec<u32>,
+    mn: Vec<u32>,
+}
+
+impl NodeAssignment {
+    /// The PR-6 placement: `CN c → c % shards`, `MN m → m % shards`.
+    pub fn round_robin(n_cns: usize, n_mns: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        NodeAssignment {
+            shards,
+            n_cns,
+            cn: (0..n_cns).map(|c| (c % shards) as u32).collect(),
+            mn: (0..n_mns).map(|m| (m % shards) as u32).collect(),
+        }
+    }
+
+    /// Profile-guided greedy placement from the scanned affinity matrix.
+    ///
+    /// Deterministic two-phase greedy on the *centered* affinity:
+    ///
+    /// 1. **CNs**, heaviest row first (ties: lowest id): assign to the
+    ///    shard maximizing `Σ_m centered[c][m] · profile[s][m]` where
+    ///    `profile[s]` sums the centered rows already placed on `s`.  An
+    ///    empty shard scores 0, so a CN dissimilar to every open shard
+    ///    (negative scores) seeds a new one — planted clusters are
+    ///    recovered regardless of id order.
+    /// 2. **MNs**, heaviest column first: assign to the shard whose CNs
+    ///    pull it hardest (`Σ_{c on s} centered[c][m]`).
+    ///
+    /// Both phases bound skew: per-shard counts stay in
+    /// `[⌊n/S⌋, ⌈n/S⌉]` (full shards are ineligible; once the open slack
+    /// equals the below-floor deficit, only below-floor shards are
+    /// eligible).  Per-CN load is near-uniform (every thread executes
+    /// `ops_per_thread`), so the count bound is a load bound.
+    pub fn locality(aff: &AffinityMatrix, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let (n_cns, n_mns) = (aff.n_cns, aff.n_mns);
+        if shards == 1 {
+            return NodeAssignment {
+                shards,
+                n_cns,
+                cn: vec![0; n_cns],
+                mn: vec![0; n_mns],
+            };
+        }
+        let centered = aff.centered();
+        let row = |c: usize| &centered[c * n_mns..(c + 1) * n_mns];
+
+        // --- phase 1: CNs ---
+        let mut cn_order: Vec<usize> = (0..n_cns).collect();
+        cn_order.sort_by_key(|&c| (std::cmp::Reverse(aff.row_weight(c)), c));
+        let mut cn = vec![u32::MAX; n_cns];
+        let mut counts = vec![0usize; shards];
+        // per-shard centered-column profile of the CNs placed so far
+        let mut profile = vec![0i128; shards * n_mns];
+        let (floor, ceil) = bounds(n_cns, shards);
+        for (placed, &c) in cn_order.iter().enumerate() {
+            let s = pick(shards, &counts, floor, ceil, n_cns - placed, |s| {
+                row(c)
+                    .iter()
+                    .zip(&profile[s * n_mns..(s + 1) * n_mns])
+                    .map(|(&a, &p)| a as i128 * p)
+                    .sum()
+            });
+            cn[c] = s as u32;
+            counts[s] += 1;
+            for m in 0..n_mns {
+                profile[s * n_mns + m] += row(c)[m] as i128;
+            }
+        }
+
+        // --- phase 2: MNs ---
+        let mut mn_order: Vec<usize> = (0..n_mns).collect();
+        mn_order.sort_by_key(|&m| (std::cmp::Reverse(aff.col_weight(m)), m));
+        let mut mn = vec![u32::MAX; n_mns];
+        let mut mcounts = vec![0usize; shards];
+        let (mfloor, mceil) = bounds(n_mns, shards);
+        for (placed, &m) in mn_order.iter().enumerate() {
+            let s = pick(shards, &mcounts, mfloor, mceil, n_mns - placed, |s| {
+                (0..n_cns)
+                    .filter(|&c| cn[c] as usize == s)
+                    .map(|c| row(c)[m] as i128)
+                    .sum()
+            });
+            mn[m] = s as u32;
+            mcounts[s] += 1;
+        }
+
+        NodeAssignment { shards, n_cns, cn, mn }
+    }
+
+    #[inline]
+    pub fn cn_shard(&self, cn: usize) -> usize {
+        self.cn[cn] as usize
+    }
+
+    #[inline]
+    pub fn mn_shard(&self, mn: usize) -> usize {
+        self.mn[mn] as usize
+    }
+
+    /// Shard of an engine node key (CNs `0..n_cns`, MNs `n_cns..`).
+    #[inline]
+    pub fn key_shard(&self, key: usize) -> usize {
+        if key < self.n_cns {
+            self.cn_shard(key)
+        } else {
+            self.mn_shard(key - self.n_cns)
+        }
+    }
+
+    #[inline]
+    pub fn shard_of(&self, node: NodeId) -> usize {
+        match node {
+            NodeId::Cn(c) => self.cn_shard(c),
+            NodeId::Mn(m) => self.mn_shard(m),
+        }
+    }
+}
+
+/// Per-shard count bounds `[⌊n/S⌋, ⌈n/S⌉]`.
+fn bounds(n: usize, shards: usize) -> (usize, usize) {
+    (n / shards, n.div_ceil(shards))
+}
+
+/// Pick the best-scoring eligible shard (ties → lowest index).  A shard
+/// at `ceil` is full; when the remaining item count equals the total
+/// below-floor deficit, only below-floor shards are eligible (otherwise
+/// some shard would end under `floor`).
+fn pick(
+    shards: usize,
+    counts: &[usize],
+    floor: usize,
+    ceil: usize,
+    remaining: usize,
+    score: impl Fn(usize) -> i128,
+) -> usize {
+    let deficit: usize = counts.iter().map(|&c| floor.saturating_sub(c)).sum();
+    let must_fill = remaining == deficit;
+    let mut best: Option<(i128, usize)> = None;
+    for s in 0..shards {
+        if counts[s] >= ceil || (must_fill && counts[s] >= floor) {
+            continue;
+        }
+        let sc = score(s);
+        match best {
+            Some((b, _)) if sc <= b => {}
+            _ => best = Some((sc, s)),
+        }
+    }
+    best.expect("bounds always leave an eligible shard").1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planted(n_cns: usize, n_mns: usize, groups: &[(&[usize], &[usize])]) -> AffinityMatrix {
+        // CNs of a group hit their group's MNs hard, everyone else lightly
+        let mut aff = AffinityMatrix::new(n_cns, n_mns);
+        for (cns, mns) in groups {
+            for &c in *cns {
+                for m in 0..n_mns {
+                    let hits = if mns.contains(&m) { 1000 } else { 10 };
+                    for _ in 0..hits {
+                        aff.record(c, m);
+                    }
+                }
+            }
+        }
+        aff
+    }
+
+    #[test]
+    fn round_robin_matches_pr6_formula() {
+        let a = NodeAssignment::round_robin(4, 4, 2);
+        for c in 0..4 {
+            assert_eq!(a.cn_shard(c), c % 2);
+            assert_eq!(a.mn_shard(c), c % 2);
+            assert_eq!(a.key_shard(c), c % 2);
+            assert_eq!(a.key_shard(4 + c), c % 2);
+        }
+        assert_eq!(a.shard_of(NodeId::Cn(3)), 1);
+        assert_eq!(a.shard_of(NodeId::Mn(2)), 0);
+    }
+
+    #[test]
+    fn locality_is_deterministic() {
+        let aff = planted(8, 8, &[(&[0, 3, 5], &[1, 2]), (&[1, 2, 4, 6, 7], &[0, 3, 4, 5, 6, 7])]);
+        let a = NodeAssignment::locality(&aff, 4);
+        let b = NodeAssignment::locality(&aff, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn locality_recovers_planted_clusters() {
+        // two interleaved groups — id order gives the greedy no help
+        let aff = planted(4, 4, &[(&[0, 2], &[0, 2]), (&[1, 3], &[1, 3])]);
+        let a = NodeAssignment::locality(&aff, 2);
+        assert_eq!(a.cn_shard(0), a.cn_shard(2), "group A CNs co-located");
+        assert_eq!(a.cn_shard(1), a.cn_shard(3), "group B CNs co-located");
+        assert_ne!(a.cn_shard(0), a.cn_shard(1), "groups separated");
+        assert_eq!(a.mn_shard(0), a.cn_shard(0), "MN 0 follows group A");
+        assert_eq!(a.mn_shard(2), a.cn_shard(0));
+        assert_eq!(a.mn_shard(1), a.cn_shard(1), "MN 1 follows group B");
+        assert_eq!(a.mn_shard(3), a.cn_shard(1));
+    }
+
+    #[test]
+    fn locality_follows_affine_diagonal() {
+        // the ycsb steering shape: CN c concentrates on MN (5c+11) % n_mns
+        let n = 8;
+        let mut aff = AffinityMatrix::new(n, n);
+        for c in 0..n {
+            for m in 0..n {
+                let hits = if m == (5 * c + 11) % n { 900 } else { 15 };
+                for _ in 0..hits {
+                    aff.record(c, m);
+                }
+            }
+        }
+        for shards in [2, 4] {
+            let a = NodeAssignment::locality(&aff, shards);
+            for c in 0..n {
+                assert_eq!(
+                    a.cn_shard(c),
+                    a.mn_shard((5 * c + 11) % n),
+                    "CN {c} must land with its target MN at shards={shards}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balance_bound_holds_on_adversarial_matrices() {
+        // even when every CN loves the same MN, counts stay within one
+        let mut aff = AffinityMatrix::new(7, 5);
+        for c in 0..7 {
+            for _ in 0..100 {
+                aff.record(c, 0);
+            }
+        }
+        for shards in [2, 3, 4, 5] {
+            let a = NodeAssignment::locality(&aff, shards);
+            let mut cn_counts = vec![0usize; shards];
+            let mut mn_counts = vec![0usize; shards];
+            for c in 0..7 {
+                cn_counts[a.cn_shard(c)] += 1;
+            }
+            for m in 0..5 {
+                mn_counts[a.mn_shard(m)] += 1;
+            }
+            let (cf, cc) = super::bounds(7, shards);
+            let (mf, mc) = super::bounds(5, shards);
+            for s in 0..shards {
+                assert!(
+                    (cf..=cc).contains(&cn_counts[s]),
+                    "shards={shards}: cn count {} outside [{cf},{cc}]",
+                    cn_counts[s]
+                );
+                assert!(
+                    (mf..=mc).contains(&mn_counts[s]),
+                    "shards={shards}: mn count {} outside [{mf},{mc}]",
+                    mn_counts[s]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_matrix_degrades_to_balanced_fill() {
+        // no structure to exploit: ties resolve deterministically and the
+        // balance bound still holds (all-zero scan included)
+        for fill in [0u64, 50] {
+            let mut aff = AffinityMatrix::new(6, 6);
+            for c in 0..6 {
+                for m in 0..6 {
+                    for _ in 0..fill {
+                        aff.record(c, m);
+                    }
+                }
+            }
+            let a = NodeAssignment::locality(&aff, 3);
+            let mut counts = vec![0usize; 3];
+            for c in 0..6 {
+                counts[a.cn_shard(c)] += 1;
+            }
+            assert_eq!(counts, vec![2, 2, 2]);
+        }
+    }
+
+    #[test]
+    fn shards_one_maps_everything_to_zero() {
+        let aff = planted(4, 4, &[(&[0, 1, 2, 3], &[0, 1, 2, 3])]);
+        let a = NodeAssignment::locality(&aff, 1);
+        for c in 0..4 {
+            assert_eq!(a.cn_shard(c), 0);
+            assert_eq!(a.mn_shard(c), 0);
+        }
+    }
+
+    #[test]
+    fn fewer_mns_than_shards_is_tolerated() {
+        // floor_m = 0: every MN shard count is 0 or 1, CNs still balance
+        let mut aff = AffinityMatrix::new(8, 2);
+        for c in 0..8 {
+            aff.record(c, c % 2);
+        }
+        let a = NodeAssignment::locality(&aff, 4);
+        let mut cn_counts = vec![0usize; 4];
+        for c in 0..8 {
+            cn_counts[a.cn_shard(c)] += 1;
+        }
+        assert_eq!(cn_counts, vec![2, 2, 2, 2]);
+        let mut mn_counts = vec![0usize; 4];
+        for m in 0..2 {
+            mn_counts[a.mn_shard(m)] += 1;
+        }
+        assert!(mn_counts.iter().all(|&c| c <= 1));
+    }
+
+    #[test]
+    fn affinity_matrix_weights() {
+        let mut aff = AffinityMatrix::new(2, 3);
+        aff.record(0, 1);
+        aff.record(0, 1);
+        aff.record(1, 2);
+        assert_eq!(aff.get(0, 1), 2);
+        assert_eq!(aff.row_weight(0), 2);
+        assert_eq!(aff.row_weight(1), 1);
+        assert_eq!(aff.col_weight(1), 2);
+        assert_eq!(aff.col_weight(0), 0);
+    }
+}

@@ -70,6 +70,42 @@ impl Protocol {
     }
 }
 
+/// Node→shard placement policy for the sharded engine
+/// (`--set partition={rr,locality}`).  Host-side only: the partition
+/// decides which worker thread hosts a node, never the schedule, so
+/// results are bit-identical across policies (DESIGN.md "Sharded
+/// execution — Partitioning").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// CN `c` → shard `c % shards`, MN `m` → shard `m % shards` (the
+    /// PR-6 default; ignores line homing).
+    RoundRobin,
+    /// Profile-guided: a pre-run trace scan builds the CN×MN affinity
+    /// matrix and a deterministic greedy partitioner co-locates each CN
+    /// with the MNs homing its hot lines, balanced to within one node
+    /// per shard.
+    Locality,
+}
+
+impl PartitionPolicy {
+    pub const ALL: [PartitionPolicy; 2] = [PartitionPolicy::RoundRobin, PartitionPolicy::Locality];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionPolicy::RoundRobin => "rr",
+            PartitionPolicy::Locality => "locality",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PartitionPolicy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => PartitionPolicy::RoundRobin,
+            "locality" | "affinity" => PartitionPolicy::Locality,
+            _ => return None,
+        })
+    }
+}
+
 /// One cache level's geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheGeom {
@@ -144,10 +180,13 @@ pub struct SimConfig {
 
     // --- execution (host-side, must not change results) ---
     /// Simulation shards for the conservative-lookahead parallel engine
-    /// (`--set shards=N`).  Nodes partition round-robin across shards;
-    /// results are bit-identical for every shard count (DESIGN.md
-    /// "Sharded execution").  1 = windowed engine, single thread.
+    /// (`--set shards=N`).  Nodes partition across shards per
+    /// [`SimConfig::partition`]; results are bit-identical for every
+    /// shard count and partition policy (DESIGN.md "Sharded execution").
+    /// 1 = windowed engine, single thread.
     pub shards: usize,
+    /// Node→shard placement policy (`--set partition={rr,locality}`).
+    pub partition: PartitionPolicy,
 
     // --- workload ---
     pub ops_per_thread: u64,
@@ -207,6 +246,7 @@ impl Default for SimConfig {
             gzip_level: 9,
             dump_repl: true,
             shards: 1,
+            partition: PartitionPolicy::RoundRobin,
             ops_per_thread: 100_000,
             barrier_period: 20_000,
             seed: 0xCE_C5_1,
@@ -363,5 +403,18 @@ mod tests {
             assert_eq!(Protocol::from_name(p.name()), Some(p));
         }
         assert_eq!(Protocol::from_name("nonsense"), None);
+    }
+
+    #[test]
+    fn partition_names_roundtrip_and_rr_is_default() {
+        assert_eq!(
+            SimConfig::default().partition,
+            PartitionPolicy::RoundRobin,
+            "rr stays the default"
+        );
+        for p in PartitionPolicy::ALL {
+            assert_eq!(PartitionPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(PartitionPolicy::from_name("nonsense"), None);
     }
 }

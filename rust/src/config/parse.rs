@@ -5,7 +5,7 @@
 //! `--config` file; `#` comments allowed).  Keys mirror the `SimConfig`
 //! fields used by the paper's sweeps.
 
-use super::{FaultPlan, Protocol, SimConfig};
+use super::{FaultPlan, PartitionPolicy, Protocol, SimConfig};
 use crate::sim::time;
 
 /// Apply a single `key=value` override to `cfg`.
@@ -36,6 +36,9 @@ pub fn apply_override(cfg: &mut SimConfig, key: &str, value: &str) -> Result<(),
         "gzip_level" => cfg.gzip_level = num!(),
         "dump_repl" => cfg.dump_repl = parse_bool(value).ok_or_else(|| bad("bool"))?,
         "shards" => cfg.shards = num!(),
+        "partition" => {
+            cfg.partition = PartitionPolicy::from_name(value).ok_or_else(|| bad("partition"))?
+        }
         "ops_per_thread" | "ops" => cfg.ops_per_thread = num!(),
         "barrier_period" => cfg.barrier_period = num!(),
         "seed" => cfg.seed = num!(),
@@ -145,6 +148,17 @@ mod tests {
         assert!(apply_override(&mut c, "shards", "many").is_err());
         apply_override(&mut c, "shards", "99").unwrap();
         assert!(c.validate().is_err(), "more shards than CNs is rejected");
+    }
+
+    #[test]
+    fn partition_key_applies_and_validates() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.partition, PartitionPolicy::RoundRobin);
+        apply_override(&mut c, "partition", "locality").unwrap();
+        assert_eq!(c.partition, PartitionPolicy::Locality);
+        apply_override(&mut c, "partition", "rr").unwrap();
+        assert_eq!(c.partition, PartitionPolicy::RoundRobin);
+        assert!(apply_override(&mut c, "partition", "magic").is_err());
     }
 
     #[test]

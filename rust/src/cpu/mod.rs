@@ -138,7 +138,7 @@ mod tests {
     use crate::workloads::{profiles, ThreadTrace};
 
     fn core() -> Core {
-        let t = ThreadTrace::new(1, &profiles::bodytrack(), 0, 10);
+        let t = ThreadTrace::new(1, &profiles::bodytrack(), 0, 4, 10);
         Core::new(0, 0, 0, t, 72, true)
     }
 

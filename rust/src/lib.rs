@@ -49,7 +49,9 @@ pub mod workloads;
 /// The commonly-needed surface in one import.
 pub mod prelude {
     pub use crate::cluster::{run_app, slowdown_vs_wb, Cluster};
-    pub use crate::config::{FaultEvent, FaultKind, FaultNode, FaultPlan, Protocol, SimConfig};
+    pub use crate::config::{
+        FaultEvent, FaultKind, FaultNode, FaultPlan, PartitionPolicy, Protocol, SimConfig,
+    };
     pub use crate::report::{gmean, FigureTable};
     pub use crate::stats::RunStats;
     pub use crate::workloads::{all_apps, by_name, AppProfile};

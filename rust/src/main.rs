@@ -356,7 +356,7 @@ fn cmd_trace_check() -> Result<(), String> {
     use recxl::workloads::{tracegen, NUM_PARAMS};
     let rt = recxl::runtime::Runtime::load("artifacts").map_err(|e| e.to_string())?;
     let mut params = [0i32; NUM_PARAMS];
-    let p = profiles::ycsb().to_params(7);
+    let p = profiles::ycsb().to_params(7, 4);
     params.copy_from_slice(&p);
     for (seed, base) in [(42u32, 0u32), (7, 4096), (123, 81920)] {
         let pjrt = rt

@@ -138,10 +138,18 @@ pub struct ThreadTrace {
 }
 
 impl ThreadTrace {
-    pub fn new(seed: u32, app: &AppProfile, thread: usize, limit: u64) -> Self {
+    /// `cores_per_cn` feeds the thread→CN map the steering parameters
+    /// depend on (see [`AppProfile::to_params`]).
+    pub fn new(
+        seed: u32,
+        app: &AppProfile,
+        thread: usize,
+        cores_per_cn: usize,
+        limit: u64,
+    ) -> Self {
         ThreadTrace {
             seed,
-            params: app.to_params(thread),
+            params: app.to_params(thread, cores_per_cn),
             buf: Arc::new(Vec::new()),
             buf_base: u64::MAX,
             next: 0,
@@ -217,7 +225,7 @@ mod tests {
     #[test]
     fn trace_respects_limit() {
         let mut src = RustTraceSource;
-        let mut t = ThreadTrace::new(1, &tiny_app(0), 0, 100);
+        let mut t = ThreadTrace::new(1, &tiny_app(0), 0, 4, 100);
         let mut n = 0;
         while t.next_op(&mut src).is_some() {
             n += 1;
@@ -229,7 +237,7 @@ mod tests {
     #[test]
     fn barriers_inserted_once_per_period() {
         let mut src = RustTraceSource;
-        let mut t = ThreadTrace::new(1, &tiny_app(10), 0, 35);
+        let mut t = ThreadTrace::new(1, &tiny_app(10), 0, 4, 35);
         let mut barriers = 0;
         let mut ops = 0;
         while let Some(op) = t.next_op(&mut src) {
@@ -248,7 +256,7 @@ mod tests {
         let app = tiny_app(7);
         let positions = |thread: usize| {
             let mut src = RustTraceSource;
-            let mut t = ThreadTrace::new(9, &app, thread, 40);
+            let mut t = ThreadTrace::new(9, &app, thread, 4, 40);
             let mut pos = vec![];
             let mut i = 0;
             while let Some(op) = t.next_op(&mut src) {
@@ -267,11 +275,11 @@ mod tests {
         // the memo must be invisible: the stream equals uncached kernel
         // output block for block, and a second pull (cache hit) agrees
         let app = tiny_app(0);
-        let params = app.to_params(3);
+        let params = app.to_params(3, 4);
         let direct = tracegen::gen_block(7, 0, &params);
         let pull = || -> Vec<RawOp> {
             let mut src = RustTraceSource;
-            let mut t = ThreadTrace::new(7, &app, 3, 64);
+            let mut t = ThreadTrace::new(7, &app, 3, 4, 64);
             let mut ops = Vec::new();
             while t.next_op(&mut src).is_some() {
                 ops.push(t.buf[(t.next - 1) as usize]);
@@ -287,7 +295,7 @@ mod tests {
     #[test]
     fn stream_crosses_block_boundaries() {
         let mut src = RustTraceSource;
-        let mut t = ThreadTrace::new(3, &tiny_app(0), 2, N_OPS as u64 + 50);
+        let mut t = ThreadTrace::new(3, &tiny_app(0), 2, 4, N_OPS as u64 + 50);
         let mut n = 0;
         while t.next_op(&mut src).is_some() {
             n += 1;

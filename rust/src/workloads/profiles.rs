@@ -48,6 +48,12 @@ pub struct AppProfile {
     pub cs_len: i32,
     /// Deterministic barrier period in ops (0 = none).
     pub barrier_period: u64,
+    /// Fraction of remote accesses steered to the thread's CN-affine
+    /// memory node (the tablet-placement structure of partitioned stores:
+    /// each client's hot shard lives on one home node, cf. the CXL
+    /// shared-memory placement work).  0 = uniform homing, the historical
+    /// stream.
+    pub p_near: f64,
 }
 
 fn f16(p: f64) -> i32 {
@@ -56,7 +62,15 @@ fn f16(p: f64) -> i32 {
 
 impl AppProfile {
     /// Encode as the kernel's parameter vector for a given thread.
-    pub fn to_params(&self, thread: usize) -> [i32; NUM_PARAMS] {
+    ///
+    /// `cores_per_cn` fixes the thread→CN map so the steering target
+    /// (p[14]) is per-*CN*: every thread of CN `c` pins its steered lines
+    /// to residue `(5c + 11) mod 64`.  The affine scramble models tablet
+    /// placement that is deliberately not aligned with node ids — and
+    /// because `5c + 11 − c ≡ 1 (mod 2)`, the target never shares the
+    /// CN's residue modulo any power of two, so a `c % shards` partition
+    /// gets no accidental credit for it.
+    pub fn to_params(&self, thread: usize, cores_per_cn: usize) -> [i32; NUM_PARAMS] {
         let mut v = [0i32; NUM_PARAMS];
         v[0] = thread as i32;
         v[1] = f16(self.p_load);
@@ -70,6 +84,8 @@ impl AppProfile {
         v[10] = f16(self.p_hot);
         v[11] = self.hot_log2;
         v[12] = self.cs_len;
+        v[13] = f16(self.p_near);
+        v[14] = ((5 * (thread / cores_per_cn.max(1)) + 11) % 64) as i32;
         v
     }
 
@@ -118,6 +134,7 @@ pub fn bodytrack() -> AppProfile {
         hot_log2: 8,
         cs_len: 12,
         barrier_period: 25_000,
+        p_near: 0.0,
     }
 }
 
@@ -139,6 +156,7 @@ pub fn fluidanimate() -> AppProfile {
         hot_log2: 9,
         cs_len: 6,
         barrier_period: 20_000,
+        p_near: 0.0,
     }
 }
 
@@ -161,6 +179,7 @@ pub fn streamcluster() -> AppProfile {
         hot_log2: 6,
         cs_len: 4,
         barrier_period: 10_000,
+        p_near: 0.0,
     }
 }
 
@@ -182,6 +201,7 @@ pub fn canneal() -> AppProfile {
         hot_log2: 10,
         cs_len: 4,
         barrier_period: 40_000,
+        p_near: 0.0,
     }
 }
 
@@ -204,6 +224,7 @@ pub fn raytrace() -> AppProfile {
         hot_log2: 9,
         cs_len: 4,
         barrier_period: 0,
+        p_near: 0.0,
     }
 }
 
@@ -224,6 +245,7 @@ pub fn barnes() -> AppProfile {
         hot_log2: 7,
         cs_len: 8,
         barrier_period: 15_000,
+        p_near: 0.0,
     }
 }
 
@@ -245,6 +267,7 @@ pub fn ocean_ncp() -> AppProfile {
         hot_log2: 4,
         cs_len: 4,
         barrier_period: 8_000,
+        p_near: 0.0,
     }
 }
 
@@ -265,12 +288,21 @@ pub fn ocean_cp() -> AppProfile {
         hot_log2: 4,
         cs_len: 4,
         barrier_period: 8_000,
+        p_near: 0.0,
     }
 }
 
 /// YCSB over a Bigtable-style hashtable: 80/20 read/write, uniform access,
 /// *all* accesses to CXL memory (section VI) — the bandwidth-dominant
 /// workload (Fig. 14: ~110 GB/s of CXL access traffic).
+///
+/// `p_near = 0.85` models tablet placement: a Bigtable-style store routes
+/// most of a client's operations to the tablet(s) its key range lives on,
+/// so each CN's stream concentrates on one home memory node (the affinity
+/// structure the CXL shared-memory placement literature measures).  The
+/// remaining 15% is cross-tablet traffic (scans, rebalanced keys).  The
+/// tablet map is the affine scramble in `to_params`, deliberately not
+/// aligned with node ids.
 pub fn ycsb() -> AppProfile {
     AppProfile {
         name: "ycsb",
@@ -286,6 +318,7 @@ pub fn ycsb() -> AppProfile {
         hot_log2: 4,
         cs_len: 4,
         barrier_period: 0,
+        p_near: 0.85,
     }
 }
 
@@ -310,18 +343,49 @@ mod tests {
 
     #[test]
     fn params_encoding_roundtrip() {
-        let p = ycsb().to_params(17);
+        let p = ycsb().to_params(17, 4);
         assert_eq!(p[0], 17);
         assert_eq!(p[1], f16(0.48));
         assert_eq!(p[2], f16(0.60));
         assert_eq!(p[5], 65535); // p_remote = 1.0 clamps to max
         assert_eq!(p[6], 21);
+        assert_eq!(p[13], f16(0.85));
+        // thread 17 / cpc 4 = CN 4 → target residue (5*4 + 11) % 64 = 31
+        assert_eq!(p[14], 31);
+    }
+
+    #[test]
+    fn steering_target_is_per_cn_and_rr_misaligned() {
+        let a = ycsb();
+        // every thread of one CN shares a target ...
+        assert_eq!(a.to_params(8, 4)[14], a.to_params(11, 4)[14]);
+        // ... different CNs get different targets (mod-64 affine map is
+        // injective on small CN counts) ...
+        assert_ne!(a.to_params(0, 4)[14], a.to_params(4, 4)[14]);
+        // ... and the target never shares the CN's parity, so a
+        // round-robin partition never co-locates the steered traffic.
+        for cn in 0..16usize {
+            let target = a.to_params(cn * 4, 4)[14] as usize;
+            assert_ne!(target % 2, cn % 2, "cn {cn} target {target}");
+        }
+    }
+
+    #[test]
+    fn only_ycsb_steers() {
+        for a in all_apps() {
+            if a.name == "ycsb" {
+                assert!(a.p_near > 0.0);
+            } else {
+                assert_eq!(a.p_near, 0.0, "{}", a.name);
+                assert_eq!(a.to_params(0, 4)[13], 0, "{}", a.name);
+            }
+        }
     }
 
     #[test]
     fn thresholds_are_monotone() {
         for a in all_apps() {
-            let p = a.to_params(0);
+            let p = a.to_params(0, 4);
             assert!(p[1] <= p[2] && p[2] <= p[3], "{}", a.name);
             assert!(a.priv_log2 <= 18, "{}", a.name);
             assert!(a.shared_log2 <= 25, "{}", a.name);

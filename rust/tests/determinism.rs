@@ -138,6 +138,41 @@ fn shard_counts_share_one_schedule_on_every_named_scenario() {
 }
 
 #[test]
+fn partition_policies_share_one_schedule_on_every_named_scenario() {
+    // The locality partitioner only moves nodes between shard queues.
+    // Every barrier/merge resolution key (staged messages, sync ledger,
+    // oracle commits, event node keys) is partition-independent, so the
+    // fingerprint must be pinned across the full partition x shard-count
+    // matrix on every registered fault scenario.  The cross-shard ledger
+    // counters are partition-dependent by design and deliberately not
+    // part of the fingerprint.
+    let app = by_name("ycsb").unwrap();
+    for sc in recxl::scenarios::all() {
+        let mut cfg = scen_cfg(3_000);
+        sc.prepare(&mut cfg);
+        let base = run_app(cfg.clone(), &app);
+        for partition in PartitionPolicy::ALL {
+            for shards in [1usize, 2, 4] {
+                if partition == PartitionPolicy::RoundRobin && shards == 1 {
+                    continue; // the base run itself
+                }
+                let mut c = cfg.clone();
+                c.partition = partition;
+                c.shards = shards;
+                let s = run_app(c, &app);
+                assert_eq!(
+                    fingerprint(&base),
+                    fingerprint(&s),
+                    "scenario {} must be bit-identical at partition={} shards={shards}",
+                    sc.name,
+                    partition.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn shard_counts_agree_on_dumped_log_durability_paths() {
     // mn-crash-after-dump exercises the dumped-log rebuild; both the
     // replicated and unreplicated dump paths must be shard-invariant
@@ -174,9 +209,12 @@ fn sharded_grid_points_match_their_serial_twins() {
     let app = by_name("ycsb").unwrap();
     let mut points = Vec::new();
     for shards in [1, 2, 4] {
-        let mut cfg = scen_cfg(3_000);
-        cfg.shards = shards;
-        points.push((cfg, app.clone()));
+        for partition in PartitionPolicy::ALL {
+            let mut cfg = scen_cfg(3_000);
+            cfg.shards = shards;
+            cfg.partition = partition;
+            points.push((cfg, app.clone()));
+        }
     }
     let seq = run_grid(points.clone(), false);
     let par = run_grid(points, true);

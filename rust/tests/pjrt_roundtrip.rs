@@ -28,7 +28,7 @@ fn trace_gen_artifact_matches_rust_generator() {
     let Some(rt) = runtime() else { return };
     for (seed, base, thread) in [(42u32, 0u32, 0usize), (7, 4096, 17), (0xDEAD, 123 * 4096, 63)] {
         for app in ["ycsb", "ocean-cp", "raytrace"] {
-            let params = profiles::by_name(app).unwrap().to_params(thread);
+            let params = profiles::by_name(app).unwrap().to_params(thread, 4);
             let pjrt = rt.trace_block(seed as i32, base as i32, &params).unwrap();
             let rust = tracegen::gen_block(seed, base, &params);
             assert_eq!(pjrt.len(), rust.len());
@@ -41,7 +41,7 @@ fn trace_gen_artifact_matches_rust_generator() {
 fn pjrt_trace_source_streams_blocks() {
     let Some(rt) = runtime() else { return };
     let mut src = recxl::runtime::PjrtTraceSource::new(rt);
-    let params = profiles::ycsb().to_params(3);
+    let params = profiles::ycsb().to_params(3, 4);
     let a = src.block(9, 0, &params);
     let b = src.block(9, 4096, &params);
     assert_eq!(a.len(), tracegen::N_OPS);

@@ -243,7 +243,7 @@ fn prop_trace_blocks_consistent_with_any_base() {
     check("trace-random-access", 64, 0x7ACE, |rng, knobs| {
         let seed = knob(rng, knobs, 0, 0, u32::MAX as u64) as u32;
         let base = (knob(rng, knobs, 1, 0, 1000) as u32) * 512;
-        let params = recxl::workloads::profiles::ycsb().to_params(rng.below(64) as usize);
+        let params = recxl::workloads::profiles::ycsb().to_params(rng.below(64) as usize, 4);
         let a = recxl::workloads::tracegen::gen_block(seed, base, &params);
         let b = recxl::workloads::tracegen::gen_block(seed, base + 512, &params);
         if a[512..] != b[..a.len() - 512] {
