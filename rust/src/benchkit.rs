@@ -147,7 +147,9 @@ impl Report {
     }
 }
 
-fn json_f64(v: f64) -> String {
+/// Render an `f64` as a JSON number (shortest-roundtrip; non-finite
+/// values become `null`).  Shared by the bench and campaign reports.
+pub fn json_f64(v: f64) -> String {
     if v.is_finite() {
         // Display of f64 is shortest-roundtrip and valid JSON; integral
         // values need an explicit ".0" to stay typed as numbers elsewhere
@@ -162,7 +164,8 @@ fn json_f64(v: f64) -> String {
     }
 }
 
-fn json_str(s: &str) -> String {
+/// JSON-escape and quote a string.
+pub fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

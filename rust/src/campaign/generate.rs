@@ -1,0 +1,293 @@
+//! The campaign case generator: `(seed, index)` → one valid
+//! [`CampaignCase`], via the `ptest::Case` knob recorder so the same
+//! pass both *generates* (fresh RNG draws) and *replays* (an edited
+//! knob vector from the shrinker or a `--replay` spec).
+//!
+//! Plans are valid **by construction**: every drawn fault event is
+//! tentatively appended to the plan in time order and kept only if
+//! `FaultPlan::validate` still accepts the whole plan (range, no
+//! double-crash, ≥1 survivor per kind, non-overlapping link windows)
+//! and the CN-crash count stays within the replication factor's
+//! recovery envelope (`min(n_r, n_cns-1)`).  Rejected events simply
+//! drop out; their knobs were already recorded, so replay alignment is
+//! preserved and the shrinker can still delete them wholesale.
+
+use super::CampaignCase;
+use crate::config::{CacheGeom, FaultNode, FaultPlan, PartitionPolicy, Protocol, SimConfig};
+use crate::ptest::Case;
+use crate::sim::time::{us, Ps};
+use crate::sim::Pcg;
+use crate::workloads::profiles::by_name;
+
+/// RNG stream for campaign case derivation (distinct from ptest's, so a
+/// campaign and a property test sharing a seed stay uncorrelated).
+const CAMPAIGN_STREAM: u64 = 0xCA4A;
+
+/// Knobs drawn per fault event — the `ListSpan` element width.  The
+/// generator draws exactly this many knobs per event, *even for events
+/// the validity filter later rejects*, so positions stay stable under
+/// replay.
+pub const EVENT_KNOBS: usize = 6;
+
+/// Most events a plan draws (before validity filtering).
+pub const MAX_EVENTS: u64 = 4;
+
+/// Workload profiles the campaign samples (distinct memory behaviours:
+/// the KV store, the two PARSEC sharing patterns, and the SPLASH-2
+/// n-body kernel).
+const APPS: [&str; 4] = ["ycsb", "canneal", "streamcluster", "barnes"];
+
+/// The per-case RNG.  A case is addressed by `(seed, index)` alone.
+pub fn case_rng(seed: u64, index: u64) -> Pcg {
+    Pcg::new(seed.wrapping_add(index), CAMPAIGN_STREAM)
+}
+
+/// One drawn-but-not-yet-accepted fault event.
+enum Raw {
+    Cn(usize, Ps),
+    Mn(usize, Ps),
+    Link(FaultNode, Ps, u64, Ps),
+}
+
+impl Raw {
+    fn push_onto(&self, plan: &mut FaultPlan) {
+        match *self {
+            Raw::Cn(cn, at) => plan.push_crash(cn, at),
+            Raw::Mn(mn, at) => plan.push_mn_crash(mn, at),
+            Raw::Link(node, at, factor, until) => {
+                plan.push_link_degraded(node, at, factor, until)
+            }
+        }
+    }
+}
+
+fn build_plan(events: &[&Raw]) -> FaultPlan {
+    let mut p = FaultPlan::default();
+    for e in events {
+        e.push_onto(&mut p);
+    }
+    p
+}
+
+/// Draw (or replay) one campaign case.  Pure in `(rng, case)`: the same
+/// knob vector always produces the same case.
+pub fn generate_case(rng: &mut Pcg, case: &mut Case) -> CampaignCase {
+    let app = by_name(APPS[case.knob(rng, 0, 3) as usize]).expect("registry app");
+    let mut cfg = SimConfig {
+        protocol: Protocol::ReCxlProactive,
+        shards: 1,
+        partition: PartitionPolicy::RoundRobin,
+        ..SimConfig::default()
+    };
+    cfg.n_cns = case.knob(rng, 4, 8) as usize;
+    cfg.n_mns = case.knob(rng, 3, 8) as usize;
+    cfg.cores_per_cn = if case.knob(rng, 0, 1) == 1 { 4 } else { 2 };
+    cfg.n_r = (case.knob(rng, 2, 3) as usize).min(cfg.n_cns - 1);
+    cfg.ops_per_thread = case.knob(rng, 15, 80) * 100;
+    cfg.seed = case.knob(rng, 1, 0xFFFF_FFFF);
+    if case.knob(rng, 0, 1) == 1 {
+        // the dump-durability cache recipe (early-written lines leave
+        // every cache, so dumped-only records exist when an MN dies)
+        cfg.l1 = CacheGeom {
+            size_bytes: 12 * 1024,
+            ..cfg.l1
+        };
+        cfg.l2 = CacheGeom {
+            size_bytes: 32 * 1024,
+            ..cfg.l2
+        };
+        cfg.l3 = CacheGeom {
+            size_bytes: 128 * 1024,
+            ..cfg.l3
+        };
+    }
+    if case.knob(rng, 0, 1) == 1 {
+        cfg.dump_period_ps = us(12);
+    }
+    cfg.dump_repl = case.knob(rng, 0, 1) == 1;
+    let diff_shards = if case.knob(rng, 0, 1) == 1 { 4 } else { 2 }.min(cfg.n_cns);
+    let diff_partition = if case.knob(rng, 0, 1) == 1 {
+        PartitionPolicy::Locality
+    } else {
+        PartitionPolicy::RoundRobin
+    };
+
+    // ---- fault plan ------------------------------------------------
+    let n_events = case.list_len(rng, 0, MAX_EVENTS, EVENT_KNOBS);
+    let mut raw: Vec<(Ps, usize, Raw)> = Vec::with_capacity(n_events);
+    let mut prev_crash_at: Option<Ps> = None;
+    for i in 0..n_events {
+        let kind = case.knob(rng, 0, 2);
+        let nsel = case.knob(rng, 0, 63) as usize;
+        let tmode = case.knob(rng, 0, 2);
+        let tval = case.knob(rng, 0, 159);
+        let p1 = case.knob(rng, 1, 7);
+        let p2 = case.knob(rng, 0, 63);
+        // three timing shapes: absolute mid-run, chained into the
+        // previous crash's recovery round (detection is 10 us after a
+        // crash, quiesce timeout 25 us), or straddling a dump boundary
+        let at = match tmode {
+            1 if prev_crash_at.is_some() => {
+                prev_crash_at.unwrap() + us(3 + tval % 40)
+            }
+            2 => cfg.dump_period_ps * (2 + tval % 8) + us(p2 % 5),
+            _ => us(15 + tval),
+        };
+        let ev = match kind {
+            0 => Raw::Cn(nsel % cfg.n_cns, at),
+            1 => Raw::Mn(nsel % cfg.n_mns, at),
+            _ => {
+                let node = if nsel % 2 == 0 {
+                    FaultNode::Cn((nsel / 2) % cfg.n_cns)
+                } else {
+                    FaultNode::Mn((nsel / 2) % cfg.n_mns)
+                };
+                Raw::Link(node, at, p1, at + us(5 + p2))
+            }
+        };
+        if matches!(ev, Raw::Cn(..) | Raw::Mn(..)) {
+            prev_crash_at = Some(at);
+        }
+        raw.push((at, i, ev));
+    }
+    // install in time order (validate demands non-decreasing times),
+    // keeping only events the growing plan still validates with
+    raw.sort_by_key(|&(at, i, _)| (at, i));
+    let cn_cap = cfg.n_r.min(cfg.n_cns - 1);
+    let mut accepted: Vec<&Raw> = Vec::with_capacity(raw.len());
+    let mut cn_crashes = 0usize;
+    for (_, _, ev) in &raw {
+        if matches!(ev, Raw::Cn(..)) && cn_crashes >= cn_cap {
+            continue; // beyond N_r is outside the recovery envelope
+        }
+        accepted.push(ev);
+        if build_plan(&accepted).validate(cfg.n_cns, cfg.n_mns).is_ok() {
+            if matches!(ev, Raw::Cn(..)) {
+                cn_crashes += 1;
+            }
+        } else {
+            accepted.pop();
+        }
+    }
+    cfg.faults = build_plan(&accepted);
+    debug_assert!(cfg.validate().is_ok(), "generated config must validate");
+
+    CampaignCase {
+        cfg,
+        app,
+        diff_shards,
+        diff_partition,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tentpole validity property: every generated case is a valid
+    /// simulation input — plan validates on its own cluster shape, CN
+    /// crashes stay within the recovery envelope, and the whole config
+    /// passes `SimConfig::validate`.
+    #[test]
+    fn every_generated_case_is_valid() {
+        for index in 0..200u64 {
+            let mut rng = case_rng(0xCAFE, index);
+            let mut case = Case::new();
+            let cc = generate_case(&mut rng, &mut case);
+            cc.cfg
+                .validate()
+                .unwrap_or_else(|e| panic!("case {index}: {e}"));
+            cc.cfg
+                .faults
+                .validate(cc.cfg.n_cns, cc.cfg.n_mns)
+                .unwrap_or_else(|e| panic!("case {index}: {e}"));
+            let cns = cc.cfg.faults.crashed_cns().len();
+            assert!(
+                cns <= cc.cfg.n_r.min(cc.cfg.n_cns - 1),
+                "case {index}: {cns} CN crashes exceed the envelope"
+            );
+            assert!(cc.diff_shards >= 2 && cc.diff_shards <= cc.cfg.n_cns);
+            assert_eq!(cc.cfg.shards, 1, "the base case is serial");
+        }
+    }
+
+    /// A case must be a pure function of `(seed, index)`: replaying the
+    /// recorded knobs reproduces it bit-for-bit, and the knob vector is
+    /// already normalized (replay rewrites nothing).
+    #[test]
+    fn recorded_knobs_replay_bit_identically() {
+        for index in [0u64, 3, 17, 99] {
+            let mut rng = case_rng(7, index);
+            let mut fresh = Case::new();
+            let a = generate_case(&mut rng, &mut fresh);
+            fresh.truncate_to_used();
+
+            let mut rng = case_rng(7, index);
+            let mut replay = Case::replay(fresh.knobs().to_vec());
+            let b = generate_case(&mut rng, &mut replay);
+            replay.truncate_to_used();
+
+            assert_eq!(fresh.knobs(), replay.knobs(), "index {index}");
+            assert_eq!(a.cfg.faults, b.cfg.faults, "index {index}");
+            assert_eq!(a.brief(), b.brief(), "index {index}");
+        }
+    }
+
+    /// Different indices under one seed must not collapse onto one case
+    /// (the `wrapping_add` addressing really does move the stream).
+    #[test]
+    fn indices_draw_distinct_cases() {
+        let briefs: Vec<String> = (0..20u64)
+            .map(|i| {
+                let mut rng = case_rng(0xCAFE, i);
+                let mut case = Case::new();
+                generate_case(&mut rng, &mut case).brief()
+            })
+            .collect();
+        let mut dedup = briefs.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert!(
+            dedup.len() > 15,
+            "20 indices produced only {} distinct cases",
+            dedup.len()
+        );
+    }
+
+    /// The generator must actually exercise the adversarial dimensions:
+    /// over a modest sample, we see multi-crash cascades, MN kills, link
+    /// windows, both `dump_repl` settings, and both partition policies.
+    #[test]
+    fn the_sample_space_covers_the_adversarial_shapes() {
+        let mut cascades = 0;
+        let mut mn_kills = 0;
+        let mut links = 0;
+        let mut baseline = 0;
+        let mut locality = 0;
+        for index in 0..120u64 {
+            let mut rng = case_rng(0xCAFE, index);
+            let mut case = Case::new();
+            let cc = generate_case(&mut rng, &mut case);
+            if cc.cfg.faults.crash_count() >= 2 {
+                cascades += 1;
+            }
+            if !cc.cfg.faults.crashed_mns().is_empty() {
+                mn_kills += 1;
+            }
+            if cc.cfg.faults.len() > cc.cfg.faults.crash_count() {
+                links += 1;
+            }
+            if !cc.cfg.dump_repl {
+                baseline += 1;
+            }
+            if cc.diff_partition == PartitionPolicy::Locality {
+                locality += 1;
+            }
+        }
+        assert!(cascades > 10, "cascades: {cascades}");
+        assert!(mn_kills > 20, "mn kills: {mn_kills}");
+        assert!(links > 20, "link windows: {links}");
+        assert!(baseline > 30, "dump_repl=0 draws: {baseline}");
+        assert!(locality > 30, "locality twins: {locality}");
+    }
+}

@@ -1,0 +1,603 @@
+//! Chaos campaigns: the adversarial fault-campaign fuzzer.
+//!
+//! The named scenarios (`crate::scenarios`) pin ten known failure
+//! shapes; a campaign explores the shapes nobody wrote down.  A seeded
+//! generator ([`generate_case`]) draws a random [`FaultPlan`] — CN+MN
+//! cascades, link-degradation storms, crashes timed to straddle dump
+//! boundaries or land inside a prior recovery round — against a random
+//! workload/config point (app, ops, workload seed, cache geometry,
+//! `dump_repl`).  Every case is judged twice:
+//!
+//! 1. **recovery contract** — [`crate::scenarios::plan_verdict`] with
+//!    the loss contract derived by [`loss_contract`]: crash-free plans
+//!    must not wake recovery, crashy ones must recover every injected
+//!    failure, and the oracle outcome must match what the configuration
+//!    promises (`dump_repl=1` forbids loss on a single MN death;
+//!    multi-MN cascades and the `dump_repl=0` baseline are `Allowed`);
+//! 2. **shard differential** — the same case re-runs on the windowed
+//!    PDES engine (random `shards`/`partition` twin) and its
+//!    [`schedule_fingerprint`] must equal the serial run's, so the
+//!    parallel engine is fuzzed alongside the recovery logic.
+//!
+//! Failing cases **shrink** ([`shrink_failure`]): the recorded knob
+//! vector replays through `ptest::shrink_case` (whole fault events
+//! deleted, scalars halved + binary-refined), each candidate re-judged
+//! and accepted only while it still fails *with the same failure kind*.
+//! The minimal reproducer is emitted as a replayable
+//! `recxl campaign --replay SEED/INDEX:KNOBS` line plus a pinned
+//! `Scenario` snippet ready to fold into the registry (the
+//! `campaign-cascade` pin is one such graduate).
+//!
+//! Determinism: a case is a pure function of `(campaign seed, index)`,
+//! so campaigns are bit-identical across reruns and worker counts — the
+//! batch runner claims indices atomically but writes results into
+//! per-index slots (the `figures::run_grid` idiom).
+
+mod generate;
+mod results;
+mod shrink;
+
+pub use generate::{case_rng, generate_case, EVENT_KNOBS, MAX_EVENTS};
+pub use results::write_results;
+pub use shrink::{pin_snippet, shrink_failure};
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::cluster::{run_app, schedule_fingerprint};
+use crate::config::{PartitionPolicy, SimConfig};
+use crate::ptest::Case;
+use crate::scenarios::{plan_verdict, LossContract};
+use crate::workloads::AppProfile;
+
+/// One generated campaign point: the serial configuration (faults
+/// installed, `shards=1`) plus the sharded twin the differential check
+/// re-runs it under.
+#[derive(Debug, Clone)]
+pub struct CampaignCase {
+    pub cfg: SimConfig,
+    pub app: AppProfile,
+    /// Shard count for the differential twin (`>= 2`).
+    pub diff_shards: usize,
+    /// Partition policy for the differential twin.
+    pub diff_partition: PartitionPolicy,
+}
+
+impl CampaignCase {
+    /// One-line human description (goes into case JSON and pin files).
+    pub fn brief(&self) -> String {
+        format!(
+            "{} on {}cn({}c)/{}mn n_r={} ops={} wseed={:#x} dump_repl={} \
+             dump={}us diff={}sh/{} faults [{}]",
+            self.app.name,
+            self.cfg.n_cns,
+            self.cfg.cores_per_cn,
+            self.cfg.n_mns,
+            self.cfg.n_r,
+            self.cfg.ops_per_thread,
+            self.cfg.seed,
+            self.cfg.dump_repl as u8,
+            self.cfg.dump_period_ps / 1_000_000,
+            self.diff_shards,
+            self.diff_partition.name(),
+            self.cfg.faults.summary(),
+        )
+    }
+}
+
+/// Why a case failed.  The shrinker only accepts candidates that fail
+/// the *same way* (`same_kind`), so a verdict failure cannot drift into
+/// an unrelated shard divergence while minimizing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Failure {
+    /// The recovery/loss contract was violated (message from
+    /// [`plan_verdict`]).
+    Verdict(String),
+    /// Sharded and serial schedules diverged.
+    ShardDiff {
+        serial: u64,
+        sharded: u64,
+        shards: usize,
+        partition: PartitionPolicy,
+    },
+}
+
+impl Failure {
+    pub fn same_kind(&self, other: &Failure) -> bool {
+        std::mem::discriminant(self) == std::mem::discriminant(other)
+    }
+
+    /// Short tag for JSON (`"verdict"` / `"shard-diff"`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Failure::Verdict(_) => "verdict",
+            Failure::ShardDiff { .. } => "shard-diff",
+        }
+    }
+}
+
+impl fmt::Display for Failure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Failure::Verdict(msg) => write!(f, "verdict: {msg}"),
+            Failure::ShardDiff {
+                serial,
+                sharded,
+                shards,
+                partition,
+            } => write!(
+                f,
+                "shard differential: serial fingerprint {serial:#018x} != \
+                 sharded {sharded:#018x} (shards={shards}, partition={})",
+                partition.name()
+            ),
+        }
+    }
+}
+
+/// The loss contract a generated plan must satisfy.  `dump_repl=1`
+/// keeps two copies of every dumped chunk, so a *single* MN death must
+/// be loss-free; without it, or when a cascade can take both copies,
+/// the outcome is documented-configuration-dependent and only the
+/// recovery bookkeeping is enforced.
+pub fn loss_contract(cfg: &SimConfig) -> LossContract {
+    let mn_crashes = cfg.faults.crashed_mns().len();
+    if (mn_crashes >= 1 && !cfg.dump_repl) || mn_crashes >= 2 {
+        LossContract::Allowed
+    } else {
+        LossContract::Forbidden
+    }
+}
+
+/// Judge one case: serial run → recovery/loss verdict → sharded twin →
+/// fingerprint differential.  Returns the serial schedule fingerprint
+/// on success.
+pub fn judge(case: &CampaignCase) -> Result<u64, Failure> {
+    let serial = run_app(case.cfg.clone(), &case.app);
+    plan_verdict(&case.cfg.faults, loss_contract(&case.cfg), &serial)
+        .map_err(Failure::Verdict)?;
+    let fp_serial = schedule_fingerprint(&serial);
+    let mut twin = case.cfg.clone();
+    twin.shards = case.diff_shards;
+    twin.partition = case.diff_partition;
+    let sharded = run_app(twin, &case.app);
+    let fp_sharded = schedule_fingerprint(&sharded);
+    if fp_serial != fp_sharded {
+        return Err(Failure::ShardDiff {
+            serial: fp_serial,
+            sharded: fp_sharded,
+            shards: case.diff_shards,
+            partition: case.diff_partition,
+        });
+    }
+    Ok(fp_serial)
+}
+
+/// A replayable case address: `SEED/INDEX` regenerates the case from
+/// scratch, `SEED/INDEX:k1,k2,...` replays an edited (shrunk) knob
+/// vector through the same generator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeedSpec {
+    pub seed: u64,
+    pub index: u64,
+    pub knobs: Option<Vec<u64>>,
+}
+
+impl SeedSpec {
+    pub fn parse(s: &str) -> Result<SeedSpec, String> {
+        let (addr, knobs) = match s.split_once(':') {
+            Some((a, k)) => {
+                let knobs = k
+                    .split(',')
+                    .filter(|t| !t.is_empty())
+                    .map(|t| {
+                        t.trim()
+                            .parse::<u64>()
+                            .map_err(|_| format!("bad knob {t:?} in replay spec"))
+                    })
+                    .collect::<Result<Vec<u64>, String>>()?;
+                (a, Some(knobs))
+            }
+            None => (s, None),
+        };
+        let (seed, index) = addr
+            .split_once('/')
+            .ok_or_else(|| format!("replay spec must be SEED/INDEX[:knobs], got {s:?}"))?;
+        Ok(SeedSpec {
+            seed: seed
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad seed {seed:?}"))?,
+            index: index
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad index {index:?}"))?,
+            knobs,
+        })
+    }
+
+    pub fn render(&self) -> String {
+        match &self.knobs {
+            None => format!("{}/{}", self.seed, self.index),
+            Some(k) => format!(
+                "{}/{}:{}",
+                self.seed,
+                self.index,
+                k.iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+
+    /// Regenerate the case this spec addresses (replaying the edited
+    /// knobs when present).  Returns the normalized recorder too, so
+    /// callers can re-render a canonical spec.
+    pub fn materialize(&self) -> (Case, CampaignCase) {
+        let mut case = match &self.knobs {
+            Some(k) => Case::replay(k.clone()),
+            None => Case::new(),
+        };
+        let mut rng = case_rng(self.seed, self.index);
+        let cc = generate_case(&mut rng, &mut case);
+        case.truncate_to_used();
+        (case, cc)
+    }
+}
+
+/// Campaign run options (the CLI maps flags straight onto this).
+#[derive(Debug, Clone)]
+pub struct CampaignOpts {
+    /// Cases per batch (bounded mode runs exactly one batch).
+    pub cases: usize,
+    pub seed: u64,
+    /// Worker threads; 0 = host parallelism.  Results are
+    /// worker-count-invariant.
+    pub workers: usize,
+    /// Keep running batches until `max_failures` cases have failed.
+    pub soak: bool,
+    /// Stop collecting (and shrinking) after this many failures.
+    pub max_failures: usize,
+    /// Shrink failures to minimal reproducers (disable for a fast
+    /// triage pass).
+    pub shrink: bool,
+}
+
+impl Default for CampaignOpts {
+    fn default() -> Self {
+        CampaignOpts {
+            cases: 25,
+            seed: 0xCAFE,
+            workers: 0,
+            soak: false,
+            max_failures: 8,
+            shrink: true,
+        }
+    }
+}
+
+/// Outcome of one judged case.
+#[derive(Debug, Clone)]
+pub struct CaseOutcome {
+    pub index: u64,
+    /// Normalized knob vector (replays via `SEED/INDEX:knobs`).
+    pub knobs: Vec<u64>,
+    pub brief: String,
+    /// Serial schedule fingerprint on pass, failure on fail.
+    pub result: Result<u64, Failure>,
+}
+
+/// A failure, shrunk and packaged for humans: the replay line, the
+/// minimal knobs, and a pinned-`Scenario` snippet.
+#[derive(Debug, Clone)]
+pub struct FailureReport {
+    pub index: u64,
+    /// The failure as originally found.
+    pub failure: Failure,
+    /// The failure of the minimal reproducer (same kind by
+    /// construction).
+    pub minimal: Failure,
+    pub minimal_knobs: Vec<u64>,
+    pub minimal_brief: String,
+    /// `recxl campaign --replay SEED/INDEX:knobs`
+    pub replay: String,
+    /// Pinned `Scenario` definition, ready for the registry.
+    pub pin: String,
+}
+
+/// Everything a campaign produced.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub seed: u64,
+    pub cases: Vec<CaseOutcome>,
+    pub failures: Vec<FailureReport>,
+    /// FNV-1a over `(index, fingerprint-or-failure)` in index order —
+    /// two runs of the same campaign must produce the same digest
+    /// regardless of worker count.
+    pub digest: u64,
+}
+
+impl CampaignReport {
+    pub fn failed(&self) -> usize {
+        self.cases.iter().filter(|c| c.result.is_err()).count()
+    }
+}
+
+fn run_one<J>(seed: u64, index: u64, judge_case: &J) -> CaseOutcome
+where
+    J: Fn(&CampaignCase) -> Result<u64, Failure>,
+{
+    let spec = SeedSpec {
+        seed,
+        index,
+        knobs: None,
+    };
+    let (case, cc) = spec.materialize();
+    let result = judge_case(&cc);
+    CaseOutcome {
+        index,
+        knobs: case.knobs().to_vec(),
+        brief: cc.brief(),
+        result,
+    }
+}
+
+/// Judge `count` cases starting at `base` with `workers` threads.
+/// Worker-count-invariant: indices are claimed atomically but each
+/// result lands in its own slot, collected in index order.
+fn run_batch<J>(seed: u64, base: u64, count: usize, workers: usize, judge_case: &J) -> Vec<CaseOutcome>
+where
+    J: Fn(&CampaignCase) -> Result<u64, Failure> + Sync,
+{
+    if count == 0 {
+        return Vec::new();
+    }
+    let slots: Vec<OnceLock<CaseOutcome>> = (0..count).map(|_| OnceLock::new()).collect();
+    let next = AtomicUsize::new(0);
+    let workers = workers.clamp(1, count);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                let out = run_one(seed, base + i as u64, judge_case);
+                let _ = slots[i].set(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("every slot filled"))
+        .collect()
+}
+
+/// Run a campaign with the production [`judge`].
+pub fn run_campaign(opts: &CampaignOpts) -> CampaignReport {
+    run_campaign_with(opts, &judge)
+}
+
+/// Run a campaign with an injectable judge (tests plant known-bad
+/// predicates here; the CLI passes [`judge`]).
+pub fn run_campaign_with<J>(opts: &CampaignOpts, judge_case: &J) -> CampaignReport
+where
+    J: Fn(&CampaignCase) -> Result<u64, Failure> + Sync,
+{
+    let workers = if opts.workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        opts.workers
+    };
+    let stop_at = opts.max_failures.max(1);
+    let mut cases: Vec<CaseOutcome> = Vec::new();
+    let mut base: u64 = 0;
+    loop {
+        cases.extend(run_batch(opts.seed, base, opts.cases, workers, judge_case));
+        base += opts.cases as u64;
+        let failed = cases.iter().filter(|c| c.result.is_err()).count();
+        if !opts.soak || failed >= stop_at {
+            break;
+        }
+    }
+
+    // shrink serially, in index order, after all workers are done
+    let mut failures = Vec::new();
+    for c in cases.iter().filter(|c| c.result.is_err()).take(stop_at) {
+        let found = c.result.clone().unwrap_err();
+        let report = if opts.shrink {
+            shrink_failure(opts.seed, c.index, c.knobs.clone(), found, judge_case)
+        } else {
+            let spec = SeedSpec {
+                seed: opts.seed,
+                index: c.index,
+                knobs: Some(c.knobs.clone()),
+            };
+            FailureReport {
+                index: c.index,
+                failure: found.clone(),
+                minimal: found,
+                minimal_knobs: c.knobs.clone(),
+                minimal_brief: c.brief.clone(),
+                replay: format!("recxl campaign --replay {}", spec.render()),
+                pin: String::new(),
+            }
+        };
+        failures.push(report);
+    }
+
+    let digest = digest_cases(&cases);
+    CampaignReport {
+        seed: opts.seed,
+        cases,
+        failures,
+        digest,
+    }
+}
+
+/// FNV-1a over the per-case outcomes, in index order.
+fn digest_cases(cases: &[CaseOutcome]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for c in cases {
+        mix(c.index);
+        match &c.result {
+            Ok(fp) => mix(*fp),
+            Err(_) => mix(u64::MAX),
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::us;
+
+    #[test]
+    fn seed_spec_round_trips() {
+        for s in ["51966/3", "7/0:1,2,3", "0/18446744073709551615"] {
+            let spec = SeedSpec::parse(s).unwrap();
+            assert_eq!(spec.render(), s, "{s}");
+        }
+        let spec = SeedSpec::parse("12/34:5,6").unwrap();
+        assert_eq!(spec.seed, 12);
+        assert_eq!(spec.index, 34);
+        assert_eq!(spec.knobs, Some(vec![5, 6]));
+        assert!(SeedSpec::parse("12").is_err());
+        assert!(SeedSpec::parse("a/b").is_err());
+        assert!(SeedSpec::parse("1/2:x").is_err());
+    }
+
+    #[test]
+    fn loss_contract_matches_the_durability_claims() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(loss_contract(&cfg), LossContract::Forbidden, "no faults");
+        cfg.faults.push_crash(0, us(30));
+        assert_eq!(
+            loss_contract(&cfg),
+            LossContract::Forbidden,
+            "CN crashes within N_r never lose"
+        );
+        cfg.faults.push_mn_crash(1, us(40));
+        assert_eq!(
+            loss_contract(&cfg),
+            LossContract::Forbidden,
+            "single MN death with dump_repl=1 is the pinned no-loss claim"
+        );
+        cfg.dump_repl = false;
+        assert_eq!(
+            loss_contract(&cfg),
+            LossContract::Allowed,
+            "the dump_repl=0 baseline has a documented loss window"
+        );
+        cfg.dump_repl = true;
+        cfg.faults.push_mn_crash(2, us(50));
+        assert_eq!(
+            loss_contract(&cfg),
+            LossContract::Allowed,
+            "two MN deaths can take both copies of a dumped chunk"
+        );
+    }
+
+    #[test]
+    fn failure_kinds_compare_by_discriminant() {
+        let a = Failure::Verdict("x".into());
+        let b = Failure::Verdict("y".into());
+        let c = Failure::ShardDiff {
+            serial: 1,
+            sharded: 2,
+            shards: 2,
+            partition: PartitionPolicy::RoundRobin,
+        };
+        assert!(a.same_kind(&b));
+        assert!(!a.same_kind(&c));
+        assert_eq!(a.kind(), "verdict");
+        assert_eq!(c.kind(), "shard-diff");
+        assert!(c.to_string().contains("shards=2"));
+    }
+
+    /// A cheap deterministic judge for runner tests: fail every case
+    /// whose plan kills at least `mns` memory nodes.
+    fn planted_mn_judge(mns: usize) -> impl Fn(&CampaignCase) -> Result<u64, Failure> + Sync {
+        move |cc: &CampaignCase| {
+            let n = cc.cfg.faults.crashed_mns().len();
+            if n >= mns {
+                Err(Failure::Verdict(format!("planted: {n} MN crash(es)")))
+            } else {
+                Ok(cc.cfg.seed ^ cc.cfg.ops_per_thread)
+            }
+        }
+    }
+
+    #[test]
+    fn campaign_digest_is_worker_count_invariant() {
+        let judge = planted_mn_judge(1);
+        let mut opts = CampaignOpts {
+            cases: 40,
+            seed: 0xBEEF,
+            workers: 1,
+            shrink: false,
+            ..CampaignOpts::default()
+        };
+        let one = run_campaign_with(&opts, &judge);
+        opts.workers = 4;
+        let four = run_campaign_with(&opts, &judge);
+        assert_eq!(one.digest, four.digest);
+        assert_eq!(one.cases.len(), four.cases.len());
+        assert_eq!(one.failed(), four.failed());
+        for (a, b) in one.cases.iter().zip(four.cases.iter()) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.knobs, b.knobs);
+            assert_eq!(a.result, b.result);
+        }
+    }
+
+    #[test]
+    fn soak_mode_runs_batches_until_the_failure_budget() {
+        let judge = planted_mn_judge(1);
+        let opts = CampaignOpts {
+            cases: 5,
+            seed: 0xBEEF,
+            workers: 2,
+            soak: true,
+            max_failures: 3,
+            shrink: false,
+            ..CampaignOpts::default()
+        };
+        let r = run_campaign_with(&opts, &judge);
+        assert!(r.failed() >= 3, "soak must keep going to the budget");
+        assert_eq!(r.cases.len() % 5, 0, "whole batches only");
+        assert_eq!(r.failures.len(), 3, "reports capped at max_failures");
+    }
+
+    #[test]
+    fn unshrunk_failure_reports_still_carry_a_replay_line() {
+        let judge = planted_mn_judge(1);
+        let opts = CampaignOpts {
+            cases: 40,
+            seed: 0xBEEF,
+            workers: 2,
+            shrink: false,
+            ..CampaignOpts::default()
+        };
+        let r = run_campaign_with(&opts, &judge);
+        assert!(r.failed() > 0, "seed 0xBEEF must plant at least one MN crash");
+        for f in &r.failures {
+            assert!(f.replay.starts_with("recxl campaign --replay "));
+            let spec = SeedSpec::parse(f.replay.trim_start_matches("recxl campaign --replay "))
+                .unwrap();
+            assert_eq!(spec.seed, 0xBEEF);
+            assert_eq!(spec.knobs.as_deref(), Some(&f.minimal_knobs[..]));
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Campaign results directory, in the rapx-bench EVAL-harness layout
+//! the bench JSONs already use: one `campaign.json` manifest plus one
+//! `case-<index>.json` per case, and a `pin-<index>.txt` per shrunk
+//! failure holding the replay line and the pinned-`Scenario` snippet.
+//! Hand-rolled JSON via `benchkit::{json_str, json_f64}` — serde is not
+//! in the offline crate set.
+
+use std::path::Path;
+
+use super::{CampaignReport, CaseOutcome};
+use crate::benchkit::{json_f64, json_str};
+
+fn case_json(seed: u64, c: &CaseOutcome) -> String {
+    let mut o = String::new();
+    o.push_str("{\n");
+    o.push_str(&format!("  \"schema\": {},\n", json_str("recxl-campaign-v1")));
+    o.push_str(&format!("  \"index\": {},\n", c.index));
+    o.push_str(&format!(
+        "  \"replay\": {},\n",
+        json_str(&format!("{seed}/{}", c.index))
+    ));
+    o.push_str(&format!("  \"brief\": {},\n", json_str(&c.brief)));
+    o.push_str(&format!(
+        "  \"knobs\": [{}],\n",
+        c.knobs
+            .iter()
+            .map(|k| k.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    ));
+    match &c.result {
+        Ok(fp) => {
+            o.push_str("  \"status\": \"pass\",\n");
+            o.push_str(&format!(
+                "  \"fingerprint\": {}\n",
+                json_str(&format!("{fp:#018x}"))
+            ));
+        }
+        Err(f) => {
+            o.push_str("  \"status\": \"fail\",\n");
+            o.push_str(&format!("  \"failure_kind\": {},\n", json_str(f.kind())));
+            o.push_str(&format!("  \"failure\": {}\n", json_str(&f.to_string())));
+        }
+    }
+    o.push_str("}\n");
+    o
+}
+
+fn manifest_json(report: &CampaignReport, elapsed_s: f64) -> String {
+    let mut o = String::new();
+    o.push_str("{\n");
+    o.push_str(&format!("  \"schema\": {},\n", json_str("recxl-campaign-v1")));
+    o.push_str(&format!("  \"seed\": {},\n", report.seed));
+    o.push_str(&format!("  \"cases\": {},\n", report.cases.len()));
+    o.push_str(&format!("  \"failed\": {},\n", report.failed()));
+    o.push_str(&format!(
+        "  \"digest\": {},\n",
+        json_str(&format!("{:#018x}", report.digest))
+    ));
+    o.push_str(&format!("  \"elapsed_s\": {},\n", json_f64(elapsed_s)));
+    o.push_str("  \"case_files\": [\n");
+    for (i, c) in report.cases.iter().enumerate() {
+        o.push_str(&format!(
+            "    {}{}\n",
+            json_str(&format!("case-{}.json", c.index)),
+            if i + 1 < report.cases.len() { "," } else { "" }
+        ));
+    }
+    o.push_str("  ],\n");
+    o.push_str("  \"pins\": [\n");
+    for (i, f) in report.failures.iter().enumerate() {
+        o.push_str(&format!(
+            "    {}{}\n",
+            json_str(&format!("pin-{}.txt", f.index)),
+            if i + 1 < report.failures.len() { "," } else { "" }
+        ));
+    }
+    o.push_str("  ]\n}\n");
+    o
+}
+
+/// Write the whole results directory.  Creates `dir` if needed.
+pub fn write_results(
+    dir: &str,
+    report: &CampaignReport,
+    elapsed_s: f64,
+) -> std::io::Result<()> {
+    let dir = Path::new(dir);
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("campaign.json"), manifest_json(report, elapsed_s))?;
+    for c in &report.cases {
+        std::fs::write(
+            dir.join(format!("case-{}.json", c.index)),
+            case_json(report.seed, c),
+        )?;
+    }
+    for f in &report.failures {
+        let body = format!(
+            "campaign failure, case {} (found: {})\n\
+             minimal: {}\n\
+             minimal case: {}\n\
+             replay: {}\n\n\
+             {}",
+            f.index, f.failure, f.minimal, f.minimal_brief, f.replay, f.pin
+        );
+        std::fs::write(dir.join(format!("pin-{}.txt", f.index)), body)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::Failure;
+
+    fn tiny_report() -> CampaignReport {
+        CampaignReport {
+            seed: 7,
+            cases: vec![
+                CaseOutcome {
+                    index: 0,
+                    knobs: vec![1, 2, 3],
+                    brief: "a \"quoted\" brief".into(),
+                    result: Ok(0xAB),
+                },
+                CaseOutcome {
+                    index: 1,
+                    knobs: vec![4],
+                    brief: "failing case".into(),
+                    result: Err(Failure::Verdict("oracle found 2 inconsistencies".into())),
+                },
+            ],
+            failures: vec![crate::campaign::FailureReport {
+                index: 1,
+                failure: Failure::Verdict("oracle found 2 inconsistencies".into()),
+                minimal: Failure::Verdict("oracle found 1 inconsistencies".into()),
+                minimal_knobs: vec![4],
+                minimal_brief: "failing case".into(),
+                replay: "recxl campaign --replay 7/1:4".into(),
+                pin: "Scenario { .. }".into(),
+            }],
+            digest: 0x1234,
+        }
+    }
+
+    #[test]
+    fn manifest_lists_every_artifact() {
+        let m = manifest_json(&tiny_report(), 0.25);
+        assert!(m.contains("\"schema\": \"recxl-campaign-v1\""));
+        assert!(m.contains("\"cases\": 2"));
+        assert!(m.contains("\"failed\": 1"));
+        assert!(m.contains("\"case-0.json\","));
+        assert!(m.contains("\"case-1.json\""));
+        assert!(m.contains("\"pin-1.txt\""));
+        assert!(m.contains("\"elapsed_s\": 0.25"));
+        assert!(m.contains("\"digest\": \"0x0000000000001234\""));
+    }
+
+    #[test]
+    fn case_json_escapes_and_reports_status() {
+        let r = tiny_report();
+        let pass = case_json(7, &r.cases[0]);
+        assert!(pass.contains("\"status\": \"pass\""));
+        assert!(pass.contains("\"fingerprint\": \"0x00000000000000ab\""));
+        assert!(pass.contains("\\\"quoted\\\""));
+        assert!(pass.contains("\"knobs\": [1, 2, 3],"));
+        let fail = case_json(7, &r.cases[1]);
+        assert!(fail.contains("\"status\": \"fail\""));
+        assert!(fail.contains("\"failure_kind\": \"verdict\""));
+        assert!(fail.contains("2 inconsistencies"));
+    }
+
+    #[test]
+    fn write_results_creates_the_layout() {
+        let dir = std::env::temp_dir().join(format!("recxl-campaign-test-{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        write_results(&dir_s, &tiny_report(), 0.1).unwrap();
+        assert!(dir.join("campaign.json").is_file());
+        assert!(dir.join("case-0.json").is_file());
+        assert!(dir.join("case-1.json").is_file());
+        let pin = std::fs::read_to_string(dir.join("pin-1.txt")).unwrap();
+        assert!(pin.contains("replay: recxl campaign --replay 7/1:4"));
+        assert!(pin.contains("Scenario { .. }"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

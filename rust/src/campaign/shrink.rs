@@ -1,0 +1,275 @@
+//! Campaign failure shrinking: drive `ptest::shrink_case` with the
+//! campaign generator + judge as the replay oracle.
+//!
+//! A shrink candidate is an edited knob vector.  Replaying it through
+//! [`generate_case`] re-normalizes every knob (range clamps write
+//! back), re-records the fault-event list span, and re-applies the
+//! validity filter — so *any* byte-level edit still lands on a valid
+//! simulation input, and event deletion is a pure splice on the
+//! recorded span.  A candidate is accepted only while the judge still
+//! fails **with the same failure kind** as the original (a verdict
+//! failure must not drift into an unrelated shard divergence while
+//! minimizing, and vice versa).
+
+use super::generate::{case_rng, generate_case};
+use super::{CampaignCase, Failure, FailureReport, SeedSpec};
+use crate::ptest::{shrink_case, Case};
+
+/// Shrink one failing case to a minimal reproducer and package it.
+pub fn shrink_failure<J>(
+    seed: u64,
+    index: u64,
+    knobs: Vec<u64>,
+    original: Failure,
+    judge_case: &J,
+) -> FailureReport
+where
+    J: Fn(&CampaignCase) -> Result<u64, Failure>,
+{
+    let regen = |c: &mut Case| -> CampaignCase {
+        let mut rng = case_rng(seed, index);
+        generate_case(&mut rng, c)
+    };
+    let mut still_fails = |c: &mut Case| -> Option<String> {
+        let cc = regen(c);
+        if cc.cfg.validate().is_err() {
+            return None; // belt and braces; generation is valid by construction
+        }
+        match judge_case(&cc) {
+            Ok(_) => None,
+            Err(f) if f.same_kind(&original) => Some(f.to_string()),
+            Err(_) => None, // different bug — not a valid shrink of this one
+        }
+    };
+
+    // reconstruct the recorder (with its list spans) by replaying the
+    // found case once, then minimize
+    let mut found = Case::replay(knobs);
+    let _ = regen(&mut found);
+    found.truncate_to_used();
+    let (minimal, _) = shrink_case(found, original.to_string(), &mut still_fails);
+
+    // regenerate + judge the survivor once for the final artifacts
+    let mut min_case = Case::replay(minimal.knobs().to_vec());
+    let cc = regen(&mut min_case);
+    let minimal_failure = match judge_case(&cc) {
+        Err(f) => f,
+        // shrink_case only ever accepts failing candidates, so the
+        // minimum still fails; keep the original as a defensive fallback
+        Ok(_) => original.clone(),
+    };
+    let spec = SeedSpec {
+        seed,
+        index,
+        knobs: Some(minimal.knobs().to_vec()),
+    };
+    FailureReport {
+        index,
+        failure: original,
+        minimal: minimal_failure.clone(),
+        minimal_knobs: minimal.knobs().to_vec(),
+        minimal_brief: cc.brief(),
+        replay: format!("recxl campaign --replay {}", spec.render()),
+        pin: pin_snippet(&cc, &minimal_failure, seed, index),
+    }
+}
+
+/// Render a minimal reproducer as a pinned `Scenario` definition ready
+/// to fold into `scenarios::all()` (the `campaign-cascade` pin is the
+/// template).  Closures are capture-free — the plan round-trips through
+/// `FaultPlan::parse` of its own `summary()`, and the tweak re-states
+/// the config as literals.
+pub fn pin_snippet(cc: &CampaignCase, failure: &Failure, seed: u64, index: u64) -> String {
+    let cfg = &cc.cfg;
+    let def = crate::config::SimConfig::default();
+    let builder = if cfg.faults.is_empty() {
+        "    builder: |_| FaultPlan::default(),\n".to_string()
+    } else {
+        format!(
+            "    builder: |_| FaultPlan::parse({:?}).expect(\"pinned plan\"),\n",
+            cfg.faults.summary()
+        )
+    };
+    let mut tweak = String::new();
+    let mut t = |line: String| tweak.push_str(&format!("        {line}\n"));
+    t(format!("cfg.n_cns = {};", cfg.n_cns));
+    t(format!("cfg.n_mns = {};", cfg.n_mns));
+    t(format!("cfg.cores_per_cn = {};", cfg.cores_per_cn));
+    t(format!("cfg.n_r = {};", cfg.n_r));
+    t(format!("cfg.ops_per_thread = {};", cfg.ops_per_thread));
+    t(format!("cfg.seed = {:#x};", cfg.seed));
+    if cfg.dump_period_ps != def.dump_period_ps {
+        t(format!(
+            "cfg.dump_period_ps = crate::sim::time::us({});",
+            cfg.dump_period_ps / 1_000_000
+        ));
+    }
+    if cfg.l1.size_bytes != def.l1.size_bytes {
+        t(format!("cfg.l1.size_bytes = {};", cfg.l1.size_bytes));
+        t(format!("cfg.l2.size_bytes = {};", cfg.l2.size_bytes));
+        t(format!("cfg.l3.size_bytes = {};", cfg.l3.size_bytes));
+    }
+    if cfg.dump_repl != def.dump_repl {
+        t(format!("cfg.dump_repl = {};", cfg.dump_repl));
+    }
+    format!(
+        "// campaign-shrunk reproducer — replay: recxl campaign --replay {}\n\
+         // failure: {}\n\
+         Scenario {{\n\
+         \x20   name: \"campaign-pin-{seed}-{index}\",\n\
+         \x20   about: \"pinned by the chaos campaign: {}\",\n\
+         {builder}\
+         \x20   tweak: |cfg| {{\n{tweak}\x20   }},\n\
+         \x20   // wire to the documented loss window if the failure is a\n\
+         \x20   // loss-contract violation, else leave as never_loses\n\
+         \x20   expects_loss: never_loses,\n\
+         }},\n",
+        SeedSpec {
+            seed,
+            index,
+            knobs: None
+        }
+        .render(),
+        failure,
+        failure.kind(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{run_campaign_with, CampaignOpts};
+    use crate::config::PartitionPolicy;
+
+    /// Planted bug: any plan that kills an MN "fails".  The minimal
+    /// reproducer must be a single-event plan — exactly one MN crash,
+    /// nothing else — proving event deletion works end-to-end.
+    #[test]
+    fn planted_mn_bug_shrinks_to_a_single_event_plan() {
+        let judge = |cc: &CampaignCase| -> Result<u64, Failure> {
+            if cc.cfg.faults.crashed_mns().is_empty() {
+                Ok(0)
+            } else {
+                Err(Failure::Verdict("planted MN bug".into()))
+            }
+        };
+        // find a failing index under this seed
+        let opts = CampaignOpts {
+            cases: 30,
+            seed: 0xCAFE,
+            workers: 1,
+            shrink: true,
+            max_failures: 1,
+            ..CampaignOpts::default()
+        };
+        let report = run_campaign_with(&opts, &judge);
+        assert!(report.failed() > 0, "the planted bug must trigger");
+        let f = &report.failures[0];
+        // regenerate the minimal case and inspect its plan
+        let spec = SeedSpec {
+            seed: 0xCAFE,
+            index: f.index,
+            knobs: Some(f.minimal_knobs.clone()),
+        };
+        let (_, cc) = spec.materialize();
+        assert_eq!(
+            cc.cfg.faults.len(),
+            1,
+            "minimal plan must be the single MN crash: [{}]",
+            cc.cfg.faults.summary()
+        );
+        assert_eq!(cc.cfg.faults.crashed_mns().len(), 1);
+        assert!(cc.cfg.faults.crashed_cns().is_empty());
+        // scalar knobs descend too: the smallest workload still failing
+        assert_eq!(cc.cfg.ops_per_thread, 1_500, "ops knob must hit its floor");
+        assert!(f.minimal.same_kind(&f.failure));
+        assert!(f.pin.contains("campaign-pin-51966-"), "pin names the spec");
+        assert!(f.pin.contains("FaultPlan::parse"));
+        assert!(f.replay.contains(&format!("51966/{}", f.index)));
+    }
+
+    /// Shrinking must not let a failure drift to a different kind: a
+    /// judge that reports ShardDiff on big plans but Verdict on small
+    /// ones must shrink the ShardDiff only down to the smallest case
+    /// that is *still* a ShardDiff.
+    #[test]
+    fn shrinking_preserves_the_failure_kind() {
+        let judge = |cc: &CampaignCase| -> Result<u64, Failure> {
+            let n = cc.cfg.faults.len();
+            if n >= 2 {
+                Err(Failure::ShardDiff {
+                    serial: 1,
+                    sharded: 2,
+                    shards: cc.diff_shards,
+                    partition: cc.diff_partition,
+                })
+            } else {
+                // a smaller-but-different bug the shrinker must not
+                // mistake for progress
+                Err(Failure::Verdict("small-plan bug".into()))
+            }
+        };
+        // find an index whose fresh case has >= 2 fault events
+        let mut found = None;
+        for index in 0..60u64 {
+            let spec = SeedSpec {
+                seed: 0xCAFE,
+                index,
+                knobs: None,
+            };
+            let (case, cc) = spec.materialize();
+            if cc.cfg.faults.len() >= 2 {
+                found = Some((index, case.knobs().to_vec()));
+                break;
+            }
+        }
+        let (index, knobs) = found.expect("some case draws >= 2 events");
+        let original = Failure::ShardDiff {
+            serial: 1,
+            sharded: 2,
+            shards: 2,
+            partition: PartitionPolicy::RoundRobin,
+        };
+        let report = shrink_failure(0xCAFE, index, knobs, original, &judge);
+        let spec = SeedSpec {
+            seed: 0xCAFE,
+            index,
+            knobs: Some(report.minimal_knobs.clone()),
+        };
+        let (_, cc) = spec.materialize();
+        assert_eq!(
+            cc.cfg.faults.len(),
+            2,
+            "minimal ShardDiff keeps two events: [{}]",
+            cc.cfg.faults.summary()
+        );
+        assert!(matches!(report.minimal, Failure::ShardDiff { .. }));
+    }
+
+    #[test]
+    fn pin_snippet_is_a_wireable_scenario() {
+        let spec = SeedSpec {
+            seed: 1,
+            index: 2,
+            knobs: None,
+        };
+        let (_, cc) = spec.materialize();
+        let pin = pin_snippet(
+            &cc,
+            &Failure::Verdict("oracle found 3 inconsistencies".into()),
+            1,
+            2,
+        );
+        assert!(pin.contains("name: \"campaign-pin-1-2\""));
+        assert!(pin.contains("tweak: |cfg|"));
+        assert!(pin.contains(&format!("cfg.n_cns = {};", cc.cfg.n_cns)));
+        assert!(pin.contains("expects_loss: never_loses"));
+        if !cc.cfg.faults.is_empty() {
+            // the builder round-trips the plan through its own summary
+            let q = format!("{:?}", cc.cfg.faults.summary());
+            assert!(pin.contains(&q), "pin must embed {q}");
+            let parsed = crate::config::FaultPlan::parse(&cc.cfg.faults.summary()).unwrap();
+            assert_eq!(parsed, cc.cfg.faults);
+        }
+    }
+}

@@ -632,3 +632,106 @@ fn merge(base: &mut Cluster, shells: &mut [Cluster]) {
         base.oracle.on_commit(lid, mask, &words, cn, repl_seq);
     }
 }
+
+/// Hash every schedule-sensitive output of a run into one `u64`
+/// (FNV-1a): simulated time, event count, per-class traffic totals and
+/// 50 us timelines, store commits, the recovery roster, and the
+/// dump-durability counters.  This is the programmatic form of the
+/// tuple `tests/determinism.rs` compares field-by-field — the campaign
+/// fuzzer differentials sharded-vs-serial runs with it, so a PDES
+/// divergence anywhere in that tuple flips the hash.
+pub fn schedule_fingerprint(s: &RunStats) -> u64 {
+    use crate::proto::MsgClass;
+
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    mix(s.exec_time_ps);
+    mix(s.events);
+    for &c in MsgClass::ALL.iter() {
+        mix(s.traffic.bytes_of(c));
+        mix(s.traffic.messages_of(c));
+        let tl = s.traffic.timeline_bytes(c);
+        mix(tl.len() as u64);
+        for v in tl {
+            mix(v);
+        }
+    }
+    mix(s.repl.store_commits);
+    mix(s.recovery.happened as u64);
+    mix(s.recovery.failed_cns.len() as u64);
+    for &cn in &s.recovery.failed_cns {
+        mix(cn as u64);
+    }
+    mix(s.recovery.failed_mns.len() as u64);
+    for &mn in &s.recovery.failed_mns {
+        mix(mn as u64);
+    }
+    mix(s.recovery.rehomed_lines);
+    mix(s.recovery.rebuilt_dumps);
+    mix(s.recovery.rereplicated_chunks);
+    mix(s.recovery.consistent as u64);
+    mix(s.recovery.inconsistencies);
+    h
+}
+
+#[cfg(test)]
+mod fingerprint_tests {
+    use super::schedule_fingerprint;
+    use crate::stats::RunStats;
+
+    #[test]
+    fn identical_stats_hash_identically() {
+        let mut a = RunStats::default();
+        a.exec_time_ps = 123_456;
+        a.events = 789;
+        a.repl.store_commits = 42;
+        let b = a.clone();
+        assert_eq!(schedule_fingerprint(&a), schedule_fingerprint(&b));
+    }
+
+    #[test]
+    fn each_tuple_field_moves_the_hash() {
+        let base = RunStats::default();
+        let h0 = schedule_fingerprint(&base);
+
+        let mut t = base.clone();
+        t.exec_time_ps = 1;
+        assert_ne!(schedule_fingerprint(&t), h0, "exec_time_ps");
+
+        let mut t = base.clone();
+        t.events = 1;
+        assert_ne!(schedule_fingerprint(&t), h0, "events");
+
+        let mut t = base.clone();
+        t.repl.store_commits = 1;
+        assert_ne!(schedule_fingerprint(&t), h0, "store_commits");
+
+        let mut t = base.clone();
+        t.recovery.failed_cns = vec![2];
+        assert_ne!(schedule_fingerprint(&t), h0, "failed_cns");
+
+        let mut t = base.clone();
+        t.recovery.rebuilt_dumps = 7;
+        assert_ne!(schedule_fingerprint(&t), h0, "rebuilt_dumps");
+
+        let mut t = base.clone();
+        t.recovery.inconsistencies = 1;
+        assert_ne!(schedule_fingerprint(&t), h0, "inconsistencies");
+    }
+
+    #[test]
+    fn roster_order_is_part_of_the_schedule() {
+        let mut a = RunStats::default();
+        a.recovery.failed_cns = vec![0, 3];
+        let mut b = RunStats::default();
+        b.recovery.failed_cns = vec![3, 0];
+        assert_ne!(schedule_fingerprint(&a), schedule_fingerprint(&b));
+    }
+}

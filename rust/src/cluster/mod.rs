@@ -20,6 +20,7 @@ mod oracle;
 pub mod partition;
 mod recovery_impl;
 
+pub use engine::schedule_fingerprint;
 pub use oracle::Oracle;
 pub use partition::{AffinityMatrix, NodeAssignment};
 pub use recovery_impl::RecoveryCtrl;

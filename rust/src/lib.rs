@@ -27,6 +27,7 @@
 
 pub mod benchkit;
 pub mod cache;
+pub mod campaign;
 pub mod cluster;
 pub mod coherence;
 pub mod config;

@@ -5,6 +5,7 @@
 //! recxl figure <2|10..18>  [--ops N] [--no-parallel]
 //! recxl recover [--app NAME] [--crash-at-us T] [--set faults=cn0@30us,mn2@45us,link:cn3@10us*4x..50us ...]
 //! recxl scenarios [NAME|all] [--app NAME] [--ops N] [--set k=v ...]
+//! recxl campaign [--cases N] [--seed S] [--out DIR] [--soak] [--replay SEED/INDEX[:knobs]]
 //! recxl apps
 //! recxl trace-check        # PJRT artifact vs Rust generator parity
 //! ```
@@ -41,6 +42,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "figure" => cmd_figure(rest),
         "recover" => cmd_recover(rest),
         "scenarios" => cmd_scenarios(rest),
+        "campaign" => cmd_campaign(rest),
         "apps" => {
             for a in all_apps() {
                 println!(
@@ -70,6 +72,10 @@ fn print_help() {
          crash + recovery demo (cn/mn fail-stop, link degradation windows)\n  \
          scenarios [NAME|all] [--app NAME] [--ops N] [--set k=v]...\n           \
          (bare `scenarios` lists the registry)\n  \
+         campaign [--cases N] [--seed S] [--workers N] [--out DIR] [--soak]\n           \
+         [--max-failures N] [--no-shrink] [--replay SEED/INDEX[:knobs]]\n           \
+         randomized fault campaigns: oracle + verdict + sharded-vs-serial\n           \
+         differential per case; failures shrink to pinned reproducers\n  \
          apps     list workload profiles\n  \
          trace-check  verify PJRT artifact == Rust trace generator"
     );
@@ -312,6 +318,127 @@ fn cmd_scenarios(rest: &[String]) -> Result<(), String> {
     recxl::scenarios::verdict(&sc, &cfg, &stats)
         .map_err(|e| format!("scenario {} failed: {e}", sc.name))?;
     println!("\nscenario {}: OK", sc.name);
+    Ok(())
+}
+
+/// `recxl campaign` — run a seeded chaos campaign (or replay one case).
+fn cmd_campaign(rest: &[String]) -> Result<(), String> {
+    use recxl::campaign::{self, CampaignOpts, SeedSpec};
+
+    let mut opts = CampaignOpts::default();
+    let mut out_dir: Option<String> = None;
+    let mut replay: Option<SeedSpec> = None;
+    let mut i = 0;
+    let parse_num = |rest: &[String], i: usize, flag: &str| -> Result<u64, String> {
+        rest.get(i + 1)
+            .ok_or_else(|| format!("{flag} needs a value"))?
+            .parse()
+            .map_err(|_| format!("{flag} must be an integer"))
+    };
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--cases" => {
+                opts.cases = parse_num(rest, i, "--cases")? as usize;
+                i += 2;
+            }
+            "--seed" => {
+                opts.seed = parse_num(rest, i, "--seed")?;
+                i += 2;
+            }
+            "--workers" => {
+                opts.workers = parse_num(rest, i, "--workers")? as usize;
+                i += 2;
+            }
+            "--max-failures" => {
+                opts.max_failures = parse_num(rest, i, "--max-failures")? as usize;
+                i += 2;
+            }
+            "--soak" => {
+                opts.soak = true;
+                i += 1;
+            }
+            "--no-shrink" => {
+                opts.shrink = false;
+                i += 1;
+            }
+            "--out" => {
+                out_dir = Some(rest.get(i + 1).ok_or("--out needs a directory")?.clone());
+                i += 2;
+            }
+            "--replay" => {
+                let spec = rest.get(i + 1).ok_or("--replay needs SEED/INDEX[:knobs]")?;
+                replay = Some(SeedSpec::parse(spec)?);
+                i += 2;
+            }
+            other => return Err(format!("unknown flag {other}")),
+        }
+    }
+
+    // single-case replay: regenerate, judge, print — the reproducer
+    // loop a pin file's `replay:` line drops you into
+    if let Some(spec) = replay {
+        let (case, cc) = spec.materialize();
+        println!("replaying {}", spec.render());
+        println!("  case: {}", cc.brief());
+        println!("  knobs: {:?}", case.knobs());
+        return match campaign::judge(&cc) {
+            Ok(fp) => {
+                println!("  PASS (schedule fingerprint {fp:#018x})");
+                Ok(())
+            }
+            Err(f) => Err(format!("case still fails — {f}")),
+        };
+    }
+
+    println!(
+        "campaign: {} case(s)/batch, seed {}{}{}",
+        opts.cases,
+        opts.seed,
+        if opts.soak { ", soak" } else { "" },
+        if opts.shrink { "" } else { ", no shrink" },
+    );
+    let t0 = std::time::Instant::now();
+    let report = campaign::run_campaign(&opts);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut tally = recxl::report::TallyTable::new("campaign outcomes");
+    for c in &report.cases {
+        match &c.result {
+            Ok(_) => tally.bump("pass"),
+            Err(f) => tally.bump(f.kind()),
+        }
+    }
+    print!("{}", tally.render());
+    println!(
+        "digest {:#018x} ({} case(s) in {:.2}s)",
+        report.digest,
+        report.cases.len(),
+        elapsed
+    );
+
+    for f in &report.failures {
+        println!("\n--- failure: case {} ---", f.index);
+        println!("found:   {}", f.failure);
+        println!("minimal: {}", f.minimal);
+        println!("         {}", f.minimal_brief);
+        println!("replay:  {}", f.replay);
+        if !f.pin.is_empty() {
+            println!("pinned scenario:\n{}", f.pin);
+        }
+    }
+
+    if let Some(dir) = &out_dir {
+        recxl::campaign::write_results(dir, &report, elapsed).map_err(|e| e.to_string())?;
+        println!("\nresults written to {dir}/campaign.json");
+    }
+
+    if report.failed() > 0 {
+        return Err(format!(
+            "{} of {} campaign case(s) failed",
+            report.failed(),
+            report.cases.len()
+        ));
+    }
     Ok(())
 }
 

@@ -2,52 +2,89 @@
 //! (proptest is not in the offline crate set).
 //!
 //! Properties run over many generated cases; on failure the runner
-//! re-derives the failing case from its seed and greedily shrinks scalar
-//! fields registered through [`Case`] before panicking with a minimal
-//! reproduction, so CI failures are actionable.
+//! re-derives the failing case from its seed and greedily shrinks the
+//! recorded inputs before panicking with a minimal reproduction, so CI
+//! failures are actionable.
+//!
+//! Two APIs share one shrinking philosophy:
+//! * [`check`] + [`knob`] — the original positional scalar recorder,
+//!   kept verbatim for the existing property tests;
+//! * [`check_case`] + [`Case`] — a cursor-based recorder that also
+//!   tracks *list spans* ([`Case::list_len`]), so the shrinker
+//!   ([`shrink_case`]) can delete whole recorded elements, not just
+//!   halve scalars.  The campaign fuzzer (`crate::campaign`) drives
+//!   `shrink_case` directly with its own judge.
+//!
+//! Both shrinkers pair greedy halving with a binary refinement pass, so
+//! a threshold counterexample lands *exactly* on the threshold instead
+//! of somewhere in `[t, 2t)`.
 
 use crate::sim::Pcg;
 
 /// Number of cases per property by default.
 pub const DEFAULT_CASES: usize = 64;
 
+/// The RNG stream both runners derive case RNGs on.
+const PTEST_STREAM: u64 = 0xF00D;
+
+// ------------------------------------------------------ legacy scalar API
+
 /// Run `prop` over `cases` generated cases.  `gen_run` receives a fresh
-/// RNG and a `Case` recorder and returns `Err(reason)` on failure.
+/// RNG and a knob recorder and returns `Err(reason)` on failure.
 ///
 /// On failure, greedily shrink each recorded knob toward its minimum
-/// while the property still fails, then panic with the minimal knobs.
+/// while the property still fails — halving descent, then a binary
+/// refinement between the last failing and first passing values — and
+/// panic with the minimal knobs.
 pub fn check<F>(name: &str, cases: usize, seed: u64, mut gen_run: F)
 where
     F: FnMut(&mut Pcg, &mut Vec<u64>) -> Result<(), String>,
 {
     for i in 0..cases {
         let case_seed = seed.wrapping_add(i as u64);
-        let mut rng = Pcg::new(case_seed, 0xF00D);
+        let mut rng = Pcg::new(case_seed, PTEST_STREAM);
         let mut knobs = Vec::new();
         if let Err(first_err) = gen_run(&mut rng, &mut knobs) {
-            // shrink: re-run with each knob reduced while still failing
-            let mut best = knobs.clone();
+            let mut try_fail = |cand: &Vec<u64>| -> Option<String> {
+                let mut rng = Pcg::new(case_seed, PTEST_STREAM);
+                let mut replay = cand.clone();
+                gen_run(&mut rng, &mut replay).err()
+            };
+            let mut best = knobs;
             let mut best_err = first_err;
             let mut changed = true;
             while changed {
                 changed = false;
                 for k in 0..best.len() {
-                    let mut candidate = best.clone();
-                    while candidate[k] > 0 {
-                        let next = candidate[k] / 2;
-                        candidate[k] = next;
-                        let mut rng = Pcg::new(case_seed, 0xF00D);
-                        let mut replay = candidate.clone();
-                        match gen_run(&mut rng, &mut replay) {
-                            Err(e) => {
-                                best = candidate.clone();
+                    // halving descent
+                    while best[k] > 0 {
+                        let mut cand = best.clone();
+                        cand[k] /= 2;
+                        match try_fail(&cand) {
+                            Some(e) => {
+                                best = cand;
                                 best_err = e;
                                 changed = true;
                             }
-                            Ok(()) => break,
+                            None => break,
                         }
-                        if next == 0 {
-                            break;
+                    }
+                    // binary refinement: once the descent stops, the
+                    // minimal failing value lies in (best[k]/2, best[k]]
+                    let mut hi = best[k];
+                    let mut lo = hi / 2;
+                    while hi > 1 && lo + 1 < hi {
+                        let mid = lo + (hi - lo) / 2;
+                        let mut cand = best.clone();
+                        cand[k] = mid;
+                        match try_fail(&cand) {
+                            Some(e) => {
+                                best = cand;
+                                best_err = e;
+                                hi = mid;
+                                changed = true;
+                            }
+                            None => lo = mid,
                         }
                     }
                 }
@@ -69,6 +106,228 @@ pub fn knob(rng: &mut Pcg, knobs: &mut Vec<u64>, pos: usize, lo: u64, hi: u64) -
         let v = lo + rng.below(hi - lo + 1);
         knobs.push(v);
         v
+    }
+}
+
+// --------------------------------------------------- structured Case API
+
+/// A recorded list span: `knobs[count_pos]` holds the element count and
+/// the elements' knobs occupy the `count * elem_width` positions right
+/// after it.  Spans are what let [`shrink_case`] delete whole elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ListSpan {
+    pub count_pos: usize,
+    pub elem_width: usize,
+}
+
+/// Cursor-based knob recorder.  Reads consume the recorded prefix (a
+/// replay / shrink candidate); draws past it fall through to the RNG and
+/// append.  Replayed values are clamped into the requested range *and
+/// written back*, so after a generator pass the vector always holds the
+/// effective case — structured edits can trust `knobs[span.count_pos]`
+/// to be the real list length.
+#[derive(Debug, Clone, Default)]
+pub struct Case {
+    knobs: Vec<u64>,
+    lists: Vec<ListSpan>,
+    cursor: usize,
+}
+
+impl Case {
+    pub fn new() -> Case {
+        Case::default()
+    }
+
+    /// Start a replay over an edited knob vector.  Spans re-record as the
+    /// generator runs.
+    pub fn replay(knobs: Vec<u64>) -> Case {
+        Case {
+            knobs,
+            lists: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    /// Draw (or replay) one scalar in `[lo, hi]`.
+    pub fn knob(&mut self, rng: &mut Pcg, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let v = if self.cursor < self.knobs.len() {
+            self.knobs[self.cursor].clamp(lo, hi)
+        } else {
+            let v = lo + rng.below(hi - lo + 1);
+            self.knobs.push(v);
+            v
+        };
+        self.knobs[self.cursor] = v;
+        self.cursor += 1;
+        v
+    }
+
+    /// Draw a list length in `[lo, hi]` and record the span so the
+    /// shrinker can remove whole elements.  The generator must draw
+    /// exactly `elem_width` knobs per element, immediately after this
+    /// call — that contract is what makes element removal a pure splice.
+    pub fn list_len(&mut self, rng: &mut Pcg, lo: u64, hi: u64, elem_width: usize) -> usize {
+        debug_assert!(elem_width > 0);
+        let count_pos = self.cursor;
+        let n = self.knob(rng, lo, hi) as usize;
+        self.lists.push(ListSpan {
+            count_pos,
+            elem_width,
+        });
+        n
+    }
+
+    /// The effective (normalized) knob vector.
+    pub fn knobs(&self) -> &[u64] {
+        &self.knobs
+    }
+
+    /// Spans recorded by the last generator pass.
+    pub fn lists(&self) -> &[ListSpan] {
+        &self.lists
+    }
+
+    /// Knobs actually consumed by the last generator pass.
+    pub fn drawn(&self) -> usize {
+        self.cursor
+    }
+
+    /// Drop recorded-but-unread trailing knobs (a shrunk generator may
+    /// consume fewer than its parent drew).
+    pub fn truncate_to_used(&mut self) {
+        self.knobs.truncate(self.cursor);
+    }
+}
+
+/// Greedily minimize a failing structured case.
+///
+/// Alternates two passes until a fixed point:
+/// 1. **element removal** — for every recorded [`ListSpan`], try
+///    deleting each element (last first; a deletion restarts the pass
+///    because spans re-record at new positions);
+/// 2. **scalar descent** — per position, halve toward 0 while still
+///    failing, then binary-refine between the last failing and first
+///    passing values.
+///
+/// `still_fails` replays a candidate (the generator re-runs over
+/// [`Case::replay`], re-recording spans and re-normalizing knobs) and
+/// returns the failure message if the property still fails.  Callers
+/// that must not drift to a *different* bug filter inside `still_fails`
+/// (the campaign shrinker rejects candidates whose failure kind
+/// changes).  Every acceptance strictly shrinks the vector or one value,
+/// so the loop terminates.
+pub fn shrink_case<F>(mut best: Case, mut best_err: String, still_fails: &mut F) -> (Case, String)
+where
+    F: FnMut(&mut Case) -> Option<String>,
+{
+    best.truncate_to_used();
+    fn try_knobs<F: FnMut(&mut Case) -> Option<String>>(
+        knobs: Vec<u64>,
+        still_fails: &mut F,
+    ) -> Option<(Case, String)> {
+        let mut cand = Case::replay(knobs);
+        let err = still_fails(&mut cand)?;
+        cand.truncate_to_used();
+        Some((cand, err))
+    }
+    let mut progress = true;
+    while progress {
+        progress = false;
+        // -- structured pass: drop list elements
+        'removal: loop {
+            for si in 0..best.lists.len() {
+                let span = best.lists[si];
+                let count = best.knobs.get(span.count_pos).copied().unwrap_or(0) as usize;
+                for k in (0..count).rev() {
+                    let start = span.count_pos + 1 + k * span.elem_width;
+                    if start + span.elem_width > best.knobs.len() {
+                        continue;
+                    }
+                    let mut cand = best.knobs.clone();
+                    cand.drain(start..start + span.elem_width);
+                    cand[span.count_pos] -= 1;
+                    if let Some((c, e)) = try_knobs(cand, still_fails) {
+                        best = c;
+                        best_err = e;
+                        progress = true;
+                        continue 'removal;
+                    }
+                }
+            }
+            break;
+        }
+        // -- scalar pass
+        for pos in 0..best.knobs.len() {
+            // halving descent; a range clamp can normalize the halved
+            // value back up, so accept only strict decreases
+            loop {
+                let cur = match best.knobs.get(pos) {
+                    Some(&v) if v > 0 => v,
+                    _ => break,
+                };
+                let mut cand = best.knobs.clone();
+                cand[pos] = cur / 2;
+                match try_knobs(cand, still_fails) {
+                    Some((c, e)) if c.knobs.get(pos).copied().unwrap_or(0) < cur => {
+                        best = c;
+                        best_err = e;
+                        progress = true;
+                    }
+                    _ => break,
+                }
+            }
+            // binary refinement in (best[pos]/2, best[pos]]
+            let mut hi = best.knobs.get(pos).copied().unwrap_or(0);
+            let mut lo = hi / 2;
+            while hi > 1 && lo + 1 < hi {
+                if pos >= best.knobs.len() {
+                    break;
+                }
+                let mid = lo + (hi - lo) / 2;
+                let mut cand = best.knobs.clone();
+                cand[pos] = mid;
+                match try_knobs(cand, still_fails) {
+                    Some((c, e)) => {
+                        if c.knobs.get(pos).copied().unwrap_or(0)
+                            < best.knobs.get(pos).copied().unwrap_or(0)
+                        {
+                            progress = true;
+                        }
+                        best = c;
+                        best_err = e;
+                        hi = mid;
+                    }
+                    None => lo = mid,
+                }
+            }
+        }
+    }
+    (best, best_err)
+}
+
+/// [`check`] over the structured [`Case`] recorder: shrinks with
+/// [`shrink_case`] (element removal + refined scalar descent) before
+/// panicking.
+pub fn check_case<F>(name: &str, cases: usize, seed: u64, mut gen_run: F)
+where
+    F: FnMut(&mut Pcg, &mut Case) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let case_seed = seed.wrapping_add(i as u64);
+        let mut rng = Pcg::new(case_seed, PTEST_STREAM);
+        let mut case = Case::new();
+        if let Err(first_err) = gen_run(&mut rng, &mut case) {
+            let mut still_fails = |c: &mut Case| -> Option<String> {
+                let mut rng = Pcg::new(case_seed, PTEST_STREAM);
+                gen_run(&mut rng, c).err()
+            };
+            let (best, best_err) = shrink_case(case, first_err, &mut still_fails);
+            panic!(
+                "property '{name}' failed (seed {case_seed}, case {i}):\n  {best_err}\n  minimal knobs: {:?}",
+                best.knobs()
+            );
+        }
     }
 }
 
@@ -102,7 +361,7 @@ mod tests {
     }
 
     #[test]
-    fn shrinking_reaches_small_counterexample() {
+    fn shrinking_reaches_the_exact_threshold() {
         let result = std::panic::catch_unwind(|| {
             check("shrinks", 64, 3, |rng, knobs| {
                 let x = knob(rng, knobs, 0, 0, 1_000_000);
@@ -114,7 +373,8 @@ mod tests {
             });
         });
         let msg = *result.unwrap_err().downcast::<String>().unwrap();
-        // greedy halving lands in [17, 34)
+        // halving used to land anywhere in [17, 34); the binary
+        // refinement pass pins the threshold itself
         let v: u64 = msg
             .split("minimal knobs: [")
             .nth(1)
@@ -122,16 +382,177 @@ mod tests {
             .trim_end_matches(|c: char| !c.is_ascii_digit())
             .parse()
             .unwrap();
-        assert!((17..34).contains(&v), "shrunk to {v}");
+        assert_eq!(v, 17, "refined shrink must land on the threshold");
     }
 
     #[test]
     fn replay_is_deterministic() {
         let mut a = vec![];
-        let mut rng = Pcg::new(9, 0xF00D);
+        let mut rng = Pcg::new(9, PTEST_STREAM);
         let v1 = knob(&mut rng, &mut a, 0, 0, 1000);
-        let mut rng = Pcg::new(9, 0xF00D);
+        let mut rng = Pcg::new(9, PTEST_STREAM);
         let v2 = knob(&mut rng, &mut a.clone(), 0, 0, 1000);
         assert_eq!(v1, v2);
+    }
+
+    // ---------------------------------------------------- Case recorder
+
+    #[test]
+    fn case_records_then_replays_normalized() {
+        let mut rng = Pcg::new(11, PTEST_STREAM);
+        let mut c = Case::new();
+        let a = c.knob(&mut rng, 5, 50);
+        let b = c.knob(&mut rng, 0, 9);
+        assert_eq!(c.knobs(), &[a, b]);
+        assert_eq!(c.drawn(), 2);
+        // replay with an out-of-range edit: clamped AND written back
+        let mut rng = Pcg::new(11, PTEST_STREAM);
+        let mut r = Case::replay(vec![1_000, b]);
+        assert_eq!(r.knob(&mut rng, 5, 50), 50);
+        assert_eq!(r.knob(&mut rng, 0, 9), b);
+        assert_eq!(r.knobs(), &[50, b], "stored vector holds effective values");
+    }
+
+    #[test]
+    fn case_replay_prefix_then_fresh_draws() {
+        let mut rng = Pcg::new(12, PTEST_STREAM);
+        let mut r = Case::replay(vec![7]);
+        assert_eq!(r.knob(&mut rng, 0, 100), 7, "prefix replays");
+        let fresh = r.knob(&mut rng, 0, 100);
+        assert_eq!(r.knobs().len(), 2, "fresh draw appended");
+        assert!(fresh <= 100);
+    }
+
+    #[test]
+    fn list_len_records_span() {
+        let mut rng = Pcg::new(13, PTEST_STREAM);
+        let mut c = Case::new();
+        let _pre = c.knob(&mut rng, 0, 3);
+        let n = c.list_len(&mut rng, 0, 4, 2);
+        for _ in 0..n {
+            c.knob(&mut rng, 0, 9);
+            c.knob(&mut rng, 0, 9);
+        }
+        assert_eq!(
+            c.lists(),
+            &[ListSpan {
+                count_pos: 1,
+                elem_width: 2
+            }]
+        );
+        assert_eq!(c.knobs()[1] as usize, n, "count knob holds real length");
+        assert_eq!(c.drawn(), 2 + 2 * n);
+    }
+
+    #[test]
+    fn truncate_drops_unread_tail() {
+        let mut rng = Pcg::new(14, PTEST_STREAM);
+        let mut r = Case::replay(vec![1, 2, 3, 4, 5]);
+        r.knob(&mut rng, 0, 9);
+        r.knob(&mut rng, 0, 9);
+        r.truncate_to_used();
+        assert_eq!(r.knobs(), &[1, 2]);
+    }
+
+    // --------------------------------------------------- shrink_case
+
+    /// List-shaped planted property: fails while any element's first
+    /// knob is >= 5.  Knob layout: [count, (a, b) * count, extra].
+    fn listy_gen(rng: &mut Pcg, case: &mut Case) -> Result<(), String> {
+        let n = case.list_len(rng, 0, 6, 2);
+        let mut bad = 0usize;
+        for _ in 0..n {
+            let a = case.knob(rng, 0, 9);
+            let _b = case.knob(rng, 0, 9);
+            if a >= 5 {
+                bad += 1;
+            }
+        }
+        let extra = case.knob(rng, 0, 1000);
+        if bad >= 1 {
+            Err(format!("{bad} bad elements (extra={extra})"))
+        } else {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn shrink_case_removes_elements_and_refines_scalars() {
+        // seed a failing case: 3 elements, two of them "bad"
+        let mut rng = Pcg::new(0, PTEST_STREAM);
+        let mut case = Case::replay(vec![3, 7, 1, 2, 2, 9, 9, 800]);
+        let err = listy_gen(&mut rng, &mut case).unwrap_err();
+        let mut still_fails = |c: &mut Case| -> Option<String> {
+            let mut rng = Pcg::new(0, PTEST_STREAM);
+            listy_gen(&mut rng, c).err()
+        };
+        let (best, _e) = shrink_case(case, err, &mut still_fails);
+        // minimal: one element, a refined to the threshold 5, rest zeroed
+        assert_eq!(best.knobs(), &[1, 5, 0, 0]);
+    }
+
+    #[test]
+    fn shrink_case_binary_refines_to_exact_threshold() {
+        let gen = |_rng: &mut Pcg, case: &mut Case, cut: u64| -> Result<(), String> {
+            let mut dummy = Pcg::new(0, PTEST_STREAM);
+            let x = case.knob(&mut dummy, 0, 100_000);
+            if x >= cut {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        };
+        let mut rng = Pcg::new(0, PTEST_STREAM);
+        let mut case = Case::replay(vec![99_999]);
+        let err = gen(&mut rng, &mut case, 4_200).unwrap_err();
+        let mut still_fails = |c: &mut Case| -> Option<String> {
+            let mut rng = Pcg::new(0, PTEST_STREAM);
+            gen(&mut rng, c, 4_200).err()
+        };
+        let (best, _e) = shrink_case(case, err, &mut still_fails);
+        assert_eq!(best.knobs(), &[4_200]);
+    }
+
+    #[test]
+    fn shrink_case_survives_range_clamp_floors() {
+        // knob range [10, 100]: halving below the floor clamps back up;
+        // the shrinker must terminate and land on the floor
+        let gen = |case: &mut Case| -> Result<(), String> {
+            let mut dummy = Pcg::new(0, PTEST_STREAM);
+            let x = case.knob(&mut dummy, 10, 100);
+            Err(format!("always fails at {x}"))
+        };
+        let mut case = Case::replay(vec![90]);
+        let err = gen(&mut case).unwrap_err();
+        let mut still_fails = |c: &mut Case| -> Option<String> { gen(c).err() };
+        let (best, _e) = shrink_case(case, err, &mut still_fails);
+        assert_eq!(best.knobs(), &[10], "clamped floor is the minimum");
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'case-fails'")]
+    fn check_case_panics_with_minimal_knobs() {
+        check_case("case-fails", 64, 5, |rng, case| {
+            let x = case.knob(rng, 0, 1000);
+            if x > 10 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn check_case_passing_property_completes() {
+        check_case("case-tautology", 32, 6, |rng, case| {
+            let n = case.list_len(rng, 0, 3, 1);
+            for _ in 0..n {
+                let v = case.knob(rng, 0, 9);
+                if v > 9 {
+                    return Err("impossible".into());
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -86,6 +86,66 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// A count-per-category summary, rendered as an aligned two-column
+/// table.  The campaign CLI tallies case outcomes with it (`pass`,
+/// `verdict`, `shard-diff`); insertion order is display order and
+/// repeated names accumulate.
+#[derive(Debug, Clone, Default)]
+pub struct TallyTable {
+    pub title: String,
+    rows: Vec<(String, u64)>,
+}
+
+impl TallyTable {
+    pub fn new(title: &str) -> Self {
+        TallyTable {
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add `n` to `name`'s count (creating the row on first sight).
+    pub fn add(&mut self, name: &str, n: u64) {
+        match self.rows.iter_mut().find(|(k, _)| k == name) {
+            Some((_, c)) => *c += n,
+            None => self.rows.push((name.to_string(), n)),
+        }
+    }
+
+    /// Bump `name` by one.
+    pub fn bump(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.rows
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, c)| c)
+            .unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.rows.iter().map(|&(_, c)| c).sum()
+    }
+
+    pub fn render(&self) -> String {
+        let name_w = self
+            .rows
+            .iter()
+            .map(|(k, _)| k.len())
+            .chain([5])
+            .max()
+            .unwrap();
+        let mut out = format!("== {} ==\n", self.title);
+        for (k, c) in &self.rows {
+            out.push_str(&format!("{k:<name_w$}  {c:>8}\n"));
+        }
+        out.push_str(&format!("{:<name_w$}  {:>8}\n", "total", self.total()));
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +177,24 @@ mod tests {
     fn width_mismatch_panics() {
         let mut t = FigureTable::new("t", vec!["a".to_string()], false);
         t.push("s", vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn tally_accumulates_and_renders_aligned() {
+        let mut t = TallyTable::new("campaign outcomes");
+        t.add("pass", 23);
+        t.bump("verdict");
+        t.bump("verdict");
+        t.bump("shard-diff");
+        assert_eq!(t.count("pass"), 23);
+        assert_eq!(t.count("verdict"), 2);
+        assert_eq!(t.count("missing"), 0);
+        assert_eq!(t.total(), 26);
+        let r = t.render();
+        assert!(r.contains("campaign outcomes"));
+        assert!(r.contains("pass"));
+        let pass_line = r.lines().find(|l| l.starts_with("pass")).unwrap();
+        let total_line = r.lines().find(|l| l.starts_with("total")).unwrap();
+        assert_eq!(pass_line.len(), total_line.len(), "columns align");
     }
 }

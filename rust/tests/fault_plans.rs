@@ -124,6 +124,7 @@ fn named_scenarios_run_to_completion_with_oracle_passing() {
         "mn-crash",
         "link-degraded",
         "mn-crash-during-cn-recovery",
+        "campaign-cascade",
         "mn-crash-after-dump",
     ] {
         let sc = scenarios::by_name(name).unwrap();
