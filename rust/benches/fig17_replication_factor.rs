@@ -1,20 +1,156 @@
-//! `cargo bench` target regenerating the paper's Fig. 17 (replication-factor sensitivity).
+//! `cargo bench` target for the replication axis: the PR-9
+//! durability-vs-bandwidth *frontier* plus (full mode only) the paper's
+//! Fig. 17 replication-factor sensitivity table.
 //!
-//! Not a microbenchmark: each sample is a full cluster simulation sweep;
-//! the output is the figure-shaped table EXPERIMENTS.md compares against
-//! the paper (criterion is unavailable offline — see `recxl::benchkit`).
+//! The frontier measures, per `ReplPolicy`, both axes of the tradeoff
+//! the policy layer exposes:
+//!
+//! * **bandwidth** — `DumpRepl` bytes of one identical no-fault run
+//!   (the durability tax paid on every dump cycle);
+//! * **durability** — measured loss rate over a deterministic
+//!   kill-count × seed grid of near-simultaneous MN crashes (the
+//!   `tests/durability.rs` recipe: short dump period + shrunken caches
+//!   so dumped chunks are the only surviving copies).
+//!
+//! Emits `BENCH_repl_frontier.json` (override with `RECXL_BENCH_OUT`);
+//! metric keys are `frontier_<policy>_{dump_repl_bytes,loss_rate,...}`
+//! with `:` and `/` sanitized to `_`.  `RECXL_BENCH_QUICK=1` shrinks
+//! the grid for the CI smoke job (trajectory tracking, not publication
+//! numbers).
 
-use recxl::benchkit::timed;
+use recxl::benchkit::{timed, Report};
+use recxl::config::CacheGeom;
 use recxl::figures::{self, FigOpts};
+use recxl::prelude::*;
+use recxl::proto::MsgClass;
+use recxl::sim::time::us;
 
-fn main() {
-    let opts = FigOpts { ops: bench_ops(), parallel: true };
-    let (table, secs) = timed(|| figures::fig17(opts));
-    println!("{}", table.render());
-    println!("[bench] regenerated in {secs:.1} s at {} ops/thread", opts.ops);
+/// `ReplPolicy::name()` sanitized into a metric-key segment.
+fn key(repl: ReplPolicy) -> String {
+    repl.name().replace([':', '/'], "_")
 }
 
-fn bench_ops() -> u64 {
+/// The durability-sweep cluster: the smallest one every policy in
+/// `ReplPolicy::ALL` validates on, with the loss recipe from
+/// `tests/durability.rs` (short dump period, shrunken caches).
+fn sweep_cfg(seed: u64, repl: ReplPolicy, ops: u64, faults: FaultPlan) -> SimConfig {
+    let mut cfg = SimConfig {
+        protocol: Protocol::ReCxlProactive,
+        n_cns: 4,
+        n_mns: 4,
+        cores_per_cn: 2,
+        n_r: 2,
+        ops_per_thread: ops,
+        seed,
+        dump_period_ps: us(10),
+        repl,
+        faults,
+        ..SimConfig::default()
+    };
+    cfg.l1 = CacheGeom { size_bytes: 12 * 1024, ..cfg.l1 };
+    cfg.l2 = CacheGeom { size_bytes: 32 * 1024, ..cfg.l2 };
+    cfg.l3 = CacheGeom { size_bytes: 128 * 1024, ..cfg.l3 };
+    cfg
+}
+
+fn main() {
+    let quick = std::env::var("RECXL_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (ops, seeds): (u64, u64) = if quick { (800, 2) } else { (1_200, 8) };
+    let app = by_name("ycsb").unwrap();
+    let mut report = Report::new();
+
+    println!(
+        "{:<10} {:>6} {:>16} {:>10} {:>10} {:>10} {:>10}",
+        "policy", "tol", "dump_repl_bytes", "loss@k=1", "loss@k=2", "loss@k=3", "loss"
+    );
+    let (_, secs) = timed(|| {
+        for repl in ReplPolicy::ALL {
+            // --- bandwidth axis: identical no-fault run per policy ---
+            let s = run_app(
+                sweep_cfg(7, repl, ops.max(1_200), FaultPlan::default()),
+                &app,
+            );
+            let repl_bytes = s.traffic.bytes_of(MsgClass::DumpRepl);
+            report.metric(
+                &format!("frontier_{}_dump_repl_bytes", key(repl)),
+                repl_bytes as f64,
+            );
+            report.metric(
+                &format!("frontier_{}_log_dump_bytes", key(repl)),
+                s.traffic.bytes_of(MsgClass::LogDump) as f64,
+            );
+            report.metric(
+                &format!("frontier_{}_tolerance", key(repl)),
+                repl.tolerance() as f64,
+            );
+
+            // --- durability axis: kill-count x seed grid ---
+            let mut lossy_by_k = [0u64; 3];
+            let mut per_k_runs = 0u64;
+            for (ki, kills) in [1usize, 2, 3].into_iter().enumerate() {
+                per_k_runs = seeds;
+                for seed in 0..seeds {
+                    let at = us(16 + (seed * 9) % 40);
+                    let mut plan = FaultPlan::default();
+                    for i in 0..kills {
+                        // near-simultaneous: 1 ns apart, inside one
+                        // detection window, always >= 1 MN survivor
+                        plan.push_mn_crash((seed as usize + i) % 4, at + i as u64 * 1_000);
+                    }
+                    let s = run_app(sweep_cfg(seed * 13 + 1, repl, ops, plan), &app);
+                    if s.recovery.happened && !s.recovery.consistent {
+                        lossy_by_k[ki] += 1;
+                    }
+                }
+            }
+            let total_runs = 3 * per_k_runs;
+            let total_lossy: u64 = lossy_by_k.iter().sum();
+            let rate = |lossy: u64, runs: u64| lossy as f64 / runs.max(1) as f64;
+            for (ki, &lossy) in lossy_by_k.iter().enumerate() {
+                report.metric(
+                    &format!("frontier_{}_loss_rate_k{}", key(repl), ki + 1),
+                    rate(lossy, per_k_runs),
+                );
+            }
+            report.metric(
+                &format!("frontier_{}_loss_rate", key(repl)),
+                rate(total_lossy, total_runs),
+            );
+            println!(
+                "{:<10} {:>6} {:>16} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+                repl.name(),
+                repl.tolerance(),
+                repl_bytes,
+                rate(lossy_by_k[0], per_k_runs),
+                rate(lossy_by_k[1], per_k_runs),
+                rate(lossy_by_k[2], per_k_runs),
+                rate(total_lossy, total_runs),
+            );
+        }
+    });
+    println!("[bench] frontier swept in {secs:.1} s ({} seeds/kill-count)", seeds);
+    report.metric("frontier_seeds_per_kill_count", seeds as f64);
+    report.metric("frontier_ops_per_thread", ops as f64);
+    report.metric("quick", if quick { 1.0 } else { 0.0 });
+
+    // full mode also regenerates the paper figure this target is named
+    // for (the slow part; EXPERIMENTS.md compares it against the paper)
+    if !quick {
+        let opts = FigOpts { ops: fig_ops(), parallel: true };
+        let (table, secs) = timed(|| figures::fig17(opts));
+        println!("{}", table.render());
+        println!("[bench] fig17 regenerated in {secs:.1} s at {} ops/thread", opts.ops);
+    }
+
+    let out =
+        std::env::var("RECXL_BENCH_OUT").unwrap_or_else(|_| "BENCH_repl_frontier.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+}
+
+fn fig_ops() -> u64 {
     std::env::var("RECXL_BENCH_OPS")
         .ok()
         .and_then(|v| v.parse().ok())

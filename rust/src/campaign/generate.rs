@@ -13,7 +13,9 @@
 //! preserved and the shrinker can still delete them wholesale.
 
 use super::CampaignCase;
-use crate::config::{CacheGeom, FaultNode, FaultPlan, PartitionPolicy, Protocol, SimConfig};
+use crate::config::{
+    CacheGeom, FaultNode, FaultPlan, PartitionPolicy, Protocol, ReplPolicy, SimConfig,
+};
 use crate::ptest::Case;
 use crate::sim::time::{us, Ps};
 use crate::sim::Pcg;
@@ -104,7 +106,18 @@ pub fn generate_case(rng: &mut Pcg, case: &mut Case) -> CampaignCase {
     if case.knob(rng, 0, 1) == 1 {
         cfg.dump_period_ps = us(12);
     }
-    cfg.dump_repl = case.knob(rng, 0, 1) == 1;
+    // replication policy, same knob lane the old dump_repl bool used
+    // (replay-critical).  Ec(2,1) needs n_mns-1 >= 3 holders; on smaller
+    // clusters that draw degrades to mirror — still a pure function of
+    // the knob vector, so replay stays aligned.
+    cfg.repl = match case.knob(rng, 0, 4) {
+        0 => ReplPolicy::Single,
+        1 => ReplPolicy::Mirror,
+        2 => ReplPolicy::NWay(3),
+        3 if cfg.n_mns >= 4 => ReplPolicy::Ec(2, 1),
+        3 => ReplPolicy::Mirror,
+        _ => ReplPolicy::Locality,
+    };
     let diff_shards = if case.knob(rng, 0, 1) == 1 { 4 } else { 2 }.min(cfg.n_cns);
     let diff_partition = if case.knob(rng, 0, 1) == 1 {
         PartitionPolicy::Locality
@@ -256,14 +269,14 @@ mod tests {
 
     /// The generator must actually exercise the adversarial dimensions:
     /// over a modest sample, we see multi-crash cascades, MN kills, link
-    /// windows, both `dump_repl` settings, and both partition policies.
+    /// windows, every replication policy, and both partition policies.
     #[test]
     fn the_sample_space_covers_the_adversarial_shapes() {
         let mut cascades = 0;
         let mut mn_kills = 0;
         let mut links = 0;
-        let mut baseline = 0;
         let mut locality = 0;
+        let mut by_policy: std::collections::BTreeMap<&'static str, u32> = Default::default();
         for index in 0..120u64 {
             let mut rng = case_rng(0xCAFE, index);
             let mut case = Case::new();
@@ -277,9 +290,15 @@ mod tests {
             if cc.cfg.faults.len() > cc.cfg.faults.crash_count() {
                 links += 1;
             }
-            if !cc.cfg.dump_repl {
-                baseline += 1;
-            }
+            *by_policy
+                .entry(match cc.cfg.repl {
+                    ReplPolicy::Single => "single",
+                    ReplPolicy::Mirror => "mirror",
+                    ReplPolicy::NWay(_) => "nway",
+                    ReplPolicy::Ec(..) => "ec",
+                    ReplPolicy::Locality => "locality",
+                })
+                .or_insert(0) += 1;
             if cc.diff_partition == PartitionPolicy::Locality {
                 locality += 1;
             }
@@ -287,7 +306,12 @@ mod tests {
         assert!(cascades > 10, "cascades: {cascades}");
         assert!(mn_kills > 20, "mn kills: {mn_kills}");
         assert!(links > 20, "link windows: {links}");
-        assert!(baseline > 30, "dump_repl=0 draws: {baseline}");
+        // every policy in the rotation gets drawn; `ec` a little less
+        // often (its knob value degrades to mirror on 3-MN clusters)
+        for p in ["single", "mirror", "nway", "locality"] {
+            assert!(by_policy.get(p).copied().unwrap_or(0) > 8, "{p}: {by_policy:?}");
+        }
+        assert!(by_policy.get("ec").copied().unwrap_or(0) > 5, "ec: {by_policy:?}");
         assert!(locality > 30, "locality twins: {locality}");
     }
 }

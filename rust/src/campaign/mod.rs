@@ -6,14 +6,15 @@
 //! cascades, link-degradation storms, crashes timed to straddle dump
 //! boundaries or land inside a prior recovery round — against a random
 //! workload/config point (app, ops, workload seed, cache geometry,
-//! `dump_repl`).  Every case is judged twice:
+//! dump `ReplPolicy`).  Every case is judged twice:
 //!
 //! 1. **recovery contract** — [`crate::scenarios::plan_verdict`] with
 //!    the loss contract derived by [`loss_contract`]: crash-free plans
 //!    must not wake recovery, crashy ones must recover every injected
 //!    failure, and the oracle outcome must match what the configuration
-//!    promises (`dump_repl=1` forbids loss on a single MN death;
-//!    multi-MN cascades and the `dump_repl=0` baseline are `Allowed`);
+//!    promises (loss is forbidden while MN deaths stay within the
+//!    policy's `tolerance`; anything beyond it — including every MN
+//!    death under the `repl=single` baseline — is `Allowed`);
 //! 2. **shard differential** — the same case re-runs on the windowed
 //!    PDES engine (random `shards`/`partition` twin) and its
 //!    [`schedule_fingerprint`] must equal the serial run's, so the
@@ -68,7 +69,7 @@ impl CampaignCase {
     /// One-line human description (goes into case JSON and pin files).
     pub fn brief(&self) -> String {
         format!(
-            "{} on {}cn({}c)/{}mn n_r={} ops={} wseed={:#x} dump_repl={} \
+            "{} on {}cn({}c)/{}mn n_r={} ops={} wseed={:#x} repl={} \
              dump={}us diff={}sh/{} faults [{}]",
             self.app.name,
             self.cfg.n_cns,
@@ -77,7 +78,7 @@ impl CampaignCase {
             self.cfg.n_r,
             self.cfg.ops_per_thread,
             self.cfg.seed,
-            self.cfg.dump_repl as u8,
+            self.cfg.repl.name(),
             self.cfg.dump_period_ps / 1_000_000,
             self.diff_shards,
             self.diff_partition.name(),
@@ -136,14 +137,15 @@ impl fmt::Display for Failure {
     }
 }
 
-/// The loss contract a generated plan must satisfy.  `dump_repl=1`
-/// keeps two copies of every dumped chunk, so a *single* MN death must
-/// be loss-free; without it, or when a cascade can take both copies,
-/// the outcome is documented-configuration-dependent and only the
-/// recovery bookkeeping is enforced.
+/// The loss contract a generated plan must satisfy, derived from the
+/// policy's worst-case tolerance: while the number of MN deaths stays
+/// within [`crate::config::ReplPolicy::tolerance`], some copy of every
+/// dumped chunk survives and loss is forbidden; one death beyond it can
+/// take every copy, so the outcome is documented-configuration-dependent
+/// and only the recovery bookkeeping is enforced.
 pub fn loss_contract(cfg: &SimConfig) -> LossContract {
     let mn_crashes = cfg.faults.crashed_mns().len();
-    if (mn_crashes >= 1 && !cfg.dump_repl) || mn_crashes >= 2 {
+    if mn_crashes > cfg.repl.tolerance() {
         LossContract::Allowed
     } else {
         LossContract::Forbidden
@@ -480,6 +482,7 @@ mod tests {
 
     #[test]
     fn loss_contract_matches_the_durability_claims() {
+        use crate::config::ReplPolicy;
         let mut cfg = SimConfig::default();
         assert_eq!(loss_contract(&cfg), LossContract::Forbidden, "no faults");
         cfg.faults.push_crash(0, us(30));
@@ -492,21 +495,31 @@ mod tests {
         assert_eq!(
             loss_contract(&cfg),
             LossContract::Forbidden,
-            "single MN death with dump_repl=1 is the pinned no-loss claim"
+            "single MN death under mirror is the pinned no-loss claim"
         );
-        cfg.dump_repl = false;
+        cfg.repl = ReplPolicy::Single;
         assert_eq!(
             loss_contract(&cfg),
             LossContract::Allowed,
-            "the dump_repl=0 baseline has a documented loss window"
+            "the repl=single baseline has a documented loss window"
         );
-        cfg.dump_repl = true;
+        cfg.repl = ReplPolicy::Mirror;
         cfg.faults.push_mn_crash(2, us(50));
         assert_eq!(
             loss_contract(&cfg),
             LossContract::Allowed,
-            "two MN deaths can take both copies of a dumped chunk"
+            "two MN deaths can take both copies of a mirrored chunk"
         );
+        // higher-tolerance policies keep forbidding loss at the same
+        // crash count, and flip exactly one death past their tolerance
+        cfg.repl = ReplPolicy::NWay(3);
+        assert_eq!(loss_contract(&cfg), LossContract::Forbidden, "nway:3 rides out 2");
+        cfg.repl = ReplPolicy::Ec(2, 1);
+        assert_eq!(loss_contract(&cfg), LossContract::Forbidden, "ec:2/1 rides out 2");
+        cfg.faults.push_mn_crash(3, us(60));
+        assert_eq!(loss_contract(&cfg), LossContract::Allowed, "3 > ec:2/1 tolerance");
+        cfg.repl = ReplPolicy::NWay(4);
+        assert_eq!(loss_contract(&cfg), LossContract::Forbidden, "nway:4 rides out 3");
     }
 
     #[test]

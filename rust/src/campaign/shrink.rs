@@ -109,8 +109,11 @@ pub fn pin_snippet(cc: &CampaignCase, failure: &Failure, seed: u64, index: u64) 
         t(format!("cfg.l2.size_bytes = {};", cfg.l2.size_bytes));
         t(format!("cfg.l3.size_bytes = {};", cfg.l3.size_bytes));
     }
-    if cfg.dump_repl != def.dump_repl {
-        t(format!("cfg.dump_repl = {};", cfg.dump_repl));
+    if cfg.repl != def.repl {
+        t(format!(
+            "cfg.repl = crate::config::ReplPolicy::from_name({:?}).expect(\"pinned policy\");",
+            cfg.repl.name()
+        ));
     }
     format!(
         "// campaign-shrunk reproducer — replay: recxl campaign --replay {}\n\

@@ -4,8 +4,8 @@
 use super::{Cluster, Ev};
 use crate::cache::Mesi;
 use crate::mem::{Line, LineId};
-use crate::proto::{LineWords, Message, MsgKind, NodeId, ReqId};
-use crate::recxl::logunit::PendingRepl;
+use crate::proto::{DumpRole, LineWords, Message, MsgKind, NodeId, ReqId};
+use crate::recxl::logunit::{ec_stripes, stripe_bytes, PendingRepl};
 
 impl Cluster {
     /// Deliver a routed message; the `Ev::Deliver` box is reclaimed into
@@ -220,15 +220,18 @@ impl Cluster {
                 let slot = self.mn_slot_of(line);
                 self.dirs[mn].on_downgrade_ack(line, slot, from, dirty)
             }
-            MsgKind::DumpChunk { from, entries, replica, partner, .. } => {
-                self.on_dump_chunk(mn, from, entries, replica, partner);
+            MsgKind::DumpChunk { from, entries, role, partner, .. } => {
+                self.on_dump_chunk(mn, from, entries, role, partner);
                 vec![]
             }
             MsgKind::RedumpChunk { from_mn, entries } => {
-                // re-replication after an MN death: this MN becomes the
-                // new secondary holder of the sender's primary records
+                // re-replication after an MN death: this MN becomes a
+                // full-copy replica holder of the sender's primary records
+                // (re-dumps always ship whole copies, whatever the policy)
                 for rec in entries {
-                    self.dirs[mn].dump_dir.push_secondary(rec, from_mn);
+                    self.dirs[mn]
+                        .dump_dir
+                        .push_replica(rec, from_mn, DumpRole::Replica { copy: 0 });
                 }
                 vec![]
             }
@@ -273,34 +276,35 @@ impl Cluster {
     // ------------------------------------------------- log dumping ------
 
     /// A dump chunk landed: file it in the MN's dump directory under the
-    /// *send-time* partner the chunk carries (the secondary its replica
-    /// shipped to for primary chunks, the primary MN for replica
-    /// chunks).  If the replica's MN died while the chunk was in flight
-    /// — the copy evaporated at its viral port — the primary re-mirrors
-    /// immediately to the current secondary, so the chunk still lands
-    /// 2-copy.  Both kinds are acked (Logging Units synchronize through
-    /// the MNs before clearing their logs).
+    /// *send-time* partner the chunk carries (the first replication
+    /// target for primary chunks, the primary MN for replica chunks)
+    /// with its [`DumpRole`] tag.  If a primary chunk's first target died
+    /// while the chunk was in flight — the copy evaporated at its viral
+    /// port — the primary re-replicates immediately to the current first
+    /// target, so the chunk keeps a surviving copy.  Both kinds are
+    /// acked (Logging Units synchronize through the MNs before clearing
+    /// their logs).
     fn on_dump_chunk(
         &mut self,
         mn: usize,
         from: usize,
         entries: Vec<crate::recxl::logunit::LogRecord>,
-        replica: bool,
+        role: DumpRole,
         partner: Option<usize>,
     ) {
         let now = self.q.now();
-        if replica {
+        if role.is_replica() {
             if let Some(partner) = partner {
                 for rec in entries {
-                    self.dirs[mn].dump_dir.push_secondary(rec, partner);
+                    self.dirs[mn].dump_dir.push_replica(rec, partner, role);
                 }
             }
         } else {
             let partner = match partner {
                 Some(p) if self.dead_mns[p] => {
-                    // the replica died with its MN mid-flight: this is
-                    // now the only copy — restore the invariant here
-                    let sec = self.lines.secondary_mn(mn);
+                    // the replica died with its MN mid-flight: restore a
+                    // live copy at the current first target
+                    let sec = self.first_repl_target(mn);
                     if let Some(sec) = sec {
                         self.stats.recovery.rereplicated_chunks += 1;
                         self.send(
@@ -358,25 +362,61 @@ impl Cluster {
         self.stats.repl.dump_in_bytes += res.in_bytes;
         self.stats.repl.dump_out_bytes += res.out_bytes;
         self.stats.repl.dumps += 1;
-        // ship each MN's share; compressed bytes split pro rata.  Under
-        // `dump_repl` every chunk additionally ships to the bucket's
-        // deterministic secondary MN (next live in interleave order) —
-        // the replication-before-dump guarantee extended to the dump
-        // tier: no single MN fail-stop can hold the only copy of a
-        // dumped record.
+        // Ship each MN's share; compressed bytes split pro rata.  The
+        // configured `ReplPolicy` then fans each bucket out to its
+        // replica holders — the replication-before-dump guarantee
+        // extended to the dump tier: as long as no more MNs than the
+        // policy's tolerance fail-stop together, some copy of every
+        // dumped record survives.  Full-copy roles reship the bucket at
+        // the same pro-rata size; `ec:K/M` ships K compressed data
+        // stripes plus M parity stripes sized like the largest data
+        // stripe (DESIGN.md "Replication policies").
         let total: usize = res.per_mn.iter().map(|v| v.len()).sum();
         if total > 0 {
+            let gzip = self.cfg.gzip_level;
             for (mn, entries) in res.per_mn.into_iter().enumerate() {
                 if entries.is_empty() {
                     continue;
                 }
                 let bytes =
                     ((res.out_bytes as u128 * entries.len() as u128) / total as u128) as u32;
-                let secondary = if self.cfg.dump_repl {
-                    self.lines.secondary_mn(mn).map(|sec| (sec, entries.clone()))
-                } else {
-                    None
-                };
+                let targets = self.repl_targets(mn);
+                // materialize the replica payloads before `entries` moves
+                // into the primary chunk
+                let mut fanout = Vec::with_capacity(targets.len());
+                match self.cfg.repl {
+                    crate::config::ReplPolicy::Ec(k, _) if !targets.is_empty() => {
+                        let stripes = ec_stripes(&entries, k);
+                        let data_bytes: Vec<u32> =
+                            stripes.iter().map(|s| stripe_bytes(s, gzip) as u32).collect();
+                        // parity is modeled at the widest data stripe: XOR
+                        // parity is as long as its longest input
+                        let parity_bytes = data_bytes.iter().copied().max().unwrap_or(0);
+                        for &(t, role) in &targets {
+                            match role {
+                                DumpRole::Data { stripe } => fanout.push((
+                                    t,
+                                    role,
+                                    stripes[stripe as usize].clone(),
+                                    data_bytes[stripe as usize],
+                                )),
+                                // parity holders can answer for any record
+                                // of the bucket (union recovery model), so
+                                // the chunk carries the full record list
+                                // while paying only parity-sized bytes
+                                DumpRole::Parity { .. } => {
+                                    fanout.push((t, role, entries.clone(), parity_bytes))
+                                }
+                                _ => unreachable!("ec targets are data/parity"),
+                            }
+                        }
+                    }
+                    _ => {
+                        for &(t, role) in &targets {
+                            fanout.push((t, role, entries.clone(), bytes));
+                        }
+                    }
+                }
                 self.send(
                     now,
                     Message {
@@ -386,22 +426,34 @@ impl Cluster {
                             from: cn,
                             bytes,
                             entries,
-                            replica: false,
-                            partner: secondary.as_ref().map(|&(sec, _)| sec),
+                            role: DumpRole::Primary,
+                            partner: targets.first().map(|&(t, _)| t),
                         },
                     },
                 );
-                if let Some((sec, entries)) = secondary {
+                for (target, role, payload, chunk_bytes) in fanout {
+                    match role {
+                        DumpRole::Replica { .. } => {
+                            self.stats.repl.dump_repl_copy_bytes += chunk_bytes as u64
+                        }
+                        DumpRole::Data { .. } => {
+                            self.stats.repl.dump_repl_stripe_bytes += chunk_bytes as u64
+                        }
+                        DumpRole::Parity { .. } => {
+                            self.stats.repl.dump_repl_parity_bytes += chunk_bytes as u64
+                        }
+                        DumpRole::Primary => unreachable!("fanout holds replica roles"),
+                    }
                     self.send(
                         now,
                         Message {
                             src: NodeId::Cn(cn),
-                            dst: NodeId::Mn(sec),
+                            dst: NodeId::Mn(target),
                             kind: MsgKind::DumpChunk {
                                 from: cn,
-                                bytes,
-                                entries,
-                                replica: true,
+                                bytes: chunk_bytes,
+                                entries: payload,
+                                role,
                                 partner: Some(mn),
                             },
                         },

@@ -32,12 +32,12 @@ use std::time::Instant;
 
 use crate::cache::CnCaches;
 use crate::coherence::Directory;
-use crate::config::{CnId, CoreId, MnId, PartitionPolicy, Protocol, SimConfig};
+use crate::config::{CnId, CoreId, MnId, PartitionPolicy, Protocol, ReplPolicy, SimConfig};
 use crate::cpu::sync::{Barrier, LockTable};
 use crate::cpu::{Block, Core};
 use crate::fabric::{Delivery, Fabric, StagedSend};
 use crate::mem::{Addr, Line, LineId, LineTable, NO_SLOT};
-use crate::proto::{LineWords, Message, MsgClass, MsgPool};
+use crate::proto::{DumpRole, LineWords, Message, MsgClass, MsgPool};
 use crate::recxl::logunit::LoggingUnit;
 use crate::sim::time::Ps;
 use crate::sim::EventQueue;
@@ -458,6 +458,16 @@ impl Cluster {
             if cfg.partition == PartitionPolicy::Locality {
                 partition = NodeAssignment::locality(&aff, cfg.shards);
             }
+            if cfg.repl == ReplPolicy::Locality {
+                // Warm replica order: MNs by descending total affinity
+                // mass (ties: lowest index).  Hot MNs hold the replica
+                // copies, so a rebuild's surviving-copy fetches come from
+                // the best-connected homes (`LineTable::replica_set`
+                // walks this order instead of the interleave ring).
+                let mut order: Vec<u32> = (0..cfg.n_mns as u32).collect();
+                order.sort_by_key(|&m| (std::cmp::Reverse(aff.col_weight(m as usize)), m));
+                lines.set_warm_order(order);
+            }
         }
         Cluster {
             fabric: Fabric::new(&cfg),
@@ -617,6 +627,58 @@ impl Cluster {
 
     pub fn core_id(&self, cn: CnId, local: usize) -> CoreId {
         cn * self.cfg.cores_per_cn + local
+    }
+
+    /// Replica placement for dumps homed on `mn` under the configured
+    /// [`ReplPolicy`]: `(target MN, role)` per copy/stripe, in send
+    /// order.  Empty for `single` or when no other MN is live.  `mirror`
+    /// yields exactly the PR-5 secondary (first live MN after `mn` in
+    /// interleave order) — the bit-identity anchor.
+    pub(crate) fn repl_targets(&self, mn: MnId) -> Vec<(MnId, DumpRole)> {
+        match self.cfg.repl {
+            ReplPolicy::Single => Vec::new(),
+            ReplPolicy::Mirror | ReplPolicy::Locality => self
+                .lines
+                .replica_set(mn, 1)
+                .into_iter()
+                .map(|m| (m, DumpRole::Replica { copy: 0 }))
+                .collect(),
+            ReplPolicy::NWay(k) => self
+                .lines
+                .replica_set(mn, (k as usize).saturating_sub(1))
+                .into_iter()
+                .enumerate()
+                .map(|(i, m)| (m, DumpRole::Replica { copy: i as u8 }))
+                .collect(),
+            ReplPolicy::Ec(k, m_parity) => {
+                let want = (k + m_parity) as usize;
+                let holders = self.lines.replica_set(mn, want);
+                if holders.is_empty() {
+                    return Vec::new();
+                }
+                // Fewer live MNs than stripes: wrap, stripes double up on
+                // holders.  The layout stays total (every stripe placed)
+                // as the cluster shrinks, at reduced effective tolerance.
+                (0..want)
+                    .map(|i| {
+                        let role = if i < k as usize {
+                            DumpRole::Data { stripe: i as u8 }
+                        } else {
+                            DumpRole::Parity {
+                                stripe: (i - k as usize) as u8,
+                            }
+                        };
+                        (holders[i % holders.len()], role)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// First replication target of `mn` — the `partner` stamped on its
+    /// primary chunks and the destination of dead-partner retargeting.
+    pub(crate) fn first_repl_target(&self, mn: MnId) -> Option<MnId> {
+        self.repl_targets(mn).first().map(|&(m, _)| m)
     }
 
     /// Dense id of a pre-interned line.  The whole footprint is interned

@@ -7,7 +7,11 @@
 //! decision: the pre-run trace scan accumulates a CN×MN [`AffinityMatrix`]
 //! (remote accesses by each CN to lines homed on each MN, post-interleave)
 //! and a deterministic greedy partitioner co-locates each CN with the MNs
-//! homing its hot lines, balanced to within one node per shard.
+//! homing its hot lines.  Per-shard skew is bounded by *affinity mass*
+//! (each shard's Σ of placed CN row weights stays within `⌈total/S⌉`
+//! while possible), with the node count as the cap: counts relax by at
+//! most one past `[⌊n/S⌋, ⌈n/S⌉]` when mass and count conflict, and the
+//! strict count rule is the hard fallback when no mass budget fits.
 //!
 //! **The partition never touches the schedule.**  Every ordering the
 //! windowed engine resolves at a barrier is keyed by partition-independent
@@ -125,11 +129,16 @@ impl NodeAssignment {
     /// 2. **MNs**, heaviest column first: assign to the shard whose CNs
     ///    pull it hardest (`Σ_{c on s} centered[c][m]`).
     ///
-    /// Both phases bound skew: per-shard counts stay in
-    /// `[⌊n/S⌋, ⌈n/S⌉]` (full shards are ineligible; once the open slack
-    /// equals the below-floor deficit, only below-floor shards are
-    /// eligible).  Per-CN load is near-uniform (every thread executes
-    /// `ops_per_thread`), so the count bound is a load bound.
+    /// The CN phase bounds skew by affinity *mass* first ([`pick_mass`]):
+    /// a shard takes a CN only while its summed row weight stays within
+    /// `⌈total/S⌉`, and the count window widens by at most one past
+    /// `[⌊n/S⌋, ⌈n/S⌉]` when mass and count conflict — a CN carrying
+    /// most of the traffic earns a thin shard while its light siblings
+    /// pack the others.  On uniform or empty matrices the mass budget
+    /// never binds and the phase degenerates to the strict count rule.
+    /// The MN phase keeps the strict count window `[⌊n/S⌋, ⌈n/S⌉]`
+    /// (full shards are ineligible; once the open slack equals the
+    /// below-floor deficit, only below-floor shards are eligible).
     pub fn locality(aff: &AffinityMatrix, shards: usize) -> Self {
         let shards = shards.max(1);
         let (n_cns, n_mns) = (aff.n_cns, aff.n_mns);
@@ -152,16 +161,29 @@ impl NodeAssignment {
         // per-shard centered-column profile of the CNs placed so far
         let mut profile = vec![0i128; shards * n_mns];
         let (floor, ceil) = bounds(n_cns, shards);
+        let mut masses = vec![0u64; shards];
+        let total_mass: u64 = (0..n_cns).map(|c| aff.row_weight(c)).sum();
+        let target = total_mass.div_ceil(shards as u64);
         for (placed, &c) in cn_order.iter().enumerate() {
-            let s = pick(shards, &counts, floor, ceil, n_cns - placed, |s| {
-                row(c)
-                    .iter()
-                    .zip(&profile[s * n_mns..(s + 1) * n_mns])
-                    .map(|(&a, &p)| a as i128 * p)
-                    .sum()
-            });
+            let w = aff.row_weight(c);
+            let s = pick_mass(
+                shards,
+                &counts,
+                floor,
+                ceil,
+                n_cns - placed,
+                |s| masses[s] + w <= target,
+                |s| {
+                    row(c)
+                        .iter()
+                        .zip(&profile[s * n_mns..(s + 1) * n_mns])
+                        .map(|(&a, &p)| a as i128 * p)
+                        .sum()
+                },
+            );
             cn[c] = s as u32;
             counts[s] += 1;
+            masses[s] += w;
             for m in 0..n_mns {
                 profile[s * n_mns + m] += row(c)[m] as i128;
             }
@@ -247,6 +269,51 @@ fn pick(
         }
     }
     best.expect("bounds always leave an eligible shard").1
+}
+
+/// CN-phase pick: the per-shard *mass* budget (`fits`) is primary and
+/// the count window is the cap.  Three passes, first hit wins:
+///
+/// 1. strict count window `[floor, ceil]` (the [`pick`] rule) *and*
+///    `fits` — whenever the mass budget never binds (uniform or empty
+///    matrices) this is exactly [`pick`], so balanced workloads keep
+///    the PR-7 placements bit for bit;
+/// 2. count window relaxed by one (`[floor−1, ceil+1]`, with the lower
+///    lip clamped so no shard is starved empty) *and* `fits` — lets a
+///    CN carrying most of the traffic keep a thin shard while its
+///    light siblings overflow another shard by at most one;
+/// 3. [`pick`] with no mass budget — the hard count-balance fallback
+///    when no shard can absorb the row within target (e.g. a single
+///    row heavier than `total/S`).
+fn pick_mass(
+    shards: usize,
+    counts: &[usize],
+    floor: usize,
+    ceil: usize,
+    remaining: usize,
+    fits: impl Fn(usize) -> bool,
+    score: impl Fn(usize) -> i128,
+) -> usize {
+    let minc = if floor <= 1 { floor } else { floor - 1 };
+    for (lo, hi) in [(floor, ceil), (minc, ceil + 1)] {
+        let deficit: usize = counts.iter().map(|&c| lo.saturating_sub(c)).sum();
+        let must_fill = remaining == deficit;
+        let mut best: Option<(i128, usize)> = None;
+        for s in 0..shards {
+            if counts[s] >= hi || (must_fill && counts[s] >= lo) || !fits(s) {
+                continue;
+            }
+            let sc = score(s);
+            match best {
+                Some((b, _)) if sc <= b => {}
+                _ => best = Some((sc, s)),
+            }
+        }
+        if let Some((_, s)) = best {
+            return s;
+        }
+    }
+    pick(shards, counts, floor, ceil, remaining, score)
 }
 
 #[cfg(test)]
@@ -363,6 +430,64 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn mass_weighted_split_beats_every_count_balanced_cut() {
+        // one CN carries ~97% of the traffic (on MNs 0/1); three light
+        // CNs share MNs 2/3.  The mass-optimal cut is [1, 3] — the
+        // heavy CN alone with its two MNs — which no strict-count
+        // [2, 2] CN split can express: the best balanced cut strands a
+        // light CN with the heavy one and pays its whole row cross-shard.
+        let mut aff = AffinityMatrix::new(4, 4);
+        for _ in 0..200 {
+            aff.record(0, 0);
+            aff.record(0, 1);
+        }
+        for c in 1..4 {
+            for _ in 0..2 {
+                aff.record(c, 2);
+                aff.record(c, 3);
+            }
+        }
+        let cut_mass = |cn_s: [usize; 4], mn_s: [usize; 4]| -> u64 {
+            let mut x = 0;
+            for c in 0..4 {
+                for m in 0..4 {
+                    if cn_s[c] != mn_s[m] {
+                        x += aff.get(c, m);
+                    }
+                }
+            }
+            x
+        };
+        let a = NodeAssignment::locality(&aff, 2);
+        assert_eq!(a.cn_shard(1), a.cn_shard(2), "light CNs co-located");
+        assert_eq!(a.cn_shard(2), a.cn_shard(3));
+        assert_ne!(a.cn_shard(0), a.cn_shard(1), "heavy CN earns its own shard");
+        let got_cn: [usize; 4] = std::array::from_fn(|c| a.cn_shard(c));
+        let got_mn: [usize; 4] = std::array::from_fn(|m| a.mn_shard(m));
+        assert_eq!(cut_mass(got_cn, got_mn), 0, "locality cut is crossing-free");
+        // exhaustive: every count-balanced [2,2]×[2,2] cut pays ≥ 4
+        let mut best_balanced = u64::MAX;
+        for cmask in 0u32..16 {
+            if cmask.count_ones() != 2 {
+                continue;
+            }
+            for mmask in 0u32..16 {
+                if mmask.count_ones() != 2 {
+                    continue;
+                }
+                let cs: [usize; 4] = std::array::from_fn(|c| ((cmask >> c) & 1) as usize);
+                let ms: [usize; 4] = std::array::from_fn(|m| ((mmask >> m) & 1) as usize);
+                best_balanced = best_balanced.min(cut_mass(cs, ms));
+            }
+        }
+        assert_eq!(best_balanced, 4, "a balanced cut must strand one light row");
+        assert!(
+            cut_mass(got_cn, got_mn) < best_balanced,
+            "mass-weighted split strictly beats every count-balanced cut"
+        );
     }
 
     #[test]

@@ -62,15 +62,15 @@ pub struct MnRepair {
 
 /// Per-(new home) rebuild bookkeeping for lines re-homed off dead MNs
 /// whose only surviving copies live in replica Logging Units — or, for
-/// records already dumped off those units, in cross-MN secondary dump
-/// copies (`dump_repl`).
+/// records already dumped off those units, in the cross-MN replica
+/// copies/stripes placed by the configured `ReplPolicy`.
 pub struct MnRebuild {
     /// Lines this MN must reconstruct from logs (census order).
     pub lines: Vec<Line>,
     pub expected: BTreeSet<CnId>,
     pub responses: BTreeMap<CnId, FxHashMap<Line, VersionList>>,
     /// MNs queried for surviving dump-chunk copies (`FetchDumpChunk`);
-    /// empty when `dump_repl` is off.
+    /// empty under `repl=single`.
     pub dump_expected: BTreeSet<MnId>,
     /// `DumpChunkVers` payloads, keyed by responder (BTreeMap: the
     /// fallback merge order must be a function of MN ids).
@@ -299,11 +299,11 @@ impl Cluster {
         self.mn_census
             .insert(mn, moved.iter().map(|&(l, _)| l).collect());
         // dump replication: tell the surviving MNs the port went viral,
-        // so primaries whose secondary copy lived on the dead MN can
+        // so primaries whose replica copy lived on the dead MN can
         // re-replicate to a new partner (re-dump-on-death; broadcast in
         // ascending MN order — the sends serialize on the dead port's
         // switch path and their order is part of the schedule)
-        if self.cfg.dump_repl && self.cfg.protocol.is_recxl() {
+        if self.cfg.repl.replicates() && self.cfg.protocol.is_recxl() {
             for m in self.live_mns().collect::<Vec<_>>() {
                 self.send(
                     now,
@@ -701,9 +701,9 @@ impl Cluster {
         }
         // no surviving cache copy: query the replica Logging Units
         // (grouped by replica-window CNs, like a dead-CN repair) — and,
-        // under `dump_repl`, every other live MN for surviving secondary
-        // copies of the dead MN's dumped chunks: records already dumped
-        // off the Logging Units exist nowhere else
+        // under a replicating policy, every other live MN for surviving
+        // copies/stripes of the dead MN's dumped chunks: records already
+        // dumped off the Logging Units exist nowhere else
         let mut per_cn: BTreeMap<CnId, Vec<Line>> = Default::default();
         for &l in &from_logs {
             for c in replica_window(l, self.cfg.n_cns, self.cfg.n_r) {
@@ -717,7 +717,7 @@ impl Cluster {
         // history: cascading failures can strand the surviving copy
         // anywhere, and residency is what actually answers
         let dump_expected: BTreeSet<MnId> =
-            if self.cfg.dump_repl && self.cfg.protocol.is_recxl() {
+            if self.cfg.repl.replicates() && self.cfg.protocol.is_recxl() {
                 self.live_mns().filter(|&m| m != mn).collect()
             } else {
                 BTreeSet::new()
@@ -770,7 +770,8 @@ impl Cluster {
     }
 
     /// A survivor MN answers a rebuilding home's `FetchDumpChunk` with
-    /// every resident dumped record (primary or secondary copy) of the
+    /// every resident dumped record (primary, replica copy, or EC
+    /// stripe — all roles answer under the union recovery model) of the
     /// requested lines.  Like the CN-side Algorithm 2 handler, the
     /// response is sent unconditionally — the receiver drops stale
     /// epochs.
@@ -823,12 +824,15 @@ impl Cluster {
     }
 
     /// The switch told this MN that `failed_mn`'s port went viral: any
-    /// primary dump records whose secondary copy lived there are now
-    /// single-copy — retarget them to the next live MN and mirror them
-    /// over (re-dump-on-death, restoring the 2-copy invariant).
+    /// primary dump records whose tracked replica copy lived there lost
+    /// it — retarget them to the policy's current first target and ship
+    /// a full copy over (re-dump-on-death).  The directory tracks one
+    /// partner per primary record, so the restoration is one full copy
+    /// whatever the policy; the other holders' copies/stripes are
+    /// untouched and keep answering rebuild fetches.
     pub(crate) fn on_mn_viral_notify(&mut self, mn: MnId, failed_mn: MnId) {
         let now = self.q.now();
-        let new_partner = self.lines.secondary_mn(mn);
+        let new_partner = self.first_repl_target(mn);
         let moved = self.dirs[mn]
             .dump_dir
             .retarget_secondary(failed_mn, new_partner);
@@ -853,17 +857,18 @@ impl Cluster {
     /// queried), and the oracle checks nothing committed was lost.
     ///
     /// Words no replica log still holds fall back to dumped records, in
-    /// freshness order: first *this survivor's* resident dumped log
-    /// (dumps fired after re-homing follow the line table and land here,
-    /// so they are the newest dumped era), then the surviving secondary
-    /// copies of the dead MN's chunks fetched via `FetchDumpChunk` —
-    /// the records that were honest losses before `dump_repl`.
-    /// Anything still resident in a replica Logging Unit is strictly
-    /// newer than any dumped record (dumps clear the logs they save),
-    /// so the fallbacks only fill genuinely missing words.  Fetched
-    /// records are finally re-seeded into this home's dump directory
-    /// and re-replicated to its current secondary, restoring the
-    /// 2-copy invariant for the rebuilt lines.
+    /// policy-driven priority order: first *this survivor's* resident
+    /// replica holdings and post-re-homing dumps (dumps fired after
+    /// re-homing follow the line table and land here, so they are the
+    /// newest dumped era), then any surviving copy or stripe of the
+    /// dead MN's chunks fetched via `FetchDumpChunk` — the records that
+    /// were honest losses under `repl=single`.  Anything still resident
+    /// in a replica Logging Unit is strictly newer than any dumped
+    /// record (dumps clear the logs they save), so the fallbacks only
+    /// fill genuinely missing words.  Fetched records are finally
+    /// re-seeded into this home's dump directory and re-replicated to
+    /// every current target of the configured policy, restoring its
+    /// replication invariant for the rebuilt lines.
     fn rebuild_mn(&mut self, mn: MnId) {
         let Some(ctrl) = self.recovery.as_ref() else { return };
         let Some(rb) = ctrl.rebuilds.get(&mn) else { return };
@@ -875,20 +880,21 @@ impl Cluster {
             }
         }
         // Surviving dump copies per line.  First this home's *own*
-        // secondary holdings — re-homing sends a dead MN's lines to the
-        // next live MN, which is exactly where `dump_repl` placed their
-        // secondary chunks, so the surviving copy is usually already
-        // local; the records are *drained* (they re-enter as primary
-        // below, so the store never holds duplicate residents) — then
-        // the `FetchDumpChunk` responses, responders in ascending MN
-        // order (BTreeMap), each holder's records latest-arrival first;
-        // identical records dedup (broadcast + past re-replications can
-        // surface the same copy several times).
+        // replica holdings — re-homing sends a dead MN's lines to the
+        // next live MN, which is where the interleave-order policies
+        // placed their first copies, so the surviving copy is usually
+        // already local; the records are *drained* (they re-enter as
+        // primary below, so the store never holds duplicate residents)
+        // — then the `FetchDumpChunk` responses, responders in
+        // ascending MN order (BTreeMap), each holder's records
+        // latest-arrival first; identical records dedup (broadcast,
+        // n-way copies, EC parity unions and past re-replications can
+        // surface the same record several times).
         let mut fetched: FxHashMap<Line, Vec<LogRecord>> = FxHashMap::default();
         let mut seen_rec: FxHashSet<(ReqId, u64, u8)> = FxHashSet::default();
-        let taken: Vec<LogRecord> = if self.cfg.dump_repl {
+        let taken: Vec<LogRecord> = if self.cfg.repl.replicates() {
             let want: FxHashSet<Line> = rb.lines.iter().copied().collect();
-            self.dirs[mn].dump_dir.take_secondary_for(&want)
+            self.dirs[mn].dump_dir.take_replicas_for(&want)
         } else {
             Vec::new()
         };
@@ -929,7 +935,7 @@ impl Cluster {
                 .unwrap_or([None; 16]);
             // Dumped-record fallback, latest *arrival* first: the
             // survivor's own post-re-homing dumps, then the fetched
-            // secondary copies of the dead MN's chunks.  Arrival order
+            // replica copies of the dead MN's chunks.  Arrival order
             // is exact for a single writer (one dump owner ⇒ one chunk
             // stream in log order) and for writers whose commits
             // straddle a dump tick; only different writers dumping
@@ -1001,23 +1007,29 @@ impl Cluster {
             }
         }
         // re-dump-on-death, new-home side: adopt the fetched copies as
-        // primary residents of this (now) home and mirror them to its
-        // current secondary — the rebuilt lines leave the round with two
-        // live dump copies again
-        if !to_install.is_empty() && self.cfg.dump_repl {
+        // primary residents of this (now) home and ship a full copy to
+        // every current target of the policy — the rebuilt lines leave
+        // the round with the policy's replication invariant restored
+        // (re-dumps are whole copies even under `ec`: the bucket here is
+        // the already-shrunk survivor set, not worth re-striping)
+        if !to_install.is_empty() && self.cfg.repl.replicates() {
             let now = self.q.now();
-            let sec = self.lines.secondary_mn(mn);
+            let targets = self.repl_targets(mn);
+            let first = targets.first().map(|&(t, _)| t);
             for rec in &to_install {
-                self.dirs[mn].dump_dir.push_primary(*rec, sec);
+                self.dirs[mn].dump_dir.push_primary(*rec, first);
             }
-            if let Some(sec) = sec {
+            for (target, _) in targets {
                 self.stats.recovery.rereplicated_chunks += 1;
                 self.send(
                     now,
                     Message {
                         src: NodeId::Mn(mn),
-                        dst: NodeId::Mn(sec),
-                        kind: MsgKind::RedumpChunk { from_mn: mn, entries: to_install },
+                        dst: NodeId::Mn(target),
+                        kind: MsgKind::RedumpChunk {
+                            from_mn: mn,
+                            entries: to_install.clone(),
+                        },
                     },
                 );
             }

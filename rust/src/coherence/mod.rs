@@ -22,7 +22,7 @@ use std::collections::VecDeque;
 
 use crate::config::{CnId, MnId};
 use crate::mem::Line;
-use crate::proto::{LineWords, Message, MsgKind, NodeId, ReqId};
+use crate::proto::{DumpRole, LineWords, Message, MsgKind, NodeId, ReqId};
 use crate::recxl::logunit::LogRecord;
 use crate::sim::time::Ps;
 
@@ -62,22 +62,24 @@ struct DirEntry {
 pub type DirOut = Vec<(Ps, Message)>;
 
 /// Dumped-log residency at one MN (cross-MN dump replication,
-/// DESIGN.md "Dump replication").
+/// DESIGN.md "Replication policies").
 ///
 /// Two stores, both in arrival order:
 /// * **primary** — this MN is the chunk's home; repairs and the
 ///   `select_version` fallback read these, exactly like the old flat
-///   `mn_log`.  Each record remembers the partner MN holding its
-///   secondary copy (`None` when `dump_repl` is off or no other MN was
+///   `mn_log`.  Each record remembers the first partner MN holding a
+///   replica copy (`None` under `repl=single` or when no other MN was
 ///   alive), so a partner's death can trigger re-replication.
-/// * **secondary** — cold replica copies mirrored from a partner
-///   (primary) MN.  Never consulted by normal repair — they exist so a
-///   single MN fail-stop can never take the only copy of a dumped
-///   record; rebuild fetches them via `FetchDumpChunk`.
+/// * **replicas** — cold copies shipped from a partner (home) MN under
+///   the configured `ReplPolicy`, each tagged with its [`DumpRole`]
+///   (full replica number, EC data stripe, or EC parity stripe).  Never
+///   consulted by normal repair — they exist so the policy's tolerance
+///   of MN fail-stops can never take the only copy of a dumped record;
+///   rebuild fetches them via `FetchDumpChunk`.
 #[derive(Debug, Default)]
 pub struct DumpDirectory {
     primary: Vec<(LogRecord, Option<MnId>)>,
-    secondary: Vec<(LogRecord, MnId)>,
+    replicas: Vec<(LogRecord, MnId, DumpRole)>,
 }
 
 impl DumpDirectory {
@@ -85,8 +87,11 @@ impl DumpDirectory {
         self.primary.push((rec, partner));
     }
 
-    pub fn push_secondary(&mut self, rec: LogRecord, partner: MnId) {
-        self.secondary.push((rec, partner));
+    /// File a replica-side record: `of` is the home MN whose dump stream
+    /// it belongs to, `role` what kind of copy this store holds.
+    pub fn push_replica(&mut self, rec: LogRecord, of: MnId, role: DumpRole) {
+        debug_assert!(role.is_replica(), "primary records go through push_primary");
+        self.replicas.push((rec, of, role));
     }
 
     /// Primary records for `line`, latest-arrival first (the repair
@@ -101,9 +106,12 @@ impl DumpDirectory {
             .collect()
     }
 
-    /// Every resident record (primary *and* secondary copies) on any of
-    /// `lines`, in arrival order per store — the `FetchDumpChunk`
-    /// response payload for a dead MN's rebuild.
+    /// Every resident record (primary *and* replica copies, whatever
+    /// their role) on any of `lines`, in arrival order per store — the
+    /// `FetchDumpChunk` response payload for a dead MN's rebuild.  All
+    /// roles answer: under the EC union recovery model a data-stripe or
+    /// parity holder's records are as good as a full copy for the
+    /// records it holds.
     pub fn lookup_for_rebuild(
         &self,
         lines: &rustc_hash::FxHashSet<Line>,
@@ -115,25 +123,26 @@ impl DumpDirectory {
             .map(|(r, _)| *r)
             .collect();
         out.extend(
-            self.secondary
+            self.replicas
                 .iter()
-                .filter(|(r, _)| lines.contains(&r.line))
-                .map(|(r, _)| *r),
+                .filter(|(r, _, _)| lines.contains(&r.line))
+                .map(|(r, _, _)| *r),
         );
         out
     }
 
-    /// Remove and return the secondary-resident records on any of
-    /// `lines` — the rebuilding home's *own* holdings, which it adopts
-    /// as primary residents.  This is the common case, not a corner: a
-    /// line's new home after re-homing is the next live MN after the
-    /// dead one, which is exactly where the dead MN's secondary copies
-    /// were placed — the surviving copy is usually already local.
-    /// Draining (rather than copying) keeps the store duplicate-free
-    /// across cascading failures: the records re-enter as primary.
-    pub fn take_secondary_for(&mut self, lines: &rustc_hash::FxHashSet<Line>) -> Vec<LogRecord> {
+    /// Remove and return the replica-resident records (any role) on any
+    /// of `lines` — the rebuilding home's *own* holdings, which it
+    /// adopts as primary residents.  This is the common case, not a
+    /// corner: a line's new home after re-homing is the next live MN
+    /// after the dead one, which is exactly where the dead MN's replica
+    /// copies were placed — the surviving copy is usually already
+    /// local.  Draining (rather than copying) keeps the store
+    /// duplicate-free across cascading failures: the records re-enter
+    /// as primary.
+    pub fn take_replicas_for(&mut self, lines: &rustc_hash::FxHashSet<Line>) -> Vec<LogRecord> {
         let mut taken = Vec::new();
-        self.secondary.retain(|(r, _)| {
+        self.replicas.retain(|(r, _, _)| {
             if lines.contains(&r.line) {
                 taken.push(*r);
                 false
@@ -162,19 +171,28 @@ impl DumpDirectory {
         moved
     }
 
-    /// Resident record counts `(primary, secondary)` — tests and the
-    /// 2-copy-invariant checks.
+    /// Resident record counts `(primary, replicas)` — tests and the
+    /// replication-invariant checks.
     pub fn counts(&self) -> (usize, usize) {
-        (self.primary.len(), self.secondary.len())
+        (self.primary.len(), self.replicas.len())
     }
 
     pub fn is_empty(&self) -> bool {
-        self.primary.is_empty() && self.secondary.is_empty()
+        self.primary.is_empty() && self.replicas.is_empty()
     }
 
-    /// Secondary records mirrored from `partner` (tests).
-    pub fn secondary_of(&self, partner: MnId) -> usize {
-        self.secondary.iter().filter(|(_, p)| *p == partner).count()
+    /// Replica records (any role) shipped from home MN `partner` (tests).
+    pub fn replicas_of(&self, partner: MnId) -> usize {
+        self.replicas.iter().filter(|(_, p, _)| *p == partner).count()
+    }
+
+    /// Replica records from `partner` holding `role` (tests — the EC
+    /// stripe-layout assertions).
+    pub fn replicas_with_role(&self, partner: MnId, role: DumpRole) -> usize {
+        self.replicas
+            .iter()
+            .filter(|(_, p, r)| *p == partner && *r == role)
+            .count()
     }
 
     /// Primary records whose secondary copy lives at `partner` (tests).
@@ -196,7 +214,8 @@ pub struct Directory {
     /// Per-slot reverse translation (census / unblock iteration).
     slot_line: Vec<Line>,
     /// Dumped-log residency: primary records (recovery's fallback
-    /// search) plus cross-MN secondary copies (`dump_repl`).
+    /// search) plus cross-MN replica copies/stripes placed by the
+    /// configured `ReplPolicy`.
     pub dump_dir: DumpDirectory,
     /// CNs whose Viral_Status is set (requests involving them are deferred
     /// or have their invalidations skipped — their caches are gone).
@@ -688,7 +707,7 @@ impl Directory {
 
     /// MN-log entries for `line`, latest-first (recovery's fallback when no
     /// replica log has a word, Algorithm 1).  Only primary-resident
-    /// records are consulted — secondary copies belong to another MN's
+    /// records are consulted — replica copies belong to another MN's
     /// dump stream and are only read by a rebuild after that MN dies.
     pub fn mn_log_latest(&self, line: Line) -> Vec<LogRecord> {
         self.dump_dir.latest(line)
@@ -955,42 +974,55 @@ mod tests {
     }
 
     #[test]
-    fn secondary_copies_are_invisible_to_normal_repair() {
+    fn replica_copies_are_invisible_to_normal_repair() {
         let mut d = dir();
-        d.dump_dir.push_secondary(mk_rec(3, 9, 1, 0, 10), 7);
+        d.dump_dir
+            .push_replica(mk_rec(3, 9, 1, 0, 10), 7, DumpRole::Replica { copy: 0 });
         assert!(
             d.mn_log_latest(line(9)).is_empty(),
-            "secondary copies belong to MN 7's dump stream"
+            "replica copies belong to MN 7's dump stream"
         );
         assert_eq!(d.dump_dir.counts(), (0, 1));
-        assert_eq!(d.dump_dir.secondary_of(7), 1);
+        assert_eq!(d.dump_dir.replicas_of(7), 1);
+        // role-tagged census distinguishes full copies from EC stripes
+        d.dump_dir
+            .push_replica(mk_rec(3, 5, 2, 0, 20), 7, DumpRole::Data { stripe: 1 });
+        d.dump_dir
+            .push_replica(mk_rec(3, 6, 3, 0, 30), 7, DumpRole::Parity { stripe: 0 });
+        assert_eq!(d.dump_dir.replicas_of(7), 3);
+        assert_eq!(d.dump_dir.replicas_with_role(7, DumpRole::Replica { copy: 0 }), 1);
+        assert_eq!(d.dump_dir.replicas_with_role(7, DumpRole::Data { stripe: 1 }), 1);
+        assert_eq!(d.dump_dir.replicas_with_role(7, DumpRole::Data { stripe: 0 }), 0);
+        assert_eq!(d.dump_dir.replicas_with_role(8, DumpRole::Parity { stripe: 0 }), 0);
     }
 
     #[test]
     fn lookup_for_rebuild_returns_both_residencies() {
         let mut d = dir();
         d.dump_dir.push_primary(mk_rec(0, 4, 1, 0, 11), Some(2));
-        d.dump_dir.push_secondary(mk_rec(1, 9, 2, 0, 22), 7);
-        d.dump_dir.push_secondary(mk_rec(1, 5, 3, 0, 33), 7);
+        d.dump_dir
+            .push_replica(mk_rec(1, 9, 2, 0, 22), 7, DumpRole::Replica { copy: 0 });
+        d.dump_dir
+            .push_replica(mk_rec(1, 5, 3, 0, 33), 7, DumpRole::Data { stripe: 0 });
         let mut want = rustc_hash::FxHashSet::default();
         want.insert(line(9));
         want.insert(line(4));
         let got = d.dump_dir.lookup_for_rebuild(&want);
         let values: Vec<u32> = got.iter().map(|r| r.value).collect();
         assert_eq!(values, vec![11, 22], "line 5 was not requested");
-        // take_secondary_for: only the replica copies (a rebuilding home
-        // adopts its own secondaries; its primaries come via
+        // take_replicas_for: only the replica copies (a rebuilding home
+        // adopts its own replicas; its primaries come via
         // mn_log_latest), and the taken records leave the store — no
         // duplicate residents across cascading failures
         let sec: Vec<u32> = d
             .dump_dir
-            .take_secondary_for(&want)
+            .take_replicas_for(&want)
             .iter()
             .map(|r| r.value)
             .collect();
         assert_eq!(sec, vec![22]);
         assert_eq!(d.dump_dir.counts(), (1, 1), "line 9's copy drained; line 5's stays");
-        assert!(d.dump_dir.take_secondary_for(&want).is_empty(), "second take is empty");
+        assert!(d.dump_dir.take_replicas_for(&want).is_empty(), "second take is empty");
     }
 
     #[test]

@@ -106,6 +106,108 @@ impl PartitionPolicy {
     }
 }
 
+/// Dump-replication policy (`--set repl=single|mirror|nway:K|ec:K/M|locality`):
+/// who holds copies of each dumped log chunk besides its home MN, and so
+/// how many MN fail-stops the dumped tier survives.  The policy owns
+/// placement (which MNs), rebuild-source priority (who answers a dead
+/// home's `FetchDumpChunk`), and byte accounting (full copies vs parity
+/// stripes).  `--set dump_repl={0,1}` remains a validated alias for
+/// `single`/`mirror`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplPolicy {
+    /// Home MN only — the paper-faithful lossy baseline with its
+    /// documented dump-durability window (DESIGN.md "MN failures").
+    Single,
+    /// Home + one deterministic secondary (next live MN in interleave
+    /// order) — bit-identical to the former `dump_repl=1` path.
+    Mirror,
+    /// Home + `K-1` full copies on the next live MNs: tolerates any
+    /// `K-1` MN deaths at `K-1`× mirror's bandwidth.
+    NWay(u32),
+    /// Home + `K` data stripes + `M` parity stripes across distinct MNs.
+    /// Stripe bytes come from `logcomp`'s LZSS model per stripe; parity
+    /// stripes are charged the widest data stripe.  Worst-case tolerance
+    /// is `M+1` deaths (home + any `M` holders; see DESIGN.md
+    /// "Replication policies" for the union recovery model).
+    Ec(u32, u32),
+    /// Mirror placement, but the secondary is the *warmest* live MN by
+    /// the PR-7 affinity matrix (column mass, ties to the lowest index)
+    /// instead of interleave order — same durability as `mirror`,
+    /// replica reads land where recovery traffic already goes.
+    Locality,
+}
+
+impl ReplPolicy {
+    /// Representative policies (CLI help, sweeps).  `NWay`/`Ec` are
+    /// parameterized; these are the frontier's canonical points.
+    pub const ALL: [ReplPolicy; 5] = [
+        ReplPolicy::Single,
+        ReplPolicy::Mirror,
+        ReplPolicy::NWay(3),
+        ReplPolicy::Ec(2, 1),
+        ReplPolicy::Locality,
+    ];
+
+    pub fn name(self) -> String {
+        match self {
+            ReplPolicy::Single => "single".to_string(),
+            ReplPolicy::Mirror => "mirror".to_string(),
+            ReplPolicy::NWay(k) => format!("nway:{k}"),
+            ReplPolicy::Ec(k, m) => format!("ec:{k}/{m}"),
+            ReplPolicy::Locality => "locality".to_string(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ReplPolicy> {
+        let s = s.to_ascii_lowercase();
+        Some(match s.as_str() {
+            "single" | "none" => ReplPolicy::Single,
+            "mirror" | "secondary" => ReplPolicy::Mirror,
+            "locality" | "warm" => ReplPolicy::Locality,
+            _ => {
+                if let Some(k) = s.strip_prefix("nway:") {
+                    ReplPolicy::NWay(k.parse().ok()?)
+                } else if let Some(km) = s.strip_prefix("ec:") {
+                    let (k, m) = km.split_once('/')?;
+                    ReplPolicy::Ec(k.parse().ok()?, m.parse().ok()?)
+                } else {
+                    return None;
+                }
+            }
+        })
+    }
+
+    /// Does the policy ship any copy beyond the home MN?  Gates every
+    /// dump-replication mechanism (fan-out, viral notify, re-dump,
+    /// rebuild fetches) — the generalization of the old `dump_repl`.
+    pub fn replicates(self) -> bool {
+        self != ReplPolicy::Single
+    }
+
+    /// MN deaths the dumped tier survives with zero loss, worst case
+    /// (the loss contract: loss is `Forbidden` while MN crashes stay at
+    /// or under this).  `Ec(k, m)` uses the union recovery model: a
+    /// record survives while its home, its own stripe holder, or any
+    /// parity holder lives — the adversary needs the home plus `m`
+    /// holders, i.e. `m+1` deaths.
+    pub fn tolerance(self) -> usize {
+        match self {
+            ReplPolicy::Single => 0,
+            ReplPolicy::Mirror | ReplPolicy::Locality => 1,
+            ReplPolicy::NWay(k) => (k as usize).saturating_sub(1),
+            ReplPolicy::Ec(_, m) => m as usize + 1,
+        }
+    }
+
+    /// `(data, parity)` stripe counts for erasure-coded policies.
+    pub fn ec_params(self) -> Option<(u32, u32)> {
+        match self {
+            ReplPolicy::Ec(k, m) => Some((k, m)),
+            _ => None,
+        }
+    }
+}
+
 /// One cache level's geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheGeom {
@@ -170,13 +272,13 @@ pub struct SimConfig {
     pub dump_period_ps: Ps,
     /// gzip level for log dumping (paper: 9).
     pub gzip_level: u32,
-    /// Cross-MN dump replication (`--set dump_repl={0,1}`): ship every
-    /// dump chunk to its home MN *and* a deterministic secondary MN so a
-    /// single MN fail-stop can never take the only copy of a dumped
-    /// record with it.  `0` recovers the paper-faithful baseline — and
-    /// its documented dump-durability loss window (DESIGN.md
-    /// "MN failures").
-    pub dump_repl: bool,
+    /// Cross-MN dump-replication policy (`--set repl=...`; see
+    /// [`ReplPolicy`]).  `mirror` (the default) reproduces the former
+    /// `dump_repl=1` path bit-for-bit; `single` recovers the
+    /// paper-faithful baseline — and its documented dump-durability
+    /// loss window (DESIGN.md "MN failures").  `--set dump_repl={0,1}`
+    /// stays accepted as an alias for those two points.
+    pub repl: ReplPolicy,
 
     // --- execution (host-side, must not change results) ---
     /// Simulation shards for the conservative-lookahead parallel engine
@@ -244,7 +346,7 @@ impl Default for SimConfig {
             dram_log_bytes: 18 * 1024 * 1024,
             dump_period_ps: time::us(2500),
             gzip_level: 9,
-            dump_repl: true,
+            repl: ReplPolicy::Mirror,
             shards: 1,
             partition: PartitionPolicy::RoundRobin,
             ops_per_thread: 100_000,
@@ -308,6 +410,22 @@ impl SimConfig {
                 self.n_cns, self.shards
             ));
         }
+        match self.repl {
+            ReplPolicy::NWay(k) if k < 2 || k as usize > self.n_mns => {
+                return Err(format!(
+                    "nway:{k} needs 2 <= K <= n_mns ({}): K total copies need K distinct MNs",
+                    self.n_mns
+                ));
+            }
+            ReplPolicy::Ec(k, m) if k == 0 || m == 0 || (k + m) as usize > self.n_mns - 1 => {
+                return Err(format!(
+                    "ec:{k}/{m} needs K >= 1, M >= 1 and K+M <= n_mns-1 ({}): \
+                     the K+M stripes must land on distinct MNs besides the home",
+                    self.n_mns.saturating_sub(1)
+                ));
+            }
+            _ => {}
+        }
         self.faults.validate(self.n_cns, self.n_mns)?;
         Ok(())
     }
@@ -338,7 +456,11 @@ mod tests {
         assert_eq!(c.sram_log_bytes, 4 * 1024);
         assert_eq!(c.dram_log_bytes, 18 * 1024 * 1024);
         assert_eq!(c.dump_period_ps, time::ms(2) + time::us(500));
-        assert!(c.dump_repl, "dump replication is the default; dump_repl=0 is the paper-faithful baseline");
+        assert_eq!(
+            c.repl,
+            ReplPolicy::Mirror,
+            "mirror (the former dump_repl=1) is the default; single is the paper-faithful baseline"
+        );
         assert!(c.validate().is_ok());
     }
 
@@ -403,6 +525,64 @@ mod tests {
             assert_eq!(Protocol::from_name(p.name()), Some(p));
         }
         assert_eq!(Protocol::from_name("nonsense"), None);
+    }
+
+    #[test]
+    fn repl_names_roundtrip_and_mirror_is_default() {
+        assert_eq!(SimConfig::default().repl, ReplPolicy::Mirror);
+        for p in ReplPolicy::ALL {
+            assert_eq!(ReplPolicy::from_name(&p.name()), Some(p), "{}", p.name());
+        }
+        assert_eq!(ReplPolicy::from_name("nway:7"), Some(ReplPolicy::NWay(7)));
+        assert_eq!(ReplPolicy::from_name("ec:4/2"), Some(ReplPolicy::Ec(4, 2)));
+        for bad in ["nonsense", "nway:", "nway:x", "ec:2", "ec:/1", "ec:a/b"] {
+            assert_eq!(ReplPolicy::from_name(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn repl_tolerance_matches_the_durability_claims() {
+        assert_eq!(ReplPolicy::Single.tolerance(), 0);
+        assert_eq!(ReplPolicy::Mirror.tolerance(), 1);
+        assert_eq!(ReplPolicy::Locality.tolerance(), 1);
+        assert_eq!(ReplPolicy::NWay(3).tolerance(), 2);
+        assert_eq!(ReplPolicy::Ec(2, 1).tolerance(), 2);
+        assert_eq!(ReplPolicy::Ec(4, 2).tolerance(), 3);
+        assert!(!ReplPolicy::Single.replicates());
+        assert!(ReplPolicy::Mirror.replicates());
+        assert_eq!(ReplPolicy::Ec(2, 1).ec_params(), Some((2, 1)));
+        assert_eq!(ReplPolicy::Mirror.ec_params(), None);
+    }
+
+    #[test]
+    fn repl_policies_are_validated_against_the_topology() {
+        let mut c = SimConfig {
+            n_cns: 4,
+            n_mns: 4,
+            n_r: 3,
+            ..Default::default()
+        };
+        for p in [
+            ReplPolicy::Single,
+            ReplPolicy::Mirror,
+            ReplPolicy::Locality,
+            ReplPolicy::NWay(3),
+            ReplPolicy::NWay(4),
+            ReplPolicy::Ec(2, 1),
+        ] {
+            c.repl = p;
+            assert!(c.validate().is_ok(), "{} on 4 MNs", p.name());
+        }
+        for p in [
+            ReplPolicy::NWay(1),
+            ReplPolicy::NWay(5),
+            ReplPolicy::Ec(0, 1),
+            ReplPolicy::Ec(2, 0),
+            ReplPolicy::Ec(3, 1), // K+M = 4 > n_mns-1
+        ] {
+            c.repl = p;
+            assert!(c.validate().is_err(), "{} on 4 MNs", p.name());
+        }
     }
 
     #[test]

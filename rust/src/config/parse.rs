@@ -5,7 +5,7 @@
 //! `--config` file; `#` comments allowed).  Keys mirror the `SimConfig`
 //! fields used by the paper's sweeps.
 
-use super::{FaultPlan, PartitionPolicy, Protocol, SimConfig};
+use super::{FaultPlan, PartitionPolicy, Protocol, ReplPolicy, SimConfig};
 use crate::sim::time;
 
 /// Apply a single `key=value` override to `cfg`.
@@ -34,7 +34,15 @@ pub fn apply_override(cfg: &mut SimConfig, key: &str, value: &str) -> Result<(),
         "dram_log_bytes" => cfg.dram_log_bytes = num!(),
         "dump_period_us" => cfg.dump_period_ps = time::us(num!()),
         "gzip_level" => cfg.gzip_level = num!(),
-        "dump_repl" => cfg.dump_repl = parse_bool(value).ok_or_else(|| bad("bool"))?,
+        "repl" => cfg.repl = ReplPolicy::from_name(value).ok_or_else(|| bad("repl policy"))?,
+        // validated alias for the PR-5 boolean: 1 = mirror, 0 = single
+        "dump_repl" => {
+            cfg.repl = if parse_bool(value).ok_or_else(|| bad("bool"))? {
+                ReplPolicy::Mirror
+            } else {
+                ReplPolicy::Single
+            }
+        }
         "shards" => cfg.shards = num!(),
         "partition" => {
             cfg.partition = PartitionPolicy::from_name(value).ok_or_else(|| bad("partition"))?
@@ -129,13 +137,28 @@ mod tests {
     }
 
     #[test]
-    fn dump_repl_toggles_and_rejects_garbage() {
+    fn repl_key_applies_and_rejects_garbage() {
         let mut c = SimConfig::default();
-        assert!(c.dump_repl, "replication on by default");
+        assert_eq!(c.repl, ReplPolicy::Mirror, "mirror replication by default");
+        apply_override(&mut c, "repl", "single").unwrap();
+        assert_eq!(c.repl, ReplPolicy::Single);
+        apply_override(&mut c, "repl", "nway:3").unwrap();
+        assert_eq!(c.repl, ReplPolicy::NWay(3));
+        apply_override(&mut c, "repl", "ec:2/1").unwrap();
+        assert_eq!(c.repl, ReplPolicy::Ec(2, 1));
+        apply_override(&mut c, "repl", "locality").unwrap();
+        assert_eq!(c.repl, ReplPolicy::Locality);
+        assert!(apply_override(&mut c, "repl", "double-secret").is_err());
+        assert!(apply_override(&mut c, "repl", "ec:2").is_err());
+    }
+
+    #[test]
+    fn dump_repl_alias_maps_onto_the_policy() {
+        let mut c = SimConfig::default();
         apply_override(&mut c, "dump_repl", "0").unwrap();
-        assert!(!c.dump_repl);
+        assert_eq!(c.repl, ReplPolicy::Single);
         apply_override(&mut c, "dump_repl", "on").unwrap();
-        assert!(c.dump_repl);
+        assert_eq!(c.repl, ReplPolicy::Mirror);
         assert!(apply_override(&mut c, "dump_repl", "2").is_err());
     }
 

@@ -51,7 +51,8 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::cluster::{run_app, slowdown_vs_wb, Cluster};
     pub use crate::config::{
-        FaultEvent, FaultKind, FaultNode, FaultPlan, PartitionPolicy, Protocol, SimConfig,
+        FaultEvent, FaultKind, FaultNode, FaultPlan, PartitionPolicy, Protocol, ReplPolicy,
+        SimConfig,
     };
     pub use crate::report::{gmean, FigureTable};
     pub use crate::stats::RunStats;

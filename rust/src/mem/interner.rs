@@ -79,6 +79,13 @@ pub struct LineTable {
     /// probes the next live MN deterministically, so interning stays a
     /// pure function of the fault history (`kill_mn` call order).
     dead_mns: Vec<bool>,
+    /// Replica-placement preference order for `repl=locality`: MN
+    /// indices sorted warmest-first by the pre-run affinity scan
+    /// (`Cluster::build` installs it before the table is shared).
+    /// Empty (the default) = interleave order from the primary — the
+    /// placement every other policy uses, and the one `mirror` must
+    /// keep bit-identical to PR 5.
+    warm_rank: Vec<u32>,
 }
 
 impl LineTable {
@@ -106,6 +113,7 @@ impl LineTable {
             slot: Vec::new(),
             mn_next: vec![0; n_mns.max(1)],
             dead_mns: vec![false; n_mns.max(1)],
+            warm_rank: Vec::new(),
         }
     }
 
@@ -220,6 +228,48 @@ impl LineTable {
             mn = (mn + 1) % self.n_mns;
         }
         None
+    }
+
+    /// Install the warm-first MN preference order for locality-aware
+    /// replica placement (`repl=locality`).  Must list every MN exactly
+    /// once; called from `Cluster::build` before the table is shared, so
+    /// it is part of the deterministic pre-run state, invariant across
+    /// shard counts and partition policies.
+    pub fn set_warm_order(&mut self, order: Vec<u32>) {
+        debug_assert_eq!(order.len(), self.n_mns, "warm order must cover every MN");
+        self.warm_rank = order;
+    }
+
+    /// The first `k` distinct live MNs ≠ `primary` in the policy's
+    /// placement order: the installed warm order when one exists
+    /// (`repl=locality`), else interleave order from `primary + 1` —
+    /// which makes `replica_set(p, 1)` coincide with [`Self::secondary_mn`]
+    /// exactly (the mirror bit-identity anchor).  Fewer than `k` results
+    /// means fewer than `k` other MNs are still alive.  Like
+    /// `secondary_mn`, routing through the line table makes placement
+    /// compose with [`Self::kill_mn`] re-homing under cascades.
+    pub fn replica_set(&self, primary: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k.min(self.n_mns));
+        if self.warm_rank.is_empty() {
+            let mut mn = (primary + 1) % self.n_mns;
+            while mn != primary && out.len() < k {
+                if !self.dead_mns[mn] {
+                    out.push(mn);
+                }
+                mn = (mn + 1) % self.n_mns;
+            }
+        } else {
+            for &mn in &self.warm_rank {
+                let mn = mn as usize;
+                if mn != primary && !self.dead_mns[mn] {
+                    out.push(mn);
+                    if out.len() == k {
+                        break;
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// Intern `line`, assigning a dense id on first touch.  O(1): one
@@ -477,6 +527,44 @@ mod tests {
         assert_eq!(t.secondary_mn(t.home_mn(id)), Some(3));
         t.kill_mn(3);
         assert_eq!(t.secondary_mn(t.home_mn(id)), Some(0));
+    }
+
+    #[test]
+    fn replica_set_of_one_coincides_with_secondary_mn() {
+        // the mirror bit-identity anchor: the generalized placer's first
+        // pick IS the PR-5 secondary, through every cascade state
+        let mut t = table(); // 4 MNs
+        for primary in 0..4 {
+            assert_eq!(t.replica_set(primary, 1).first().copied(), t.secondary_mn(primary));
+        }
+        t.kill_mn(2);
+        t.kill_mn(3);
+        for primary in 0..4 {
+            assert_eq!(t.replica_set(primary, 1).first().copied(), t.secondary_mn(primary));
+        }
+    }
+
+    #[test]
+    fn replica_set_walks_interleave_order_and_shrinks_with_deaths() {
+        let mut t = table(); // 4 MNs
+        assert_eq!(t.replica_set(1, 2), vec![2, 3]);
+        assert_eq!(t.replica_set(3, 3), vec![0, 1, 2], "wraps around");
+        assert_eq!(t.replica_set(0, 9), vec![1, 2, 3], "capped at live others");
+        t.kill_mn(2);
+        assert_eq!(t.replica_set(1, 2), vec![3, 0], "skips the dead MN");
+        t.kill_mn(3);
+        t.kill_mn(0);
+        assert_eq!(t.replica_set(1, 2), vec![], "no other live MN left");
+    }
+
+    #[test]
+    fn warm_order_reroutes_replicas_but_never_to_primary_or_dead() {
+        let mut t = table(); // 4 MNs
+        t.set_warm_order(vec![2, 0, 3, 1]);
+        assert_eq!(t.replica_set(1, 2), vec![2, 0], "warmest-first");
+        assert_eq!(t.replica_set(2, 1), vec![0], "primary skipped in rank order");
+        t.kill_mn(2);
+        assert_eq!(t.replica_set(1, 2), vec![0, 3], "dead warm MN skipped");
     }
 
     #[test]

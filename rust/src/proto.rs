@@ -66,6 +66,35 @@ impl MsgClass {
 /// Word values of one line (16 x 4 B).
 pub type LineWords = [u32; 16];
 
+/// Role of one dump-chunk copy under the configured
+/// [`crate::config::ReplPolicy`] — carried on the wire by
+/// [`MsgKind::DumpChunk`] and stored with each replica record in the
+/// receiving MN's `DumpDirectory`, so rebuilds know what kind of copy
+/// they are holding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DumpRole {
+    /// The home MN's own copy (accounted under [`MsgClass::LogDump`];
+    /// every other role is [`MsgClass::DumpRepl`]).
+    Primary,
+    /// Full copy number `copy` (0-based) — `mirror`/`locality` ship one,
+    /// `nway:K` ships `K-1`.
+    Replica { copy: u8 },
+    /// Erasure-coded data stripe `stripe` of `ec:K/M` (records whose
+    /// bucket index ≡ `stripe` mod K).
+    Data { stripe: u8 },
+    /// Erasure-coded parity stripe `stripe` of `ec:K/M` (covers the
+    /// whole bucket; charged the widest data stripe's bytes).
+    Parity { stripe: u8 },
+}
+
+impl DumpRole {
+    /// Is this any non-primary copy (the `DumpRepl` traffic classes)?
+    #[inline]
+    pub fn is_replica(self) -> bool {
+        self != DumpRole::Primary
+    }
+}
+
 /// All message kinds exchanged over the CXL fabric.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MsgKind {
@@ -108,28 +137,33 @@ pub enum MsgKind {
     /// train of 64 B messages (section IV-E); the simulator models the
     /// train as one message of `bytes` total so the fabric charges the
     /// same serialization without one event per chunk.  `entries` rides
-    /// along for simulation state transfer.  `replica` marks the
-    /// cross-MN secondary copy of the chunk (`dump_repl`): same payload,
-    /// shipped to the bucket's deterministic secondary MN and accounted
-    /// under [`MsgClass::DumpRepl`].  `partner` is the *send-time*
-    /// other-copy holder — the secondary the replica shipped to (primary
-    /// chunks; `None` = unreplicated) or the primary MN (replica
-    /// chunks).  Send-time, not recomputed at arrival: an MN dying with
+    /// along for simulation state transfer.  `role` marks which copy of
+    /// the bucket this is under the configured `ReplPolicy`: the home
+    /// MN's [`DumpRole::Primary`] copy (accounted as `LogDump`), or a
+    /// full replica / EC data stripe / EC parity stripe headed to one of
+    /// the policy's placement targets (accounted as
+    /// [`MsgClass::DumpRepl`]).  `partner` is the *send-time* first
+    /// other-copy holder — the first replication target for primary
+    /// chunks (`None` = unreplicated) or the primary MN for replica
+    /// chunks.  Send-time, not recomputed at arrival: an MN dying with
     /// chunks in flight would otherwise let the receiver tag a partner
     /// that never received a copy.
     DumpChunk {
         from: CnId,
         bytes: u32,
         entries: Vec<crate::recxl::logunit::LogRecord>,
-        replica: bool,
+        role: DumpRole,
         partner: Option<MnId>,
     },
     /// MN ack of a completed dump segment (Logging Units synchronize
     /// through the MNs before clearing their logs).
     DumpSyncAck { to: CnId },
     /// MN-to-MN re-replication of dumped records after an MN death
-    /// (re-dump-on-death): the sender holds the only surviving copy and
-    /// restores the 2-copy invariant by mirroring it to a new partner.
+    /// (re-dump-on-death): the sender holds a surviving copy and
+    /// restores the policy's replication invariant by mirroring it to a
+    /// replacement partner.  Always a full copy, whatever the policy —
+    /// receivers file it as `Replica { copy: 0 }` (see DESIGN.md
+    /// "Replication policies" for why EC re-dumps don't re-stripe).
     RedumpChunk {
         from_mn: MnId,
         entries: Vec<crate::recxl::logunit::LogRecord>,
@@ -152,8 +186,9 @@ pub enum MsgKind {
     /// dead replicas; see DESIGN.md section "Failures").
     ViralNotify { failed: CnId },
     /// Switch broadcast to live MNs: `failed_mn`'s port went viral.
-    /// Survivors holding dump chunks whose secondary copy lived there
-    /// re-replicate them to a new partner (`dump_repl` only).
+    /// Survivors holding dump chunks whose tracked replica copy lived
+    /// there re-replicate them to a new partner (replicating policies
+    /// only).
     MnViralNotify { failed_mn: MnId },
     /// CM tells CNs/Logging Units to finish outstanding work and pause.
     Interrupt { epoch: u64 },
@@ -179,10 +214,10 @@ pub enum MsgKind {
         rebuild: bool,
     },
     /// A rebuilding MN asks a survivor MN for any resident dumped
-    /// records of `lines` (primary or secondary copies) — the rebuild
-    /// source that closes the dumped-log durability window: the dead
-    /// MN's own dumps are gone, but their `dump_repl` secondary copies
-    /// survive on other MNs.
+    /// records of `lines` (primary, replica copies, or EC stripes) —
+    /// the rebuild source that closes the dumped-log durability window:
+    /// the dead MN's own dumps are gone, but the copies the
+    /// `ReplPolicy` placed on other MNs survive.
     FetchDumpChunk { from_mn: MnId, lines: Vec<Line>, epoch: u64 },
     /// Response: the resident dumped records, in this MN's arrival order.
     DumpChunkVers {
@@ -330,8 +365,8 @@ impl MsgKind {
         use MsgKind::*;
         match self {
             Repl { .. } | ReplAck { .. } | Val { .. } => MsgClass::Replication,
-            DumpChunk { replica: true, .. } | RedumpChunk { .. } => MsgClass::DumpRepl,
-            DumpChunk { .. } | DumpSyncAck { .. } => MsgClass::LogDump,
+            DumpChunk { role: DumpRole::Primary, .. } | DumpSyncAck { .. } => MsgClass::LogDump,
+            DumpChunk { .. } | RedumpChunk { .. } => MsgClass::DumpRepl,
             Msi { .. } | MsiMn { .. } | ViralNotify { .. } | MnViralNotify { .. }
             | Interrupt { .. } | InterruptResp { .. } | InitRecov { .. }
             | InitRecovResp { .. } | RecovEnd { .. } | RecovEndResp { .. }
@@ -400,24 +435,33 @@ mod tests {
                 from: 0,
                 bytes: 64,
                 entries: vec![],
-                replica: false,
+                role: DumpRole::Primary,
                 partner: Some(1)
             }
             .class(),
             MsgClass::LogDump
         );
-        // the secondary copy of the same chunk is dump-replication traffic
-        assert_eq!(
-            MsgKind::DumpChunk {
-                from: 0,
-                bytes: 64,
-                entries: vec![],
-                replica: true,
-                partner: Some(0)
-            }
-            .class(),
-            MsgClass::DumpRepl
-        );
+        // every non-primary copy of the chunk is dump-replication traffic
+        for role in [
+            DumpRole::Replica { copy: 0 },
+            DumpRole::Data { stripe: 1 },
+            DumpRole::Parity { stripe: 0 },
+        ] {
+            assert!(role.is_replica());
+            assert_eq!(
+                MsgKind::DumpChunk {
+                    from: 0,
+                    bytes: 64,
+                    entries: vec![],
+                    role,
+                    partner: Some(0)
+                }
+                .class(),
+                MsgClass::DumpRepl,
+                "{role:?}"
+            );
+        }
+        assert!(!DumpRole::Primary.is_replica());
         assert_eq!(
             MsgKind::RedumpChunk { from_mn: 2, entries: vec![] }.class(),
             MsgClass::DumpRepl
@@ -490,7 +534,7 @@ mod tests {
             from: 3,
             bytes: 10,
             entries: vec![],
-            replica: false,
+            role: DumpRole::Primary,
             partner: None,
         };
         assert_eq!(c.wire_bytes(), 64);
@@ -498,10 +542,20 @@ mod tests {
             from: 3,
             bytes: 4096,
             entries: vec![],
-            replica: true,
+            role: DumpRole::Replica { copy: 0 },
             partner: Some(2),
         };
         assert_eq!(big.wire_bytes(), 4096);
+        // stripe chunks charge whatever `bytes` the sender computed from
+        // the per-stripe LZSS model, floored at one 64 B wire chunk
+        let stripe = MsgKind::DumpChunk {
+            from: 3,
+            bytes: 7,
+            entries: vec![],
+            role: DumpRole::Data { stripe: 1 },
+            partner: Some(0),
+        };
+        assert_eq!(stripe.wire_bytes(), 64);
     }
 
     #[test]

@@ -292,11 +292,13 @@ impl LoggingUnit {
     /// Returns (records per home MN, uncompressed bytes, compressed bytes).
     ///
     /// Note the clear: after this call the dumped records exist *only*
-    /// where the chunks land.  Under `dump_repl` the cluster ships each
-    /// per-MN bucket to its home MN **and** a deterministic secondary
-    /// (`LineTable::secondary_mn`), so a single MN fail-stop can never
-    /// take the last copy — the durability window DESIGN.md "Dump
-    /// replication" closes.
+    /// where the chunks land.  When the configured `ReplPolicy`
+    /// replicates, the cluster fans each per-MN bucket out to the
+    /// policy's placement targets (`LineTable::replica_set`) — full
+    /// copies for `mirror`/`locality`/`nway:K`, data + parity stripes
+    /// for `ec:K/M` (see [`ec_stripes`]) — so the policy's tolerance of
+    /// MN fail-stops can never take the last copy (DESIGN.md
+    /// "Replication policies").
     pub fn dump(
         &mut self,
         n_cns: usize,
@@ -384,6 +386,33 @@ pub struct DumpResult {
     pub per_mn: Vec<Vec<LogRecord>>,
     pub in_bytes: u64,
     pub out_bytes: u64,
+}
+
+/// Split one dump bucket into the `k` data stripes of `ec:K/M`: record
+/// `i` (bucket arrival order) goes to stripe `i % k`.  Round-robin by
+/// index, not by line hash, so every stripe carries ~1/k of the bucket
+/// regardless of line skew and the assignment is a pure function of the
+/// bucket contents.
+pub fn ec_stripes(entries: &[LogRecord], k: u32) -> Vec<Vec<LogRecord>> {
+    let k = k.max(1) as usize;
+    let mut stripes: Vec<Vec<LogRecord>> = vec![Vec::new(); k];
+    for (i, rec) in entries.iter().enumerate() {
+        stripes[i % k].push(*rec);
+    }
+    stripes
+}
+
+/// Honest wire bytes for one stripe of records: pack to the 12 B layout
+/// and run the same LZSS size model the dump path uses, so stripe
+/// traffic is charged what a real per-stripe compressor would ship (not
+/// `bucket_bytes / k`, which would hide the compression ratio lost by
+/// splitting the stream).
+pub fn stripe_bytes(records: &[LogRecord], gzip_level: u32) -> usize {
+    let mut raw = Vec::with_capacity(records.len() * LOG_ENTRY_BYTES);
+    for rec in records {
+        raw.extend_from_slice(&rec.pack());
+    }
+    super::logcomp::compressed_len(&raw, gzip_level)
 }
 
 #[cfg(test)]
@@ -577,6 +606,56 @@ mod tests {
         // dump heals the index
         u.dump(16, 16, 3, 9, &mut |l| l.home_mn(16));
         assert!(fetch1(&u, 9).versions.is_empty());
+    }
+
+    #[test]
+    fn ec_stripes_round_robin_and_cover_the_bucket() {
+        let recs: Vec<LogRecord> = (0..10u64)
+            .map(|i| LogRecord {
+                req: req(0),
+                line: line((i % 3) as u32),
+                word: 0,
+                value: i as u32,
+                ts: i + 1,
+                repl_seq: i + 1,
+                valid: true,
+            })
+            .collect();
+        let stripes = ec_stripes(&recs, 3);
+        assert_eq!(stripes.len(), 3);
+        assert_eq!(
+            stripes.iter().map(|s| s.len()).collect::<Vec<_>>(),
+            vec![4, 3, 3],
+            "record i goes to stripe i % k"
+        );
+        let mut all: Vec<u32> = stripes.iter().flatten().map(|r| r.value).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<u32>>(), "stripes partition the bucket");
+        assert_eq!(stripes[1][0].value, 1);
+        assert_eq!(ec_stripes(&recs, 1).len(), 1, "k=1 degenerates to the full bucket");
+    }
+
+    #[test]
+    fn stripe_bytes_matches_the_dump_size_model() {
+        let recs: Vec<LogRecord> = (0..50u64)
+            .map(|i| LogRecord {
+                req: req(0),
+                line: line(2),
+                word: 0,
+                value: (i % 4) as u32, // low entropy, like real store streams
+                ts: i + 1,
+                repl_seq: i + 1,
+                valid: true,
+            })
+            .collect();
+        let whole = stripe_bytes(&recs, 9);
+        assert!(whole > 0 && whole < recs.len() * LOG_ENTRY_BYTES);
+        // splitting loses compression ratio: the stripes together ship
+        // at least as many bytes as the unsplit stream
+        let stripes = ec_stripes(&recs, 2);
+        let split: usize = stripes.iter().map(|s| stripe_bytes(s, 9)).sum();
+        assert!(split >= whole, "split {split} vs whole {whole}");
+        assert_eq!(stripe_bytes(&[], 9), 0);
     }
 
     impl LoggingUnit {

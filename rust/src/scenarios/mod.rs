@@ -37,7 +37,7 @@ pub struct Scenario {
     tweak: fn(&mut SimConfig),
     /// Whether the scenario is *expected* to report committed-data loss
     /// under `cfg` — the documented dump-durability window that
-    /// `dump_repl=0` regression-pins.
+    /// `repl=single` (zero-tolerance) regression-pins.
     expects_loss: fn(&SimConfig) -> bool,
 }
 
@@ -54,8 +54,8 @@ impl Scenario {
     }
 
     /// Is this run *supposed* to lose committed data (oracle reports
-    /// inconsistencies)?  True only for the loss-window scenario with
-    /// `dump_repl=0`.
+    /// inconsistencies)?  True only for the loss-window scenarios under
+    /// a policy with zero MN-failure tolerance (`repl=single`).
     pub fn expects_loss(&self, cfg: &SimConfig) -> bool {
         (self.expects_loss)(cfg)
     }
@@ -223,14 +223,15 @@ pub fn all() -> Vec<Scenario> {
                     ..cfg.l3
                 };
             },
-            expects_loss: |cfg| !cfg.dump_repl,
+            expects_loss: |cfg| cfg.repl.tolerance() == 0,
         },
         Scenario {
             name: "mn-crash-after-dump",
             about: "an MN dies after several dump cycles landed dumped-only \
-                    records on it; dump_repl=1 rebuilds them from the \
-                    cross-MN secondary copies, dump_repl=0 reproduces the \
-                    documented loss window",
+                    records on it; any replicating policy (mirror/nway/ec/\
+                    locality) rebuilds them from surviving cross-MN \
+                    copies, repl=single reproduces the documented loss \
+                    window",
             builder: |cfg| {
                 // late enough that many dump cycles complete first and
                 // early-written, since-evicted lines sit dump-only
@@ -258,7 +259,7 @@ pub fn all() -> Vec<Scenario> {
                     ..cfg.l3
                 };
             },
-            expects_loss: |cfg| !cfg.dump_repl,
+            expects_loss: |cfg| cfg.repl.tolerance() == 0,
         },
     ]
 }
@@ -279,8 +280,9 @@ pub fn run_scenario(sc: &Scenario, mut cfg: SimConfig, app: &AppProfile) -> RunS
 /// scenarios map their [`Scenario::expects_loss`] bit onto `Required` /
 /// `Forbidden`; the campaign fuzzer (`crate::campaign`) additionally
 /// uses `Allowed` for plans whose loss behaviour is honest either way
-/// (e.g. a multi-MN cascade can kill both copies of a dumped chunk even
-/// with `dump_repl=1`, which is documented, not a bug).
+/// (e.g. a cascade killing more MNs than `ReplPolicy::tolerance` can
+/// destroy every copy of a dumped chunk, which is documented, not a
+/// bug).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LossContract {
     /// The oracle must report zero lost words.
@@ -461,16 +463,24 @@ mod tests {
     }
 
     #[test]
-    fn loss_contract_follows_dump_repl() {
+    fn loss_contract_follows_the_policy_tolerance() {
         // two scenarios ride the dump-durability recipe and expect the
-        // documented loss window under the paper-faithful baseline
+        // documented loss window only under a zero-tolerance policy
         let lossy = ["mn-crash-after-dump", "campaign-cascade"];
         let mut cfg = SimConfig::default();
         for name in lossy {
             let sc = by_name(name).unwrap();
-            assert!(!sc.expects_loss(&cfg), "{name}: dump_repl=1 is loss-free");
+            assert!(!sc.expects_loss(&cfg), "{name}: mirror is loss-free");
+            for repl in [
+                crate::config::ReplPolicy::NWay(3),
+                crate::config::ReplPolicy::Ec(2, 1),
+                crate::config::ReplPolicy::Locality,
+            ] {
+                let c = SimConfig { repl, ..cfg.clone() };
+                assert!(!sc.expects_loss(&c), "{name}: {} tolerates one MN", repl.name());
+            }
         }
-        cfg.dump_repl = false;
+        cfg.repl = crate::config::ReplPolicy::Single;
         for name in lossy {
             let sc = by_name(name).unwrap();
             assert!(sc.expects_loss(&cfg), "{name}: the baseline loses");

@@ -138,6 +138,13 @@ pub struct ReplStats {
     pub dump_in_bytes: u64,
     pub dump_out_bytes: u64,
     pub dumps: u64,
+    /// DumpRepl payload bytes split by replica role (the bandwidth axis
+    /// of the durability-vs-bandwidth frontier): full copies
+    /// (mirror/locality/nway and re-dumps ship these) vs `ec` data
+    /// stripes vs `ec` parity stripes.
+    pub dump_repl_copy_bytes: u64,
+    pub dump_repl_stripe_bytes: u64,
+    pub dump_repl_parity_bytes: u64,
     /// SRAM Log Buffer backpressure events (REPL had to wait for space).
     pub sram_backpressure: u64,
 }
@@ -158,6 +165,9 @@ impl ReplStats {
         self.dump_in_bytes += other.dump_in_bytes;
         self.dump_out_bytes += other.dump_out_bytes;
         self.dumps += other.dumps;
+        self.dump_repl_copy_bytes += other.dump_repl_copy_bytes;
+        self.dump_repl_stripe_bytes += other.dump_repl_stripe_bytes;
+        self.dump_repl_parity_bytes += other.dump_repl_parity_bytes;
         if self.max_dram_log_bytes.len() < other.max_dram_log_bytes.len() {
             self.max_dram_log_bytes
                 .resize(other.max_dram_log_bytes.len(), 0);
@@ -304,13 +314,14 @@ pub struct RecoveryStats {
     /// Re-homed lines reconstructed from replica Logging-Unit logs
     /// (`FetchLatestVers` against the replica window).
     pub rebuilt_from_logs: u64,
-    /// Re-homed lines whose only surviving data was a cross-MN secondary
-    /// dump copy (`FetchDumpChunk` — the durability window `dump_repl`
-    /// closes; these lines were honest losses before).
+    /// Re-homed lines whose only surviving data was a cross-MN replica
+    /// dump copy or stripe (`FetchDumpChunk` — the durability window
+    /// replicating policies close; these lines are honest losses under
+    /// `repl=single`).
     pub rebuilt_dumps: u64,
-    /// Dump-chunk re-replication messages sent to restore the 2-copy
-    /// invariant after an MN death (re-dump-on-death): both surviving
-    /// primaries re-mirroring, and rebuilt homes re-seeding.
+    /// Dump-chunk re-replication messages sent to restore the policy's
+    /// replication invariant after an MN death (re-dump-on-death): both
+    /// surviving primaries re-coupling, and rebuilt homes re-seeding.
     pub rereplicated_chunks: u64,
     /// Re-homed lines with no surviving copy anywhere (memory left
     /// zeroed; only consistent if nothing was ever committed there).
@@ -558,6 +569,9 @@ mod tests {
         shell.repl.dump_in_bytes = 6;
         shell.repl.dump_out_bytes = 7;
         shell.repl.dumps = 8;
+        shell.repl.dump_repl_copy_bytes = 11;
+        shell.repl.dump_repl_stripe_bytes = 12;
+        shell.repl.dump_repl_parity_bytes = 13;
         shell.repl.max_dram_log_bytes = vec![9, 10];
         shell.repl.sram_backpressure = 99;
         // sharding: the three PR-7 cross-shard counters
@@ -595,6 +609,9 @@ mod tests {
         assert_eq!(base.repl.dump_in_bytes, 6);
         assert_eq!(base.repl.dump_out_bytes, 7);
         assert_eq!(base.repl.dumps, 8);
+        assert_eq!(base.repl.dump_repl_copy_bytes, 11);
+        assert_eq!(base.repl.dump_repl_stripe_bytes, 12);
+        assert_eq!(base.repl.dump_repl_parity_bytes, 13);
         assert_eq!(base.repl.max_dram_log_bytes, vec![100, 10]);
         assert_eq!(base.sharding.cross_shard_sync_ops, 30);
         assert_eq!(base.sharding.cross_shard_oracle_commits, 31);

@@ -174,16 +174,16 @@ fn partition_policies_share_one_schedule_on_every_named_scenario() {
 
 #[test]
 fn shard_counts_agree_on_dumped_log_durability_paths() {
-    // mn-crash-after-dump exercises the dumped-log rebuild; both the
-    // replicated and unreplicated dump paths must be shard-invariant
-    // (the rebuild itself runs in the serial phase, but the dumps and
-    // re-mirrors it depends on run windowed).
+    // mn-crash-after-dump exercises the dumped-log rebuild; every
+    // replication policy's dump path must be shard-invariant (the
+    // rebuild itself runs in the serial phase, but the dumps and the
+    // re-replication it depends on run windowed).
     let app = by_name("ycsb").unwrap();
     let sc = recxl::scenarios::by_name("mn-crash-after-dump").unwrap();
-    for dump_repl in [true, false] {
+    for repl in ReplPolicy::ALL {
         let mut cfg = scen_cfg(4_000);
         sc.prepare(&mut cfg);
-        cfg.dump_repl = dump_repl;
+        cfg.repl = repl;
         let base = run_app(cfg.clone(), &app);
         for shards in [2, 4] {
             let mut c = cfg.clone();
@@ -192,11 +192,37 @@ fn shard_counts_agree_on_dumped_log_durability_paths() {
             assert_eq!(
                 fingerprint(&base),
                 fingerprint(&s),
-                "mn-crash-after-dump (dump_repl={dump_repl}) must be \
-                 bit-identical at shards={shards}"
+                "mn-crash-after-dump (repl={}) must be bit-identical at shards={shards}",
+                repl.name()
             );
         }
     }
+}
+
+#[test]
+fn mirror_policy_is_bit_identical_to_the_legacy_dump_repl_flag() {
+    // `repl=mirror` lifts the hard-wired 2-copy dump path of PR 5 into
+    // the policy layer; the refactor must be invisible — the fingerprint
+    // under the modern knob must equal the one under the legacy
+    // `dump_repl=1` alias (which maps onto Mirror), dump rebuild
+    // included.
+    let app = by_name("ycsb").unwrap();
+    let sc = recxl::scenarios::by_name("mn-crash-after-dump").unwrap();
+    let mut modern = scen_cfg(4_000);
+    sc.prepare(&mut modern);
+    recxl::config::apply_override(&mut modern, "repl", "mirror").unwrap();
+    let mut legacy = scen_cfg(4_000);
+    sc.prepare(&mut legacy);
+    recxl::config::apply_override(&mut legacy, "dump_repl", "1").unwrap();
+    assert_eq!(modern.repl, ReplPolicy::Mirror);
+    assert_eq!(legacy.repl, ReplPolicy::Mirror);
+    let a = run_app(modern, &app);
+    let b = run_app(legacy, &app);
+    assert_eq!(
+        fingerprint(&a),
+        fingerprint(&b),
+        "repl=mirror must reproduce the legacy dump_repl=1 run exactly"
+    );
 }
 
 #[test]

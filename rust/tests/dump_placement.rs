@@ -3,14 +3,18 @@
 //! checked against a brute-force reference placer, under randomized
 //! cascading MN failures.
 //!
-//! The invariants the cross-MN dump replication relies on:
+//! The invariants the `ReplPolicy` dump fan-out relies on:
 //! * placement is a pure function of (line, fault history) — same kills,
 //!   same answers, bit-for-bit;
 //! * the secondary is never the primary, and neither is ever a dead MN;
 //! * whenever at least two MNs are live, every line has two *distinct
 //!   live* copy holders (the 2-copy invariant), re-homing included:
 //!   killing a line's primary or secondary moves the placement to the
-//!   next live MN in interleave order.
+//!   next live MN in interleave order;
+//! * `replica_set(primary, k)` — the placer behind every policy's
+//!   holder list (mirror k=1, nway:K k=K−1, ec:K/M k=K+M) — returns the
+//!   first `min(k, live − 1)` live MNs after the primary in interleave
+//!   order, never the primary, never a dead MN, never a duplicate.
 
 use recxl::mem::{Addr, Line, LineTable};
 use recxl::ptest::{check, knob};
@@ -61,6 +65,21 @@ impl RefPlacer {
             s = (s + 1) % self.n_mns;
         };
         (p, secondary)
+    }
+
+    /// Brute-force holder list: walk the interleave ring from
+    /// `primary + 1`, keeping live MNs, until `k` holders are found or
+    /// the walk wraps back to the primary.
+    fn replica_set(&self, primary: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut m = (primary + 1) % self.n_mns;
+        while m != primary && out.len() < k {
+            if !self.dead[m] {
+                out.push(m);
+            }
+            m = (m + 1) % self.n_mns;
+        }
+        out
     }
 }
 
@@ -141,6 +160,78 @@ fn prop_placement_matches_brute_force_under_cascading_kills() {
                 let rid = replay.lookup(line).expect("interned");
                 if replay.home_mn(rid) != got_p || replay.secondary_mn(got_p) != got_s {
                     return Err(format!("line {i}: replay diverged after kills {killed:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replica_sets_match_brute_force_under_cascading_kills() {
+    // Differential for the policy fan-out placer: for every live
+    // primary and every fan-out width a registered policy can ask for
+    // (mirror 1, nway:3 → 2, ec:2/1 → 3, plus one beyond), the holder
+    // list must equal the brute-force ring walk after each kill in a
+    // random cascade, and must satisfy the placement invariants
+    // independently of the reference.
+    check("replica-set-differential", 128, 0x5E7_5E7, |rng, knobs| {
+        let n_mns = knob(rng, knobs, 0, 2, 8) as usize;
+        let n_kills = knob(rng, knobs, 1, 0, n_mns as u64 - 1) as usize;
+        let mut table = LineTable::new(10, 6, 4, n_mns);
+        let mut reference = RefPlacer::new(n_mns);
+        let mut killed: Vec<usize> = Vec::new();
+        // check after zero kills too, then after each cascade step
+        for k in 0..=n_kills {
+            if k > 0 {
+                let mut mn = (knob(rng, knobs, 1 + k, 0, n_mns as u64 - 1)) as usize;
+                while reference.dead[mn] {
+                    mn = (mn + 1) % n_mns;
+                }
+                table.kill_mn(mn);
+                reference.kill(mn);
+                killed.push(mn);
+            }
+            let live = n_mns - killed.len();
+            for primary in (0..n_mns).filter(|&m| !reference.dead[m]) {
+                for width in 1..=4usize {
+                    let got = table.replica_set(primary, width);
+                    let want = reference.replica_set(primary, width);
+                    if got != want {
+                        return Err(format!(
+                            "primary {primary} k={width} after kills {killed:?}: \
+                             got {got:?}, reference {want:?}"
+                        ));
+                    }
+                    if got.len() != width.min(live - 1) {
+                        return Err(format!(
+                            "primary {primary} k={width}: {} holders with {live} live",
+                            got.len()
+                        ));
+                    }
+                    for &h in &got {
+                        if h == primary || table.is_mn_dead(h) {
+                            return Err(format!(
+                                "primary {primary} k={width}: bad holder {h}"
+                            ));
+                        }
+                    }
+                    let mut dedup = got.clone();
+                    dedup.sort_unstable();
+                    dedup.dedup();
+                    if dedup.len() != got.len() {
+                        return Err(format!(
+                            "primary {primary} k={width}: duplicate holders {got:?}"
+                        ));
+                    }
+                }
+                // the mirror policy's single holder is the legacy secondary
+                if table.replica_set(primary, 1).first().copied()
+                    != table.secondary_mn(primary)
+                {
+                    return Err(format!(
+                        "primary {primary}: replica_set(_, 1) diverges from secondary_mn"
+                    ));
                 }
             }
         }

@@ -1,4 +1,4 @@
-//! The loss-oracle durability harness (cross-MN dump replication).
+//! The loss-oracle durability harness (the `ReplPolicy` layer).
 //!
 //! ReCXL's resilience claim is that every *committed* update survives
 //! any single node failure.  Before dump replication there was a
@@ -6,15 +6,22 @@
 //! whose log entries had been dumped to an MN that later fail-stops —
 //! with no surviving cache copy and the Logging Units already cleared
 //! by the dump — was honestly lost, and the consistency oracle reported
-//! it.  These tests pin both sides of the fix:
+//! it.  PR 9 lifts the fix into a policy layer, and these tests pin the
+//! durability side of its frontier:
 //!
-//! * `dump_repl=1` (default): the `mn-crash-after-dump` scenario and a
-//!   200-case randomized sweep of single-MN-failure plans complete with
-//!   the oracle reporting **zero lost words** — the rebuild fetches the
-//!   surviving secondary dump copies (`FetchDumpChunk`).
-//! * `dump_repl=0` (the paper-faithful baseline): the loss window still
+//! * `repl=mirror` (default, the PR-5 behavior): the
+//!   `mn-crash-after-dump` scenario and a 200-case randomized sweep of
+//!   single-MN-failure plans complete with the oracle reporting **zero
+//!   lost words** — the rebuild fetches the surviving replica dump
+//!   chunks (`FetchDumpChunk`).
+//! * `repl=single` (the paper-faithful baseline): the loss window still
 //!   reproduces, so the regression pin keeps pinning the honest
-//!   behavior the feature exists to fix.
+//!   behavior the policy layer exists to fix.
+//! * `repl=nway:3` and `repl=ec:2/1` both advertise `tolerance() == 2`:
+//!   any two MN failures are loss-free, three near-simultaneous ones
+//!   reopen the window — the policies are distinct *bandwidth* points
+//!   (see `policy_bandwidth_forms_the_frontier`), not distinct
+//!   durability claims.
 //!
 //! The loss recipe, everywhere in this file: a dump period short enough
 //! that several dump cycles (which clear the Logging Units) land before
@@ -27,7 +34,7 @@ use recxl::prelude::*;
 use recxl::proto::MsgClass;
 use recxl::ptest::{check, knob};
 use recxl::scenarios;
-use recxl::sim::time::us;
+use recxl::sim::time::{us, Ps};
 
 /// Shrink the cache hierarchy so written lines actually leave it
 /// (whole-set geometries: 192/512/2048 lines at the stock assocs).
@@ -39,28 +46,28 @@ fn shrink_caches(cfg: &mut SimConfig) {
 
 // ------------------------------------------------------------- scenario
 
-fn scenario_run(dump_repl: bool) -> (SimConfig, RunStats) {
+fn scenario_run(repl: ReplPolicy) -> (SimConfig, RunStats) {
     let sc = scenarios::by_name("mn-crash-after-dump").unwrap();
     let cfg = SimConfig {
         protocol: Protocol::ReCxlProactive,
         ops_per_thread: 6_000,
-        dump_repl,
+        repl,
         ..SimConfig::default()
     };
     let stats = scenarios::run_scenario(&sc, cfg.clone(), &by_name("ycsb").unwrap());
     // verdict() sees the pre-prepare() cfg, exactly like the CLI does
     scenarios::verdict(&sc, &cfg, &stats)
-        .unwrap_or_else(|e| panic!("mn-crash-after-dump (dump_repl={dump_repl}): {e}"));
+        .unwrap_or_else(|e| panic!("mn-crash-after-dump (repl={}): {e}", repl.name()));
     (cfg, stats)
 }
 
 #[test]
 fn mn_crash_after_dump_is_loss_free_with_dump_repl() {
-    let (_, s) = scenario_run(true);
+    let (_, s) = scenario_run(ReplPolicy::Mirror);
     assert!(s.recovery.happened);
     assert!(
         s.recovery.consistent,
-        "oracle reported {} lost/corrupt words with dump_repl=1",
+        "oracle reported {} lost/corrupt words with repl=mirror",
         s.recovery.inconsistencies
     );
     // the new rebuild source must actually have fired: lines whose only
@@ -81,11 +88,11 @@ fn mn_crash_after_dump_is_loss_free_with_dump_repl() {
 
 #[test]
 fn mn_crash_after_dump_reproduces_the_loss_window_without_dump_repl() {
-    let (_, s) = scenario_run(false);
+    let (_, s) = scenario_run(ReplPolicy::Single);
     assert!(s.recovery.happened);
     assert!(
         !s.recovery.consistent,
-        "the documented loss window must reproduce with dump_repl=0 — \
+        "the documented loss window must reproduce with repl=single — \
          a clean run means the regression pin pins nothing"
     );
     assert!(s.recovery.inconsistencies > 0);
@@ -96,13 +103,15 @@ fn mn_crash_after_dump_reproduces_the_loss_window_without_dump_repl() {
 
 #[test]
 fn dump_replication_cost_is_bounded_by_dump_traffic() {
-    // no-fault run: every primary chunk gets exactly one same-sized
-    // secondary copy, so the new class is nonzero but never exceeds the
-    // primary dump class (which additionally carries the sync acks)
+    // no-fault mirror run: every primary chunk gets exactly one
+    // same-sized replica copy, so the class is nonzero but never
+    // exceeds the primary dump class (which additionally carries the
+    // sync acks)
     let mut cfg = SimConfig {
         protocol: Protocol::ReCxlProactive,
         ops_per_thread: 6_000,
         dump_period_ps: us(12),
+        repl: ReplPolicy::Mirror,
         ..SimConfig::default()
     };
     shrink_caches(&mut cfg);
@@ -110,17 +119,71 @@ fn dump_replication_cost_is_bounded_by_dump_traffic() {
     assert!(s.repl.dumps > 0, "the run must actually dump");
     let dump = s.traffic.bytes_of(MsgClass::LogDump);
     let repl = s.traffic.bytes_of(MsgClass::DumpRepl);
-    assert!(repl > 0, "secondary copies must ship");
+    assert!(repl > 0, "replica copies must ship");
     assert!(
         repl <= dump,
-        "replication can at most mirror the dump stream ({repl} vs {dump})"
+        "mirroring can at most double the dump stream ({repl} vs {dump})"
+    );
+}
+
+#[test]
+fn policy_bandwidth_forms_the_frontier() {
+    // The bandwidth axis of the durability-vs-bandwidth frontier, on
+    // one identical no-fault run per policy: single ships nothing;
+    // mirror ships one full copy; ec:2/1 ships two half-size data
+    // stripes plus one ~half-size parity chunk (~1.5x a copy); nway:3
+    // ships two full copies.  The orderings below are what make nway:3
+    // and ec:2/1 *distinct* frontier points at the same tolerance.
+    let mut bytes = std::collections::BTreeMap::new();
+    for repl in ReplPolicy::ALL {
+        let mut cfg = SimConfig {
+            protocol: Protocol::ReCxlProactive,
+            ops_per_thread: 6_000,
+            dump_period_ps: us(12),
+            repl,
+            ..SimConfig::default()
+        };
+        shrink_caches(&mut cfg);
+        let s = run_app(cfg, &by_name("ycsb").unwrap());
+        assert!(s.repl.dumps > 0, "{}: the run must dump", repl.name());
+        bytes.insert(repl.name(), s.traffic.bytes_of(MsgClass::DumpRepl));
+    }
+    assert_eq!(bytes["single"], 0, "single must ship no replica bytes");
+    assert!(bytes["mirror"] > 0);
+    assert!(
+        bytes["locality"] > 0 && bytes["locality"] < bytes["nway:3"],
+        "locality re-ranks targets but still ships one copy per chunk \
+         ({} vs nway {})",
+        bytes["locality"],
+        bytes["nway:3"]
+    );
+    assert!(
+        bytes["nway:3"] > bytes["mirror"],
+        "two copies must cost more than one ({} vs {})",
+        bytes["nway:3"],
+        bytes["mirror"]
+    );
+    assert!(
+        bytes["ec:2/1"] > bytes["mirror"],
+        "stripes + parity must cost more than one copy ({} vs {})",
+        bytes["ec:2/1"],
+        bytes["mirror"]
+    );
+    assert!(
+        bytes["ec:2/1"] < bytes["nway:3"],
+        "erasure coding must undercut 3-way copies at equal tolerance \
+         ({} vs {})",
+        bytes["ec:2/1"],
+        bytes["nway:3"]
     );
 }
 
 // ------------------------------------------------------------- property
 
-/// Small-cluster configuration for the randomized sweep.
-fn sweep_cfg(seed: u64, mn: usize, at_us: u64, dump_repl: bool) -> SimConfig {
+/// Small-cluster configuration for the randomized sweeps.  4 MNs is the
+/// smallest cluster on which every policy in `ReplPolicy::ALL`
+/// validates (`ec:2/1` needs `k + m <= n_mns - 1`).
+fn sweep_cfg(seed: u64, repl: ReplPolicy, faults: FaultPlan) -> SimConfig {
     let mut cfg = SimConfig {
         protocol: Protocol::ReCxlProactive,
         n_cns: 4,
@@ -130,16 +193,20 @@ fn sweep_cfg(seed: u64, mn: usize, at_us: u64, dump_repl: bool) -> SimConfig {
         ops_per_thread: 1_200,
         seed,
         dump_period_ps: us(10),
-        dump_repl,
-        faults: {
-            let mut p = FaultPlan::default();
-            p.push_mn_crash(mn, us(at_us));
-            p
-        },
+        repl,
+        faults,
         ..SimConfig::default()
     };
     shrink_caches(&mut cfg);
     cfg
+}
+
+fn mn_kills(kills: &[(usize, Ps)]) -> FaultPlan {
+    let mut p = FaultPlan::default();
+    for &(mn, at) in kills {
+        p.push_mn_crash(mn, at);
+    }
+    p
 }
 
 #[test]
@@ -147,8 +214,8 @@ fn prop_dump_repl_closes_the_single_mn_failure_loss_window() {
     // 200 randomized (workload seed x fault placement) cases.  The crash
     // lands anywhere from before the first dump boundary (no dumped
     // records yet — trivially safe) to many boundaries deep (dumped-only
-    // records guaranteed); the dead MN is random.  With dump_repl=1 the
-    // oracle must report zero lost words in EVERY case; with dump_repl=0
+    // records guaranteed); the dead MN is random.  With repl=mirror the
+    // oracle must report zero lost words in EVERY case; with repl=single
     // on the same cases, the known loss window must reproduce at least
     // once across the sweep (per-case loss is load-dependent, the
     // aggregate is the regression pin).
@@ -159,7 +226,8 @@ fn prop_dump_repl_closes_the_single_mn_failure_loss_window() {
         let mn = knob(rng, knobs, 1, 0, 3) as usize;
         // dump period is 10 us: 6..=65 us straddles ~6 dump boundaries
         let at = 6 + knob(rng, knobs, 2, 0, 59);
-        let s = run_app(sweep_cfg(seed, mn, at, true), &app);
+        let plan = mn_kills(&[(mn, us(at))]);
+        let s = run_app(sweep_cfg(seed, ReplPolicy::Mirror, plan.clone()), &app);
         if !s.recovery.happened {
             return Err(format!("mn{mn}@{at}us: no recovery completed"));
         }
@@ -171,11 +239,11 @@ fn prop_dump_repl_closes_the_single_mn_failure_loss_window() {
         }
         if !s.recovery.consistent {
             return Err(format!(
-                "mn{mn}@{at}us seed {seed}: {} lost words with dump_repl=1",
+                "mn{mn}@{at}us seed {seed}: {} lost words with repl=mirror",
                 s.recovery.inconsistencies
             ));
         }
-        let s0 = run_app(sweep_cfg(seed, mn, at, false), &app);
+        let s0 = run_app(sweep_cfg(seed, ReplPolicy::Single, plan), &app);
         if !s0.recovery.consistent {
             lossy_without += 1;
         }
@@ -183,7 +251,82 @@ fn prop_dump_repl_closes_the_single_mn_failure_loss_window() {
     });
     assert!(
         lossy_without > 0,
-        "no sweep case reproduced the dump_repl=0 loss window — the \
+        "no sweep case reproduced the repl=single loss window — the \
          property is no longer testing the durability gap it claims to"
     );
+}
+
+#[test]
+fn prop_policies_are_loss_free_within_their_tolerance() {
+    // nway:3 and ec:2/1 both advertise tolerance() == 2: any two MN
+    // failures — even landing inside one detection window, before any
+    // re-replication can restore the invariant — must lose nothing.
+    // Placement guarantees at least one surviving chunk source per dead
+    // bucket: nway keeps a full copy on a survivor, and any two of
+    // ec's surviving holders union to the full record list (parity
+    // chunks carry it whole under the union model).
+    let app = by_name("ycsb").unwrap();
+    for repl in [ReplPolicy::NWay(3), ReplPolicy::Ec(2, 1)] {
+        assert_eq!(repl.tolerance(), 2);
+        let name = format!("durability-{}", repl.name());
+        check(&name, 60, 0x70C_0DE, |rng, knobs| {
+            let seed = knob(rng, knobs, 0, 1, u32::MAX as u64);
+            let first = knob(rng, knobs, 1, 0, 3) as usize;
+            let second = (first + 1 + knob(rng, knobs, 2, 0, 2) as usize) % 4;
+            let at = 6 + knob(rng, knobs, 3, 0, 59);
+            // 0..8 us: straddles the 10 us detection window
+            let gap_ns = knob(rng, knobs, 4, 0, 8_000);
+            let plan = mn_kills(&[(first, us(at)), (second, us(at) + gap_ns * 1_000)]);
+            let s = run_app(sweep_cfg(seed, repl, plan), &app);
+            if !s.recovery.happened {
+                return Err(format!(
+                    "{}: mn{first}+mn{second}@{at}us: no recovery completed",
+                    repl.name()
+                ));
+            }
+            if !s.recovery.consistent {
+                return Err(format!(
+                    "{}: mn{first}+mn{second}@{at}us gap {gap_ns}ns seed {seed}: \
+                     {} lost words within the advertised tolerance",
+                    repl.name(),
+                    s.recovery.inconsistencies
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn kills_above_the_policy_tolerance_reopen_the_loss_window() {
+    // Three near-simultaneous MN deaths exceed tolerance() == 2 for
+    // both nway:3 and ec:2/1.  Killing MNs 1, 2, 3 inside one detection
+    // window leaves only MN 0: nway loses MN 1's bucket outright (its
+    // copies live on MNs 2 and 3), and ec keeps only a single data
+    // stripe of the MN 2 and MN 3 buckets.  Per-case loss is
+    // load-dependent, so the pin is aggregate: across the seed sweep
+    // the window must reproduce at least once per policy — and the
+    // oracle must keep reporting it honestly rather than wedging.
+    let app = by_name("ycsb").unwrap();
+    for repl in [ReplPolicy::NWay(3), ReplPolicy::Ec(2, 1)] {
+        let mut lossy = 0u32;
+        for seed in 0..8u64 {
+            let at = us(36);
+            let plan = mn_kills(&[(1, at), (2, at + 1_000), (3, at + 2_000)]);
+            let s = run_app(sweep_cfg(seed * 7 + 1, repl, plan), &app);
+            assert!(
+                s.recovery.happened,
+                "{}: recovery must complete even above tolerance",
+                repl.name()
+            );
+            if !s.recovery.consistent {
+                lossy += 1;
+            }
+        }
+        assert!(
+            lossy > 0,
+            "{}: no seed reproduced the above-tolerance loss window",
+            repl.name()
+        );
+    }
 }

@@ -7,12 +7,21 @@ baseline (BENCH_baseline.json at the repo root) and fails when
 
 Usage:
     python3 tools/bench_gate.py <fresh.json> <baseline.json> [--max-regress 0.20]
+        [--key full_sim_events_per_sec]
+
+`--key` selects which metric is gated (default the hot-path throughput),
+so the same gate covers other tracked reports — e.g.
+`--key frontier_mirror_dump_repl_bytes` against BENCH_repl_frontier.json
+(for byte-count metrics pair it with a tight --max-regress in *both*
+directions once a baseline exists; the gate itself only floors).
 
 Skips (exit 0, loudly) when:
   * the baseline is missing or marked `pending_first_measurement` — the
     gate arms itself the first time a measured baseline is committed;
   * the quick-mode flags of the two reports differ (quick and full runs
-    must never be naively compared — §Perf rule 3).
+    must never be naively compared — §Perf rule 3);
+  * the baseline exists but lacks the gated `--key` (an older-schema
+    baseline must not fail the first run of a newly tracked metric).
 """
 
 import json
@@ -38,6 +47,9 @@ def main(argv):
     max_regress = 0.20
     if "--max-regress" in argv:
         max_regress = float(argv[argv.index("--max-regress") + 1])
+    name = "full_sim_events_per_sec"
+    if "--key" in argv:
+        name = argv[argv.index("--key") + 1]
 
     fresh = load(argv[1])
     base = load(argv[2])
@@ -59,8 +71,11 @@ def main(argv):
               "quick and full runs are not comparable")
         return 0
 
-    name = "full_sim_events_per_sec"
     f, b = metric(fresh, name), metric(base, name)
+    if b is None:
+        print(f"gate: SKIP — baseline {argv[2]} lacks {name}; "
+              "commit a report with the new schema to arm this key")
+        return 0
     if not f or not b:
         print(f"gate: FAIL — {name} missing (fresh={f}, baseline={b})")
         return 1
