@@ -38,7 +38,12 @@ Parameter vector layout (int32[16]) — kept in sync with
        stream)
     14 near_lo    low-6-bit line residue the steered accesses pin — after
        the line-interleave this residue selects the home memory node
-    15 reserved
+    15 zipf       nonzero = zipfian key skew: random accesses draw from a
+       dyadic zipf(s=1) over the shared footprint (each power-of-two
+       octave of ranks carries equal mass) instead of the hot/uniform
+       split.  0 keeps the stream bit-identical to the historical
+       generator — the open-loop arrival workloads set it, ``arrival=closed``
+       never does.
 
 Op codes: 0 = compute, 1 = load, 2 = store, 3 = lock-acquire
 (``extra = lock_id << 8 | cs_len``; the core model releases the lock after
@@ -116,7 +121,18 @@ def gen_fields(g, seed, params):
     ls_full = mix32(g_run * _U(0x9E3779B1) + t * _U(0x632BE59B))
     line_seq = ls_full & shared_mask
     hot = (r2 >> _U(16)) < p[10]
-    line_rand = jnp.where(hot, r2 & hot_mask, r2 & shared_mask)
+    # Zipfian key skew (p[15] != 0, the open-loop service workload): a
+    # dyadic zipf(s=1) draw — octave k uniform over the shared_log2
+    # levels (multiply-shift on r2's high 16 bits), rank uniform within
+    # the octave from r2's low bits.  Each octave carries equal mass,
+    # which is exactly the zipf(1) octave property.  p[15] = 0 keeps the
+    # stream bit-identical to the pre-zipf generator.
+    k = ((r2 >> _U(16)) * p[6]) >> _U(16)
+    kmask = (_U(1) << k) - _U(1)
+    line_zipf = (kmask + (r2 & kmask)) & shared_mask
+    line_rand = jnp.where(
+        p[15] != _U(0), line_zipf, jnp.where(hot, r2 & hot_mask, r2 & shared_mask)
+    )
     line_sh = jnp.where(seq, line_seq, line_rand)
     # Near-memory steering (p[13]/p[14]): a steered access pins the line's
     # low 6 bits — and with them its home memory node after interleave —
@@ -142,6 +158,36 @@ def gen_fields(g, seed, params):
     lock_id = r3 & _U(63)
     extra = jnp.where(op == _U(3), (lock_id << _U(8)) | p[12], _U(0))
     return op, addr, extra
+
+
+def arrival_e_q16(g, seed, thread):
+    """Q16 "dyadic exponential" inter-arrival draw for global op index ``g``.
+
+    Mirrors ``arrival_e_q16`` in rust/src/workloads/tracegen.rs bit for
+    bit: ``E = (1 + clz(r)) - frac(r)`` over a uniform nonzero uint32
+    ``r`` — clz is the geometric octave (the exponent of ``-log2 u``),
+    frac the Q16 linear remainder of the normalized mantissa.  Exactly
+    ``E[E] = 1.5 * 2^16``; integer-only so no libm ulp can diverge the
+    two implementations.  The ps-domain fold (``mean * e * 2/3 >> 16``)
+    is 64-bit host-side arithmetic in the Rust coordinator and is not
+    mirrored here.
+    """
+    r = mix32(
+        seed ^ _U(0xA511E9B3) ^ (g * _U(0x9E3779B1) + thread * _U(0x85EBCA6B))
+    ) | _U(1)
+    clz = lax.clz(r)  # 0..=31: r | 1 is never zero
+    norm = r << clz  # normalized mantissa in [2^31, 2^32)
+    frac_q16 = (norm & _U(0x7FFFFFFF)) >> _U(15)
+    return ((clz + _U(1)) << _U(16)) - frac_q16
+
+
+def arrival_phase_u16(g, seed, thread):
+    """Uniform u16 phase-selection draw for op ``g`` (burst arrivals pick
+    the short or long hyperexponential phase with it).  Mirrors
+    ``arrival_phase_u16`` in rust/src/workloads/tracegen.rs."""
+    return mix32(
+        seed ^ _U(0x94D049BB) ^ (g * _U(0xC2B2AE35) + thread * _U(0x27D4EB2F))
+    ) >> _U(16)
 
 
 def _kernel(seed_ref, base_ref, params_ref, op_ref, addr_ref, extra_ref):

@@ -1,0 +1,85 @@
+//! Tail-latency bench: the open-loop service workload under increasing
+//! offered load, fault-free and with a CN crash mid-run — the figure-19
+//! sweep captured as a tracked baseline (EXPERIMENTS.md §Tail latency).
+//!
+//! Each point runs the YCSB profile with `arrival=poisson:RATE`
+//! (RATE ops/us offered per CN) and reports the per-op issue->commit
+//! percentiles from the log-bucketed histogram.  The shape CI diffs
+//! across PRs: the crashed run's p999 sits far above its fault-free
+//! twin while p50 barely moves — a recovery pause costs the *tail*,
+//! not the median.
+//!
+//! Emits `BENCH_tail_latency.json` (override with `RECXL_BENCH_OUT`).
+//! `RECXL_BENCH_QUICK=1` shrinks the run for the CI smoke job.
+
+use recxl::benchkit::{header, timed, Report};
+use recxl::cluster::run_app;
+use recxl::config::{ArrivalProcess, FaultPlan, Protocol, SimConfig};
+use recxl::prelude::*;
+use recxl::sim::time::us;
+
+fn main() {
+    let quick = std::env::var("RECXL_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let (ops, rates): (u64, &[f64]) = if quick {
+        (2_000, &[4.0])
+    } else {
+        (8_000, &[2.0, 4.0, 8.0])
+    };
+    let app = by_name("ycsb").unwrap();
+    let mut report = Report::new();
+    header();
+
+    for &rate in rates {
+        for faulty in [false, true] {
+            let cfg = SimConfig {
+                protocol: Protocol::ReCxlProactive,
+                ops_per_thread: ops,
+                arrival: ArrivalProcess::Poisson { rate },
+                faults: if faulty {
+                    FaultPlan::single_crash(0, us(40))
+                } else {
+                    FaultPlan::default()
+                },
+                ..SimConfig::default()
+            };
+            let tag = if faulty { "crash" } else { "clean" };
+            let (stats, secs) = timed(|| run_app(cfg.clone(), &app));
+            let h = &stats.latency.ops;
+            println!(
+                "{tag:>5} @{rate}/us: p50 {:>8.2} us  p99 {:>8.2} us  p999 {:>8.2} us  \
+                 ({} ops, {:.2}s host)",
+                h.p50() as f64 / 1e6,
+                h.p99() as f64 / 1e6,
+                h.p999() as f64 / 1e6,
+                h.count,
+                secs,
+            );
+            let key = |m: &str| format!("{tag}_r{rate}_{m}");
+            report.metric(&key("p50_ps"), h.p50() as f64);
+            report.metric(&key("p99_ps"), h.p99() as f64);
+            report.metric(&key("p999_ps"), h.p999() as f64);
+            report.metric(&key("mean_ps"), h.mean_ps());
+            report.metric(&key("ops"), h.count as f64);
+            if faulty {
+                report.metric(&key("recovery_rounds"), stats.latency.recovery.count as f64);
+                report.metric(
+                    &key("recovery_p50_ps"),
+                    stats.latency.recovery.p50() as f64,
+                );
+                assert!(
+                    stats.recovery.happened && stats.recovery.consistent,
+                    "the crash run must recover cleanly at rate {rate}"
+                );
+            }
+        }
+    }
+    report.metric("ops_per_thread", ops as f64);
+    report.metric("quick", if quick { 1.0 } else { 0.0 });
+
+    let out =
+        std::env::var("RECXL_BENCH_OUT").unwrap_or_else(|_| "BENCH_tail_latency.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+}

@@ -41,7 +41,8 @@ impl Cluster {
             if !remote {
                 // CN-local store: commit at cache speed, no coherence;
                 // the oracle tracks shared memory only
-                let _ = self.cores[id].sb.pop_head().unwrap();
+                let e = self.cores[id].sb.pop_head().unwrap();
+                self.record_store_latency(e.released_at, now);
                 self.stats.repl.store_commits += 1;
                 self.cores[id].stats.l1_hits += 1;
                 continue;
@@ -57,6 +58,7 @@ impl Cluster {
                     let head = self.cores[id].sb.head_mut().unwrap();
                     if head.wt_acked {
                         let e = self.cores[id].sb.pop_head().unwrap();
+                        self.record_store_latency(e.released_at, now);
                         self.commit_oracle(e.lid, e.mask, &e.words, cn, 0);
                         self.stats.repl.store_commits += 1;
                         continue;
@@ -130,6 +132,7 @@ impl Cluster {
         let cn = self.cores[id].cn;
         if self.caches[cn].owns(lid) {
             let e = self.cores[id].sb.pop_head().unwrap();
+            self.record_store_latency(e.released_at, now);
             self.caches[cn].write_words(lid, e.mask, &e.words);
             self.commit_oracle(lid, e.mask, &e.words, cn, 0);
             self.stats.repl.store_commits += 1;
@@ -140,6 +143,16 @@ impl Cluster {
         } else {
             self.ensure_ownership(id, lid, now);
             false
+        }
+    }
+
+    /// Open-loop latency sample for a committed SB entry: release →
+    /// commit pop.  A 0 stamp means closed loop — no sample, the
+    /// histogram stays empty and the run is bit-identical to pre-arrival.
+    #[inline]
+    fn record_store_latency(&mut self, released_at: Ps, now: Ps) {
+        if released_at != 0 {
+            self.stats.latency.ops.record(now.saturating_sub(released_at));
         }
     }
 
@@ -171,6 +184,7 @@ impl Cluster {
         }
         // commit: send VALs, apply to cache, pop (Fig. 3 steps 5-6)
         let e = self.cores[id].sb.pop_head().unwrap();
+        self.record_store_latency(e.released_at, now);
         let reps = replicas(line, cn, self.cfg.n_cns, self.cfg.n_r);
         let local = self.cores[id].local;
         for r in reps {

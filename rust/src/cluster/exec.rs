@@ -47,6 +47,23 @@ impl Cluster {
         }
 
         for _ in 0..QUANTUM {
+            // Open-loop gate: the next op must not start before its
+            // release time (closed loop has no release times — the gate
+            // is inert and the path is bit-identical to before).  A
+            // release within the core's run-ahead skew just idles the
+            // local clock forward; one beyond `now` parks the core until
+            // the op arrives.  The gate sits before the critical-section
+            // countdown, so a CS spans its constituent ops — a lock stays
+            // held across arrival gaps (DESIGN.md "Open-loop arrivals").
+            if let Some(rel) = self.cores[id].trace.next_release() {
+                if rel > self.cores[id].clock {
+                    if rel > now {
+                        self.q.push_at(rel, Ev::Run(id));
+                        return;
+                    }
+                    self.cores[id].clock = rel;
+                }
+            }
             // critical-section bookkeeping: count down and release
             if self.cores[id].cs_remaining > 0 {
                 self.cores[id].cs_remaining -= 1;
@@ -88,11 +105,16 @@ impl Cluster {
             match op {
                 TraceOp::Compute => {
                     self.cores[id].clock += PS_PER_CPU_CYCLE;
+                    self.record_op_latency(id);
                 }
                 TraceOp::Load { addr } => {
                     if !self.do_load(id, Addr(addr)) {
                         return; // blocked on a remote miss
                     }
+                    // loads sample at issue: the core is out-of-order, so
+                    // the op leaves the front end here even if the miss
+                    // completes asynchronously
+                    self.record_op_latency(id);
                 }
                 TraceOp::Store { addr } => {
                     let a = Addr(addr);
@@ -112,6 +134,18 @@ impl Cluster {
         // quantum expired: yield and reschedule at the core's clock
         let at = self.cores[id].clock;
         self.q.push_at(at.max(now), Ev::Run(id));
+    }
+
+    /// Record the just-executed op's release→completion latency (open
+    /// loop only; closed loop keeps the histogram empty).  Stores are
+    /// excluded — they sample at SB-head commit instead (`commit.rs`).
+    #[inline]
+    pub(crate) fn record_op_latency(&mut self, id: usize) {
+        let core = &self.cores[id];
+        if core.trace.open_loop() {
+            let lat = core.clock.saturating_sub(core.trace.last_release());
+            self.stats.latency.ops.record(lat);
+        }
     }
 
     /// Execute a lock acquire or barrier.  Both are fencing operations:
@@ -136,6 +170,7 @@ impl Cluster {
                     // nested acquire in the synthetic stream: treat as
                     // compute (real traces don't nest the same lock)
                     self.cores[id].clock += PS_PER_CPU_CYCLE;
+                    self.record_op_latency(id);
                     return true;
                 }
                 if self.windowed {
@@ -158,6 +193,7 @@ impl Cluster {
                     core.held_lock = Some(lock);
                     core.cs_remaining = cs_len.max(1) as u64;
                     core.clock = clock + self.cfg.net_rtt_ps; // lock RTT
+                    self.record_op_latency(id);
                     true
                 } else {
                     let core = &mut self.cores[id];
@@ -326,7 +362,16 @@ impl Cluster {
             Deposit::Coalesced => {
                 self.stats.repl.stores_coalesced += 1;
             }
-            Deposit::NewEntry => {}
+            Deposit::NewEntry => {
+                // open loop: the entry's commit-latency clock starts at
+                // the allocating store's release time (closed loop keeps
+                // the 0 stamp and commit.rs skips the sample)
+                let core = &self.cores[id];
+                if core.trace.open_loop() {
+                    let rel = core.trace.last_release();
+                    self.cores[id].sb.stamp_tail_release(rel);
+                }
+            }
         }
         // exclusive prefetch: request ownership as soon as the store
         // retires into the SB (Fig. 7 step 1)

@@ -386,12 +386,25 @@ impl Cluster {
     ) -> Self {
         cfg.validate().expect("invalid config");
         let n_threads = cfg.n_threads();
+        // Open-loop service workloads: every trace (live cores, the
+        // pre-intern scan, shard shells — all built here) gets the same
+        // arrival parameters and the zipfian key-skew flag, so the
+        // interned footprint and the op streams always agree.
+        let arrival = cfg.arrival.thread_params(cfg.cores_per_cn);
+        let make_trace = |t: usize| {
+            let mut trace =
+                ThreadTrace::new(cfg.seed as u32, app, t, cfg.cores_per_cn, cfg.ops_per_thread);
+            if let Some(p) = arrival {
+                trace.set_arrival(p);
+                trace.set_zipf();
+            }
+            trace
+        };
         let mut cores = Vec::with_capacity(n_threads);
         for t in 0..n_threads {
             let cn = t / cfg.cores_per_cn;
             let local = t % cfg.cores_per_cn;
-            let trace =
-                ThreadTrace::new(cfg.seed as u32, app, t, cfg.cores_per_cn, cfg.ops_per_thread);
+            let trace = make_trace(t);
             cores.push(Core::new(
                 cn,
                 local,
@@ -438,13 +451,7 @@ impl Cluster {
             let mut scan_src = RustTraceSource;
             for t in 0..n_threads {
                 let cn = t / cfg.cores_per_cn;
-                let mut trace = ThreadTrace::new(
-                    cfg.seed as u32,
-                    app,
-                    t,
-                    cfg.cores_per_cn,
-                    cfg.ops_per_thread,
-                );
+                let mut trace = make_trace(t);
                 while let Some(op) = trace.next_op(&mut scan_src) {
                     if let TraceOp::Load { addr } | TraceOp::Store { addr } = op {
                         let line = Addr(addr).line();
@@ -924,7 +931,12 @@ impl Cluster {
         core.block = Block::None;
         core.held_lock = Some(lock);
         core.cs_remaining = core.pending_cs;
-        let run_at = core.clock.max(self.q.now());
+        if core.trace.open_loop() {
+            // the lock op completes at its grant (open-loop latency sample)
+            let lat = core.clock.saturating_sub(core.trace.last_release());
+            self.stats.latency.ops.record(lat);
+        }
+        let run_at = self.cores[id].clock.max(self.q.now());
         self.q.push_at(run_at, Ev::Run(id));
     }
 

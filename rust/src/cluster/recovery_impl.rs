@@ -44,7 +44,7 @@ use crate::proto::{Message, MsgKind, NodeId, ReqId};
 use crate::recovery::{select_version, VersionList};
 use crate::recxl::logunit::LogRecord;
 use crate::recxl::replica_window;
-use crate::sim::time::lu_cycles;
+use crate::sim::time::{lu_cycles, Ps};
 use crate::stats::RecoveryMsg;
 
 /// Per-MN repair bookkeeping while log responses are outstanding.
@@ -105,6 +105,9 @@ pub struct RecoveryCtrl {
     pub repairs: FxHashMap<MnId, MnRepair>,
     pub rebuilds: FxHashMap<MnId, MnRebuild>,
     pub complete: bool,
+    /// When this round started (MSI fired); a restart re-stamps it, so
+    /// the per-round duration histogram measures each round's own span.
+    pub started_at: Ps,
 }
 
 impl RecoveryCtrl {
@@ -411,6 +414,7 @@ impl Cluster {
             repairs: FxHashMap::default(),
             rebuilds: FxHashMap::default(),
             complete: false,
+            started_at: now,
         });
     }
 
@@ -1267,7 +1271,7 @@ impl Cluster {
 
     pub(crate) fn on_recov_end_resp(&mut self, _cm_cn: CnId, from: CnId, epoch: u64) {
         let now = self.q.now();
-        let (covered, covered_mns) = {
+        let (covered, covered_mns, started_at) = {
             let Some(ctrl) = self.recovery.as_mut() else { return };
             if ctrl.epoch != epoch || ctrl.complete {
                 return;
@@ -1277,7 +1281,7 @@ impl Cluster {
                 return;
             }
             ctrl.complete = true;
-            (ctrl.failed.clone(), ctrl.failed_mns.clone())
+            (ctrl.failed.clone(), ctrl.failed_mns.clone(), ctrl.started_at)
         };
         for f in &covered {
             self.unrecovered.remove(f);
@@ -1293,6 +1297,8 @@ impl Cluster {
         self.stats.recovery.happened = true;
         self.stats.recovery.completed_at = now;
         self.stats.recovery.consistent = self.stats.recovery.inconsistencies == 0;
+        // one sample per completed round: MSI → last RecovEndResp
+        self.stats.latency.recovery.record(now.saturating_sub(started_at));
     }
 
     /// Re-send the coherence requests a dead MN swallowed for `cn`, now

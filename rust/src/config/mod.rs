@@ -208,6 +208,128 @@ impl ReplPolicy {
     }
 }
 
+/// Per-CN arrival process (`--set arrival={closed,poisson:RATE,burst:RATE/CV}`):
+/// how op release times are generated at trace decode.  `closed` (the
+/// default) is the classic back-to-back loop and is bit-identical to the
+/// pre-arrival simulator.  The open processes give each op a release
+/// time drawn from a renewal process at `RATE` ops/µs *per CN*, so a
+/// core that falls behind accumulates queueing delay instead of
+/// self-throttling — the workload shape tail-latency studies need
+/// (DESIGN.md "Open-loop arrivals & latency accounting").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Back-to-back issue; release time = completion of the previous op.
+    Closed,
+    /// Poisson arrivals: exponential inter-arrival gaps, CV = 1.
+    Poisson {
+        /// Offered load in ops/µs per CN (shared by its cores).
+        rate: f64,
+    },
+    /// Bursty arrivals: two-phase hyperexponential gaps with the same
+    /// mean as `poisson:RATE` but coefficient of variation `CV > 1`
+    /// (balanced-means fit), clumping ops into bursts.
+    Burst { rate: f64, cv: f64 },
+}
+
+/// Integer arrival parameters handed to each thread's trace decoder: a
+/// two-phase hyperexponential in ps.  Phase 1 is chosen when the op's
+/// `arrival_phase_u16` draw is below `p1_q16`; the gap is then an
+/// exponential of mean `mean1_ps` (else `mean2_ps`).  Poisson
+/// degenerates to `mean1 = mean2` (the phase draw is immaterial).  All
+/// draws
+/// are counter-based (`tracegen::arrival_gap_ps`), so release times are
+/// a pure function of (seed, thread, op index) — shard-invariant and
+/// mirrored by the jnp kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrivalParams {
+    pub mean1_ps: u64,
+    pub mean2_ps: u64,
+    pub p1_q16: u32,
+}
+
+impl ArrivalProcess {
+    pub fn name(self) -> String {
+        match self {
+            ArrivalProcess::Closed => "closed".to_string(),
+            ArrivalProcess::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalProcess::Burst { rate, cv } => format!("burst:{rate}/{cv}"),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ArrivalProcess> {
+        let s = s.to_ascii_lowercase();
+        let num = |t: &str| -> Option<f64> { t.parse::<f64>().ok().filter(|v| v.is_finite()) };
+        Some(match s.as_str() {
+            "closed" => ArrivalProcess::Closed,
+            _ => {
+                if let Some(r) = s.strip_prefix("poisson:") {
+                    ArrivalProcess::Poisson { rate: num(r)? }
+                } else if let Some(rc) = s.strip_prefix("burst:") {
+                    let (r, c) = rc.split_once('/')?;
+                    ArrivalProcess::Burst {
+                        rate: num(r)?,
+                        cv: num(c)?,
+                    }
+                } else {
+                    return None;
+                }
+            }
+        })
+    }
+
+    /// Open processes generate release times; `closed` does not.
+    pub fn is_open(self) -> bool {
+        !matches!(self, ArrivalProcess::Closed)
+    }
+
+    /// Range checks for the grammar: rates must be positive and sane,
+    /// burst CV at least 1 (an hyperexponential cannot go below the
+    /// exponential's CV) and capped at 16 (beyond that the fitted phase
+    /// probabilities collapse into Q16 rounding noise).
+    pub fn validate(self) -> Result<(), String> {
+        let (rate, cv) = match self {
+            ArrivalProcess::Closed => return Ok(()),
+            ArrivalProcess::Poisson { rate } => (rate, 1.0),
+            ArrivalProcess::Burst { rate, cv } => (rate, cv),
+        };
+        if !(rate > 0.0 && rate <= 1_000_000.0) {
+            return Err(format!(
+                "arrival rate must be in (0, 1e6] ops/us per CN, got {rate}"
+            ));
+        }
+        if !(1.0..=16.0).contains(&cv) {
+            return Err(format!("burst CV must be in [1, 16], got {cv}"));
+        }
+        Ok(())
+    }
+
+    /// Fit the per-thread integer parameters.  `RATE` is per CN, so the
+    /// per-thread mean gap is `cores_per_cn / RATE` µs; the balanced-
+    /// means hyperexponential fit (p = ½(1+√((c²−1)/(c²+1))),
+    /// mᵢ = mean/(2pᵢ)) hits the requested mean exactly and the
+    /// requested CV to fitting accuracy.  Returns `None` for `closed`.
+    pub fn thread_params(self, cores_per_cn: usize) -> Option<ArrivalParams> {
+        let (rate, cv) = match self {
+            ArrivalProcess::Closed => return None,
+            ArrivalProcess::Poisson { rate } => (rate, 1.0),
+            ArrivalProcess::Burst { rate, cv } => (rate, cv),
+        };
+        let mean_ps = cores_per_cn as f64 / rate * 1_000_000.0;
+        let c2 = cv * cv;
+        let p1 = 0.5 * (1.0 + ((c2 - 1.0) / (c2 + 1.0)).sqrt());
+        let p2 = 1.0 - p1;
+        Some(ArrivalParams {
+            mean1_ps: ((mean_ps / (2.0 * p1)).round() as u64).max(1),
+            mean2_ps: if p2 > 0.0 {
+                ((mean_ps / (2.0 * p2)).round() as u64).max(1)
+            } else {
+                1
+            },
+            p1_q16: ((p1 * 65_536.0).round() as u32).min(0x1_0000),
+        })
+    }
+}
+
 /// One cache level's geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheGeom {
@@ -291,6 +413,10 @@ pub struct SimConfig {
     pub partition: PartitionPolicy,
 
     // --- workload ---
+    /// Arrival process (`--set arrival=...`; see [`ArrivalProcess`]).
+    /// `closed` (the default) keeps the classic back-to-back loop and
+    /// is pinned bit-identical to the pre-arrival simulator.
+    pub arrival: ArrivalProcess,
     pub ops_per_thread: u64,
     /// Deterministic barrier insertion period, in ops (0 = no barriers).
     pub barrier_period: u64,
@@ -349,6 +475,7 @@ impl Default for SimConfig {
             repl: ReplPolicy::Mirror,
             shards: 1,
             partition: PartitionPolicy::RoundRobin,
+            arrival: ArrivalProcess::Closed,
             ops_per_thread: 100_000,
             barrier_period: 20_000,
             seed: 0xCE_C5_1,
@@ -426,6 +553,7 @@ impl SimConfig {
             }
             _ => {}
         }
+        self.arrival.validate()?;
         self.faults.validate(self.n_cns, self.n_mns)?;
         Ok(())
     }
@@ -583,6 +711,87 @@ mod tests {
             c.repl = p;
             assert!(c.validate().is_err(), "{} on 4 MNs", p.name());
         }
+    }
+
+    #[test]
+    fn arrival_names_roundtrip_and_closed_is_default() {
+        assert_eq!(SimConfig::default().arrival, ArrivalProcess::Closed);
+        for a in [
+            ArrivalProcess::Closed,
+            ArrivalProcess::Poisson { rate: 2.5 },
+            ArrivalProcess::Burst { rate: 4.0, cv: 3.0 },
+        ] {
+            assert_eq!(ArrivalProcess::from_name(&a.name()), Some(a), "{}", a.name());
+        }
+        assert_eq!(
+            ArrivalProcess::from_name("poisson:0.5"),
+            Some(ArrivalProcess::Poisson { rate: 0.5 })
+        );
+        for bad in [
+            "nonsense",
+            "poisson:",
+            "poisson:x",
+            "poisson:inf",
+            "burst:2",
+            "burst:/3",
+            "burst:2/nan",
+        ] {
+            assert_eq!(ArrivalProcess::from_name(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn arrival_validation_rejects_out_of_range_loads() {
+        for ok in [
+            ArrivalProcess::Closed,
+            ArrivalProcess::Poisson { rate: 0.001 },
+            ArrivalProcess::Poisson { rate: 1_000_000.0 },
+            ArrivalProcess::Burst { rate: 8.0, cv: 1.0 },
+            ArrivalProcess::Burst { rate: 8.0, cv: 16.0 },
+        ] {
+            assert!(ok.validate().is_ok(), "{}", ok.name());
+        }
+        for bad in [
+            ArrivalProcess::Poisson { rate: 0.0 },
+            ArrivalProcess::Poisson { rate: -1.0 },
+            ArrivalProcess::Poisson { rate: 2e6 },
+            ArrivalProcess::Burst { rate: 8.0, cv: 0.5 },
+            ArrivalProcess::Burst { rate: 8.0, cv: 17.0 },
+            ArrivalProcess::Burst { rate: 0.0, cv: 2.0 },
+        ] {
+            assert!(bad.validate().is_err(), "{}", bad.name());
+        }
+        // And through the SimConfig gate.
+        let c = SimConfig {
+            arrival: ArrivalProcess::Poisson { rate: -3.0 },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn arrival_thread_params_fit_the_requested_moments() {
+        assert_eq!(ArrivalProcess::Closed.thread_params(4), None);
+
+        // Poisson at 4 ops/us per CN, 4 cores: per-thread mean gap 1 us.
+        let p = ArrivalProcess::Poisson { rate: 4.0 }.thread_params(4).unwrap();
+        assert_eq!(p.mean1_ps, 1_000_000);
+        assert_eq!(p.mean2_ps, 1_000_000);
+        assert_eq!(p.p1_q16, 32_768, "poisson = balanced phases, equal means");
+
+        // Burst keeps the same overall mean: p1*m1 + p2*m2 == mean.
+        let b = ArrivalProcess::Burst { rate: 4.0, cv: 4.0 }.thread_params(4).unwrap();
+        let p1 = b.p1_q16 as f64 / 65_536.0;
+        let mean = p1 * b.mean1_ps as f64 + (1.0 - p1) * b.mean2_ps as f64;
+        assert!(
+            (mean - 1_000_000.0).abs() < 1_000.0,
+            "fitted mean {mean} != 1us target"
+        );
+        // The short phase dominates in probability, the long phase in mass.
+        assert!(b.p1_q16 > 32_768 && b.mean1_ps < b.mean2_ps);
+        // And the fitted CV^2 comes back out: c2 = 1/(2 p1 p2) - 1.
+        let c2 = 1.0 / (2.0 * p1 * (1.0 - p1)) - 1.0;
+        assert!((c2 - 16.0).abs() < 0.1, "fitted CV^2 {c2} != 16");
     }
 
     #[test]

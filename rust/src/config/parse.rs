@@ -5,7 +5,7 @@
 //! `--config` file; `#` comments allowed).  Keys mirror the `SimConfig`
 //! fields used by the paper's sweeps.
 
-use super::{FaultPlan, PartitionPolicy, Protocol, ReplPolicy, SimConfig};
+use super::{ArrivalProcess, FaultPlan, PartitionPolicy, Protocol, ReplPolicy, SimConfig};
 use crate::sim::time;
 
 /// Apply a single `key=value` override to `cfg`.
@@ -46,6 +46,9 @@ pub fn apply_override(cfg: &mut SimConfig, key: &str, value: &str) -> Result<(),
         "shards" => cfg.shards = num!(),
         "partition" => {
             cfg.partition = PartitionPolicy::from_name(value).ok_or_else(|| bad("partition"))?
+        }
+        "arrival" => {
+            cfg.arrival = ArrivalProcess::from_name(value).ok_or_else(|| bad("arrival"))?
         }
         "ops_per_thread" | "ops" => cfg.ops_per_thread = num!(),
         "barrier_period" => cfg.barrier_period = num!(),
@@ -182,6 +185,31 @@ mod tests {
         apply_override(&mut c, "partition", "rr").unwrap();
         assert_eq!(c.partition, PartitionPolicy::RoundRobin);
         assert!(apply_override(&mut c, "partition", "magic").is_err());
+    }
+
+    #[test]
+    fn arrival_key_applies_and_validates() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.arrival, ArrivalProcess::Closed, "closed loop by default");
+        apply_override(&mut c, "arrival", "poisson:4").unwrap();
+        assert_eq!(c.arrival, ArrivalProcess::Poisson { rate: 4.0 });
+        assert!(c.validate().is_ok());
+        apply_override(&mut c, "arrival", "burst:2.5/3").unwrap();
+        assert_eq!(c.arrival, ArrivalProcess::Burst { rate: 2.5, cv: 3.0 });
+        assert!(c.validate().is_ok());
+        apply_override(&mut c, "arrival", "closed").unwrap();
+        assert_eq!(c.arrival, ArrivalProcess::Closed);
+        // garbage is rejected at parse time...
+        for bad in ["open", "poisson", "poisson:", "burst:4", "burst:4/"] {
+            assert!(apply_override(&mut c, "arrival", bad).is_err(), "{bad}");
+        }
+        // ...and out-of-range loads at validate time.
+        apply_override(&mut c, "arrival", "poisson:0").unwrap();
+        assert!(c.validate().is_err(), "zero rate rejected");
+        apply_override(&mut c, "arrival", "poisson:-2").unwrap();
+        assert!(c.validate().is_err(), "negative rate rejected");
+        apply_override(&mut c, "arrival", "burst:4/0.5").unwrap();
+        assert!(c.validate().is_err(), "CV below the exponential rejected");
     }
 
     #[test]

@@ -28,6 +28,11 @@ pub struct SbEntry {
     pub mask: u16,
     pub words: LineWords,
     pub deposited_at: Ps,
+    /// Open-loop release time of the store that allocated this entry
+    /// (0 = closed loop).  Coalesced stores keep the first constituent's
+    /// release, so commit latency is measured per SB entry from its
+    /// oldest store.
+    pub released_at: Ps,
     /// Per-CN replication sequence, assigned when REPLs are sent.
     pub repl_seq: u64,
     pub repl_sent: bool,
@@ -54,6 +59,7 @@ impl SbEntry {
             mask: 1 << word,
             words,
             deposited_at: now,
+            released_at: 0,
             repl_seq: 0,
             repl_sent: false,
             acks_mask: 0,
@@ -163,6 +169,14 @@ impl StoreBuffer {
         self.entries
             .push_back(SbEntry::new(line, lid, remote, word, value, now));
         Deposit::NewEntry
+    }
+
+    /// Stamp the open-loop release time on the entry a `NewEntry`
+    /// deposit just allocated (closed loop never calls this, leaving 0).
+    pub fn stamp_tail_release(&mut self, released_at: Ps) {
+        if let Some(t) = self.entries.back_mut() {
+            t.released_at = released_at;
+        }
     }
 
     /// ReCXL-proactive: entries whose REPLs should be issued now because a
@@ -276,6 +290,21 @@ mod tests {
         assert_eq!(h.mask, 0b1_0001);
         assert_eq!(h.words[4], 20);
         assert_eq!(h.coalesced, 1);
+    }
+
+    #[test]
+    fn release_stamp_lands_on_the_new_tail_and_survives_coalescing() {
+        let mut b = sb(8, true);
+        b.deposit(rl(1), lid(1), true, 0, 1, 5);
+        b.stamp_tail_release(100);
+        // a coalesced store keeps the first constituent's release
+        assert_eq!(b.deposit(rl(1), lid(1), true, 1, 2, 6), Deposit::Coalesced);
+        assert_eq!(b.head().unwrap().released_at, 100);
+        b.deposit(rl(2), lid(2), true, 0, 3, 7);
+        b.stamp_tail_release(250);
+        assert_eq!(b.head().unwrap().released_at, 100);
+        b.pop_head();
+        assert_eq!(b.head().unwrap().released_at, 250);
     }
 
     #[test]

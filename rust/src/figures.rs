@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use crate::cluster::run_app;
-use crate::config::{FaultPlan, Protocol, SimConfig};
+use crate::config::{ArrivalProcess, FaultPlan, Protocol, SimConfig};
 use crate::proto::MsgClass;
 use crate::report::{gmean, FigureTable};
 use crate::sim::time;
@@ -595,6 +595,65 @@ pub fn fig18(opts: FigOpts) -> FigureTable {
     t
 }
 
+/// Fig. 19 (extension): open-loop tail latency vs offered load, with and
+/// without a CN crash.  Not a figure of the paper — the paper reports
+/// execution-time slowdown only; a service operator cares about what a
+/// recovery pause does to the *latency tail*, so this sweep runs the YCSB
+/// profile under a Poisson arrival stream at increasing offered load
+/// (ops/us per CN), fault-free and with `cn-crash-under-load`'s single
+/// CN crash, and reports the issue->commit percentiles in microseconds.
+/// The expected shape: the crash rows' p999 rises far above the
+/// fault-free twin while p50 barely moves — the backlog drains.
+pub fn fig19_tail_latency(opts: FigOpts) -> FigureTable {
+    let rates = [2.0f64, 4.0, 8.0];
+    let app = crate::workloads::by_name("ycsb").expect("ycsb profile exists");
+    let mut points = Vec::new();
+    for faulty in [false, true] {
+        for &rate in &rates {
+            points.push((
+                SimConfig {
+                    protocol: Protocol::ReCxlProactive,
+                    arrival: ArrivalProcess::Poisson { rate },
+                    faults: if faulty {
+                        FaultPlan::single_crash(0, time::us(40))
+                    } else {
+                        FaultPlan::default()
+                    },
+                    ..opts.base_cfg()
+                },
+                app.clone(),
+            ));
+        }
+    }
+    let results = run_grid(points, opts.parallel);
+    let mut t = FigureTable::new(
+        "Fig 19: open-loop tail latency vs offered load (ycsb, ReCXL-proactive)",
+        vec![
+            "p50-us".into(),
+            "p99-us".into(),
+            "p999-us".into(),
+            "mean-us".into(),
+        ],
+        false,
+    );
+    let us = 1e-6;
+    for (fi, fname) in ["fault-free", "cn-crash"].iter().enumerate() {
+        for (ri, rate) in rates.iter().enumerate() {
+            let r = &results[fi * rates.len() + ri];
+            t.push(
+                &format!("{fname} @{rate}/us"),
+                vec![
+                    r.latency.ops.p50() as f64 * us,
+                    r.latency.ops.p99() as f64 * us,
+                    r.latency.ops.p999() as f64 * us,
+                    r.latency.ops.mean_ps() * us,
+                ],
+            );
+        }
+    }
+    t
+}
+
 /// Scenario sweep: recovery metrics for every named fault scenario on one
 /// app — the resilience companion to the performance figures, used by
 /// `recxl scenarios all`.  `base` carries the user's full configuration
@@ -674,6 +733,7 @@ pub fn by_number(n: u32, opts: FigOpts) -> Option<FigureTable> {
         16 => fig16(opts),
         17 => fig17(opts),
         18 => fig18(opts),
+        19 => fig19_tail_latency(opts),
         _ => return None,
     })
 }

@@ -66,8 +66,10 @@ fn print_help() {
         "recxl — ReCXL cluster simulator (reproduction of 'Towards CXL \
          Resilience to CPU Failures')\n\n\
          commands:\n  \
-         run      [--app NAME] [--protocol P] [--set k=v]... [--config FILE]\n  \
-         figure   <2|10|11|12|13|14|15|16|17|18> [--ops N] [--no-parallel]\n  \
+         run      [--app NAME] [--protocol P] [--set k=v]... [--config FILE]\n           \
+         (--set arrival=closed|poisson:RATE|burst:RATE/CV — open-loop\n           \
+         arrivals at RATE ops/us per CN; closed is the default)\n  \
+         figure   <2|10|11|12|13|14|15|16|17|18|19> [--ops N] [--no-parallel]\n  \
          recover  [--app NAME] [--set faults=cn0@30us,mn2@45us,link:cn3@10us*4x..50us]...\n           \
          crash + recovery demo (cn/mn fail-stop, link degradation windows)\n  \
          scenarios [NAME|all] [--app NAME] [--ops N] [--set k=v]...\n           \
@@ -171,6 +173,18 @@ fn print_run(s: &RunStats) {
         tot(|c| c.lock_wait_ps) as f64 / 1e6,
         tot(|c| c.barrier_wait_ps) as f64 / 1e6,
     );
+    if s.latency.ops.count > 0 {
+        let us = 1e-6;
+        println!(
+            "op latency         : p50 {:.2} us, p99 {:.2} us, p999 {:.2} us, mean {:.2} us, max {:.2} us ({} ops)",
+            s.latency.ops.p50() as f64 * us,
+            s.latency.ops.p99() as f64 * us,
+            s.latency.ops.p999() as f64 * us,
+            s.latency.ops.mean_ps() * us,
+            s.latency.ops.max_ps as f64 * us,
+            s.latency.ops.count
+        );
+    }
     println!(
         "sim throughput     : {:.2} M events/s ({} events, {:.2}s host)",
         s.events_per_sec() / 1e6,
@@ -221,6 +235,14 @@ fn print_run(s: &RunStats) {
             fmt_ps(s.recovery.detection_at),
             fmt_ps(s.recovery.completed_at)
         );
+        if s.latency.recovery.count > 0 {
+            println!(
+                "round durations    : p50 {:.1} us, max {:.1} us over {} round(s)",
+                s.latency.recovery.p50() as f64 / 1e6,
+                s.latency.recovery.max_ps as f64 / 1e6,
+                s.latency.recovery.count
+            );
+        }
         let mut names: Vec<_> = s.recovery.messages.iter().collect();
         names.sort();
         for (n, c) in names {

@@ -13,7 +13,7 @@
 //! round.
 
 use crate::cluster::run_app;
-use crate::config::{CacheGeom, CnId, FaultNode, FaultPlan, SimConfig};
+use crate::config::{ArrivalProcess, CacheGeom, CnId, FaultNode, FaultPlan, SimConfig};
 use crate::sim::time::us;
 use crate::stats::RunStats;
 use crate::workloads::AppProfile;
@@ -226,6 +226,20 @@ pub fn all() -> Vec<Scenario> {
             expects_loss: |cfg| cfg.repl.tolerance() == 0,
         },
         Scenario {
+            name: "cn-crash-under-load",
+            about: "a CN dies under an open-loop Poisson arrival stream; \
+                    ops released during the recovery pause queue behind \
+                    it, so the tail (p999) blows out while the median \
+                    barely moves — the tail-latency-under-faults claim",
+            builder: |_| FaultPlan::single_crash(0, us(40)),
+            // open-loop service workload: 8 ops/us offered per CN
+            // (500 ns mean gap per core at the default 4 cores/CN) —
+            // busy enough that a recovery pause builds a real backlog,
+            // light enough that the fault-free twin keeps its median
+            tweak: |cfg| cfg.arrival = ArrivalProcess::Poisson { rate: 8.0 },
+            expects_loss: never_loses,
+        },
+        Scenario {
             name: "mn-crash-after-dump",
             about: "an MN dies after several dump cycles landed dumped-only \
                     records on it; any replicating policy (mirror/nway/ec/\
@@ -367,7 +381,7 @@ mod tests {
     #[test]
     fn registry_has_the_required_scenarios() {
         let names: Vec<&str> = all().iter().map(|s| s.name).collect();
-        assert!(names.len() >= 11, "need >= 11 named scenarios, got {names:?}");
+        assert!(names.len() >= 12, "need >= 12 named scenarios, got {names:?}");
         for required in [
             "no-crash",
             "single-crash",
@@ -378,6 +392,7 @@ mod tests {
             "mn-crash",
             "link-degraded",
             "mn-crash-during-cn-recovery",
+            "cn-crash-under-load",
             "campaign-cascade",
             "mn-crash-after-dump",
         ] {
@@ -435,6 +450,10 @@ mod tests {
         let mixed = by_name("mn-crash-during-cn-recovery").unwrap().plan(&cfg);
         assert_eq!(mixed.crashed_cns(), vec![0]);
         assert_eq!(mixed.crashed_mns(), vec![cfg.n_mns / 2]);
+        // the load scenario is a plain single crash; the load is a tweak
+        let ul = by_name("cn-crash-under-load").unwrap().plan(&cfg);
+        assert_eq!(ul.crashed_cns(), vec![0]);
+        assert_eq!(ul.crash_count(), 1);
         let after_dump = by_name("mn-crash-after-dump").unwrap().plan(&cfg);
         assert_eq!(after_dump.crashed_mns(), vec![cfg.n_mns / 2]);
         assert_eq!(after_dump.crash_count(), 1);
@@ -460,6 +479,23 @@ mod tests {
         assert_eq!(cfg.faults.crashed_mns(), vec![cfg.n_mns / 2]);
         // crash lands after several dump periods
         assert!(cfg.faults.events()[0].at > 5 * cfg.dump_period_ps);
+    }
+
+    #[test]
+    fn under_load_tweak_opens_the_loop_and_still_validates() {
+        let sc = by_name("cn-crash-under-load").unwrap();
+        let mut cfg = SimConfig::default();
+        sc.prepare(&mut cfg);
+        assert_eq!(cfg.arrival, ArrivalProcess::Poisson { rate: 8.0 });
+        assert!(cfg.arrival.is_open());
+        cfg.validate().expect("tweaked config must stay valid");
+        // every *other* scenario stays closed-loop — the bit-identity
+        // pin for arrival=closed covers them all
+        for sc in all().into_iter().filter(|s| s.name != "cn-crash-under-load") {
+            let mut c = SimConfig::default();
+            sc.prepare(&mut c);
+            assert_eq!(c.arrival, ArrivalProcess::Closed, "{}", sc.name);
+        }
     }
 
     #[test]

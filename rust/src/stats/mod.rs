@@ -27,6 +27,10 @@ pub struct TrafficStats {
     /// `timeline[i][c]` = bytes of class `c` sent in
     /// `[i * TRAFFIC_BUCKET_PS, (i+1) * TRAFFIC_BUCKET_PS)`.
     timeline: Vec<[u64; MsgClass::COUNT]>,
+    /// Latest record time seen — the saturated final bucket folds all
+    /// traffic past the cap into itself, so its bandwidth divisor is the
+    /// span it actually covers, not one `TRAFFIC_BUCKET_PS`.
+    last_record_ps: Ps,
 }
 
 impl TrafficStats {
@@ -34,6 +38,7 @@ impl TrafficStats {
         let c = class.idx();
         self.bytes[c] += bytes as u64;
         self.messages[c] += 1;
+        self.last_record_ps = self.last_record_ps.max(now);
         let b = ((now / TRAFFIC_BUCKET_PS) as usize).min(TIMELINE_MAX_BUCKETS - 1);
         if b >= self.timeline.len() {
             self.timeline.resize(b + 1, [0; MsgClass::COUNT]);
@@ -71,11 +76,39 @@ impl TrafficStats {
 
     /// Bandwidth of a class per timeline bucket, in GB/s — the Fig. 14
     /// time-series.
+    ///
+    /// Every bucket but the last covers exactly `TRAFFIC_BUCKET_PS`.  A
+    /// *saturated* final bucket (the timeline hit `TIMELINE_MAX_BUCKETS`)
+    /// holds all traffic from the cap onward, so it divides by its actual
+    /// covered span — cap start through the last record — instead of
+    /// inflating the tail of long-run series by pretending one bucket
+    /// width absorbed it all.
     pub fn timeline_gbps(&self, class: MsgClass) -> Vec<f64> {
+        let c = class.idx();
+        let saturated = self.timeline.len() == TIMELINE_MAX_BUCKETS;
+        let last = self.timeline.len().wrapping_sub(1);
         self.timeline
             .iter()
-            .map(|b| b[class.idx()] as f64 / TRAFFIC_BUCKET_PS as f64 * 1_000.0)
+            .enumerate()
+            .map(|(i, b)| {
+                let span = if saturated && i == last {
+                    self.cap_span_ps()
+                } else {
+                    TRAFFIC_BUCKET_PS
+                };
+                b[c] as f64 / span as f64 * 1_000.0
+            })
             .collect()
+    }
+
+    /// Span actually covered by the saturated cap bucket: from the cap
+    /// bucket's start time through the latest record (inclusive), never
+    /// less than one nominal bucket width.
+    fn cap_span_ps(&self) -> Ps {
+        let cap_start = (TIMELINE_MAX_BUCKETS as Ps - 1) * TRAFFIC_BUCKET_PS;
+        (self.last_record_ps + 1)
+            .saturating_sub(cap_start)
+            .max(TRAFFIC_BUCKET_PS)
     }
 
     /// Fold another counter set into this one.  The sharded engine keeps
@@ -95,6 +128,154 @@ impl TrafficStats {
                 dst[c] += src[c];
             }
         }
+        // two shards that each saturated the cap bucket must merge to the
+        // same series as a serial run: the cap's covered span is the max
+        // of the shards' last record times
+        self.last_record_ps = self.last_record_ps.max(other.last_record_ps);
+    }
+}
+
+// ------------------------------------------------------------- latency --
+
+/// Number of log-linear latency buckets: values below 32 ps map exactly,
+/// larger values split each power-of-two octave into 16 sub-buckets
+/// (~6% relative resolution), saturating at the final bucket
+/// (≥ 2^50 ps ≈ 18 simulated minutes).
+pub const LAT_BUCKETS: usize = 32 + (LAT_MAX_MSB - 5 + 1) * 16;
+const LAT_MAX_MSB: usize = 49;
+
+/// A log-bucketed latency histogram.  Merging two histograms is exact
+/// bucket-count addition, so sharded runs report identical percentiles
+/// to their serial twins (every sample is recorded on exactly one shard
+/// and `absorb` sums the counts).
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    pub count: u64,
+    pub sum_ps: u128,
+    pub max_ps: Ps,
+    buckets: [u64; LAT_BUCKETS],
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            count: 0,
+            sum_ps: 0,
+            max_ps: 0,
+            buckets: [0; LAT_BUCKETS],
+        }
+    }
+}
+
+/// Bucket index for a latency value.
+fn lat_bucket(v: Ps) -> usize {
+    if v < 32 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize;
+    if msb > LAT_MAX_MSB {
+        return LAT_BUCKETS - 1;
+    }
+    32 + (msb - 5) * 16 + ((v >> (msb - 4)) & 15) as usize
+}
+
+/// Representative value (bucket midpoint) for a bucket index — the value
+/// percentile queries report.
+fn lat_bucket_rep(idx: usize) -> Ps {
+    if idx < 32 {
+        return idx as Ps;
+    }
+    let oct = (idx - 32) / 16;
+    let sub = ((idx - 32) % 16) as Ps;
+    let msb = oct + 5;
+    let width = 1u64 << (msb - 4);
+    (1u64 << msb) + sub * width + width / 2
+}
+
+impl LatencyHist {
+    #[inline]
+    pub fn record(&mut self, v: Ps) {
+        self.count += 1;
+        self.sum_ps += v as u128;
+        self.max_ps = self.max_ps.max(v);
+        self.buckets[lat_bucket(v)] += 1;
+    }
+
+    pub fn absorb(&mut self, other: &LatencyHist) {
+        self.count += other.count;
+        self.sum_ps += other.sum_ps;
+        self.max_ps = self.max_ps.max(other.max_ps);
+        for (d, s) in self.buckets.iter_mut().zip(&other.buckets) {
+            *d += s;
+        }
+    }
+
+    pub fn mean_ps(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ps as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` (0 < q <= 1), to bucket resolution.  Returns
+    /// 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> Ps {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return lat_bucket_rep(i);
+            }
+        }
+        self.max_ps
+    }
+
+    pub fn p50(&self) -> Ps {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> Ps {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> Ps {
+        self.quantile(0.999)
+    }
+
+    /// Raw bucket counts (machine-readable reporting).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+}
+
+/// Per-op and recovery latency distributions.
+///
+/// `ops` holds one sample per trace op: release→completion, where release
+/// is the op's arrival time under an open-loop process (the core's own
+/// clock under `arrival=closed`) and completion is commit for stores
+/// (the SB pop — the full replication path) and execution for everything
+/// else.  `recovery` holds one sample per completed recovery round
+/// (round start → RecovEndResp quorum).
+///
+/// Deliberately *not* part of `schedule_fingerprint`: latency accounting
+/// never feeds back into the schedule (same precedent as
+/// `ShardingStats`), but it *is* transported by `RunStats::absorb_shard`
+/// so sharded runs report identical percentiles.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    pub ops: LatencyHist,
+    pub recovery: LatencyHist,
+}
+
+impl LatencyStats {
+    pub fn absorb(&mut self, other: &LatencyStats) {
+        self.ops.absorb(&other.ops);
+        self.recovery.absorb(&other.recovery);
     }
 }
 
@@ -407,6 +588,8 @@ pub struct RunStats {
     pub recovery: RecoveryStats,
     /// Cross-shard traffic ledger (all zero when `shards=1`).
     pub sharding: ShardingStats,
+    /// Per-op and recovery-round latency distributions.
+    pub latency: LatencyStats,
     /// Host-side wall time of the simulation itself (perf accounting).
     pub host_wall_s: f64,
     pub events: u64,
@@ -427,6 +610,7 @@ impl RunStats {
         self.traffic.absorb(&other.traffic);
         self.repl.absorb_shard(&other.repl);
         self.sharding.absorb_shard(&other.sharding);
+        self.latency.absorb(&other.latency);
         // the one recovery counter reachable in windowed execution:
         // post-recovery dump re-mirroring rides ordinary DumpChunks
         self.recovery.rereplicated_chunks += other.recovery.rereplicated_chunks;
@@ -514,6 +698,34 @@ mod tests {
     }
 
     #[test]
+    fn cap_bucket_gbps_divides_by_its_covered_span() {
+        // Regression pin: the saturated final bucket folds all traffic
+        // past the cap into itself, so its GB/s divisor is cap start →
+        // last record, not one TRAFFIC_BUCKET_PS (which inflated the
+        // tail of every long-run bandwidth series).
+        let mut t = TrafficStats::default();
+        let far = TRAFFIC_BUCKET_PS * (TIMELINE_MAX_BUCKETS as u64 + 50);
+        t.record(far, MsgClass::LogDump, 64);
+        t.record(far + TRAFFIC_BUCKET_PS, MsgClass::LogDump, 64);
+        let series = t.timeline_gbps(MsgClass::LogDump);
+        assert_eq!(series.len(), TIMELINE_MAX_BUCKETS);
+        let cap_start = (TIMELINE_MAX_BUCKETS as u64 - 1) * TRAFFIC_BUCKET_PS;
+        let span = (far + TRAFFIC_BUCKET_PS + 1 - cap_start) as f64;
+        let want = 128.0 / span * 1_000.0;
+        let got = series[TIMELINE_MAX_BUCKETS - 1];
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+        // the old (wrong) answer divided by a single bucket width
+        let wrong = 128.0 / TRAFFIC_BUCKET_PS as f64 * 1_000.0;
+        assert!(got < wrong / 10.0, "cap bucket must not report {wrong}");
+        // unsaturated timelines keep the per-bucket divisor, last included
+        let mut short = TrafficStats::default();
+        short.record(0, MsgClass::LogDump, 50);
+        short.record(TRAFFIC_BUCKET_PS * 3, MsgClass::LogDump, 50);
+        let s = short.timeline_gbps(MsgClass::LogDump);
+        assert!((s[3] - 50.0 / TRAFFIC_BUCKET_PS as f64 * 1_000.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn absorb_merges_counters_and_timeline() {
         let mut a = TrafficStats::default();
         a.record(0, MsgClass::CxlAccess, 10);
@@ -526,6 +738,29 @@ mod tests {
         assert_eq!(a.bytes_of(MsgClass::Replication), 100);
         assert_eq!(a.timeline_bytes(MsgClass::CxlAccess), vec![15, 0, 0]);
         assert_eq!(a.timeline_bytes(MsgClass::Replication), vec![0, 0, 100]);
+
+        // cap-straddling records: two shards that each saturate the cap
+        // bucket must merge to the same gbps series as a serial run that
+        // saw every record
+        let far = TRAFFIC_BUCKET_PS * (TIMELINE_MAX_BUCKETS as u64 + 9);
+        let farther = far + 7 * TRAFFIC_BUCKET_PS;
+        let mut serial = TrafficStats::default();
+        serial.record(far, MsgClass::LogDump, 64);
+        serial.record(farther, MsgClass::LogDump, 64);
+        let mut sh0 = TrafficStats::default();
+        sh0.record(farther, MsgClass::LogDump, 64); // later record first
+        let mut sh1 = TrafficStats::default();
+        sh1.record(far, MsgClass::LogDump, 64);
+        sh0.absorb(&sh1);
+        assert_eq!(
+            sh0.timeline_bytes(MsgClass::LogDump),
+            serial.timeline_bytes(MsgClass::LogDump)
+        );
+        assert_eq!(
+            sh0.timeline_gbps(MsgClass::LogDump),
+            serial.timeline_gbps(MsgClass::LogDump),
+            "merged cap span must equal the serial run's"
+        );
     }
 
     #[test]
@@ -582,6 +817,10 @@ mod tests {
         shell.sharding.cross_shard_oracle_commits = 31;
         // recovery: the one windowed-reachable counter
         shell.recovery.rereplicated_chunks = 40;
+        // latency: both histograms must survive the merge
+        shell.latency.ops.record(50);
+        shell.latency.ops.record(70);
+        shell.latency.recovery.record(1_000);
 
         let mut base = RunStats::default();
         base.repl.max_dram_log_bytes = vec![100, 1];
@@ -620,9 +859,87 @@ mod tests {
             (0..MsgClass::COUNT as u64).map(|i| 20 + i).sum::<u64>()
         );
         assert_eq!(base.recovery.rereplicated_chunks, 40);
+        assert_eq!(base.latency.ops.count, 2);
+        assert_eq!(base.latency.ops.max_ps, 70);
+        assert_eq!(base.latency.recovery.count, 1);
         // deliberately NOT transported: finalize derives it from the
         // merged Logging Units (see ReplStats::absorb_shard)
         assert_eq!(base.repl.sram_backpressure, 0);
+    }
+
+    #[test]
+    fn latency_buckets_are_monotone_and_cover_the_range() {
+        // exact below 32, then log-linear; bucket index must be monotone
+        // in the value and every bucket's representative must land in it
+        let mut prev = 0usize;
+        for shift in 0..64u32 {
+            for off in [0u64, 1, 3] {
+                let v = (1u64 << shift).saturating_add(off << shift.saturating_sub(3));
+                let b = lat_bucket(v);
+                assert!(b >= prev || v < 32, "bucket not monotone at {v}");
+                assert!(b < LAT_BUCKETS);
+                prev = prev.max(b);
+            }
+        }
+        for v in 0..32u64 {
+            assert_eq!(lat_bucket(v), v as usize, "linear region is exact");
+            assert_eq!(lat_bucket_rep(v as usize), v);
+        }
+        for idx in 32..LAT_BUCKETS - 1 {
+            let rep = lat_bucket_rep(idx);
+            assert_eq!(lat_bucket(rep), idx, "rep of bucket {idx} maps back");
+        }
+        // saturating tail
+        assert_eq!(lat_bucket(u64::MAX), LAT_BUCKETS - 1);
+    }
+
+    #[test]
+    fn latency_quantiles_report_to_bucket_resolution() {
+        let mut h = LatencyHist::default();
+        for v in 1..=1000u64 {
+            h.record(v * 1_000); // 1 us .. 1 ms
+        }
+        assert_eq!(h.count, 1000);
+        assert_eq!(h.max_ps, 1_000_000);
+        // log-linear buckets are ~6% wide; allow 2 bucket widths
+        let p50 = h.p50();
+        assert!(
+            (p50 as f64 - 500_000.0).abs() / 500_000.0 < 0.15,
+            "p50 = {p50}"
+        );
+        let p99 = h.p99();
+        assert!(
+            (p99 as f64 - 990_000.0).abs() / 990_000.0 < 0.15,
+            "p99 = {p99}"
+        );
+        assert!(h.p999() >= p99 && p99 >= p50, "quantiles are ordered");
+        assert!((h.mean_ps() - 500_500.0).abs() < 1.0, "mean is exact");
+        // empty histogram reports zeros
+        let empty = LatencyHist::default();
+        assert_eq!(empty.quantile(0.99), 0);
+        assert_eq!(empty.mean_ps(), 0.0);
+    }
+
+    #[test]
+    fn latency_absorb_equals_the_serial_histogram() {
+        // sharded percentile invariance in miniature: recording a sample
+        // set split across two histograms and merging must reproduce the
+        // single-histogram percentiles exactly
+        let mut serial = LatencyHist::default();
+        let mut a = LatencyHist::default();
+        let mut b = LatencyHist::default();
+        for i in 0..500u64 {
+            let v = 37 + i * i * 13;
+            serial.record(v);
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+        }
+        a.absorb(&b);
+        assert_eq!(a.count, serial.count);
+        assert_eq!(a.sum_ps, serial.sum_ps);
+        assert_eq!(a.max_ps, serial.max_ps);
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), serial.quantile(q), "q={q}");
+        }
     }
 
     #[test]

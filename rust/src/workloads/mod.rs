@@ -25,6 +25,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use rustc_hash::FxHashMap;
 
+use crate::config::ArrivalParams;
+use crate::sim::time::Ps;
+
 pub use profiles::{all_apps, by_name, AppProfile};
 pub use tracegen::{RawOp, TraceOp, N_OPS, NUM_PARAMS};
 
@@ -135,6 +138,16 @@ pub struct ThreadTrace {
     barrier_period: u64,
     /// True once the barrier for the current period boundary was emitted.
     barrier_emitted: bool,
+    /// Thread index, the per-stream component of the arrival counters.
+    thread: u32,
+    /// Open-loop arrival parameters (`None` = closed loop; see
+    /// [`crate::config::ArrivalProcess`]).
+    arrival: Option<ArrivalParams>,
+    /// Release-time prefix sum: after handing out op `i`, `acc` is
+    /// `Σ gap(0..=i)` — op `i`'s release time.  Gaps are a pure function
+    /// of the op index (`tracegen::arrival_gap_ps`), so `rewind_one` can
+    /// subtract the same gap back out exactly.
+    acc: Ps,
 }
 
 impl ThreadTrace {
@@ -156,7 +169,59 @@ impl ThreadTrace {
             limit,
             barrier_period: app.barrier_period,
             barrier_emitted: false,
+            thread: thread as u32,
+            arrival: None,
+            acc: 0,
         }
+    }
+
+    /// Install the open-loop arrival process (builder-style; the trace
+    /// stays closed-loop when this is never called).
+    pub fn set_arrival(&mut self, p: ArrivalParams) {
+        self.arrival = Some(p);
+    }
+
+    /// This trace carries release times (an arrival process is installed).
+    pub fn open_loop(&self) -> bool {
+        self.arrival.is_some()
+    }
+
+    /// Enable the kernel's zipfian key-skew branch (`params[15]`; see
+    /// `tracegen::gen_one`).  Service workloads pair skewed keys with
+    /// open-loop arrivals; the flag joins the trace-memo key, so cached
+    /// blocks never leak across the setting.
+    pub fn set_zipf(&mut self) {
+        self.params[NUM_PARAMS - 1] = 1;
+    }
+
+    /// The inter-arrival gap ahead of op `idx` — a pure counter-based
+    /// draw, recomputable at any time.
+    fn gap(&self, idx: u64) -> Ps {
+        let p = self.arrival.expect("gap() requires an open-loop trace");
+        tracegen::arrival_gap_ps(
+            idx as u32,
+            self.seed,
+            self.thread,
+            p.mean1_ps,
+            p.mean2_ps,
+            p.p1_q16,
+        )
+    }
+
+    /// Release time of the next un-consumed op: `None` in closed loop or
+    /// at the trace limit.  The core must not start the op before this.
+    pub fn next_release(&self) -> Option<Ps> {
+        self.arrival?;
+        if self.done() {
+            return None;
+        }
+        Some(self.acc + self.gap(self.next))
+    }
+
+    /// Release time of the most recently delivered op (0 before the
+    /// first, or in closed loop) — the latency clock's start.
+    pub fn last_release(&self) -> Ps {
+        self.acc
     }
 
     pub fn done(&self) -> bool {
@@ -191,6 +256,9 @@ impl ThreadTrace {
             self.buf_base = base;
         }
         let op = self.buf[(idx - base) as usize].decode();
+        if self.arrival.is_some() {
+            self.acc += self.gap(idx);
+        }
         self.next += 1;
         self.barrier_emitted = false;
         Some(op)
@@ -207,6 +275,9 @@ impl ThreadTrace {
     pub fn rewind_one(&mut self) {
         debug_assert!(self.next > 0);
         self.next -= 1;
+        if self.arrival.is_some() {
+            self.acc -= self.gap(self.next);
+        }
         self.barrier_emitted = true;
     }
 }
@@ -290,6 +361,79 @@ mod tests {
         let second = pull();
         assert_eq!(first, second, "cache hit must replay identically");
         assert_eq!(&first[..], &direct[..64]);
+    }
+
+    #[test]
+    fn closed_loop_has_no_release_times() {
+        let mut src = RustTraceSource;
+        let mut t = ThreadTrace::new(1, &tiny_app(0), 0, 4, 10);
+        assert_eq!(t.next_release(), None);
+        t.next_op(&mut src);
+        assert_eq!(t.next_release(), None);
+        assert_eq!(t.last_release(), 0);
+    }
+
+    #[test]
+    fn open_loop_releases_accumulate_and_rewind_exactly() {
+        // poisson at 1 op/us per thread: equal means, balanced phases
+        let params = ArrivalParams {
+            mean1_ps: 1_000_000,
+            mean2_ps: 1_000_000,
+            p1_q16: 32_768,
+        };
+        let mut src = RustTraceSource;
+        let mut t = ThreadTrace::new(5, &tiny_app(0), 2, 4, 200);
+        t.set_arrival(params);
+        let mut prev = 0;
+        let mut releases = vec![];
+        loop {
+            let Some(rel) = t.next_release() else { break };
+            assert!(rel > prev, "gaps are nonzero, releases strictly increase");
+            t.next_op(&mut src).unwrap();
+            assert_eq!(t.last_release(), rel, "last_release = the op just issued");
+            releases.push(rel);
+            prev = rel;
+        }
+        assert_eq!(releases.len(), 200, "every op got a release time");
+        assert!(t.done() && t.next_release().is_none());
+
+        // offered load comes back out: mean gap ~ the requested 1 us
+        let mean = *releases.last().unwrap() as f64 / 200.0;
+        assert!(
+            (mean - 1.0e6).abs() < 0.3e6,
+            "mean inter-arrival {mean} ps != ~1us"
+        );
+
+        // rewind restores the prefix sum bit-exactly (gaps are pure
+        // functions of the op index, recomputed on the way back)
+        let last = *releases.last().unwrap();
+        t.rewind_one();
+        assert_eq!(t.next_release(), Some(last));
+        assert_eq!(t.last_release(), releases[198]);
+        t.next_op(&mut src);
+        assert_eq!(t.last_release(), last);
+    }
+
+    #[test]
+    fn arrival_streams_differ_by_thread_but_not_by_run() {
+        let pull = |thread: usize, seed: u32| {
+            let params = ArrivalParams {
+                mean1_ps: 500_000,
+                mean2_ps: 2_000_000,
+                p1_q16: 50_000,
+            };
+            let mut src = RustTraceSource;
+            let mut t = ThreadTrace::new(seed, &tiny_app(0), thread, 4, 50);
+            t.set_arrival(params);
+            let mut rel = vec![];
+            while t.next_op(&mut src).is_some() {
+                rel.push(t.last_release());
+            }
+            rel
+        };
+        assert_eq!(pull(3, 9), pull(3, 9), "deterministic per (seed, thread)");
+        assert_ne!(pull(3, 9), pull(4, 9), "threads draw independent streams");
+        assert_ne!(pull(3, 9), pull(3, 10), "seeds draw independent streams");
     }
 
     #[test]

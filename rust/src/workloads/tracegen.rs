@@ -91,7 +91,22 @@ pub fn gen_one(g: u32, seed: u32, p: &[i32; NUM_PARAMS]) -> RawOp {
     );
     let line_seq = ls_full & shared_mask;
     let hot = (r2 >> 16) < pu(10);
-    let line_rand = if hot { r2 & hot_mask } else { r2 & shared_mask };
+    // Zipfian key skew (p[15] != 0, the open-loop service workload): a
+    // dyadic zipf(s=1) draw — each power-of-two octave of ranks carries
+    // equal probability mass, which is exactly the zipf(1) octave
+    // property — replaces the hot-set/uniform split for random accesses.
+    // The octave is uniform over the shared_log2 levels (multiply-shift
+    // on r2's high 16 bits), the rank uniform within the octave from
+    // r2's low bits.  p[15] = 0 keeps the stream bit-identical to the
+    // pre-zipf generator.
+    let line_rand = if pu(15) != 0 {
+        let k = ((r2 >> 16).wrapping_mul(pu(6))) >> 16;
+        ((1u32 << k) - 1).wrapping_add(r2 & ((1u32 << k) - 1)) & shared_mask
+    } else if hot {
+        r2 & hot_mask
+    } else {
+        r2 & shared_mask
+    };
     let line_sh = if seq { line_seq } else { line_rand };
     // Near-memory steering (p[13] = probability, p[14] = target residue):
     // a steered remote access pins the line's low 6 bits — and with them,
@@ -131,6 +146,61 @@ pub fn gen_block(seed: u32, base: u32, p: &[i32; NUM_PARAMS]) -> Vec<RawOp> {
     (0..N_OPS as u32)
         .map(|i| gen_one(base.wrapping_add(i), seed, p))
         .collect()
+}
+
+// --------------------------------------------------- arrival process --
+
+/// Q16 fixed-point "dyadic exponential" inter-arrival draw for op `g` of
+/// `thread` — the open-loop arrival process primitive, mirrored by
+/// `arrival_e_q16` in the Python kernel module.
+///
+/// `E = (1 + clz(r)) - frac(r)` where `r` is a uniform nonzero u32, `clz`
+/// its leading-zero count (the geometric octave, like the exponent of
+/// `-log2 u`) and `frac` the Q16 linear remainder of its normalized
+/// mantissa.  Exactly `E[E] = 1.5` (clz contributes 1, frac 0.5), with
+/// the geometric heavy tail of Exp(1); callers divide by 1.5 to hit a
+/// target mean.  Integer-only on purpose: the jnp mirror stays
+/// bit-identical with no libm in sight, and a release schedule is a pure
+/// function of `(seed, thread, op index)` — random access, no carried
+/// state, same contract as the trace stream itself.
+#[inline]
+pub fn arrival_e_q16(g: u32, seed: u32, thread: u32) -> u32 {
+    let r = mix32(
+        seed ^ 0xA511_E9B3
+            ^ g.wrapping_mul(0x9E37_79B1)
+                .wrapping_add(thread.wrapping_mul(0x85EB_CA6B)),
+    ) | 1;
+    let clz = r.leading_zeros(); // 0..=31 (r | 1 is never zero)
+    let norm = r << clz; // normalized mantissa in [2^31, 2^32)
+    let frac_q16 = (norm & 0x7FFF_FFFF) >> 15; // (norm - 2^31) / 2^31, Q16
+    ((clz + 1) << 16) - frac_q16
+}
+
+/// Uniform u16 phase-selection draw for op `g` (burst arrivals pick the
+/// short or long hyperexponential phase with it).  Mirrored by
+/// `arrival_phase_u16` in the Python kernel module.
+#[inline]
+pub fn arrival_phase_u16(g: u32, seed: u32, thread: u32) -> u32 {
+    mix32(
+        seed ^ 0x94D0_49BB
+            ^ g.wrapping_mul(0xC2B2_AE35)
+                .wrapping_add(thread.wrapping_mul(0x27D4_EB2F)),
+    ) >> 16
+}
+
+/// Inter-arrival gap in ps for op `g`: a two-phase hyperexponential with
+/// phase-1 probability `p1_q16` (Q16) and per-phase means
+/// `mean1_ps`/`mean2_ps`.  Poisson arrivals use `p1_q16 = 0x10000` with
+/// both means equal.  The `* 2 / 3` folds out the sampler's exact 1.5
+/// mean, so `E[gap] = p1 * mean1 + (1 - p1) * mean2`.
+#[inline]
+pub fn arrival_gap_ps(g: u32, seed: u32, thread: u32, mean1_ps: u64, mean2_ps: u64, p1_q16: u32) -> u64 {
+    let mean = if arrival_phase_u16(g, seed, thread) < p1_q16 {
+        mean1_ps
+    } else {
+        mean2_ps
+    };
+    (mean * arrival_e_q16(g, seed, thread) as u64 * 2 / 3) >> 16
 }
 
 #[cfg(test)]
@@ -251,6 +321,86 @@ mod tests {
             }
         }
         assert!(some_steered && some_unsteered, "p = 0.5 must mix");
+    }
+
+    #[test]
+    fn zero_zipf_param_is_bit_identical() {
+        // p[15] = 0 must reproduce the pre-zipf stream exactly — this is
+        // what keeps `arrival=closed` (and every existing app profile)
+        // bit-identical to the historical generator and golden digests.
+        let mut p = GOLDEN_PARAMS;
+        p[15] = 1;
+        let a = gen_block(42, 4096, &GOLDEN_PARAMS);
+        let b = gen_block(42, 4096, &p);
+        assert_ne!(a, b, "the zipf gate must actually change the stream");
+        assert_eq!(
+            gen_block(42, 4096, &GOLDEN_PARAMS),
+            gen_block(42, 4096, &GOLDEN_PARAMS),
+        );
+    }
+
+    #[test]
+    fn zipf_concentrates_mass_on_low_ranks() {
+        // dyadic zipf(1): each octave of ranks carries equal mass, so the
+        // lowest 2^4 lines of a 2^16-line footprint should draw ~4/16 of
+        // all random accesses — orders of magnitude above uniform.
+        let mut p = GOLDEN_PARAMS;
+        p[5] = 65535; // all remote
+        p[8] = 0; // no sequential runs
+        p[10] = 0; // hot-set off (zipf replaces it anyway)
+        p[15] = 1;
+        let block = gen_block(7, 0, &p);
+        let mut low = 0u32;
+        let mut total = 0u32;
+        for r in &block {
+            if r.op == 1 || r.op == 2 {
+                total += 1;
+                let line = (r.addr >> 6) & ((1u32 << p[6]) - 1);
+                if line < 16 {
+                    low += 1;
+                }
+            }
+        }
+        assert!(total > 1000, "enough accesses to judge");
+        let frac = low as f64 / total as f64;
+        assert!(
+            frac > 0.15 && frac < 0.40,
+            "low-rank fraction {frac} should be near 4/16"
+        );
+    }
+
+    #[test]
+    fn arrival_draws_are_counter_based_with_exact_mean() {
+        // pure function of (seed, thread, index) ...
+        assert_eq!(arrival_e_q16(9, 42, 3), arrival_e_q16(9, 42, 3));
+        assert_ne!(arrival_e_q16(9, 42, 3), arrival_e_q16(10, 42, 3));
+        assert_ne!(arrival_e_q16(9, 42, 3), arrival_e_q16(9, 42, 4));
+        assert_ne!(arrival_e_q16(9, 42, 3), arrival_e_q16(9, 43, 3));
+        // ... with mean exactly 1.5 in expectation (clz gives 1, frac
+        // 0.5); a 64 k-draw average must land within 2%
+        let n = 65_536u64;
+        let sum: u64 = (0..n as u32).map(|g| arrival_e_q16(g, 1, 0) as u64).sum();
+        let mean = sum as f64 / n as f64 / 65536.0;
+        assert!((mean - 1.5).abs() < 0.03, "mean e = {mean}");
+        // every draw is positive — a zero gap would glue two arrivals
+        for g in 0..1000 {
+            assert!(arrival_e_q16(g, 1, 0) > 0);
+        }
+        // the ps-domain helper hits its target mean through the 2/3 fold
+        let mean_ps = 1_000_000u64; // 1 us
+        let sum_ps: u64 = (0..n as u32)
+            .map(|g| arrival_gap_ps(g, 1, 0, mean_ps, mean_ps, 0x10000))
+            .sum();
+        let got = sum_ps as f64 / n as f64;
+        assert!(
+            (got - mean_ps as f64).abs() / mean_ps as f64 < 0.02,
+            "mean gap = {got}"
+        );
+        // phase selection: p1 = 0 always takes the second mean
+        let all_m2: u64 = (0..1000u32)
+            .map(|g| arrival_gap_ps(g, 1, 0, 1, 1_000_000, 0))
+            .sum();
+        assert!(all_m2 > 100 * 1_000_000, "p1=0 must use mean2");
     }
 
     #[test]

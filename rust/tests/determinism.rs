@@ -259,6 +259,36 @@ fn sharded_grid_points_match_their_serial_twins() {
 }
 
 #[test]
+fn closed_loop_is_the_default_and_pins_the_historical_schedule() {
+    // `arrival=closed` must be the default AND a no-op: the arrival gate
+    // stays inert (no release times, no zipf skew, no latency samples),
+    // so an explicit `--set arrival=closed` run is bit-identical to an
+    // untouched one — which is what keeps every pre-arrival fingerprint
+    // valid.  An open-loop override must genuinely change the schedule:
+    // the zipf key skew alone reshapes the access stream.
+    let app = by_name("ycsb").unwrap();
+    let base = run_app(scen_cfg(4_000), &app);
+    assert_eq!(base.latency.ops.count, 0, "closed loop must not sample");
+    let mut explicit = scen_cfg(4_000);
+    recxl::config::apply_override(&mut explicit, "arrival", "closed").unwrap();
+    let e = run_app(explicit, &app);
+    assert_eq!(
+        fingerprint(&base),
+        fingerprint(&e),
+        "explicit arrival=closed must equal the default run exactly"
+    );
+    let mut open = scen_cfg(4_000);
+    recxl::config::apply_override(&mut open, "arrival", "poisson:8").unwrap();
+    let o = run_app(open, &app);
+    assert_ne!(
+        fingerprint(&base),
+        fingerprint(&o),
+        "an open-loop run must actually change the schedule"
+    );
+    assert!(o.latency.ops.count > 0, "open loop must sample latencies");
+}
+
+#[test]
 fn message_pool_recycles_in_steady_state() {
     let s = run_app(scen_cfg(6_000), &by_name("ycsb").unwrap());
     assert!(

@@ -1,0 +1,127 @@
+//! Open-loop arrival + tail-latency contract tests (the figure-19 /
+//! `cn-crash-under-load` surface):
+//!
+//! * fault-free, the measured issue rate tracks the offered load — the
+//!   arrival process actually paces the run;
+//! * a CN crash under load blows out the p999 while the median holds —
+//!   the recovery pause costs the tail, not the middle of the
+//!   distribution (the PR's acceptance shape);
+//! * the latency histogram is shard-invariant: per-op samples ride the
+//!   shard shells and fold exactly once, so sharded runs report the
+//!   same percentiles bit for bit.
+
+use recxl::cluster::run_app;
+use recxl::config::{ArrivalProcess, SimConfig};
+use recxl::prelude::*;
+
+fn open_cfg(rate: f64, ops: u64) -> SimConfig {
+    SimConfig {
+        n_cns: 4,
+        n_mns: 4,
+        protocol: Protocol::ReCxlProactive,
+        arrival: ArrivalProcess::Poisson { rate },
+        ops_per_thread: ops,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn offered_load_matches_measured_issue_rate_fault_free() {
+    // 4 ops/us offered per CN at 4 cores/CN = 1 us mean gap per thread,
+    // far above the mean service time, so the run is release-bound: the
+    // measured rate (executed ops over simulated time) must land on the
+    // offered rate.  15% headroom covers the drain tail and the
+    // warm-up/rounding of the dyadic sampler.
+    let app = by_name("ycsb").unwrap();
+    let rate = 4.0;
+    let cfg = open_cfg(rate, 3_000);
+    let n_cns = cfg.n_cns as f64;
+    let s = run_app(cfg, &app);
+    assert!(s.latency.ops.count > 0, "open loop must sample latencies");
+    let offered_per_us = rate * n_cns;
+    let measured_per_us = s.total_ops() as f64 / (s.exec_time_ps as f64 / 1e6);
+    let err = (measured_per_us - offered_per_us).abs() / offered_per_us;
+    assert!(
+        err < 0.15,
+        "offered {offered_per_us:.2} ops/us vs measured {measured_per_us:.2} ops/us \
+         (err {err:.3})"
+    );
+}
+
+#[test]
+fn crash_under_load_blows_out_the_tail_but_not_the_median() {
+    // The acceptance shape: under `cn-crash-under-load`'s arrival stream,
+    // the crashed run's p999 sits strictly above its fault-free twin
+    // (ops released into the recovery pause queue behind it) while p50
+    // stays within 2x (the bulk of the run never sees the pause).
+    let app = by_name("ycsb").unwrap();
+    let sc = recxl::scenarios::by_name("cn-crash-under-load").unwrap();
+    let mut crashed = SimConfig {
+        n_cns: 4,
+        n_mns: 4,
+        protocol: Protocol::ReCxlProactive,
+        ops_per_thread: 4_000,
+        ..SimConfig::default()
+    };
+    sc.prepare(&mut crashed);
+    assert!(crashed.arrival.is_open(), "the scenario must open the loop");
+    let mut clean = crashed.clone();
+    clean.faults = Default::default();
+    let c = run_app(crashed.clone(), &app);
+    let f = run_app(clean, &app);
+    assert!(c.recovery.happened && c.recovery.consistent);
+    assert!(f.latency.ops.count > 0 && c.latency.ops.count > 0);
+    assert!(
+        c.latency.ops.p999() > f.latency.ops.p999(),
+        "crashed p999 {} must exceed fault-free p999 {}",
+        c.latency.ops.p999(),
+        f.latency.ops.p999()
+    );
+    assert!(
+        c.latency.ops.p50() <= 2 * f.latency.ops.p50().max(1),
+        "crashed p50 {} must stay within 2x of fault-free p50 {}",
+        c.latency.ops.p50(),
+        f.latency.ops.p50()
+    );
+    // one recovery-duration sample per completed round
+    assert_eq!(c.latency.recovery.count, c.recovery.rounds);
+    assert_eq!(f.latency.recovery.count, 0);
+}
+
+#[test]
+fn latency_histogram_is_shard_invariant() {
+    // The schedule fingerprint is shard-invariant (tests/determinism.rs);
+    // the latency histogram rides outside the fingerprint, so pin it
+    // separately: every shard count must report the identical histogram
+    // — same buckets, same sum, same max — under the crash scenario.
+    let app = by_name("ycsb").unwrap();
+    let sc = recxl::scenarios::by_name("cn-crash-under-load").unwrap();
+    let mut cfg = SimConfig {
+        n_cns: 4,
+        n_mns: 4,
+        protocol: Protocol::ReCxlProactive,
+        ops_per_thread: 3_000,
+        ..SimConfig::default()
+    };
+    sc.prepare(&mut cfg);
+    let base = run_app(cfg.clone(), &app);
+    for shards in [2usize, 4] {
+        let mut c = cfg.clone();
+        c.shards = shards;
+        let s = run_app(c, &app);
+        for (name, a, b) in [
+            ("ops", &base.latency.ops, &s.latency.ops),
+            ("recovery", &base.latency.recovery, &s.latency.recovery),
+        ] {
+            assert_eq!(a.count, b.count, "{name} count at shards={shards}");
+            assert_eq!(a.sum_ps, b.sum_ps, "{name} sum at shards={shards}");
+            assert_eq!(a.max_ps, b.max_ps, "{name} max at shards={shards}");
+            assert_eq!(
+                a.bucket_counts(),
+                b.bucket_counts(),
+                "{name} buckets at shards={shards}"
+            );
+        }
+        assert_eq!(base.latency.ops.p999(), s.latency.ops.p999());
+    }
+}
